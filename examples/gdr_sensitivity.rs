@@ -1,0 +1,49 @@
+//! Paper §V-C: sensitivity of MVAPICH-GDR to MV2_GPUDIRECT_LIMIT on
+//! irregular workloads. Sweeps the limit for every data set at 2, 8 and
+//! 16 cluster GPUs and reports the swing and the optimum per setting —
+//! reproducing the paper's observation that the optimal value shifts by
+//! orders of magnitude with the GPU count (512MB at 2 GPUs vs 16B at 8
+//! for DELICIOUS on their testbed).
+//!
+//!     cargo run --release --example gdr_sensitivity
+
+use agv_bench::cpals::comm_model::gdr_limit_sweep;
+use agv_bench::tensor::datasets;
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::{fmt_bytes, fmt_time};
+
+fn main() {
+    let topo = SystemKind::Cluster.build();
+    let limits: Vec<u64> = vec![
+        16,
+        4 << 10,
+        64 << 10,
+        1 << 20,
+        4 << 20,
+        8 << 20,
+        64 << 20,
+        512 << 20,
+    ];
+    for spec in datasets::all() {
+        println!("== {} ==", spec.name);
+        for gpus in [2usize, 8, 16] {
+            let sweep = gdr_limit_sweep(&topo, &spec, gpus, 1, &limits);
+            let (best_l, best_t) = sweep
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .copied()
+                .unwrap();
+            let worst = sweep.iter().map(|&(_, t)| t).fold(0.0f64, f64::max);
+            println!(
+                "  {gpus:>2} GPUs: best limit {:>8} ({}/iter), swing {:.2}x",
+                fmt_bytes(best_l),
+                fmt_time(best_t),
+                worst / best_t
+            );
+            for (l, t) in &sweep {
+                println!("        {:>8} -> {:>12}", fmt_bytes(*l), fmt_time(*t));
+            }
+        }
+        println!();
+    }
+}

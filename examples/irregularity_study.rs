@@ -1,0 +1,95 @@
+//! Irregularity study — the two future-work extensions of paper §VI:
+//!
+//! 1. Träff-style message-size *distribution* benchmark: fixed total
+//!    volume, varying distribution across ranks (uniform -> spike) on
+//!    every system — isolating the irregularity effect that made the
+//!    tensor results contradict the OSU benchmark;
+//! 2. rank-to-GPU mapping (paper §III-B): sequential vs "spread"
+//!    mapping on the CS-Storm, showing when sequential binding is and
+//!    is not optimal;
+//! 3. more-GPUs-per-node: the same distribution study on a 2-node
+//!    multi-DGX system (16 GPUs across NVLink islands).
+//!
+//!     cargo run --release --example irregularity_study
+
+use agv_bench::comm::{Library, Params};
+use agv_bench::osu::distributions::{distribution_study, Distribution};
+use agv_bench::topology::systems::{cs_storm, multi_dgx, SystemKind};
+use agv_bench::util::fmt_time;
+
+fn main() {
+    let total = 512u64 << 20;
+    println!("== Träff-style distribution study (total volume 512MB, 8 GPUs) ==\n");
+    for system in SystemKind::all() {
+        let topo = system.build();
+        println!("{}:", topo.name);
+        println!(
+            "  {:<12} {:>6} {:>14} {:>14} {:>14}",
+            "distribution", "CV", "MPI", "MPI-CUDA", "NCCL"
+        );
+        let study = distribution_study(&topo, 8, total, Params::default(), 42);
+        for dist in Distribution::all() {
+            let t = |l: Library| {
+                study
+                    .iter()
+                    .find(|p| p.dist == dist && p.library == l)
+                    .unwrap()
+                    .time
+            };
+            let cv = study.iter().find(|p| p.dist == dist).unwrap().cv;
+            println!(
+                "  {:<12} {:>6.2} {:>14} {:>14} {:>14}",
+                dist.name(),
+                cv,
+                fmt_time(t(Library::Mpi)),
+                fmt_time(t(Library::MpiCuda)),
+                fmt_time(t(Library::Nccl)),
+            );
+        }
+        println!();
+    }
+
+    println!("== rank-to-GPU mapping (CS-Storm, 8 ranks, uniform 32MB) ==\n");
+    let storm = cs_storm();
+    // spread: one rank per NVLink pair — throws away all bonded links
+    let spread: Vec<usize> = (0..16).map(|r| (r % 8) * 2 + r / 8).collect();
+    let remapped = storm.remap_gpus(&spread);
+    let counts = vec![32u64 << 20; 8];
+    for lib in Library::all() {
+        let seq = lib.build(Params::default()).allgatherv(&storm, &counts);
+        let spr = lib.build(Params::default()).allgatherv(&remapped, &counts);
+        println!(
+            "  {:<9} sequential {:>12}   spread {:>12}   penalty {:.2}x",
+            lib.name(),
+            fmt_time(seq.time),
+            fmt_time(spr.time),
+            spr.time / seq.time
+        );
+    }
+
+    println!("\n== multi-DGX (2 nodes x 8 GPUs): distribution study at 16 ranks ==\n");
+    let mdgx = multi_dgx(2);
+    let study = distribution_study(&mdgx, 16, total, Params::default(), 42);
+    println!(
+        "  {:<12} {:>6} {:>14} {:>14} {:>14}",
+        "distribution", "CV", "MPI", "MPI-CUDA", "NCCL"
+    );
+    for dist in Distribution::all() {
+        let t = |l: Library| {
+            study
+                .iter()
+                .find(|p| p.dist == dist && p.library == l)
+                .unwrap()
+                .time
+        };
+        let cv = study.iter().find(|p| p.dist == dist).unwrap().cv;
+        println!(
+            "  {:<12} {:>6.2} {:>14} {:>14} {:>14}",
+            dist.name(),
+            cv,
+            fmt_time(t(Library::Mpi)),
+            fmt_time(t(Library::MpiCuda)),
+            fmt_time(t(Library::Nccl)),
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Perf-pass profiling harness: times each hot AOT artifact in isolation
+//! (EXPERIMENTS.md §Perf, L1/L2 iteration log).
+//!
+//!     cargo run --release --example perf_profile
+use agv_bench::runtime::{HostTensor, Runtime};
+use agv_bench::util::prng::Rng;
+use std::time::Instant;
+fn main() {
+    let mut rt = Runtime::open("artifacts").unwrap();
+    let mut rng = Rng::new(1);
+    let n = 131072usize;
+    let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let rows: Vec<i32> = (0..n).map(|_| rng.gen_range(2048) as i32).collect();
+    let cb: Vec<i32> = (0..n).map(|_| rng.gen_range(512) as i32).collect();
+    let cc: Vec<i32> = (0..n).map(|_| rng.gen_range(256) as i32).collect();
+    let fb: Vec<f32> = (0..512*16).map(|_| rng.normal() as f32).collect();
+    let fc: Vec<f32> = (0..256*16).map(|_| rng.normal() as f32).collect();
+    let t0 = Instant::now();
+    rt.ensure_compiled("mttkrp_mode0_e2e").unwrap();
+    println!("compile: {:?}", t0.elapsed());
+    for i in 0..3 {
+        let t = Instant::now();
+        let _ = rt.execute("mttkrp_mode0_e2e", &[
+            HostTensor::F32(vals.clone()), HostTensor::I32(rows.clone()),
+            HostTensor::I32(cb.clone()), HostTensor::I32(cc.clone()),
+            HostTensor::F32(fb.clone()), HostTensor::F32(fc.clone())]).unwrap();
+        println!("exec {i}: {:?}", t.elapsed());
+    }
+    // fit artifact
+    let lam: Vec<f32> = vec![1.0; 16];
+    let fa: Vec<f32> = (0..2048*16).map(|_| rng.normal() as f32).collect();
+    let t0 = Instant::now();
+    rt.ensure_compiled("fit_e2e").unwrap();
+    println!("fit compile: {:?}", t0.elapsed());
+    for i in 0..3 {
+        let t = Instant::now();
+        let _ = rt.execute("fit_e2e", &[
+            HostTensor::F32(vec![1.0]), HostTensor::F32(vals.clone()),
+            HostTensor::I32(rows.clone()), HostTensor::I32(cb.clone()), HostTensor::I32(cc.clone()),
+            HostTensor::F32(lam.clone()), HostTensor::F32(fa.clone()),
+            HostTensor::F32(fb.clone()), HostTensor::F32(fc.clone())]).unwrap();
+        println!("fit exec {i}: {:?}", t.elapsed());
+    }
+    // update_post
+    let m: Vec<f32> = (0..2048*16).map(|_| rng.normal() as f32).collect();
+    rt.ensure_compiled("update_post_mode0_e2e").unwrap();
+    for i in 0..3 {
+        let t = Instant::now();
+        let _ = rt.execute("update_post_mode0_e2e", &[
+            HostTensor::F32(m.clone()), HostTensor::F32(fb.clone()), HostTensor::F32(fc.clone())]).unwrap();
+        println!("update exec {i}: {:?}", t.elapsed());
+    }
+}

@@ -1,0 +1,93 @@
+//! END-TO-END driver (DESIGN.md §6): full ReFacTo factorization on a
+//! real small workload, proving all three layers compose:
+//!
+//! - L1/L2: the Pallas krp_scale/matmul/gram kernels inside the JAX
+//!   CP-ALS model, AOT-lowered to HLO text at `make artifacts`;
+//! - runtime: loaded and executed here through the PJRT CPU client —
+//!   python is NOT running;
+//! - L3: the DFacTo partitioner slices the tensor across 8 simulated
+//!   DGX-1 GPUs; per-rank MTTKRP partials are computed for its slice and
+//!   gathered (numerically exact sum of disjoint rows), while the
+//!   *timing* of each Allgatherv comes from the simulated MPI /
+//!   MPI-CUDA / NCCL libraries.
+//!
+//! The loss curve (CP fit per iteration) plus the per-library simulated
+//! communication times are printed and recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example refacto_e2e
+//!     (add `-- --config e2e` for the 2048x512x256 / 131k-nnz workload)
+
+use agv_bench::comm::Library;
+use agv_bench::cpals::driver::Driver;
+use agv_bench::runtime::{default_artifacts_dir, Runtime};
+use agv_bench::tensor::{synth, ModeProfile, TensorSpec};
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::cli::Args;
+use agv_bench::util::fmt_time;
+
+fn main() {
+    let args = Args::from_env();
+    let config = args.get_or("config", "e2e").to_string();
+    let gpus = args.get_usize("gpus", 8);
+    let iters = args.get_usize("iters", 10);
+    let seed = args.get_u64("seed", 42);
+
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let runtime = match Runtime::open(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cannot open artifacts ({e:#}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    let topo = SystemKind::Dgx1.build();
+    let mut driver = Driver::new(runtime, &config, &topo, gpus, Library::all().to_vec());
+    let ([di, dj, dk], n_pad, rank) = driver.shapes().expect("artifact shapes");
+    println!(
+        "ReFacTo e2e: {di}x{dj}x{dk}, up to {n_pad} nnz, R={rank}, {gpus} simulated DGX-1 GPUs"
+    );
+
+    // Netflix-like skew, planted rank-8 structure + noise.
+    let nnz = n_pad - n_pad / 8;
+    let spec = TensorSpec {
+        name: "e2e-synth",
+        modes: [
+            ModeProfile { dim: di as u64, skew: 0.6 },
+            ModeProfile { dim: dj as u64, skew: 0.4 },
+            ModeProfile { dim: dk as u64, skew: 0.2 },
+        ],
+        nnz: nnz as u64,
+    };
+    let tensor = synth::low_rank_coo(&spec, nnz, 8, 0.05, seed);
+    println!("generated synthetic tensor: {} nnz (planted rank 8 + 5% noise)\n", tensor.nnz());
+
+    let report = driver.run(&tensor, iters, seed).expect("factorization failed");
+
+    println!("iter  fit        d(fit)     compute(real)");
+    let mut prev = 0.0;
+    for l in &report.iters {
+        println!(
+            "{:>4}  {:<9.5} {:>+9.5}  {:>12}",
+            l.iter,
+            l.fit,
+            l.fit - prev,
+            fmt_time(l.compute_secs)
+        );
+        prev = l.fit;
+    }
+    println!("\nsimulated Allgatherv time for the whole factorization (DGX-1, {gpus} GPUs):");
+    for (lib, t) in &report.comm_totals {
+        println!("  {:<9} {:>12}", lib.name(), fmt_time(*t));
+    }
+    println!("\ncompute total (real, PJRT CPU): {}", fmt_time(report.compute_total));
+    assert!(
+        report.final_fit() > report.iters[0].fit,
+        "fit did not improve: {} -> {}",
+        report.iters[0].fit,
+        report.final_fit()
+    );
+    println!("OK: fit improved {:.5} -> {:.5}", report.iters[0].fit, report.final_fit());
+}

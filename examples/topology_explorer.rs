@@ -1,0 +1,61 @@
+//! Fig. 1 explorer: device/link inventories, GPUDirect P2P matrices,
+//! NVLink reachability, and bandwidth matrices for the three systems.
+//!
+//!     cargo run --release --example topology_explorer
+
+use agv_bench::topology::systems::SystemKind;
+
+fn main() {
+    for kind in SystemKind::all() {
+        let t = kind.build();
+        let n = t.num_gpus();
+        println!("==== {} ({} devices, {} links, {} GPUs) ====", t.name, t.devices.len(), t.links.len(), n);
+
+        println!("\n  link inventory:");
+        let mut by_class: std::collections::BTreeMap<String, usize> = Default::default();
+        for l in &t.links {
+            *by_class.entry(format!("{:?}", l.class)).or_default() += 1;
+        }
+        for (class, count) in by_class {
+            println!("    {class:<16} x{count}");
+        }
+
+        println!("\n  GPUDirect P2P ('+' P2P, 'n' NVLink multi-hop only, '.' host/IB path):");
+        for a in 0..n {
+            let row: String = (0..n)
+                .map(|b| {
+                    if a == b {
+                        ' '
+                    } else if t.p2p_accessible(a, b) {
+                        '+'
+                    } else if t.route_nvlink_only(a, b).is_some() {
+                        'n'
+                    } else {
+                        '.'
+                    }
+                })
+                .collect();
+            println!("    gpu{a:<2} {row}");
+        }
+
+        println!("\n  pairwise bottleneck bandwidth (GB/s, widest route):");
+        print!("        ");
+        for b in 0..n {
+            print!("{b:>6}");
+        }
+        println!();
+        for a in 0..n {
+            print!("    {a:>3} ");
+            for b in 0..n {
+                if a == b {
+                    print!("{:>6}", "-");
+                } else {
+                    let p = t.route_gpus(a, b).unwrap();
+                    print!("{:>6.1}", t.path_bandwidth(&p) / 1e9);
+                }
+            }
+            println!();
+        }
+        println!();
+    }
+}

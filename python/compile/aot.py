@@ -1,0 +1,142 @@
+"""AOT-lower the L2/L1 stack to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per tensor configuration we export:
+  als_sweep_<cfg>.hlo.txt            single-rank full ALS sweep + fit
+  mttkrp_mode{0,1,2}_<cfg>.hlo.txt   per-rank MTTKRP (between collectives)
+  update_post_mode{0,1,2}_<cfg>.hlo.txt  post-Allgatherv factor update
+  fit_<cfg>.hlo.txt                  fit/convergence metric
+plus meta.json describing every artifact's input/output shapes so the
+rust runtime can construct literals without re-parsing HLO.
+
+Usage: python -m compile.aot --out ../artifacts [--configs small,e2e]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Tensor configurations: (I, J, K) padded mode sizes, N padded nnz, rank R.
+# "small" keeps tests fast; "e2e" is the examples/refacto_e2e.rs workload.
+CONFIGS = {
+    "small": dict(dims=(128, 64, 64), nnz=2048, rank=16),
+    "e2e": dict(dims=(2048, 512, 256), nnz=131072, rank=16),
+}
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_all(cfg_name, cfg):
+    """Yield (artifact_name, lowered, meta) for one tensor configuration."""
+    i_dim, j_dim, k_dim = cfg["dims"]
+    n, r = cfg["nnz"], cfg["rank"]
+    dims = (i_dim, j_dim, k_dim)
+
+    coo = [spec((n,), F32)] + [spec((n,), I32)] * 3     # vals, i, j, k
+    factors = [spec((i_dim, r)), spec((j_dim, r)), spec((k_dim, r))]
+    scalar = spec((), F32)
+    lam = spec((r,), F32)
+
+    def meta(ins, outs):
+        def fmt(s):
+            return {"shape": list(s.shape),
+                    "dtype": "f32" if s.dtype == jnp.float32 else "i32"}
+        return {"inputs": [fmt(s) for s in ins], "outputs": [fmt(s) for s in outs]}
+
+    # --- full single-rank sweep ------------------------------------------
+    # NB: no initial A input — the mode-0 update would never read it and
+    # XLA strips dead parameters from the lowered entry computation.
+    ins = coo + [factors[1], factors[2], scalar]
+    yield (
+        f"als_sweep_{cfg_name}",
+        model.als_sweep.lower(*ins, dims=dims),
+        meta(ins, factors + [lam, scalar]),
+    )
+
+    # --- per-rank MTTKRP, one artifact per mode --------------------------
+    # mode 0: rows=i, gathers from (B, C), output (I, R)
+    # mode 1: rows=j, gathers from (A, C), output (J, R)
+    # mode 2: rows=k, gathers from (A, B), output (K, R)
+    mode_factors = [
+        (factors[1], factors[2], i_dim),
+        (factors[0], factors[2], j_dim),
+        (factors[0], factors[1], k_dim),
+    ]
+    for mode, (fb, fc, out_rows) in enumerate(mode_factors):
+        ins = [spec((n,), F32)] + [spec((n,), I32)] * 3 + [fb, fc]
+        yield (
+            f"mttkrp_mode{mode}_{cfg_name}",
+            model.mttkrp_only.lower(*ins, out_rows=out_rows),
+            meta(ins, [spec((out_rows, r))]),
+        )
+
+    # --- post-collective factor update, one per mode ---------------------
+    for mode, (fb, fc, out_rows) in enumerate(mode_factors):
+        ins = [spec((out_rows, r)), fb, fc]
+        yield (
+            f"update_post_mode{mode}_{cfg_name}",
+            model.factor_update_post.lower(*ins),
+            meta(ins, [spec((out_rows, r)), lam]),
+        )
+
+    # --- fit --------------------------------------------------------------
+    ins = [scalar] + coo + [lam] + factors
+    yield (
+        f"fit_{cfg_name}",
+        model.fit_only.lower(*ins),
+        meta(ins, [scalar]),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--configs", default=",".join(CONFIGS),
+                    help="comma-separated config names")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    index = {}
+    for cfg_name in args.configs.split(","):
+        cfg = CONFIGS[cfg_name]
+        for name, lowered, meta in lower_all(cfg_name, cfg):
+            text = to_hlo_text(lowered)
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            meta["file"] = f"{name}.hlo.txt"
+            meta["config"] = dict(cfg, name=cfg_name)
+            index[name] = meta
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(index, f, indent=1, sort_keys=True)
+    print(f"wrote {out_dir}/meta.json ({len(index)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

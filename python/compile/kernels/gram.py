@@ -1,0 +1,47 @@
+"""Pallas kernel: gram matrix out = A^T A with grid accumulation.
+
+Each CP-ALS mode update needs the (R, R) gram matrices of the other two
+factor matrices. A is (I, R) with I up to millions of rows; the kernel
+streams (BLOCK_I, R) tiles through VMEM and accumulates the (R, R) output
+block across sequential grid steps — the canonical Pallas reduction
+pattern (output BlockSpec maps every grid step to the same block, a
+pl.when zeroes it on the first step).
+
+VMEM per grid step (f32, BLOCK_I=256, R=16): a 16 KiB + out 1 KiB.
+On the MXU this is a (16 x BLOCK_I) x (BLOCK_I x 16) matmul per step:
+K-dim is large (good) but M=N=16 again caps utilization; see DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_I = 256
+
+
+def _gram_kernel(a_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_i",))
+def gram(a, *, block_i=DEFAULT_BLOCK_I):
+    """out = A^T A (f32), A: (I, R), I a multiple of block_i."""
+    i_dim, r = a.shape
+    assert i_dim % block_i == 0, f"I={i_dim} must be a multiple of block_i={block_i}"
+    grid = (i_dim // block_i,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_i, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(a)

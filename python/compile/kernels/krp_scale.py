@@ -1,0 +1,62 @@
+"""Pallas kernel: fused Khatri-Rao product-scale (MTTKRP elementwise core).
+
+ReFacTo's compute hot-spot is the MTTKRP, which DFacTo formulates as SpMV
+and runs through cuSPARSE (warp-per-row CSR on K40m/P100). On the
+TPU-shaped Pallas model the irregular gather/scatter halves stay in XLA
+HLO (native gather / scatter-add); the dense elementwise core — scaling
+the Khatri-Rao rows by the nonzero values — is this kernel:
+
+    P[n, r] = vals[n] * B[j_n, r] * C[k_n, r]
+
+where ``b_rows = B[j]`` and ``c_rows = C[k]`` are pre-gathered. The
+BlockSpec expresses the HBM->VMEM schedule the CUDA code expressed with
+threadblocks: tiles of (BLOCK_N, R) stream through VMEM and the VPU does
+the two multiplies per element.
+
+VMEM footprint per grid step (f32, BLOCK_N=512, R=16):
+  vals 2 KiB + b 32 KiB + c 32 KiB + out 32 KiB = 98 KiB  (<< 16 MiB VMEM)
+MXU is not engaged (pure elementwise -> VPU-bound); arithmetic intensity
+is 2 FLOP per 16 loaded bytes, so the kernel is HBM-bandwidth-bound on
+real hardware — exactly like its CUDA counterpart.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _krp_scale_kernel(vals_ref, b_ref, c_ref, o_ref):
+    # vals tile is (BLOCK_N,); broadcast over the rank dimension.
+    o_ref[...] = vals_ref[...][:, None] * b_ref[...] * c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def krp_scale(vals, b_rows, c_rows, *, block_n=DEFAULT_BLOCK_N):
+    """P[n, :] = vals[n] * b_rows[n, :] * c_rows[n, :], tiled over n.
+
+    ``vals``: (N,), ``b_rows``/``c_rows``: (N, R). N must be a multiple of
+    ``block_n`` (the model pads the COO stream to guarantee this).
+    Always runs with interpret=True: real-TPU lowering emits a Mosaic
+    custom-call the CPU PJRT plugin cannot execute (see DESIGN.md).
+    """
+    n, r = b_rows.shape
+    assert vals.shape == (n,), (vals.shape, n)
+    assert c_rows.shape == (n, r)
+    assert n % block_n == 0, f"N={n} must be a multiple of block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _krp_scale_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, r), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, r), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, r), vals.dtype),
+        interpret=True,
+    )(vals, b_rows, c_rows)

@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/) asserts allclose between kernel and oracle across
+hypothesis-generated shapes/dtypes. This is the CORE correctness signal
+for Layer 1.
+"""
+
+import jax.numpy as jnp
+
+
+def krp_scale_ref(vals, b_rows, c_rows):
+    """Fused Khatri-Rao product-scale: P[n, r] = vals[n] * B[j_n, r] * C[k_n, r].
+
+    ``b_rows``/``c_rows`` are the pre-gathered factor rows (gathering stays
+    in XLA HLO; see DESIGN.md §3 Hardware adaptation).
+    """
+    return vals[:, None] * b_rows * c_rows
+
+
+def matmul_ref(m, w):
+    """Factor update core: out = M @ W, with f32 accumulation."""
+    return jnp.matmul(m, w, preferred_element_type=jnp.float32).astype(m.dtype)
+
+
+def gram_ref(a):
+    """Gram matrix: out = A^T A, accumulated in f32."""
+    return jnp.matmul(a.T, a, preferred_element_type=jnp.float32).astype(jnp.float32)

@@ -1,0 +1,204 @@
+"""L2: CP-ALS (ReFacTo's per-rank compute) in JAX, calling the L1 kernels.
+
+The paper's case study, ReFacTo (Section III), is a GPU extension of
+DFacTo: coarse-grained CP-ALS where each rank owns a contiguous slice of
+every mode, computes the MTTKRP rows for its slice, and Allgatherv's the
+updated factor rows. Communication lives in Layer 3 (rust); THIS module is
+the per-rank compute that runs between collectives:
+
+  1. mttkrp      — M = X_(n) (C ⊙ B): gather + krp_scale kernel + segment-sum
+  2. gram + hadamard + regularized solve  — A <- M (V + eps I)^-1
+  3. column normalization                  — lambda weights
+  4. fit         — ||X - M̂||_F via the standard sparse CP identity
+
+Tensors are padded COO with static shapes (AOT requirement): nnz padded to
+a multiple of the krp_scale block with val=0 / index=0 entries, mode sizes
+padded to a multiple of the matmul/gram block. Rank R is fixed at build
+time (paper uses single-precision, we default R=16).
+
+Everything here is lowered ONCE by aot.py to HLO text; python never runs
+on the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gram import gram
+from .kernels.krp_scale import krp_scale
+from .kernels.matmul import matmul
+
+RIDGE_EPS = 1e-6
+
+
+def _auto_block(dim, cap):
+    """Largest power-of-two block <= cap that divides dim.
+
+    AOT shapes are padded to powers of two (tensor/partition layer
+    guarantees this), so this always finds a block >= 1 and keeps tiles
+    VMEM-sized for the L1 kernels.
+    """
+    b = 1
+    while b * 2 <= cap and dim % (b * 2) == 0:
+        b *= 2
+    return b
+
+
+def mttkrp(vals, rows, cols_b, cols_c, fb, fc, out_rows):
+    """Matricized-tensor times Khatri-Rao product for one mode.
+
+    vals: (N,) nonzero values (padding entries are 0.0)
+    rows: (N,) output row index per nonzero (this mode's index)
+    cols_b/cols_c: (N,) indices into the other two factor matrices
+    fb/fc: (J, R) / (K, R) factor matrices
+    out_rows: static output row count (padded mode size)
+
+    The gathers and the scatter-add stay in XLA HLO (native on CPU/TPU);
+    the elementwise core is the Pallas krp_scale kernel.
+    """
+    b_rows = fb[cols_b]            # (N, R) gather
+    c_rows = fc[cols_c]            # (N, R) gather
+    # Tile cap 32768: interpret-mode Pallas pays a large fixed cost per
+    # grid step (~8 ms measured, EXPERIMENTS.md §Perf), so we use the
+    # largest tile that still fits the TPU VMEM budget (32K x 16 f32 x 4
+    # buffers ~ 8 MiB < 16 MiB) instead of the GPU-ish 512-row tile.
+    p = krp_scale(vals, b_rows, c_rows,
+                  block_n=_auto_block(vals.shape[0], 32768))   # L1 kernel
+    out = jnp.zeros((out_rows, fb.shape[1]), vals.dtype)
+    return out.at[rows].add(p)     # scatter-add (segment sum)
+
+
+def _gram(a):
+    return gram(a, block_i=_auto_block(a.shape[0], 256))
+
+
+def hadamard_gram(fb, fc):
+    """V = (B^T B) .* (C^T C) — both grams via the L1 gram kernel."""
+    return _gram(fb) * _gram(fc)
+
+
+def spd_inverse(v):
+    """Gauss-Jordan inverse of a (small) SPD matrix, in pure HLO ops.
+
+    `jnp.linalg.inv` lowers to a LAPACK custom-call on CPU (typed-FFI API
+    the pinned xla_extension 0.5.1 rejects) and is unavailable on TPU
+    anyway; CP-ALS only ever inverts the (R, R) hadamard-of-grams matrix,
+    which the ridge makes strictly positive definite, so pivot-free
+    Gauss-Jordan is exact and lowers to plain fori_loop + arithmetic.
+    """
+    r = v.shape[0]
+    aug = jnp.concatenate([v, jnp.eye(r, dtype=v.dtype)], axis=1)  # (r, 2r)
+
+    def step(i, aug):
+        row = aug[i] / aug[i, i]
+        aug = aug - jnp.outer(aug[:, i], row)
+        return aug.at[i].set(row)
+
+    aug = jax.lax.fori_loop(0, r, step, aug)
+    return aug[:, r:]
+
+
+def solve_update(m, v):
+    """A <- M @ (V + eps I)^{-1}.
+
+    V is (R, R) symmetric positive semi-definite; a small ridge keeps the
+    solve well-posed when factors are rank-deficient (standard CP-ALS
+    practice). The (I, R) x (R, R) product is the L1 matmul kernel.
+    """
+    r = v.shape[0]
+    v_reg = v + RIDGE_EPS * jnp.eye(r, dtype=v.dtype)
+    w = spd_inverse(v_reg).astype(m.dtype)
+    return matmul(m, w, block_i=_auto_block(m.shape[0], 256))
+
+
+def normalize_columns(a):
+    """Column-normalize a factor matrix, returning (A_normalized, lambda)."""
+    lam = jnp.sqrt(jnp.sum(a * a, axis=0))
+    safe = jnp.where(lam > 0, lam, 1.0)
+    return a / safe, lam
+
+
+def update_mode(vals, rows, cols_b, cols_c, fb, fc, out_rows):
+    """One CP-ALS mode update; returns (A_new_normalized, lambda)."""
+    m = mttkrp(vals, rows, cols_b, cols_c, fb, fc, out_rows)
+    v = hadamard_gram(fb, fc)
+    a_new = solve_update(m, v)
+    return normalize_columns(a_new)
+
+
+def model_norm_sq(lam, fa, fb, fc):
+    """||M̂||_F^2 = lam^T (A^T A .* B^T B .* C^T C) lam."""
+    g = _gram(fa) * _gram(fb) * _gram(fc)
+    lam32 = lam.astype(jnp.float32)
+    return lam32 @ g @ lam32
+
+
+def sparse_inner(vals, i, j, k, lam, fa, fb, fc):
+    """<X, M̂> over the nonzeros: sum_n vals_n * sum_r lam_r A[i,r]B[j,r]C[k,r].
+
+    Reuses krp_scale for the B.*C rows, then contracts with A rows and lam.
+    Padding entries contribute 0 because their value is 0.
+    """
+    p = krp_scale(vals, fb[j], fc[k],
+                  block_n=_auto_block(vals.shape[0], 32768))  # vals * B[j] .* C[k]
+    est = jnp.sum(p * fa[i] * lam[None, :].astype(vals.dtype), axis=1)
+    return jnp.sum(est)
+
+
+def fit_value(norm_x_sq, vals, i, j, k, lam, fa, fb, fc):
+    """CP fit = 1 - ||X - M̂|| / ||X|| using the sparse identity
+
+    ||X - M̂||^2 = ||X||^2 - 2 <X, M̂> + ||M̂||^2.
+    """
+    inner = sparse_inner(vals, i, j, k, lam, fa, fb, fc)
+    norm_m_sq = model_norm_sq(lam, fa, fb, fc)
+    resid_sq = jnp.maximum(norm_x_sq - 2.0 * inner + norm_m_sq, 0.0)
+    return 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)
+
+
+@functools.partial(jax.jit, static_argnames=("dims",))
+def als_sweep(vals, i, j, k, fb, fc, norm_x_sq, *, dims):
+    """One full ALS sweep (update modes 0,1,2 in sequence) + fit.
+
+    dims: static (I, J, K) padded mode sizes.
+    Returns (fa, fb, fc, lam, fit). The sweep starts at mode 0, which
+    only reads B and C — an initial A input would be dead (and XLA would
+    strip the parameter from the lowered HLO), so the signature omits it.
+    """
+    i_dim, j_dim, k_dim = dims
+    fa, _ = update_mode(vals, i, j, k, fb, fc, i_dim)
+    fb, _ = update_mode(vals, j, i, k, fa, fc, j_dim)
+    fc, lam = update_mode(vals, k, i, j, fa, fb, k_dim)
+    fit = fit_value(norm_x_sq, vals, i, j, k, lam, fa, fb, fc)
+    return fa, fb, fc, lam, fit
+
+
+@functools.partial(jax.jit, static_argnames=("out_rows",))
+def mttkrp_only(vals, rows, cols_b, cols_c, fb, fc, *, out_rows):
+    """Standalone MTTKRP artifact (the per-rank hot path between collectives).
+
+    In the distributed ReFacTo loop each rank calls this on ITS padded
+    nonzero slice; the resulting partial rows are disjoint across ranks,
+    so the Allgatherv that follows is (numerically) an elementwise sum of
+    the per-rank outputs — which is how the rust coordinator gathers them.
+    """
+    return mttkrp(vals, rows, cols_b, cols_c, fb, fc, out_rows)
+
+
+@jax.jit
+def factor_update_post(m, fb, fc):
+    """Post-collective factor update: A <- normalize(M (V + eps I)^-1).
+
+    Runs on the *gathered* full MTTKRP result after the Allgatherv.
+    Returns (A_new, lambda).
+    """
+    v = hadamard_gram(fb, fc)
+    a_new = solve_update(m, v)
+    return normalize_columns(a_new)
+
+
+@jax.jit
+def fit_only(norm_x_sq, vals, i, j, k, lam, fa, fb, fc):
+    """Standalone fit artifact (per-iteration convergence logging)."""
+    return fit_value(norm_x_sq, vals, i, j, k, lam, fa, fb, fc)

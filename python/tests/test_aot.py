@@ -1,0 +1,96 @@
+"""AOT artifact golden checks: shapes, entry computations, meta.json.
+
+The rust runtime trusts meta.json to build input literals; these tests
+pin the contract.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_configs_are_block_aligned():
+    for name, cfg in aot.CONFIGS.items():
+        i, j, k = cfg["dims"]
+        for d in (i, j, k):
+            assert d % 32 == 0, (name, d)
+        assert cfg["nnz"] % 64 == 0, name
+        assert cfg["rank"] == 16
+
+
+def test_lower_all_small_artifact_set():
+    names = [n for n, _, _ in aot.lower_all("small", aot.CONFIGS["small"])]
+    assert names == [
+        "als_sweep_small",
+        "mttkrp_mode0_small", "mttkrp_mode1_small", "mttkrp_mode2_small",
+        "update_post_mode0_small", "update_post_mode1_small",
+        "update_post_mode2_small",
+        "fit_small",
+    ]
+
+
+def test_hlo_text_is_parseable_entry():
+    """Every lowered computation must emit HLO text with an ENTRY block."""
+    for name, lowered, meta in aot.lower_all("small", aot.CONFIGS["small"]):
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        # return_tuple=True: root of the entry computation is a tuple
+        assert "tuple(" in text or "tuple" in text, name
+
+
+def test_meta_shapes_match_model():
+    cfg = aot.CONFIGS["small"]
+    i_dim, j_dim, k_dim = cfg["dims"]
+    n, r = cfg["nnz"], cfg["rank"]
+    metas = {name: meta for name, _, meta in
+             aot.lower_all("small", cfg)}
+    sweep = metas["als_sweep_small"]
+    in_shapes = [tuple(s["shape"]) for s in sweep["inputs"]]
+    assert in_shapes == [(n,), (n,), (n,), (n,),
+                         (j_dim, r), (k_dim, r), ()]
+    out_shapes = [tuple(s["shape"]) for s in sweep["outputs"]]
+    assert out_shapes == [(i_dim, r), (j_dim, r), (k_dim, r), (r,), ()]
+
+    m0 = metas["mttkrp_mode0_small"]
+    assert tuple(m0["outputs"][0]["shape"]) == (i_dim, r)
+    m1 = metas["mttkrp_mode1_small"]
+    assert tuple(m1["outputs"][0]["shape"]) == (j_dim, r)
+    up2 = metas["update_post_mode2_small"]
+    assert tuple(up2["inputs"][0]["shape"]) == (k_dim, r)
+    assert tuple(up2["outputs"][1]["shape"]) == (r,)
+
+    fit = metas["fit_small"]
+    assert tuple(fit["outputs"][0]["shape"]) == ()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_built_artifacts_match_lowered_meta():
+    with open(os.path.join(ART, "meta.json")) as f:
+        index = json.load(f)
+    for cfg_name in aot.CONFIGS:
+        for name, _, meta in aot.lower_all(cfg_name, aot.CONFIGS[cfg_name]):
+            assert name in index, name
+            assert index[name]["inputs"] == meta["inputs"], name
+            assert index[name]["outputs"] == meta["outputs"], name
+            path = os.path.join(ART, index[name]["file"])
+            assert os.path.exists(path), path
+            head = open(path).read(200)
+            assert "HloModule" in head, name
+
+
+def test_auto_block_properties():
+    assert model._auto_block(2048, 512) == 512
+    assert model._auto_block(64, 512) == 64
+    assert model._auto_block(96, 512) == 32
+    assert model._auto_block(1, 512) == 1
+    # always divides, never exceeds cap
+    for dim in (32, 64, 100, 128, 4096):
+        b = model._auto_block(dim, 256)
+        assert dim % b == 0 and b <= 256

@@ -1,0 +1,170 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (block-multiple and auto-block), dtypes, and
+value regimes; assert_allclose against compile.kernels.ref — the core
+correctness signal for Layer 1 (kernels run with interpret=True; see
+DESIGN.md).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gram import gram
+from compile.kernels.krp_scale import krp_scale
+from compile.kernels.matmul import matmul
+
+SETTINGS = dict(deadline=None, max_examples=20)
+
+
+def rand(rng, shape, dtype, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# krp_scale
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n_blocks=st.integers(1, 8),
+    block_n=st.sampled_from([64, 128, 512]),
+    r=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_krp_scale_matches_ref(n_blocks, block_n, r, seed):
+    rng = np.random.default_rng(seed)
+    n = n_blocks * block_n
+    vals = rand(rng, (n,), jnp.float32)
+    b = rand(rng, (n, r), jnp.float32)
+    c = rand(rng, (n, r), jnp.float32)
+    out = krp_scale(vals, b, c, block_n=block_n)
+    np.testing.assert_allclose(out, ref.krp_scale_ref(vals, b, c), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_krp_scale_bf16(seed):
+    rng = np.random.default_rng(seed)
+    n, r = 256, 16
+    vals = rand(rng, (n,), jnp.bfloat16)
+    b = rand(rng, (n, r), jnp.bfloat16)
+    c = rand(rng, (n, r), jnp.bfloat16)
+    out = krp_scale(vals, b, c, block_n=128)
+    expect = ref.krp_scale_ref(vals, b, c)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_krp_scale_padding_entries_are_zero():
+    """val=0 padding entries (the COO padding convention) produce 0 rows."""
+    n, r = 128, 16
+    rng = np.random.default_rng(0)
+    vals = rand(rng, (n,), jnp.float32)
+    vals = vals.at[n // 2:].set(0.0)
+    b = rand(rng, (n, r), jnp.float32)
+    c = rand(rng, (n, r), jnp.float32)
+    out = krp_scale(vals, b, c, block_n=64)
+    assert np.all(np.asarray(out[n // 2:]) == 0.0)
+
+
+def test_krp_scale_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        krp_scale(jnp.zeros(100), jnp.zeros((100, 8)), jnp.zeros((100, 8)),
+                  block_n=64)
+
+
+def test_krp_scale_single_block():
+    rng = np.random.default_rng(7)
+    vals = rand(rng, (512,), jnp.float32)
+    b = rand(rng, (512, 16), jnp.float32)
+    c = rand(rng, (512, 16), jnp.float32)
+    np.testing.assert_allclose(
+        krp_scale(vals, b, c), ref.krp_scale_ref(vals, b, c), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    i_blocks=st.integers(1, 8),
+    block_i=st.sampled_from([32, 64, 256]),
+    r=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(i_blocks, block_i, r, seed):
+    rng = np.random.default_rng(seed)
+    i_dim = i_blocks * block_i
+    m = rand(rng, (i_dim, r), jnp.float32)
+    w = rand(rng, (r, r), jnp.float32)
+    out = matmul(m, w, block_i=block_i)
+    np.testing.assert_allclose(out, ref.matmul_ref(m, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    rng = np.random.default_rng(1)
+    m = rand(rng, (256, 16), jnp.float32)
+    out = matmul(m, jnp.eye(16, dtype=jnp.float32))
+    np.testing.assert_allclose(out, m, rtol=1e-6)
+
+
+def test_matmul_zero_w():
+    m = jnp.ones((256, 16), jnp.float32)
+    out = matmul(m, jnp.zeros((16, 16), jnp.float32))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_matmul_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        matmul(jnp.zeros((100, 8)), jnp.zeros((8, 8)), block_i=64)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    i_blocks=st.integers(1, 8),
+    block_i=st.sampled_from([32, 64, 256]),
+    r=st.sampled_from([4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(i_blocks, block_i, r, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (i_blocks * block_i, r), jnp.float32)
+    out = gram(a, block_i=block_i)
+    np.testing.assert_allclose(out, ref.gram_ref(a), rtol=1e-4, atol=1e-4)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(3)
+    a = rand(rng, (512, 16), jnp.float32)
+    g = np.asarray(gram(a))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-6)
+    eig = np.linalg.eigvalsh(g)
+    assert eig.min() >= -1e-3
+
+
+def test_gram_multi_block_accumulation():
+    """Accumulation across grid steps == single-block result."""
+    rng = np.random.default_rng(4)
+    a = rand(rng, (512, 8), jnp.float32)
+    np.testing.assert_allclose(
+        gram(a, block_i=64), gram(a, block_i=512), rtol=1e-4, atol=1e-4)
+
+
+def test_gram_zero_rows_ignored():
+    """Padded (all-zero) rows must not change the gram matrix."""
+    rng = np.random.default_rng(5)
+    a = rand(rng, (256, 16), jnp.float32)
+    padded = jnp.concatenate([a, jnp.zeros((256, 16), jnp.float32)])
+    np.testing.assert_allclose(
+        gram(padded, block_i=256), gram(a, block_i=256), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,112 @@
+//! Ablations of the design choices DESIGN.md §9 calls out:
+//!  - allgatherv algorithm (ring vs Bruck vs recursive doubling) across
+//!    message regimes;
+//!  - NCCL's bcast-series Allgatherv (paper Listing 1) vs a hypothetical
+//!    native ring allgatherv — quantifying the overhead the paper's
+//!    future-work section speculates about;
+//!  - staged-pipeline chunk size;
+//!  - DFacTo nnz-balanced partition vs naive equal-rows partition
+//!    (message CV impact).
+//! `cargo bench --bench bench_ablations`.
+
+use agv_bench::comm::algorithms::{
+    bruck_allgatherv, recursive_doubling_allgatherv, ring_allgatherv,
+};
+use agv_bench::comm::nccl::detect_ring;
+use agv_bench::comm::transport::{direct_flow, run_schedule, staged_pipeline};
+use agv_bench::comm::{run_allgatherv, Library, Params};
+use agv_bench::sim::Sim;
+use agv_bench::tensor::datasets::{self, ROW_BYTES};
+use agv_bench::tensor::partition::profile_rows;
+use agv_bench::tensor::ModeProfile;
+use agv_bench::topology::systems::{cluster, dgx1};
+use agv_bench::util::stats::Summary;
+use agv_bench::util::{fmt_bytes, fmt_time};
+
+/// Simulated time of a schedule over direct GPU flows (isolates the
+/// algorithm from the transport).
+fn schedule_time(
+    topo: &agv_bench::topology::Topology,
+    sched: &agv_bench::comm::algorithms::Schedule,
+    p: usize,
+    counts: &[u64],
+) -> f64 {
+    let mut sim = Sim::new(topo);
+    let entry = vec![None; p];
+    let _ = run_schedule(&mut sim, p, sched, &entry, |sim, op, deps| {
+        direct_flow(sim, topo, op.from, op.to, op.bytes(counts) as f64, 2.0e-6, deps)
+    });
+    sim.run().makespan
+}
+
+fn main() {
+    let dgx = dgx1();
+    let clu = cluster(16);
+
+    println!("=== ablation: allgatherv algorithm x message regime (DGX-1, 8 GPUs) ===");
+    println!("{:>10} {:>14} {:>14} {:>14}", "size", "ring", "bruck", "rec-dbl");
+    for msg in [4u64 << 10, 64 << 10, 1 << 20, 16 << 20, 128 << 20] {
+        let counts = vec![msg; 8];
+        let ring = schedule_time(&dgx, &ring_allgatherv(8, None), 8, &counts);
+        let bruck = schedule_time(&dgx, &bruck_allgatherv(8), 8, &counts);
+        let rd = schedule_time(&dgx, &recursive_doubling_allgatherv(8), 8, &counts);
+        println!(
+            "{:>10} {:>14} {:>14} {:>14}",
+            fmt_bytes(msg), fmt_time(ring), fmt_time(bruck), fmt_time(rd)
+        );
+    }
+
+    println!("\n=== ablation: Listing-1 bcast-series vs native ring allgatherv (NCCL) ===");
+    // native ring = single launch, ring allgatherv schedule on the NCCL
+    // ring ordering; bcast-series = the shipping NCCL model.
+    for (topo, label, p) in [(&dgx, "dgx1", 8usize), (&clu, "cluster", 8)] {
+        println!("  {label}:");
+        for msg in [64u64 << 10, 4 << 20, 64 << 20] {
+            let counts = vec![msg; p];
+            let series = run_allgatherv(Library::Nccl, topo, &counts).time;
+            let order = detect_ring(topo, p);
+            let native =
+                schedule_time(topo, &ring_allgatherv(p, Some(&order)), p, &counts) + 9.0e-6;
+            println!(
+                "    {:>10}: bcast-series {:>12}  native-ring {:>12}  overhead {:.2}x",
+                fmt_bytes(msg),
+                fmt_time(series),
+                fmt_time(native),
+                series / native
+            );
+        }
+    }
+
+    println!("\n=== ablation: staged-pipeline chunk size (DGX-1 0->5, 64MB) ===");
+    for chunk in [64u64 << 10, 256 << 10, 512 << 10, 2 << 20, 16 << 20] {
+        let params = Params { pipeline_chunk: chunk, ..Params::default() };
+        let mut sim = Sim::new(&dgx);
+        let id = staged_pipeline(&mut sim, &dgx, &params, 0, 5, 64.0 * 1048576.0, &[]);
+        let t = sim.run().finish(id);
+        println!("    chunk {:>8}: {:>12}", fmt_bytes(chunk), fmt_time(t));
+    }
+
+    println!("\n=== ablation: DFacTo nnz-balanced vs equal-rows partition (message CV) ===");
+    for d in datasets::all() {
+        let balanced: Vec<f64> = (0..3)
+            .flat_map(|m| {
+                profile_rows(&d.modes[m], 8)
+                    .into_iter()
+                    .map(|r| (r * ROW_BYTES) as f64)
+            })
+            .collect();
+        let equal: Vec<f64> = (0..3)
+            .flat_map(|m| {
+                let rows = d.modes[m].dim / 8;
+                std::iter::repeat((rows * ROW_BYTES) as f64).take(8)
+            })
+            .collect();
+        let _ = ModeProfile { dim: 1, skew: 0.0 };
+        println!(
+            "    {:<10} CV nnz-balanced {:.2} vs equal-rows {:.2} (equal rows balance bytes, unbalance compute)",
+            d.name,
+            Summary::of(&balanced).cv,
+            Summary::of(&equal).cv,
+        );
+    }
+}

@@ -1,0 +1,66 @@
+//! Microbenchmarks of the substrate hot paths: the discrete-event flow
+//! engine, routing, and one full collective of each library — the L3
+//! performance targets of DESIGN.md §8 (>= 1e5 simulated transfers/s).
+//! `cargo bench --bench bench_engine`.
+
+use agv_bench::comm::{run_allgatherv, Library};
+use agv_bench::sim::Sim;
+use agv_bench::topology::systems::{cluster, dgx1};
+use agv_bench::util::bench::{bench, black_box};
+use agv_bench::util::prng::Rng;
+
+fn main() {
+    let dgx = dgx1();
+    let clu = cluster(16);
+
+    // raw engine throughput: chains of random flows with contention
+    for n_flows in [100usize, 1000, 5000] {
+        let name = format!("engine/random_dag/{n_flows}_flows");
+        let r = bench(&name, 1, 8, || {
+            let mut rng = Rng::new(42);
+            let mut sim = Sim::new(&dgx);
+            let mut last = None;
+            for _ in 0..n_flows {
+                let a = rng.gen_range(8) as usize;
+                let mut b = rng.gen_range(8) as usize;
+                if a == b {
+                    b = (b + 1) % 8;
+                }
+                let path = dgx.route_gpus(a, b).unwrap();
+                let deps: Vec<_> = if rng.next_f64() < 0.3 {
+                    last.into_iter().collect()
+                } else {
+                    vec![]
+                };
+                last = Some(sim.flow(path, 1e6 + rng.gen_range(1 << 22) as f64, 1e-6, &deps));
+            }
+            black_box(sim.run());
+        });
+        let flows_per_sec = n_flows as f64 / r.mean_s;
+        println!("{}   ({:.0} flows/s)", r.report_line(), flows_per_sec);
+    }
+
+    // routing cost
+    let r = bench("topology/route_all_pairs/cluster16", 2, 20, || {
+        for a in 0..16 {
+            for b in 0..16 {
+                if a != b {
+                    black_box(clu.route_gpus(a, b));
+                }
+            }
+        }
+    });
+    println!("{}", r.report_line());
+
+    // one full collective per library (the Fig. 2/3 inner loop)
+    for lib in Library::all() {
+        for (topo, label, gpus) in [(&dgx, "dgx1", 8usize), (&clu, "cluster", 16)] {
+            let counts = vec![16u64 << 20; gpus];
+            let name = format!("allgatherv/{}/{}x16MB", lib.name(), label);
+            let r = bench(&name, 1, 10, || {
+                black_box(run_allgatherv(lib, topo, &counts));
+            });
+            println!("{}", r.report_line());
+        }
+    }
+}

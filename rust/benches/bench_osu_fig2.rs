@@ -1,0 +1,31 @@
+//! Bench target regenerating **Fig. 2** (OSU Allgatherv sweep) and
+//! timing the harness itself. `cargo bench --bench bench_osu_fig2`.
+//!
+//! Prints (a) the figure's data rows — the reproduction artifact — and
+//! (b) measurement statistics of the simulation harness (our custom
+//! harness replaces criterion, which is unavailable offline).
+
+use agv_bench::comm::Library;
+use agv_bench::osu::{run_osu, OsuConfig};
+use agv_bench::report::fig2;
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Fig. 2 data (per-rank message size -> total time) ===\n");
+    let cells = fig2::grid();
+    print!("{}", fig2::render(&cells));
+
+    println!("=== harness timing (simulation cost, not paper metric) ===");
+    let cfg = OsuConfig::default();
+    for system in SystemKind::all() {
+        let topo = system.build();
+        for lib in Library::all() {
+            let name = format!("osu_sweep/{}/{}/8gpus", system.name(), lib.name());
+            let r = bench(&name, 1, 5, || {
+                black_box(run_osu(&cfg, &topo, lib, 8.min(topo.num_gpus())));
+            });
+            println!("{}", r.report_line());
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Bench target regenerating **Fig. 3** (ReFacTo communication time) and
+//! timing the simulation harness. `cargo bench --bench bench_refacto_fig3`.
+
+use agv_bench::comm::{Library, Params};
+use agv_bench::cpals::comm_model::refacto_comm;
+use agv_bench::report::fig3;
+use agv_bench::tensor::datasets;
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Fig. 3 data (10 CP-ALS iterations) ===\n");
+    let panels = fig3::default_panels();
+    print!("{}", fig3::render(&panels));
+
+    println!("=== harness timing ===");
+    for system in SystemKind::all() {
+        let topo = system.build();
+        for d in datasets::all() {
+            let name = format!("refacto/{}/{}/8gpus", system.name(), d.name);
+            let r = bench(&name, 1, 5, || {
+                for lib in Library::all() {
+                    black_box(refacto_comm(&topo, lib, Params::default(), &d, 8, 1));
+                }
+            });
+            println!("{}", r.report_line());
+        }
+    }
+}

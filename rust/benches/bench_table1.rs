@@ -1,0 +1,24 @@
+//! Bench target regenerating **Table I** (data-set message statistics)
+//! and timing the statistics pipeline. `cargo bench --bench bench_table1`.
+
+use agv_bench::report::table1;
+use agv_bench::tensor::datasets;
+use agv_bench::tensor::messages::MsgStats;
+use agv_bench::util::bench::{bench, black_box};
+
+fn main() {
+    println!("=== Table I ===\n");
+    print!("{}", table1::render());
+    println!();
+
+    println!("=== harness timing ===");
+    for d in datasets::all() {
+        let name = format!("table1_stats/{}", d.name);
+        let r = bench(&name, 2, 10, || {
+            for gpus in [2usize, 8, 16] {
+                black_box(MsgStats::of(&d, gpus));
+            }
+        });
+        println!("{}", r.report_line());
+    }
+}

@@ -1,0 +1,345 @@
+//! Logical collective schedules, independent of transport.
+//!
+//! A schedule is a sequence of steps; step `s+1` of a rank depends on that
+//! rank's sends/receives of step `s`. Each [`SendOp`] moves one or more
+//! *blocks* (rank contributions) between ranks. Schedules carry block
+//! identity so (a) a logical executor can verify every rank ends up with
+//! every block — the delivery-correctness property tests below — and
+//! (b) irregular byte counts are preserved per block.
+//!
+//! Implemented:
+//! - [`ring_allgatherv`]: bandwidth-optimal, P-1 steps (MVAPICH large);
+//! - [`recursive_doubling_allgatherv`]: log2 P steps, power-of-two P
+//!   (MVAPICH small, power-of-two);
+//! - [`bruck_allgatherv`]: ceil(log2 P) steps, any P (MVAPICH small);
+//! - [`binomial_bcast`]: log-tree broadcast (MPI_Bcast);
+//! - [`bcast_series_allgatherv`]: the paper's Listing 1 — Allgatherv as a
+//!   series of P broadcasts (what NCCL must do lacking a native routine).
+
+/// One logical point-to-point send: `blocks` identifies which ranks'
+/// contributions travel (byte size resolved against `counts`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SendOp {
+    pub from: usize,
+    pub to: usize,
+    pub blocks: Vec<usize>,
+}
+
+impl SendOp {
+    pub fn bytes(&self, counts: &[u64]) -> u64 {
+        self.blocks.iter().map(|&b| counts[b]).sum()
+    }
+}
+
+/// A schedule: steps of concurrent sends. Step boundaries are
+/// synchronization points per rank (a rank's step-s+1 ops depend on its
+/// step-s ops; different ranks proceed independently unless data flows).
+#[derive(Clone, Debug, Default)]
+pub struct Schedule {
+    pub steps: Vec<Vec<SendOp>>,
+}
+
+impl Schedule {
+    pub fn num_sends(&self) -> usize {
+        self.steps.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn total_block_transfers(&self) -> usize {
+        self.steps
+            .iter()
+            .flat_map(|s| s.iter().map(|op| op.blocks.len()))
+            .sum()
+    }
+}
+
+/// Ring allgatherv: at step s, rank i forwards block (i - s + P) % P to
+/// rank (i + 1) % P. After P-1 steps everyone has everything. The
+/// `order` permutation maps logical ring position -> rank, letting NCCL
+/// run the same schedule over a topology-derived ring.
+pub fn ring_allgatherv(p: usize, order: Option<&[usize]>) -> Schedule {
+    assert!(p >= 1);
+    let identity: Vec<usize> = (0..p).collect();
+    let ring = order.unwrap_or(&identity);
+    assert_eq!(ring.len(), p);
+    let mut steps = Vec::new();
+    for s in 0..p.saturating_sub(1) {
+        let mut ops = Vec::new();
+        for pos in 0..p {
+            let from = ring[pos];
+            let to = ring[(pos + 1) % p];
+            let block = ring[(pos + p - s) % p];
+            ops.push(SendOp { from, to, blocks: vec![block] });
+        }
+        steps.push(ops);
+    }
+    Schedule { steps }
+}
+
+/// Recursive doubling: requires power-of-two P; at step s ranks exchange
+/// everything they hold with their partner at distance 2^s.
+pub fn recursive_doubling_allgatherv(p: usize) -> Schedule {
+    assert!(p.is_power_of_two(), "recursive doubling needs power-of-two P");
+    let mut held: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
+    let mut steps = Vec::new();
+    let mut dist = 1;
+    while dist < p {
+        let mut ops = Vec::new();
+        let mut new_held = held.clone();
+        for r in 0..p {
+            let partner = r ^ dist;
+            ops.push(SendOp { from: r, to: partner, blocks: held[r].clone() });
+            new_held[partner].extend(held[r].iter().copied());
+        }
+        for h in new_held.iter_mut() {
+            h.sort_unstable();
+            h.dedup();
+        }
+        held = new_held;
+        steps.push(ops);
+        dist <<= 1;
+    }
+    Schedule { steps }
+}
+
+/// Bruck allgather(v): works for any P in ceil(log2 P) steps; rank r
+/// sends everything it holds to rank (r - 2^s + P) % P at step s.
+pub fn bruck_allgatherv(p: usize) -> Schedule {
+    assert!(p >= 1);
+    let mut held: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
+    let mut steps = Vec::new();
+    let mut dist = 1;
+    while dist < p {
+        let mut ops = Vec::new();
+        let mut new_held = held.clone();
+        for r in 0..p {
+            let to = (r + p - dist) % p;
+            // send the blocks the receiver does not yet have
+            let missing: Vec<usize> = held[r]
+                .iter()
+                .copied()
+                .filter(|b| !held[to].contains(b))
+                .collect();
+            if !missing.is_empty() {
+                new_held[to].extend(missing.iter().copied());
+                ops.push(SendOp { from: r, to, blocks: missing });
+            }
+        }
+        for h in new_held.iter_mut() {
+            h.sort_unstable();
+            h.dedup();
+        }
+        held = new_held;
+        steps.push(ops);
+        dist <<= 1;
+    }
+    Schedule { steps }
+}
+
+/// Binomial-tree broadcast of `root`'s block to all P ranks (MPI_Bcast).
+pub fn binomial_bcast(p: usize, root: usize) -> Schedule {
+    assert!(root < p);
+    // Relative rank space: rr = (r - root) mod p; rr 0 is the root.
+    // Distance halves each step so every sender already holds the data:
+    // step 0 only the root sends (to rr = 2^(k-1)), step 1 both holders
+    // send, etc.
+    let mut steps = Vec::new();
+    if p > 1 {
+        let mut dist = p.next_power_of_two() / 2;
+        while dist >= 1 {
+            let mut ops = Vec::new();
+            for rr in (0..p).step_by(2 * dist) {
+                if rr + dist < p {
+                    let from = (rr + root) % p;
+                    let to = (rr + dist + root) % p;
+                    ops.push(SendOp { from, to, blocks: vec![root] });
+                }
+            }
+            steps.push(ops);
+            dist /= 2;
+        }
+    }
+    Schedule { steps }
+}
+
+/// Ring broadcast (what NCCL uses): root sends around the ring; with
+/// chunk pipelining the transport turns this into a pipeline. `order`
+/// gives the ring permutation (topology-detected for NCCL).
+pub fn ring_bcast(p: usize, root: usize, order: Option<&[usize]>) -> Schedule {
+    let identity: Vec<usize> = (0..p).collect();
+    let ring = order.unwrap_or(&identity);
+    assert_eq!(ring.len(), p);
+    let root_pos = ring.iter().position(|&r| r == root).expect("root not in ring");
+    let mut steps = Vec::new();
+    for s in 0..p.saturating_sub(1) {
+        let from = ring[(root_pos + s) % p];
+        let to = ring[(root_pos + s + 1) % p];
+        steps.push(vec![SendOp { from, to, blocks: vec![root] }]);
+    }
+    Schedule { steps }
+}
+
+/// Paper Listing 1: Allgatherv recreated as a series of broadcasts, one
+/// per rank (NCCL has no native Allgatherv). Broadcasts execute
+/// back-to-back on the stream; each contributes its own schedule and the
+/// transport layer adds the per-call launch overhead.
+pub fn bcast_series_allgatherv(p: usize, order: Option<&[usize]>) -> Vec<Schedule> {
+    (0..p).map(|root| ring_bcast(p, root, order)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Logical executor: verifies delivery correctness of any schedule.
+// ---------------------------------------------------------------------------
+
+/// Execute a schedule over per-rank block sets; returns the final
+/// holdings. A send is only legal if the sender holds every block it
+/// ships at that step (asserted).
+pub fn execute(p: usize, schedules: &[&Schedule]) -> Vec<Vec<bool>> {
+    let mut held = vec![vec![false; p]; p];
+    for (r, h) in held.iter_mut().enumerate() {
+        h[r] = true;
+    }
+    for sched in schedules {
+        for step in &sched.steps {
+            // all sends in a step read pre-step state
+            let snapshot = held.clone();
+            for op in step {
+                for &b in &op.blocks {
+                    assert!(
+                        snapshot[op.from][b],
+                        "rank {} sends block {} it does not hold",
+                        op.from, b
+                    );
+                    held[op.to][b] = true;
+                }
+            }
+        }
+    }
+    held
+}
+
+/// True iff every rank holds every block.
+pub fn all_delivered(held: &[Vec<bool>]) -> bool {
+    held.iter().all(|h| h.iter().all(|&x| x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+
+    #[test]
+    fn ring_delivers_all_p() {
+        for p in 1..=17 {
+            let s = ring_allgatherv(p, None);
+            assert!(all_delivered(&execute(p, &[&s])), "p={p}");
+            assert_eq!(s.steps.len(), p.saturating_sub(1));
+        }
+    }
+
+    #[test]
+    fn ring_with_permuted_order() {
+        let order = [3usize, 1, 4, 0, 2];
+        let s = ring_allgatherv(5, Some(&order));
+        assert!(all_delivered(&execute(5, &[&s])));
+    }
+
+    #[test]
+    fn recursive_doubling_delivers_powers_of_two() {
+        for p in [1usize, 2, 4, 8, 16] {
+            let s = recursive_doubling_allgatherv(p);
+            assert!(all_delivered(&execute(p, &[&s])), "p={p}");
+            assert_eq!(s.steps.len(), (p as f64).log2() as usize);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn recursive_doubling_rejects_non_pow2() {
+        let _ = recursive_doubling_allgatherv(6);
+    }
+
+    #[test]
+    fn bruck_delivers_any_p() {
+        for p in 1..=17 {
+            let s = bruck_allgatherv(p);
+            assert!(all_delivered(&execute(p, &[&s])), "p={p}");
+            assert!(s.steps.len() <= (p as f64).log2().ceil() as usize + 1);
+        }
+    }
+
+    #[test]
+    fn binomial_bcast_reaches_everyone() {
+        for p in 1..=17 {
+            for root in [0, p / 2, p - 1] {
+                let s = binomial_bcast(p, root.min(p - 1));
+                let held = execute(p, &[&s]);
+                for r in 0..p {
+                    assert!(held[r][root.min(p - 1)], "p={p} root={root} rank={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_series_is_a_valid_allgatherv() {
+        for p in 1..=16 {
+            let series = bcast_series_allgatherv(p, None);
+            assert_eq!(series.len(), p);
+            let refs: Vec<&Schedule> = series.iter().collect();
+            assert!(all_delivered(&execute(p, &refs)), "p={p}");
+        }
+    }
+
+    #[test]
+    fn sendop_bytes_uses_counts() {
+        let op = SendOp { from: 0, to: 1, blocks: vec![0, 2] };
+        assert_eq!(op.bytes(&[10, 20, 30]), 40);
+    }
+
+    #[test]
+    fn ring_step_volume_is_irregular_counts() {
+        // with irregular counts the per-step bytes differ per rank
+        let counts = [100u64, 5, 60];
+        let s = ring_allgatherv(3, None);
+        let step0: Vec<u64> = s.steps[0].iter().map(|op| op.bytes(&counts)).collect();
+        assert_eq!(step0.len(), 3);
+        assert!(step0.contains(&100) && step0.contains(&5) && step0.contains(&60));
+    }
+
+    #[test]
+    fn prop_random_ring_orders_deliver() {
+        check("ring-orders", 64, |rng| {
+            let p = 2 + rng.gen_range(14) as usize;
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let s = ring_allgatherv(p, Some(&order));
+            prop_assert!(all_delivered(&execute(p, &[&s])), "p={p} order={order:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_bcast_series_any_order() {
+        check("bcast-series-orders", 32, |rng| {
+            let p = 2 + rng.gen_range(10) as usize;
+            let mut order: Vec<usize> = (0..p).collect();
+            rng.shuffle(&mut order);
+            let series = bcast_series_allgatherv(p, Some(&order));
+            let refs: Vec<&Schedule> = series.iter().collect();
+            prop_assert!(all_delivered(&execute(p, &refs)), "p={p}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_block_conservation_ring() {
+        // every ring send ships exactly one block, P*(P-1) transfers total
+        check("ring-conservation", 32, |rng| {
+            let p = 2 + rng.gen_range(14) as usize;
+            let s = ring_allgatherv(p, None);
+            prop_assert!(s.total_block_transfers() == p * (p - 1));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Communication library models (paper §II): traditional MPI, CUDA-aware
+//! MVAPICH ("MPI-CUDA") and NCCL, each implementing the irregular
+//! [`CommLibrary::allgatherv`] collective over a simulated topology.
+//!
+//! Structure:
+//! - [`algorithms`]: *logical* collective schedules (ring, Bruck,
+//!   recursive doubling, broadcast trees, bcast-series) — library-agnostic
+//!   lists of (step, from, to, block) send operations, property-tested
+//!   for delivery correctness;
+//! - [`transport`]: how one logical send becomes simulator flows for a
+//!   given library (host staging, GPUDirect P2P, GDR, pipelined chunks);
+//! - [`mpi`] / [`mpi_cuda`] / [`nccl`]: the three libraries, composing an
+//!   algorithm choice with a transport;
+//! - [`params`]: protocol constants and tunables, including the
+//!   `MV2_GPUDIRECT_LIMIT` knob the paper sweeps in §V-C.
+
+pub mod algorithms;
+pub mod mpi;
+pub mod mpi_cuda;
+pub mod nccl;
+pub mod params;
+pub mod transport;
+
+use crate::topology::Topology;
+
+pub use params::Params;
+
+/// Result of one simulated collective.
+#[derive(Clone, Copy, Debug)]
+pub struct CommResult {
+    /// Total wall-clock communication time (seconds), including any
+    /// host<->device staging — matching the paper's measurement ("time to
+    /// complete the Allgatherv procedure ... including the time to move
+    /// data between the host and GPUs, when applicable").
+    pub time: f64,
+    /// Number of point-to-point flows simulated.
+    pub flows: usize,
+}
+
+/// A GPU collective communication library model.
+pub trait CommLibrary {
+    fn name(&self) -> &'static str;
+
+    /// Irregular all-gather: rank r contributes `counts[r]` bytes; on
+    /// completion every rank holds all `counts.iter().sum()` bytes.
+    /// Rank r runs on GPU r (the paper's sequential rank->device binding,
+    /// §III-B). `counts.len()` must not exceed `topo.num_gpus()`.
+    fn allgatherv(&self, topo: &Topology, counts: &[u64]) -> CommResult;
+}
+
+/// The three libraries of the paper, by name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Library {
+    Mpi,
+    MpiCuda,
+    Nccl,
+}
+
+impl Library {
+    pub fn name(self) -> &'static str {
+        match self {
+            Library::Mpi => "MPI",
+            Library::MpiCuda => "MPI-CUDA",
+            Library::Nccl => "NCCL",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Library> {
+        match s.to_ascii_lowercase().as_str() {
+            "mpi" => Some(Library::Mpi),
+            "mpi-cuda" | "mpicuda" | "cuda" | "mvapich" => Some(Library::MpiCuda),
+            "nccl" => Some(Library::Nccl),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Library; 3] {
+        [Library::Mpi, Library::MpiCuda, Library::Nccl]
+    }
+
+    /// Instantiate the library model with the given protocol parameters.
+    pub fn build(self, params: Params) -> Box<dyn CommLibrary> {
+        match self {
+            Library::Mpi => Box::new(mpi::Mpi::new(params)),
+            Library::MpiCuda => Box::new(mpi_cuda::MpiCuda::new(params)),
+            Library::Nccl => Box::new(nccl::Nccl::new(params)),
+        }
+    }
+}
+
+/// Convenience: run a library's allgatherv with default parameters.
+pub fn run_allgatherv(lib: Library, topo: &Topology, counts: &[u64]) -> CommResult {
+    lib.build(Params::default()).allgatherv(topo, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn library_parse_roundtrip() {
+        for l in Library::all() {
+            assert_eq!(Library::parse(l.name()), Some(l));
+        }
+        assert_eq!(Library::parse("mvapich"), Some(Library::MpiCuda));
+        assert_eq!(Library::parse("x"), None);
+    }
+}

@@ -1,0 +1,139 @@
+//! Traditional MPI (MVAPICH with CUDA support disabled), paper §II-A.
+//!
+//! Without CUDA awareness the application performs *explicit* staging:
+//! every rank copies its contribution device->host before the collective
+//! and the full gathered buffer host->device afterwards — the paper's
+//! measurements for "MPI" include these copies. The collective itself is
+//! host-to-host: Bruck (latency-optimal) below the MVAPICH size switch,
+//! ring (bandwidth-optimal) above it. The selection is driven by the
+//! *average* per-rank count — exactly what goes wrong on highly irregular
+//! workloads (§V-C), where the mean says "small" while the heavy tail is
+//! hundreds of MB.
+
+use crate::sim::Sim;
+use crate::topology::Topology;
+
+use super::algorithms::{bruck_allgatherv, ring_allgatherv, Schedule};
+use super::transport::{dtoh, host_to_host, htod, run_schedule};
+use super::{CommLibrary, CommResult, Params};
+
+pub struct Mpi {
+    params: Params,
+}
+
+impl Mpi {
+    pub fn new(params: Params) -> Mpi {
+        Mpi { params }
+    }
+}
+
+/// MVAPICH-style algorithm selection, shared with the CUDA-aware path.
+pub fn select_algorithm(params: &Params, counts: &[u64]) -> Schedule {
+    let p = counts.len();
+    let avg = counts.iter().sum::<u64>() / p.max(1) as u64;
+    if avg <= params.allgatherv_algo_switch {
+        bruck_allgatherv(p)
+    } else {
+        ring_allgatherv(p, None)
+    }
+}
+
+/// Per-send protocol overhead (eager vs rendezvous handshake).
+pub fn pt2pt_overhead(params: &Params, bytes: u64) -> f64 {
+    if bytes <= params.eager_limit {
+        params.eager_overhead
+    } else {
+        params.rndv_overhead
+    }
+}
+
+impl CommLibrary for Mpi {
+    fn name(&self) -> &'static str {
+        "MPI"
+    }
+
+    fn allgatherv(&self, topo: &Topology, counts: &[u64]) -> CommResult {
+        let p = counts.len();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let total: u64 = counts.iter().sum();
+        let mut sim = Sim::new(topo);
+
+        // Explicit D2H of each rank's own contribution.
+        let entry: Vec<Option<crate::sim::TaskId>> = (0..p)
+            .map(|r| Some(dtoh(&mut sim, topo, r, counts[r] as f64, &[])))
+            .collect();
+
+        let sched = select_algorithm(&self.params, counts);
+        let params = self.params;
+        let finals = run_schedule(&mut sim, p, &sched, &entry, |sim, op, deps| {
+            let bytes = op.bytes(counts);
+            let ready = sim.delay(pt2pt_overhead(&params, bytes), deps);
+            host_to_host(sim, topo, &params, op.from, op.to, bytes as f64, &[ready])
+        });
+
+        // Explicit H2D of the full gathered buffer on every rank.
+        let mut tails = Vec::new();
+        for (r, f) in finals.iter().enumerate() {
+            let deps: Vec<_> = f.or(entry[r]).into_iter().collect();
+            tails.push(htod(&mut sim, topo, r, total as f64, &deps));
+        }
+        let _ = tails;
+        let res = sim.run();
+        CommResult { time: res.makespan, flows: res.flows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::systems::{cluster, dgx1};
+
+    #[test]
+    fn algorithm_selection_by_avg() {
+        let p = Params::default();
+        // small average -> Bruck (log P steps)
+        let s = select_algorithm(&p, &[1024; 8]);
+        assert_eq!(s.steps.len(), 3);
+        // large average -> ring (P-1 steps)
+        let s = select_algorithm(&p, &[10 << 20; 8]);
+        assert_eq!(s.steps.len(), 7);
+        // irregular with small mean but huge tail -> still Bruck
+        // (the misselection the paper's irregular workloads expose)
+        let mut counts = vec![1024u64; 8];
+        counts[3] = 400 << 10;
+        let s = select_algorithm(&p, &counts);
+        assert_eq!(s.steps.len(), 3);
+    }
+
+    #[test]
+    fn mpi_includes_staging_time() {
+        // on a 2-GPU run the time must exceed D2H + wire + H2D lower bound
+        let t = cluster(2);
+        let lib = Mpi::new(Params::default());
+        let m = 64u64 << 20;
+        let r = lib.allgatherv(&t, &[m, m]);
+        let wire = m as f64 / 6.2e9;
+        let h2d = 2.0 * m as f64 / 12.5e9;
+        assert!(r.time > wire + h2d, "time={} lower bound={}", r.time, wire + h2d);
+    }
+
+    #[test]
+    fn mpi_monotone_in_size() {
+        let t = dgx1();
+        let lib = Mpi::new(Params::default());
+        let mut last = 0.0;
+        for m in [64u64 << 10, 1 << 20, 16 << 20, 64 << 20] {
+            let r = lib.allgatherv(&t, &[m; 8]);
+            assert!(r.time > last, "size {m}: {} !> {last}", r.time);
+            last = r.time;
+        }
+    }
+
+    #[test]
+    fn mpi_single_rank_degenerate() {
+        let t = dgx1();
+        let lib = Mpi::new(Params::default());
+        let r = lib.allgatherv(&t, &[1 << 20]);
+        assert!(r.time > 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! CUDA-aware MVAPICH ("MPI-CUDA"), paper §II-A.
+//!
+//! Data paths per send, mirroring MVAPICH's runtime decisions:
+//! - intra-node, GPUDirect P2P available (direct NVLink or same PCIe
+//!   root): direct device copy. Mid-size messages (< the 1 MB large-
+//!   message protocol switch) pay an intermediate staging-buffer copy —
+//!   removing it at 1 MB is the sudden runtime drop of §V-B;
+//! - intra-node, message above the IPC cliff: pipelined host staging
+//!   even though P2P exists (staging-buffer exhaustion);
+//! - intra-node, no P2P (e.g. DGX-1 GPU 0 -> 5: two NVLink hops MVAPICH
+//!   cannot see, §II-B): pipelined host staging over PCIe/QPI;
+//! - inter-node (cluster): GPUDirect RDMA when the message fits under
+//!   `MV2_GPUDIRECT_LIMIT`, else pipelined host staging over IB.
+//!
+//! The collective algorithm (Bruck vs ring) is selected exactly like the
+//! host MPI — on mean count — so irregular workloads can mis-select.
+
+use crate::sim::Sim;
+use crate::topology::Topology;
+
+use super::mpi::{pt2pt_overhead, select_algorithm};
+use super::transport::{direct_flow, gdr_send, run_schedule, staged_pipeline, staged_serial};
+use super::{CommLibrary, CommResult, Params};
+
+pub struct MpiCuda {
+    params: Params,
+}
+
+impl MpiCuda {
+    pub fn new(params: Params) -> MpiCuda {
+        MpiCuda { params }
+    }
+
+    /// Emit one CUDA-aware send; returns its completion task.
+    fn send(
+        &self,
+        sim: &mut Sim,
+        topo: &Topology,
+        from: usize,
+        to: usize,
+        bytes: u64,
+        deps: &[crate::sim::TaskId],
+    ) -> crate::sim::TaskId {
+        let p = &self.params;
+        let ready = sim.delay(pt2pt_overhead(p, bytes), deps);
+        let b = bytes as f64;
+        if topo.same_node(from, to) {
+            if bytes > p.ipc_large_threshold {
+                // IPC cliff: synchronous small-buffer staging fallback.
+                staged_serial(sim, topo, p, from, to, b, &[ready])
+            } else if topo.p2p_accessible(from, to) {
+                if bytes > p.eager_limit && bytes < p.large_msg_protocol {
+                    // mid-size path: extra staging-buffer copy then copy out
+                    let copy = sim.delay(b / p.staging_copy_bw, &[ready]);
+                    direct_flow(sim, topo, from, to, b, 0.0, &[copy])
+                } else {
+                    direct_flow(sim, topo, from, to, b, 0.0, &[ready])
+                }
+            } else {
+                staged_pipeline(sim, topo, p, from, to, b, &[ready])
+            }
+        } else {
+            // inter-node (cluster)
+            if bytes <= p.gpudirect_limit {
+                // the mid-size intermediate-buffer copy applies to the
+                // GDR path too (it is a property of MVAPICH's GPU
+                // point-to-point protocol, not of the wire) — its removal
+                // at the 1 MB switch is visible on all three systems
+                // (paper §V-B).
+                let entry = if bytes > p.eager_limit && bytes < p.large_msg_protocol {
+                    sim.delay(b / p.staging_copy_bw, &[ready])
+                } else {
+                    ready
+                };
+                gdr_send(sim, topo, p, from, to, b, &[entry])
+            } else {
+                staged_pipeline(sim, topo, p, from, to, b, &[ready])
+            }
+        }
+    }
+}
+
+impl CommLibrary for MpiCuda {
+    fn name(&self) -> &'static str {
+        "MPI-CUDA"
+    }
+
+    fn allgatherv(&self, topo: &Topology, counts: &[u64]) -> CommResult {
+        let p = counts.len();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let mut sim = Sim::new(topo);
+        let sched = select_algorithm(&self.params, counts);
+        let entry = vec![None; p];
+        let _ = run_schedule(&mut sim, p, &sched, &entry, |sim, op, deps| {
+            self.send(sim, topo, op.from, op.to, op.bytes(counts), deps)
+        });
+        let res = sim.run();
+        CommResult { time: res.makespan, flows: res.flows }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::mpi::Mpi;
+    use crate::topology::systems::{cluster, cs_storm, dgx1};
+
+    #[test]
+    fn beats_plain_mpi_on_nvlink_pair() {
+        // Fig. 2: 2 GPUs on DGX-1/CS-Storm, messages > 16 KB: MPI-CUDA
+        // outruns MPI "by a significant margin".
+        for topo in [dgx1(), cs_storm()] {
+            let m = 16u64 << 20;
+            let cuda = MpiCuda::new(Params::default()).allgatherv(&topo, &[m, m]);
+            let plain = Mpi::new(Params::default()).allgatherv(&topo, &[m, m]);
+            assert!(
+                plain.time > 2.0 * cuda.time,
+                "{}: cuda={} plain={}",
+                topo.name, cuda.time, plain.time
+            );
+        }
+    }
+
+    #[test]
+    fn protocol_switch_drop_at_1mb() {
+        // §V-B: sudden decrease in MPI-CUDA runtime at the 1 MB switch.
+        let topo = dgx1();
+        let lib = MpiCuda::new(Params::default());
+        let below = lib.allgatherv(&topo, &[(1 << 20) - 4096; 2]);
+        let above = lib.allgatherv(&topo, &[1 << 20; 2]);
+        assert!(
+            above.time < below.time,
+            "no drop: below={} above={}",
+            below.time, above.time
+        );
+    }
+
+    #[test]
+    fn gdr_limit_changes_cluster_time() {
+        // §V-C: MV2_GPUDIRECT_LIMIT materially changes runtime.
+        let topo = cluster(8);
+        let counts: Vec<u64> = (0..8).map(|r| (1u64 + r) << 20).collect();
+        let small = MpiCuda::new(Params::default().with_gpudirect_limit(16))
+            .allgatherv(&topo, &counts);
+        let large = MpiCuda::new(Params::default().with_gpudirect_limit(512 << 20))
+            .allgatherv(&topo, &counts);
+        let ratio = small.time.max(large.time) / small.time.min(large.time);
+        assert!(ratio > 1.2, "limit insensitive: ratio={ratio}");
+    }
+
+    #[test]
+    fn ipc_cliff_slows_huge_messages() {
+        let topo = dgx1();
+        let lib = MpiCuda::new(Params::default());
+        let under = lib.allgatherv(&topo, &[400u64 << 20; 2]);
+        let over = lib.allgatherv(&topo, &[600u64 << 20; 2]);
+        // crossing the 512 MB cliff must cost more than pro-rata
+        let per_byte_under = under.time / (400 << 20) as f64;
+        let per_byte_over = over.time / (600 << 20) as f64;
+        assert!(
+            per_byte_over > 1.5 * per_byte_under,
+            "no cliff: {per_byte_under} vs {per_byte_over}"
+        );
+    }
+
+    #[test]
+    fn dgx1_8gpu_slower_than_2gpu_per_byte() {
+        // MPI-CUDA cannot ride 2-hop NVLink: at 8 GPUs some ring hops
+        // stage through hosts, so per-byte cost rises vs the 2-GPU case.
+        let topo = dgx1();
+        let lib = MpiCuda::new(Params::default());
+        let m = 32u64 << 20;
+        let two = lib.allgatherv(&topo, &[m; 2]);
+        let eight = lib.allgatherv(&topo, &[m; 8]);
+        let per_two = two.time / (2.0 * m as f64);
+        let per_eight = eight.time / (8.0 * m as f64);
+        assert!(per_eight > per_two, "2gpu/byte={per_two} 8gpu/byte={per_eight}");
+    }
+}

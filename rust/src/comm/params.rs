@@ -1,0 +1,142 @@
+//! Protocol constants and tunables for the communication models.
+//!
+//! Values are calibrated to the mechanism literature (MVAPICH and NCCL
+//! docs/papers) at the granularity the paper's analysis uses; the
+//! *qualitative* trends of Figs. 2-3 must be robust to modest changes in
+//! these numbers (integration tests assert shapes, not absolutes).
+
+/// Tunable protocol parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    // -------- MPI point-to-point protocol (MVAPICH) --------------------
+    /// Eager/rendezvous switch: sends below this use the low-latency
+    /// eager path, above pay a rendezvous handshake.
+    pub eager_limit: u64,
+    /// Per-send overhead of an eager message (seconds).
+    pub eager_overhead: f64,
+    /// Per-send overhead of a rendezvous handshake (seconds).
+    pub rndv_overhead: f64,
+    /// MVAPICH's mid-size GPU path stages through an intermediate host
+    /// buffer below this threshold; at >= this size it switches to the
+    /// pipelined large-message protocol — the "sudden decrease in runtime
+    /// for MPI-CUDA once the message sizes reach 1MB" of §V-B.
+    pub large_msg_protocol: u64,
+    /// Bandwidth of the intermediate-buffer copy the mid-size path pays.
+    pub staging_copy_bw: f64,
+    /// Chunk size of pipelined host-staged GPU transfers.
+    pub pipeline_chunk: u64,
+    /// Per-chunk handshake/progress overhead of the host-staged pipeline
+    /// (each chunk is a rendezvous-managed transfer): this is what keeps
+    /// MVAPICH's staged path below wire rate on large messages.
+    pub pipeline_chunk_overhead: f64,
+
+    // -------- GPUDirect RDMA (cluster inter-node only) -----------------
+    /// MV2_GPUDIRECT_LIMIT: messages at or below this size go over GDR
+    /// (NIC reads GPU memory directly); larger messages fall back to the
+    /// pipelined host-staged path. The paper sweeps this per data set
+    /// (§V-C: optimal 512MB at 2 GPUs vs 16B at 8 GPUs on DELICIOUS).
+    pub gpudirect_limit: u64,
+    /// Effective GDR read bandwidth (PCIe peer read to the HCA) — lower
+    /// than PCIe write bandwidth; the reason large messages avoid GDR.
+    pub gdr_read_bw: f64,
+
+    // -------- plain MPI (CUDA support disabled) -------------------------
+    /// cudaMemcpy D2H/H2D effective bandwidth for the explicit staging
+    /// copies the application performs around the collective.
+    pub explicit_copy_bw: f64,
+    /// Host-to-host intra-node copy bandwidth (shared-memory transport).
+    pub host_memcpy_bw: f64,
+
+    /// Intra-node CUDA IPC cliff: P2P copies above this size fall back to
+    /// the pipelined host-staged path (staging-buffer exhaustion). This
+    /// is the mechanism behind the paper's Fig. 3 observation that NCCL
+    /// beats MPI-CUDA at 2 GPUs on the most irregular data sets (whose
+    /// max messages are huge) but not on AMAZON or the fixed-size
+    /// benchmark (whose messages stay below the cliff).
+    pub ipc_large_threshold: u64,
+    /// Over the cliff the fallback is a *synchronous* bounce through a
+    /// small staging buffer: per-chunk stream synchronization cost.
+    pub ipc_fallback_sync: f64,
+    /// ... with this (small) staging-buffer chunk size.
+    pub ipc_fallback_chunk: u64,
+
+    // -------- NCCL -------------------------------------------------------
+    /// Per-collective-call launch overhead (kernel launch + proxy setup).
+    /// The bcast-series Allgatherv (paper Listing 1) pays this P times.
+    pub nccl_launch_overhead: f64,
+    /// NCCL ring slice size (pipelining granularity).
+    pub nccl_chunk: u64,
+    /// Minimum chunk: tiny messages are not sliced further.
+    pub nccl_min_chunk: u64,
+    /// A single NCCL ring drives one NVLink: on bonded-4x links (CS-Storm)
+    /// the ring only exploits one of the four lanes. Effective per-ring
+    /// NVLink bandwidth.
+    pub nccl_ring_link_bw: f64,
+    /// Effective NCCL inter-node bandwidth (IB verbs + net proxy path is
+    /// below wire peak).
+    pub nccl_internode_bw: f64,
+    /// Per-chunk proxy/progress overhead on inter-node hops.
+    pub nccl_proxy_overhead: f64,
+
+    // -------- collective algorithm selection (MVAPICH-like) -------------
+    /// Per-rank data size below which the allgatherv uses the
+    /// latency-optimal log-P algorithm (Bruck / recursive doubling);
+    /// above it, the bandwidth-optimal ring.
+    pub allgatherv_algo_switch: u64,
+}
+
+impl Default for Params {
+    fn default() -> Params {
+        Params {
+            eager_limit: 16 << 10,       // 16 KB
+            eager_overhead: 3.0e-6,
+            rndv_overhead: 12.0e-6,
+            large_msg_protocol: 1 << 20, // 1 MB (the §V-B drop)
+            staging_copy_bw: 5.0e9,
+            pipeline_chunk: 512 << 10,
+            pipeline_chunk_overhead: 30.0e-6,
+            gpudirect_limit: 8 << 20,    // 8 MB default; swept in §V-C
+            gdr_read_bw: 3.0e9,
+            explicit_copy_bw: 10.0e9,
+            host_memcpy_bw: 11.0e9,
+            ipc_large_threshold: 512 << 20, // 512 MB
+            ipc_fallback_sync: 20.0e-6,
+            ipc_fallback_chunk: 256 << 10,
+            nccl_launch_overhead: 9.0e-6,
+            nccl_chunk: 1 << 20,
+            nccl_min_chunk: 64 << 10,
+            nccl_ring_link_bw: 18.0e9,
+            nccl_internode_bw: 6.0e9,
+            nccl_proxy_overhead: 2.0e-6,
+            allgatherv_algo_switch: 64 << 10,
+        }
+    }
+}
+
+impl Params {
+    /// Paper §V-C: per-data-set sweep values for MV2_GPUDIRECT_LIMIT.
+    pub fn with_gpudirect_limit(mut self, limit: u64) -> Params {
+        self.gpudirect_limit = limit;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let p = Params::default();
+        assert!(p.eager_limit < p.large_msg_protocol);
+        assert!(p.eager_overhead < p.rndv_overhead);
+        assert!(p.nccl_min_chunk <= p.nccl_chunk);
+        assert!(p.gdr_read_bw < p.explicit_copy_bw);
+    }
+
+    #[test]
+    fn gpudirect_override() {
+        let p = Params::default().with_gpudirect_limit(16);
+        assert_eq!(p.gpudirect_limit, 16);
+    }
+}

@@ -1,0 +1,313 @@
+//! Transports: how a logical send becomes simulator flows for each
+//! library's data path (paper §II).
+//!
+//! The building blocks are the data paths the paper describes:
+//! - explicit device<->host staging copies (plain MPI, §II-A);
+//! - GPUDirect P2P direct copies over NVLink/PCIe (CUDA-aware MPI);
+//! - pipelined host-staged chunks when P2P is unavailable;
+//! - GPUDirect RDMA to the NIC for inter-node sends (MVAPICH-GDR),
+//!   gated by `MV2_GPUDIRECT_LIMIT`;
+//! - host<->host transfers over shared memory / QPI / InfiniBand.
+
+use crate::sim::{Sim, TaskId};
+use crate::topology::Topology;
+
+use super::algorithms::{Schedule, SendOp};
+use super::params::Params;
+
+/// Device-to-host copy of a GPU's buffer (cudaMemcpy D2H): a flow from
+/// the GPU to its host CPU over the PCIe hierarchy — it contends with
+/// everything else crossing those switches.
+pub fn dtoh(sim: &mut Sim, topo: &Topology, rank: usize, bytes: f64, deps: &[TaskId]) -> TaskId {
+    let gpu = topo.gpu(rank);
+    let cpu = topo.host_cpu(gpu);
+    let path = topo.route(gpu, cpu).expect("GPU must reach its host CPU");
+    let lat = topo.path_latency(&path);
+    sim.flow(path, bytes, lat, deps)
+}
+
+/// Host-to-device copy (cudaMemcpy H2D).
+pub fn htod(sim: &mut Sim, topo: &Topology, rank: usize, bytes: f64, deps: &[TaskId]) -> TaskId {
+    let gpu = topo.gpu(rank);
+    let cpu = topo.host_cpu(gpu);
+    let path = topo.route(cpu, gpu).expect("host CPU must reach its GPU");
+    let lat = topo.path_latency(&path);
+    sim.flow(path, bytes, lat, deps)
+}
+
+/// Host-to-host transfer between the CPUs owning two GPUs' hierarchies.
+/// Same socket: a memcpy (pure delay at memory bandwidth). Otherwise a
+/// flow over QPI (intra-node) or PCIe+IB (inter-node).
+pub fn host_to_host(
+    sim: &mut Sim,
+    topo: &Topology,
+    params: &Params,
+    from: usize,
+    to: usize,
+    bytes: f64,
+    deps: &[TaskId],
+) -> TaskId {
+    let cpu_s = topo.host_cpu(topo.gpu(from));
+    let cpu_r = topo.host_cpu(topo.gpu(to));
+    if cpu_s == cpu_r {
+        // same root complex: shared-memory copy
+        return sim.delay(bytes / params.host_memcpy_bw, deps);
+    }
+    let path = topo.route(cpu_s, cpu_r).expect("hosts must be routable");
+    let lat = topo.path_latency(&path);
+    sim.flow(path, bytes, lat, deps)
+}
+
+/// Direct GPU-to-GPU flow along the widest route (GPUDirect P2P copy, or
+/// any single-flow device copy).
+pub fn direct_flow(
+    sim: &mut Sim,
+    topo: &Topology,
+    from: usize,
+    to: usize,
+    bytes: f64,
+    extra_latency: f64,
+    deps: &[TaskId],
+) -> TaskId {
+    let path = topo.route_gpus(from, to).expect("GPUs must be routable");
+    let lat = topo.path_latency(&path) + extra_latency;
+    sim.flow(path, bytes, lat, deps)
+}
+
+/// Pipelined host-staged transfer: D2H, (host-to-host), H2D in chunks of
+/// `params.pipeline_chunk`, with chunk k's leg j depending on leg j-1 of
+/// chunk k and leg j of chunk k-1 — the classic MVAPICH GPU pipeline.
+/// Returns the completion of the last chunk's H2D.
+pub fn staged_pipeline(
+    sim: &mut Sim,
+    topo: &Topology,
+    params: &Params,
+    from: usize,
+    to: usize,
+    bytes: f64,
+    deps: &[TaskId],
+) -> TaskId {
+    let chunk = params.pipeline_chunk as f64;
+    let n_chunks = ((bytes / chunk).ceil() as usize).max(1);
+    let per = bytes / n_chunks as f64;
+    let mut prev_leg1: Option<TaskId> = None;
+    let mut prev_leg2: Option<TaskId> = None;
+    let mut prev_leg3: Option<TaskId> = None;
+    let mut last = None;
+    for _ in 0..n_chunks {
+        let mut d1: Vec<TaskId> = deps.to_vec();
+        if let Some(t) = prev_leg1 {
+            d1 = vec![t]; // sender serializes its own D2H chunks
+        }
+        let leg1 = dtoh(sim, topo, from, per, &d1);
+        let mut d2 = vec![leg1];
+        if let Some(t) = prev_leg2 {
+            d2.push(t);
+        }
+        // per-chunk rendezvous/progress handshake before the wire leg
+        let hs = sim.delay(params.pipeline_chunk_overhead, &d2);
+        let leg2 = host_to_host(sim, topo, params, from, to, per, &[hs]);
+        let mut d3 = vec![leg2];
+        if let Some(t) = prev_leg3 {
+            d3.push(t);
+        }
+        let leg3 = htod(sim, topo, to, per, &d3);
+        prev_leg1 = Some(leg1);
+        prev_leg2 = Some(leg2);
+        prev_leg3 = Some(leg3);
+        last = Some(leg3);
+    }
+    last.unwrap()
+}
+
+/// Synchronous staged bounce: the fallback past the CUDA-IPC cliff.
+/// Each small chunk runs D2H -> host copy -> H2D *serially* with a stream
+/// synchronization between chunks — no pipelining at all. This is what
+/// makes the paper's 729 MB-class NELL-1 messages so much slower under
+/// MPI-CUDA at 2 GPUs than the same volume at 8 (Fig. 3, §V-C).
+pub fn staged_serial(
+    sim: &mut Sim,
+    topo: &Topology,
+    params: &Params,
+    from: usize,
+    to: usize,
+    bytes: f64,
+    deps: &[TaskId],
+) -> TaskId {
+    let chunk = params.ipc_fallback_chunk as f64;
+    let n_chunks = ((bytes / chunk).ceil() as usize).max(1);
+    let per = bytes / n_chunks as f64;
+    let mut prev: Option<TaskId> = None;
+    for _ in 0..n_chunks {
+        let d: Vec<TaskId> = prev.map(|t| vec![t]).unwrap_or_else(|| deps.to_vec());
+        let leg1 = dtoh(sim, topo, from, per, &d);
+        let leg2 = host_to_host(sim, topo, params, from, to, per, &[leg1]);
+        let leg3 = htod(sim, topo, to, per, &[leg2]);
+        prev = Some(sim.delay(params.ipc_fallback_sync, &[leg3]));
+    }
+    prev.unwrap()
+}
+
+/// GPUDirect RDMA send (cluster inter-node, size <= MV2_GPUDIRECT_LIMIT):
+/// the HCA reads GPU memory directly — one flow along the full GPU->GPU
+/// route plus a serial penalty modeling the reduced PCIe peer-read
+/// bandwidth of GDR (the reason MVAPICH avoids GDR for large messages).
+pub fn gdr_send(
+    sim: &mut Sim,
+    topo: &Topology,
+    params: &Params,
+    from: usize,
+    to: usize,
+    bytes: f64,
+    deps: &[TaskId],
+) -> TaskId {
+    let path = topo.route_gpus(from, to).expect("GPUs must be routable");
+    let wire_bw = topo.path_bandwidth(&path);
+    let lat = topo.path_latency(&path);
+    let flow = sim.flow(path, bytes, lat, deps);
+    let penalty = (1.0 / params.gdr_read_bw - 1.0 / wire_bw).max(0.0) * bytes;
+    if penalty > 0.0 {
+        sim.delay(penalty, &[flow])
+    } else {
+        flow
+    }
+}
+
+/// Run a [`Schedule`] with per-rank step barriers: a rank's step-s+1
+/// operations wait on everything it sent or received in step s (blocking
+/// MPI collective semantics — the reason a dominant block serializes a
+/// ring but not a pipelined broadcast).
+///
+/// `send` emits the transport tasks for one logical op and returns the
+/// completion task.
+pub fn run_schedule<F>(
+    sim: &mut Sim,
+    p: usize,
+    schedule: &Schedule,
+    entry: &[Option<TaskId>],
+    mut send: F,
+) -> Vec<Option<TaskId>>
+where
+    F: FnMut(&mut Sim, &SendOp, &[TaskId]) -> TaskId,
+{
+    // marker[r]: task after which rank r may proceed to the next step
+    let mut marker: Vec<Option<TaskId>> = vec![None; p];
+    if !entry.is_empty() {
+        assert_eq!(entry.len(), p, "one entry marker per rank");
+        marker.copy_from_slice(entry);
+    }
+    for step in &schedule.steps {
+        let mut step_events: Vec<(usize, TaskId)> = Vec::new();
+        for op in step {
+            let mut deps: Vec<TaskId> = Vec::new();
+            if let Some(t) = marker[op.from] {
+                deps.push(t);
+            }
+            if let Some(t) = marker[op.to] {
+                if Some(t) != marker[op.from] {
+                    deps.push(t);
+                }
+            }
+            let done = send(sim, op, &deps);
+            step_events.push((op.from, done));
+            step_events.push((op.to, done));
+        }
+        // fold step events into per-rank markers
+        for r in 0..p {
+            let mut evs: Vec<TaskId> =
+                step_events.iter().filter(|&&(rr, _)| rr == r).map(|&(_, t)| t).collect();
+            if let Some(t) = marker[r] {
+                evs.push(t);
+            }
+            evs.sort_unstable();
+            evs.dedup();
+            marker[r] = match evs.len() {
+                0 => None,
+                1 => Some(evs[0]),
+                _ => Some(sim.join(&evs)),
+            };
+        }
+    }
+    marker
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::algorithms::ring_allgatherv;
+    use crate::topology::systems::{cluster, dgx1};
+
+    #[test]
+    fn staged_pipeline_overlaps_chunks() {
+        // pipelined staging should be much faster than serial 3-leg
+        let t = dgx1();
+        let params = Params::default();
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        // pipelined
+        let mut sim = Sim::new(&t);
+        let id = staged_pipeline(&mut sim, &t, &params, 0, 5, bytes, &[]);
+        let piped = sim.run().finish(id);
+        // serial (one giant chunk)
+        let big = Params { pipeline_chunk: u64::MAX, ..params };
+        let mut sim = Sim::new(&t);
+        let id = staged_pipeline(&mut sim, &t, &big, 0, 5, bytes, &[]);
+        let serial = sim.run().finish(id);
+        assert!(piped < 0.7 * serial, "piped={piped} serial={serial}");
+    }
+
+    #[test]
+    fn host_to_host_same_socket_is_memcpy() {
+        let t = dgx1();
+        let params = Params::default();
+        let mut sim = Sim::new(&t);
+        // GPUs 0 and 2 hang off different switches but the same socket
+        let id = host_to_host(&mut sim, &t, &params, 0, 2, 1.0e9, &[]);
+        let time = sim.run().finish(id);
+        assert!((time - 1.0e9 / params.host_memcpy_bw).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gdr_penalty_only_when_slower_than_wire() {
+        let t = cluster(2);
+        let params = Params::default();
+        let bytes = 8.0e6;
+        let mut sim = Sim::new(&t);
+        let id = gdr_send(&mut sim, &t, &params, 0, 1, bytes, &[]);
+        let time = sim.run().finish(id);
+        // serial time must be ~ bytes / gdr_read_bw (3 GB/s < IB 6.2)
+        let expect = bytes / params.gdr_read_bw;
+        assert!((time - expect) / expect < 0.1, "time={time} expect={expect}");
+    }
+
+    #[test]
+    fn run_schedule_ring_dependencies_serialize_steps() {
+        let t = dgx1();
+        let p = 4;
+        let sched = ring_allgatherv(p, None);
+        let bytes = 16.0e6;
+        let mut sim = Sim::new(&t);
+        let finals = run_schedule(&mut sim, p, &sched, &[], |sim, op, deps| {
+            direct_flow(sim, &t, op.from, op.to, bytes, 0.0, deps)
+        });
+        assert_eq!(finals.len(), p);
+        let res = sim.run();
+        let total = finals
+            .iter()
+            .map(|&f| res.finish(f.unwrap()))
+            .fold(0.0, f64::max);
+        // P-1 steps, each >= bytes/nvlink_bw
+        let hop = bytes / 18.0e9;
+        assert!(total >= (p - 1) as f64 * hop * 0.99, "total={total}");
+    }
+
+    #[test]
+    fn dtoh_htod_are_pcie_limited() {
+        let t = dgx1();
+        let mut sim = Sim::new(&t);
+        let bytes = 1.0e9;
+        let a = dtoh(&mut sim, &t, 0, bytes, &[]);
+        let res = sim.run();
+        let expect = bytes / 12.5e9; // PCIe gen3 x16 effective
+        assert!((res.finish(a) - expect) / expect < 0.01);
+    }
+}

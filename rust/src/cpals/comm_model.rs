@@ -1,0 +1,179 @@
+//! Fig. 3: ReFacTo total communication time.
+//!
+//! Per CP-ALS iteration ReFacTo issues one Allgatherv per mode with the
+//! DFacTo partition's per-rank counts; the counts are identical across
+//! iterations (the partition is static), so total communication time is
+//! `iters x sum_over_modes(allgatherv(mode counts))`. The paper measures
+//! "the time required to perform all of the GPU communication during the
+//! tensor factorization, including HtoD/DtoH transfers when applicable" —
+//! the library models already include those.
+
+use crate::comm::{Library, Params};
+use crate::tensor::messages::mode_counts;
+use crate::tensor::TensorSpec;
+use crate::topology::Topology;
+
+/// Default iteration count for the factorization experiments.
+pub const DEFAULT_ITERS: usize = 10;
+
+#[derive(Clone, Debug)]
+pub struct RefactoReport {
+    pub dataset: &'static str,
+    pub library: Library,
+    pub gpus: usize,
+    pub iters: usize,
+    /// total communication time over the whole factorization (seconds)
+    pub total_time: f64,
+    /// per-mode single-iteration Allgatherv times
+    pub per_mode: [f64; 3],
+    /// flows simulated (one iteration)
+    pub flows: usize,
+}
+
+/// Simulate ReFacTo's communication for one configuration.
+pub fn refacto_comm(
+    topo: &Topology,
+    lib: Library,
+    params: Params,
+    spec: &TensorSpec,
+    gpus: usize,
+    iters: usize,
+) -> RefactoReport {
+    assert!(gpus >= 1 && gpus <= topo.num_gpus());
+    let library = lib.build(params);
+    let counts = mode_counts(spec, gpus);
+    let mut per_mode = [0.0f64; 3];
+    let mut flows = 0usize;
+    for (m, c) in counts.iter().enumerate() {
+        let r = library.allgatherv(topo, c);
+        per_mode[m] = r.time;
+        flows += r.flows;
+    }
+    let once: f64 = per_mode.iter().sum();
+    RefactoReport {
+        dataset: spec.name,
+        library: lib,
+        gpus,
+        iters,
+        total_time: once * iters as f64,
+        per_mode,
+        flows,
+    }
+}
+
+/// Sweep `MV2_GPUDIRECT_LIMIT` for one configuration (paper §V-C): the
+/// MPI-CUDA library is rebuilt per value; returns (limit, total time).
+pub fn gdr_limit_sweep(
+    topo: &Topology,
+    spec: &TensorSpec,
+    gpus: usize,
+    iters: usize,
+    limits: &[u64],
+) -> Vec<(u64, f64)> {
+    limits
+        .iter()
+        .map(|&limit| {
+            let params = Params::default().with_gpudirect_limit(limit);
+            let r = refacto_comm(topo, Library::MpiCuda, params, spec, gpus, iters);
+            (limit, r.total_time)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::datasets;
+    use crate::topology::systems::{cluster, dgx1, SystemKind};
+
+    #[test]
+    fn totals_scale_with_iterations() {
+        let topo = dgx1();
+        let d = datasets::netflix();
+        let one = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 8, 1);
+        let ten = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 8, 10);
+        assert!((ten.total_time - 10.0 * one.total_time).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nccl_dgx1_beats_cluster_on_tensors() {
+        // headline: "NCCL on the DGX-1 is up to 4.7x faster than NCCL on
+        // the cluster" for the tensor workloads.
+        let dgx = dgx1();
+        let clu = cluster(16);
+        let mut best = 0.0f64;
+        for d in datasets::all() {
+            let a = refacto_comm(&dgx, Library::Nccl, Params::default(), &d, 8, 1);
+            let b = refacto_comm(&clu, Library::Nccl, Params::default(), &d, 8, 1);
+            assert!(b.total_time > a.total_time, "{}", d.name);
+            best = best.max(b.total_time / a.total_time);
+        }
+        assert!(best > 2.0, "max DGX-1 advantage only {best}x");
+    }
+
+    #[test]
+    fn nccl_competitive_with_mpicuda_on_cluster() {
+        // headline: NCCL ~1.2x faster on average than MVAPICH-GDR on the
+        // cluster across tensors/GPU counts.
+        let clu = cluster(16);
+        let mut ratios = Vec::new();
+        for d in datasets::all() {
+            for gpus in [2usize, 8, 16] {
+                let n = refacto_comm(&clu, Library::Nccl, Params::default(), &d, gpus, 1);
+                let m = refacto_comm(&clu, Library::MpiCuda, Params::default(), &d, gpus, 1);
+                ratios.push(m.total_time / n.total_time);
+            }
+        }
+        let geo = crate::util::stats::geomean(&ratios);
+        assert!(geo > 0.9, "NCCL not competitive: geomean advantage {geo}");
+    }
+
+    #[test]
+    fn nell1_2gpu_contradiction_vs_benchmark() {
+        // Fig. 3 vs Fig. 2: on NELL-1 at 2 GPUs NCCL beats MPI-CUDA on
+        // the NVLink systems even though the fixed-size benchmark says
+        // otherwise (the IPC cliff vs the 729 MB-class block).
+        for sys in [SystemKind::Dgx1, SystemKind::CsStorm] {
+            let topo = sys.build();
+            let d = datasets::nell1();
+            let n = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 2, 1);
+            let m = refacto_comm(&topo, Library::MpiCuda, Params::default(), &d, 2, 1);
+            assert!(
+                n.total_time < m.total_time,
+                "{}: nccl={} mpicuda={}",
+                sys.name(), n.total_time, m.total_time
+            );
+        }
+    }
+
+    #[test]
+    fn amazon_2gpu_matches_benchmark_ordering() {
+        // ... and AMAZON (regular, sub-cliff messages) keeps the
+        // benchmark's ordering (MPI-CUDA wins at 2 GPUs on NVLink).
+        let topo = dgx1();
+        let d = datasets::amazon();
+        let n = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 2, 1);
+        let m = refacto_comm(&topo, Library::MpiCuda, Params::default(), &d, 2, 1);
+        assert!(m.total_time < n.total_time, "nccl={} mpicuda={}", n.total_time, m.total_time);
+    }
+
+    #[test]
+    fn gdr_sweep_shows_sensitivity() {
+        // §V-C: communication runtime is sensitive to MV2_GPUDIRECT_LIMIT
+        // on the cluster for DELICIOUS (3.1x between 1MB and 4MB there).
+        let topo = cluster(8);
+        let d = datasets::delicious();
+        let sweep = gdr_limit_sweep(&topo, &d, 8, 1, &[16, 1 << 20, 4 << 20, 512 << 20]);
+        let times: Vec<f64> = sweep.iter().map(|&(_, t)| t).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        // Paper reports up to 3.1x on real hardware; our flow-level model
+        // reproduces the directional sensitivity (>1.3x swing) — see
+        // EXPERIMENTS.md for the measured-vs-paper comparison.
+        assert!(max / min > 1.3, "insensitive: {sweep:?}");
+        // ... and the best setting at 8 GPUs should be a small limit
+        // (stage everything), matching the paper's 16-byte optimum.
+        let best = sweep.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+        assert!(best.0 <= 4 << 20, "best limit {} unexpectedly large", best.0);
+    }
+}

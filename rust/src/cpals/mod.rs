@@ -1,0 +1,16 @@
+//! ReFacTo: the paper's multi-GPU distributed CP-ALS case study (§III).
+//!
+//! Two halves:
+//! - [`comm_model`]: the Fig. 3 experiment — ReFacTo's communication
+//!   runtime (one Allgatherv per mode per iteration with the DFacTo
+//!   partition's irregular counts) simulated for every (data set, system,
+//!   library, GPU count) combination;
+//! - [`driver`]: the end-to-end factorization — real CP-ALS numerics on
+//!   simulated GPUs: per-rank MTTKRP through the AOT-compiled PJRT
+//!   executables, Allgatherv *timing* from the communication simulator,
+//!   fit logged per iteration.
+
+pub mod comm_model;
+pub mod driver;
+
+pub use comm_model::{refacto_comm, RefactoReport};

@@ -1,0 +1,24 @@
+//! agv-bench: reproduction of "An Empirical Evaluation of Allgatherv on
+//! Multi-GPU Systems" (Rolinger, Simon, Krieger — CCGRID 2018).
+//!
+//! The crate provides, per DESIGN.md:
+//! - [`topology`]: the paper's three multi-GPU systems (Fig. 1);
+//! - [`sim`]: a deterministic discrete-event flow simulator with max-min
+//!   fair link sharing;
+//! - [`comm`]: MPI / CUDA-aware MVAPICH / NCCL Allgatherv models (§II);
+//! - [`osu`]: the OSU Allgatherv micro-benchmark port (Fig. 2);
+//! - [`tensor`]: the Table I data sets and the DFacTo partitioner;
+//! - [`cpals`]: ReFacTo — communication study (Fig. 3) and the end-to-end
+//!   factorization driver over the PJRT runtime;
+//! - [`runtime`]: AOT HLO-text loading + execution (xla/PJRT);
+//! - [`report`]: renderers regenerating every paper table and figure;
+//! - [`util`]: self-contained PRNG / stats / bench / prop-test / CLI.
+pub mod comm;
+pub mod cpals;
+pub mod osu;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod topology;
+pub mod util;

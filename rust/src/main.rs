@@ -1,0 +1,317 @@
+//! `agv` — the leader binary: regenerate every table/figure of the paper,
+//! explore topologies, sweep parameters, and run the end-to-end
+//! factorization. See `agv help`.
+
+use std::path::PathBuf;
+
+use agv_bench::comm::{Library, Params};
+use agv_bench::cpals::comm_model::{gdr_limit_sweep, refacto_comm, DEFAULT_ITERS};
+use agv_bench::cpals::driver::Driver;
+use agv_bench::report::{fig2, fig3, findings, table1, write_csv};
+use agv_bench::runtime::{default_artifacts_dir, Runtime};
+use agv_bench::tensor::{datasets, synth};
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::cli::{parse_bytes, Args};
+use agv_bench::util::{fmt_bytes, fmt_time};
+
+const HELP: &str = "\
+agv — reproduction of 'An Empirical Evaluation of Allgatherv on Multi-GPU Systems' (CCGRID'18)
+
+USAGE: agv <command> [options]
+
+COMMANDS
+  topo                         Fig. 1: print the three system topologies
+  fig2 [--csv-dir DIR]         Fig. 2: OSU Allgatherv sweep (all systems/libraries)
+  table1 [--csv-dir DIR]       Table I: data set message statistics vs paper
+  fig3 [--iters N] [--csv-dir DIR]
+                               Fig. 3: ReFacTo communication time grid
+  findings                     §VI headline ratios, ours vs paper
+  osu --system S --gpus N [--lib L]
+                               one OSU sweep (S: cluster|dgx1|cs-storm)
+  refacto --dataset D --system S --gpus N [--lib L] [--iters N]
+                               one ReFacTo communication simulation
+  sweep-gdr [--dataset D] [--gpus N] [--limits CSV]
+                               MV2_GPUDIRECT_LIMIT sweep (paper §V-C)
+  e2e [--config small|e2e] [--system S] [--gpus N] [--iters N] [--seed N]
+      [--artifacts DIR]        end-to-end factorization (real compute via PJRT)
+  artifacts [--artifacts DIR]  list AOT artifacts and their shapes
+  help                         this text
+";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "topo" => cmd_topo(),
+        "fig2" => cmd_fig2(&args),
+        "table1" => cmd_table1(&args),
+        "fig3" => cmd_fig3(&args),
+        "findings" => cmd_findings(),
+        "osu" => cmd_osu(&args),
+        "refacto" => cmd_refacto(&args),
+        "sweep-gdr" => cmd_sweep_gdr(&args),
+        "e2e" => cmd_e2e(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            print!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn csv_dir(args: &Args) -> Option<PathBuf> {
+    args.get("csv-dir").map(PathBuf::from)
+}
+
+fn system_arg(args: &Args) -> SystemKind {
+    let s = args.get_or("system", "dgx1");
+    SystemKind::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown system `{s}` (cluster|dgx1|cs-storm)");
+        std::process::exit(2);
+    })
+}
+
+fn library_arg(args: &Args) -> Option<Library> {
+    args.get("lib").map(|s| {
+        Library::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown library `{s}` (mpi|mpi-cuda|nccl)");
+            std::process::exit(2);
+        })
+    })
+}
+
+fn cmd_topo() {
+    for kind in SystemKind::all() {
+        let t = kind.build();
+        println!("== {} ==", t.name);
+        println!(
+            "  devices: {}  links: {}  GPUs: {}",
+            t.devices.len(),
+            t.links.len(),
+            t.num_gpus()
+        );
+        let n = t.num_gpus();
+        println!("  GPUDirect P2P matrix (rows/cols = GPU ranks, '+' = P2P):");
+        for a in 0..n {
+            let row: String = (0..n)
+                .map(|b| if t.p2p_accessible(a, b) { '+' } else { '.' })
+                .collect();
+            println!("    {a:>2} {row}");
+        }
+        println!("  sample routes:");
+        for (a, b) in [(0usize, 1usize), (0, n / 2), (0, n - 1)] {
+            if a == b {
+                continue;
+            }
+            let p = t.route_gpus(a, b).unwrap();
+            let bw = t.path_bandwidth(&p);
+            println!(
+                "    gpu{a} -> gpu{b}: {} hops, bottleneck {:.1} GB/s{}",
+                p.hops(),
+                bw / 1e9,
+                t.route_nvlink_only(a, b)
+                    .map(|nv| format!(" (NVLink-only: {} hops)", nv.hops()))
+                    .unwrap_or_default()
+            );
+        }
+        println!();
+    }
+}
+
+fn cmd_fig2(args: &Args) {
+    let cells = fig2::grid();
+    print!("{}", fig2::render(&cells));
+    if let Some(dir) = csv_dir(args) {
+        for cell in &cells {
+            let p = write_csv(&dir, &fig2::csv_name(cell), &fig2::csv(cell)).unwrap();
+            eprintln!("wrote {}", p.display());
+        }
+    }
+}
+
+fn cmd_table1(args: &Args) {
+    print!("{}", table1::render());
+    if let Some(dir) = csv_dir(args) {
+        let p = write_csv(&dir, "table1.csv", &table1::csv()).unwrap();
+        eprintln!("wrote {}", p.display());
+    }
+}
+
+fn cmd_fig3(args: &Args) {
+    let iters = args.get_usize("iters", DEFAULT_ITERS);
+    let panels = fig3::panels(iters);
+    print!("{}", fig3::render(&panels));
+    if let Some(dir) = csv_dir(args) {
+        let p = write_csv(&dir, "fig3.csv", &fig3::csv(&panels)).unwrap();
+        eprintln!("wrote {}", p.display());
+    }
+}
+
+fn cmd_findings() {
+    print!("{}", findings::render(&findings::compute()));
+}
+
+fn cmd_osu(args: &Args) {
+    let system = system_arg(args);
+    let gpus = args.get_usize("gpus", 2);
+    let cfg = agv_bench::osu::OsuConfig::default();
+    let topo = system.build();
+    let libs = library_arg(args)
+        .map(|l| vec![l])
+        .unwrap_or_else(|| Library::all().to_vec());
+    println!("OSU Allgatherv — {} @ {gpus} GPUs", system.name());
+    println!(
+        "{:>10} {}",
+        "size",
+        libs.iter().map(|l| format!("{:>14}", l.name())).collect::<String>()
+    );
+    let results: Vec<_> = libs
+        .iter()
+        .map(|&l| agv_bench::osu::run_osu(&cfg, &topo, l, gpus))
+        .collect();
+    for i in 0..results[0].len() {
+        let mut line = format!("{:>10}", fmt_bytes(results[0][i].msg_size));
+        for r in &results {
+            line.push_str(&format!("{:>14}", fmt_time(r[i].time)));
+        }
+        println!("{line}");
+    }
+}
+
+fn cmd_refacto(args: &Args) {
+    let system = system_arg(args);
+    let gpus = args.get_usize("gpus", 8);
+    let iters = args.get_usize("iters", DEFAULT_ITERS);
+    let dname = args.get_or("dataset", "netflix");
+    let spec = datasets::by_name(dname).unwrap_or_else(|| {
+        eprintln!("unknown dataset `{dname}`");
+        std::process::exit(2);
+    });
+    let topo = system.build();
+    let libs = library_arg(args)
+        .map(|l| vec![l])
+        .unwrap_or_else(|| Library::all().to_vec());
+    println!(
+        "ReFacTo communication — {} on {} @ {gpus} GPUs, {iters} iterations",
+        spec.name,
+        system.name()
+    );
+    for lib in libs {
+        let r = refacto_comm(&topo, lib, Params::default(), &spec, gpus, iters);
+        println!(
+            "  {:<9} total {:>12}   per-mode/iter {} | {} | {}",
+            lib.name(),
+            fmt_time(r.total_time),
+            fmt_time(r.per_mode[0]),
+            fmt_time(r.per_mode[1]),
+            fmt_time(r.per_mode[2]),
+        );
+    }
+}
+
+fn cmd_sweep_gdr(args: &Args) {
+    let dname = args.get_or("dataset", "delicious");
+    let spec = datasets::by_name(dname).expect("unknown dataset");
+    let gpus = args.get_usize("gpus", 8);
+    let limits: Vec<u64> = args
+        .get("limits")
+        .map(|s| s.split(',').map(|x| parse_bytes(x).expect("bad size")).collect())
+        .unwrap_or_else(|| vec![16, 64 << 10, 1 << 20, 4 << 20, 8 << 20, 64 << 20, 512 << 20]);
+    let topo = SystemKind::Cluster.build();
+    println!(
+        "MV2_GPUDIRECT_LIMIT sweep — {} on cluster @ {gpus} GPUs (paper §V-C)",
+        spec.name
+    );
+    let sweep = gdr_limit_sweep(&topo, &spec, gpus, 1, &limits);
+    let best = sweep.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
+    for (limit, time) in &sweep {
+        println!(
+            "  limit {:>8}  comm/iter {:>12}{}",
+            fmt_bytes(*limit),
+            fmt_time(*time),
+            if *limit == best { "   <-- best" } else { "" }
+        );
+    }
+}
+
+fn cmd_e2e(args: &Args) {
+    let config = args.get_or("config", "small").to_string();
+    let system = system_arg(args);
+    let gpus = args.get_usize("gpus", 8);
+    let iters = args.get_usize("iters", 10);
+    let seed = args.get_u64("seed", 42);
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let runtime = Runtime::open(&dir).unwrap_or_else(|e| {
+        eprintln!("cannot open artifacts: {e:#}");
+        std::process::exit(1);
+    });
+    let topo = system.build();
+    let mut driver = Driver::new(runtime, &config, &topo, gpus, Library::all().to_vec());
+    let ([di, dj, dk], n_pad, rank) = driver.shapes().expect("artifact shapes");
+    println!(
+        "e2e factorization: config={config} dims={di}x{dj}x{dk} nnz<={n_pad} R={rank} on {} @ {gpus} GPUs",
+        system.name()
+    );
+    let spec = agv_bench::tensor::TensorSpec {
+        name: "e2e-synth",
+        modes: [
+            agv_bench::tensor::ModeProfile { dim: di as u64, skew: 0.6 },
+            agv_bench::tensor::ModeProfile { dim: dj as u64, skew: 0.4 },
+            agv_bench::tensor::ModeProfile { dim: dk as u64, skew: 0.2 },
+        ],
+        nnz: (n_pad - n_pad / 8) as u64,
+    };
+    let tensor = synth::low_rank_coo(&spec, n_pad - n_pad / 8, 8, 0.05, seed);
+    let report = driver.run(&tensor, iters, seed).expect("driver run");
+    println!("iter  fit       compute(real)   comm/iter(sim: MPI | MPI-CUDA | NCCL)");
+    for l in &report.iters {
+        println!(
+            "{:>4}  {:<8.5} {:>12}    {} | {} | {}",
+            l.iter,
+            l.fit,
+            fmt_time(l.compute_secs),
+            fmt_time(l.comm_secs[0].1),
+            fmt_time(l.comm_secs[1].1),
+            fmt_time(l.comm_secs[2].1),
+        );
+    }
+    println!(
+        "final fit {:.5}; compute total {}",
+        report.final_fit(),
+        fmt_time(report.compute_total)
+    );
+    for (lib, t) in &report.comm_totals {
+        println!("  simulated comm total {:<9} {}", lib.name(), fmt_time(*t));
+    }
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    match Runtime::open(&dir) {
+        Ok(rt) => {
+            println!("artifacts in {} (platform: {}):", dir.display(), rt.platform());
+            for name in rt.artifacts() {
+                let m = rt.meta(name).unwrap();
+                println!(
+                    "  {:<28} {} inputs, {} outputs, file {}",
+                    name,
+                    m.inputs.len(),
+                    m.outputs.len(),
+                    m.file
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("cannot open artifacts: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! OSU micro-benchmark port for Allgatherv (paper §V-B, Fig. 2).
+//!
+//! The OSU benchmark sends *fixed-size* messages to and from every rank:
+//! per-rank message size M, N ranks, total volume M x N. The paper caps
+//! the total maximum volume at 1024 MB and sweeps M from 4 KB up to
+//! (1024 / N) MB; we reproduce that sweep for every (system, library,
+//! GPU-count) combination of Fig. 2. The paper's NCCL entry is the
+//! Listing-1 bcast-series (our [`crate::comm::nccl`] does exactly that),
+//! which is also how we "extended the OSU benchmark to allow for NCCL".
+//!
+//! [`distributions`] adds the Träff-style message-size-distribution
+//! variant the paper lists as future work.
+
+pub mod distributions;
+
+use crate::comm::{CommResult, Library, Params};
+use crate::topology::systems::SystemKind;
+use crate::topology::Topology;
+
+/// Benchmark configuration mirroring the paper's setup.
+#[derive(Clone, Copy, Debug)]
+pub struct OsuConfig {
+    /// Cap on M x N (paper: 1024 MB).
+    pub total_volume_cap: u64,
+    /// Smallest per-rank message (paper: 4 KB).
+    pub min_msg: u64,
+    pub params: Params,
+}
+
+impl Default for OsuConfig {
+    fn default() -> OsuConfig {
+        OsuConfig {
+            total_volume_cap: 1024 << 20,
+            min_msg: 4 << 10,
+            params: Params::default(),
+        }
+    }
+}
+
+/// One measured point: per-rank message size -> total communication time.
+#[derive(Clone, Copy, Debug)]
+pub struct OsuPoint {
+    pub msg_size: u64,
+    pub time: f64,
+    pub flows: usize,
+}
+
+/// The message-size sweep for N ranks: powers of two from `min_msg` to
+/// (total_volume_cap / N).
+pub fn sweep_sizes(cfg: &OsuConfig, n: usize) -> Vec<u64> {
+    let max = cfg.total_volume_cap / n as u64;
+    let mut sizes = Vec::new();
+    let mut m = cfg.min_msg;
+    while m <= max {
+        sizes.push(m);
+        m *= 2;
+    }
+    sizes
+}
+
+/// Run the benchmark for one (topology, library, GPU count) combination.
+pub fn run_osu(cfg: &OsuConfig, topo: &Topology, lib: Library, gpus: usize) -> Vec<OsuPoint> {
+    assert!(gpus >= 1 && gpus <= topo.num_gpus());
+    let library = lib.build(cfg.params);
+    sweep_sizes(cfg, gpus)
+        .into_iter()
+        .map(|m| {
+            let counts = vec![m; gpus];
+            let CommResult { time, flows } = library.allgatherv(topo, &counts);
+            OsuPoint { msg_size: m, time, flows }
+        })
+        .collect()
+}
+
+/// A full Fig. 2 cell: all three libraries on one system at one GPU count.
+#[derive(Clone, Debug)]
+pub struct Fig2Cell {
+    pub system: SystemKind,
+    pub gpus: usize,
+    pub series: Vec<(Library, Vec<OsuPoint>)>,
+}
+
+/// The GPU counts the paper plots per system (2 and 8 everywhere; 16 on
+/// the cluster and CS-Storm).
+pub fn gpu_counts(system: SystemKind) -> Vec<usize> {
+    match system {
+        SystemKind::Dgx1 => vec![2, 8],
+        _ => vec![2, 8, 16],
+    }
+}
+
+/// Reproduce the whole Fig. 2 grid.
+pub fn fig2_grid(cfg: &OsuConfig) -> Vec<Fig2Cell> {
+    let mut cells = Vec::new();
+    for system in SystemKind::all() {
+        let topo = system.build();
+        for gpus in gpu_counts(system) {
+            let series = Library::all()
+                .into_iter()
+                .map(|lib| (lib, run_osu(cfg, &topo, lib, gpus)))
+                .collect();
+            cells.push(Fig2Cell { system, gpus, series });
+        }
+    }
+    cells
+}
+
+impl Fig2Cell {
+    pub fn points(&self, lib: Library) -> &[OsuPoint] {
+        &self
+            .series
+            .iter()
+            .find(|(l, _)| *l == lib)
+            .expect("library missing from cell")
+            .1
+    }
+
+    /// Time ratio lib_a / lib_b at a given message size.
+    pub fn ratio_at(&self, a: Library, b: Library, msg: u64) -> f64 {
+        let ta = self.points(a).iter().find(|p| p.msg_size == msg).unwrap().time;
+        let tb = self.points(b).iter().find(|p| p.msg_size == msg).unwrap().time;
+        ta / tb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_respects_cap() {
+        let cfg = OsuConfig::default();
+        let sizes = sweep_sizes(&cfg, 8);
+        assert_eq!(*sizes.first().unwrap(), 4 << 10);
+        assert_eq!(*sizes.last().unwrap(), 128 << 20); // 1024/8 MB
+        for w in sizes.windows(2) {
+            assert_eq!(w[1], w[0] * 2);
+        }
+        // 16 ranks -> 64 MB max
+        assert_eq!(*sweep_sizes(&cfg, 16).last().unwrap(), 64 << 20);
+    }
+
+    #[test]
+    fn osu_runs_all_libraries_on_dgx1() {
+        let cfg = OsuConfig::default();
+        let topo = SystemKind::Dgx1.build();
+        for lib in Library::all() {
+            let pts = run_osu(&cfg, &topo, lib, 2);
+            assert!(!pts.is_empty());
+            // times monotone-ish in size: last > first
+            assert!(pts.last().unwrap().time > pts.first().unwrap().time);
+        }
+    }
+
+    #[test]
+    fn gpu_counts_match_paper() {
+        assert_eq!(gpu_counts(SystemKind::Dgx1), vec![2, 8]);
+        assert_eq!(gpu_counts(SystemKind::Cluster), vec![2, 8, 16]);
+        assert_eq!(gpu_counts(SystemKind::CsStorm), vec![2, 8, 16]);
+    }
+}

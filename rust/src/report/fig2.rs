@@ -1,0 +1,109 @@
+//! Fig. 2: OSU Allgatherv total communication time vs per-rank message
+//! size, per system / library / GPU count.
+
+use crate::comm::Library;
+use crate::osu::{fig2_grid, Fig2Cell, OsuConfig};
+use crate::topology::systems::SystemKind;
+use crate::util::plot::{log_log_chart, to_csv, Series};
+
+/// Build the grid (parallel over cells).
+pub fn grid() -> Vec<Fig2Cell> {
+    let cfg = OsuConfig::default();
+    let mut jobs: Vec<Box<dyn FnOnce() -> Fig2Cell + Send>> = Vec::new();
+    for system in SystemKind::all() {
+        for gpus in crate::osu::gpu_counts(system) {
+            jobs.push(Box::new(move || {
+                let topo = system.build();
+                let series = Library::all()
+                    .into_iter()
+                    .map(|lib| (lib, crate::osu::run_osu(&cfg, &topo, lib, gpus)))
+                    .collect();
+                Fig2Cell { system, gpus, series }
+            }));
+        }
+    }
+    super::parallel_map(jobs)
+}
+
+/// Serial version used when thread spawning is undesirable (benches).
+pub fn grid_serial() -> Vec<Fig2Cell> {
+    fig2_grid(&OsuConfig::default())
+}
+
+fn cell_series(cell: &Fig2Cell) -> Vec<Series> {
+    cell.series
+        .iter()
+        .map(|(lib, pts)| {
+            Series::new(
+                lib.name(),
+                pts.iter().map(|p| (p.msg_size as f64, p.time)).collect(),
+            )
+        })
+        .collect()
+}
+
+/// ASCII rendering of the whole figure.
+pub fn render(cells: &[Fig2Cell]) -> String {
+    let mut out = String::from(
+        "FIG. 2 — OSU Allgatherv: total communication time vs per-rank message size\n\n",
+    );
+    for cell in cells {
+        let title = format!("{} — {} GPUs", cell.system.name(), cell.gpus);
+        out.push_str(&log_log_chart(
+            &title,
+            "per-rank message size (bytes)",
+            "total time (s)",
+            &cell_series(cell),
+            64,
+            14,
+        ));
+        // numeric rows, like the benchmark's own output
+        out.push_str(&format!(
+            "  {:>10} {:>14} {:>14} {:>14}\n",
+            "size", "MPI", "MPI-CUDA", "NCCL"
+        ));
+        let mpi = cell.points(Library::Mpi);
+        let cuda = cell.points(Library::MpiCuda);
+        let nccl = cell.points(Library::Nccl);
+        for i in 0..mpi.len() {
+            out.push_str(&format!(
+                "  {:>10} {:>14} {:>14} {:>14}\n",
+                crate::util::fmt_bytes(mpi[i].msg_size),
+                crate::util::fmt_time(mpi[i].time),
+                crate::util::fmt_time(cuda[i].time),
+                crate::util::fmt_time(nccl[i].time),
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV per cell: one file's worth of text per (system, gpus).
+pub fn csv(cell: &Fig2Cell) -> String {
+    to_csv(&cell_series(cell))
+}
+
+pub fn csv_name(cell: &Fig2Cell) -> String {
+    format!("fig2_{}_{}gpus.csv", cell.system.name(), cell.gpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_8_cells() {
+        // cluster 2/8/16, dgx1 2/8, cs-storm 2/8/16
+        let g = grid();
+        assert_eq!(g.len(), 8);
+    }
+
+    #[test]
+    fn render_contains_all_systems() {
+        let g = grid();
+        let r = render(&g[..2.min(g.len())]);
+        assert!(r.contains("cluster"));
+        assert!(r.contains("MPI-CUDA"));
+    }
+}

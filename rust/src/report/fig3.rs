@@ -1,0 +1,138 @@
+//! Fig. 3: ReFacTo total communication time across the data sets,
+//! systems, libraries and GPU counts.
+
+use crate::comm::{Library, Params};
+use crate::cpals::comm_model::{refacto_comm, RefactoReport, DEFAULT_ITERS};
+use crate::tensor::datasets;
+use crate::topology::systems::SystemKind;
+use crate::util::plot::{bar_chart, Series};
+
+/// One Fig. 3 panel: a system at a GPU count, all data sets x libraries.
+#[derive(Clone, Debug)]
+pub struct Fig3Panel {
+    pub system: SystemKind,
+    pub gpus: usize,
+    /// reports indexed \[dataset\]\[library\]
+    pub reports: Vec<Vec<RefactoReport>>,
+}
+
+/// The GPU counts plotted per system (as in the paper's Fig. 3 panels).
+pub fn gpu_counts(system: SystemKind) -> Vec<usize> {
+    crate::osu::gpu_counts(system)
+}
+
+/// Build all panels (parallel over panels).
+pub fn panels(iters: usize) -> Vec<Fig3Panel> {
+    let mut jobs: Vec<Box<dyn FnOnce() -> Fig3Panel + Send>> = Vec::new();
+    for system in SystemKind::all() {
+        for gpus in gpu_counts(system) {
+            jobs.push(Box::new(move || {
+                let topo = system.build();
+                let reports = datasets::all()
+                    .iter()
+                    .map(|d| {
+                        Library::all()
+                            .into_iter()
+                            .map(|lib| {
+                                refacto_comm(&topo, lib, Params::default(), d, gpus, iters)
+                            })
+                            .collect()
+                    })
+                    .collect();
+                Fig3Panel { system, gpus, reports }
+            }));
+        }
+    }
+    super::parallel_map(jobs)
+}
+
+pub fn default_panels() -> Vec<Fig3Panel> {
+    panels(DEFAULT_ITERS)
+}
+
+impl Fig3Panel {
+    pub fn time(&self, dataset: &str, lib: Library) -> f64 {
+        let di = datasets::all()
+            .iter()
+            .position(|d| d.name == dataset)
+            .expect("unknown dataset");
+        self.reports[di]
+            .iter()
+            .find(|r| r.library == lib)
+            .unwrap()
+            .total_time
+    }
+}
+
+/// ASCII rendering.
+pub fn render(panels: &[Fig3Panel]) -> String {
+    let labels: Vec<&str> = datasets::all().iter().map(|d| d.name).collect();
+    let mut out = String::from(
+        "FIG. 3 — ReFacTo total communication time (10 CP-ALS iterations)\n\n",
+    );
+    for p in panels {
+        let series: Vec<Series> = Library::all()
+            .into_iter()
+            .map(|lib| {
+                Series::new(
+                    lib.name(),
+                    labels
+                        .iter()
+                        .enumerate()
+                        .map(|(i, d)| (i as f64, p.time(d, lib)))
+                        .collect(),
+                )
+            })
+            .collect();
+        out.push_str(&bar_chart(
+            &format!("{} — {} GPUs", p.system.name(), p.gpus),
+            &labels,
+            &series,
+            48,
+        ));
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV: system,gpus,dataset,library,total_seconds
+pub fn csv(panels: &[Fig3Panel]) -> String {
+    let mut out = String::from("system,gpus,dataset,library,total_seconds\n");
+    for p in panels {
+        for row in &p.reports {
+            for r in row {
+                out.push_str(&format!(
+                    "{},{},{},{},{:.6}\n",
+                    p.system.name(), p.gpus, r.dataset, r.library.name(), r.total_time
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panels_cover_grid() {
+        let ps = panels(1);
+        assert_eq!(ps.len(), 8);
+        for p in &ps {
+            assert_eq!(p.reports.len(), 4);
+            assert_eq!(p.reports[0].len(), 3);
+        }
+    }
+
+    #[test]
+    fn lookup_and_render() {
+        let ps = panels(1);
+        let t = ps[0].time("NETFLIX", Library::Nccl);
+        assert!(t > 0.0);
+        let txt = render(&ps[..1]);
+        assert!(txt.contains("NETFLIX"));
+        let c = csv(&ps);
+        assert_eq!(c.trim().lines().count(), 1 + 8 * 4 * 3);
+    }
+}

@@ -1,0 +1,138 @@
+//! The paper's §VI headline findings, recomputed from our reproduction:
+//!
+//! 1. "as much as a 8.3x difference in Allgatherv runtime between the
+//!    DGX-1 and cluster when using NCCL on the OSU benchmark; on the
+//!    tensor data sets, as much as 4.7x";
+//! 2. "NCCL ... 1.2x faster on average than MVAPICH-GDR on the cluster
+//!    for the tensor factorization experiment";
+//! 3. irregular-workload trends absent from / contradicting the
+//!    benchmark (NELL-1 2-GPU flip; DELICIOUS MPI-CUDA vs MPI on the
+//!    cluster; MV2_GPUDIRECT_LIMIT sensitivity).
+
+use crate::comm::Library;
+use crate::cpals::comm_model::gdr_limit_sweep;
+use crate::tensor::datasets;
+use crate::topology::systems::SystemKind;
+use crate::util::stats::geomean;
+
+use super::fig2::grid as fig2_grid;
+use super::fig3::{default_panels, Fig3Panel};
+
+#[derive(Clone, Debug)]
+pub struct Findings {
+    /// max over message sizes of cluster/DGX-1 NCCL time ratio (OSU, 8 GPUs)
+    pub osu_dgx_vs_cluster_nccl: f64,
+    /// max over data sets of cluster/DGX-1 NCCL ratio (tensors, 8 GPUs)
+    pub tensor_dgx_vs_cluster_nccl: f64,
+    /// geomean over data sets x GPU counts of MPI-CUDA/NCCL on the cluster
+    pub cluster_nccl_advantage: f64,
+    /// NELL-1 2-GPU DGX-1: MPI-CUDA / NCCL (paper: > 1, contradicting OSU)
+    pub nell1_2gpu_flip: f64,
+    /// DELICIOUS cluster 8 GPUs: MPI-CUDA / plain-MPI (paper: 1.73x)
+    pub delicious_mpicuda_vs_mpi: f64,
+    /// max/min over the MV2_GPUDIRECT_LIMIT sweep (DELICIOUS, 8 GPUs)
+    pub gdr_sensitivity: f64,
+}
+
+pub fn compute() -> Findings {
+    let fig2 = fig2_grid();
+    let dgx8 = fig2
+        .iter()
+        .find(|c| c.system == SystemKind::Dgx1 && c.gpus == 8)
+        .unwrap();
+    let clu8 = fig2
+        .iter()
+        .find(|c| c.system == SystemKind::Cluster && c.gpus == 8)
+        .unwrap();
+    let osu_ratio = dgx8
+        .points(Library::Nccl)
+        .iter()
+        .zip(clu8.points(Library::Nccl))
+        .map(|(d, c)| c.time / d.time)
+        .fold(0.0f64, f64::max);
+
+    let panels = default_panels();
+    let panel = |sys: SystemKind, gpus: usize| -> &Fig3Panel {
+        panels
+            .iter()
+            .find(|p| p.system == sys && p.gpus == gpus)
+            .unwrap()
+    };
+    let tensor_ratio = datasets::all()
+        .iter()
+        .map(|d| {
+            panel(SystemKind::Cluster, 8).time(d.name, Library::Nccl)
+                / panel(SystemKind::Dgx1, 8).time(d.name, Library::Nccl)
+        })
+        .fold(0.0f64, f64::max);
+
+    let mut cluster_ratios = Vec::new();
+    for d in datasets::all() {
+        for gpus in [2usize, 8, 16] {
+            let p = panel(SystemKind::Cluster, gpus);
+            cluster_ratios.push(p.time(d.name, Library::MpiCuda) / p.time(d.name, Library::Nccl));
+        }
+    }
+
+    let nell1_flip = panel(SystemKind::Dgx1, 2).time("NELL-1", Library::MpiCuda)
+        / panel(SystemKind::Dgx1, 2).time("NELL-1", Library::Nccl);
+    let delicious = panel(SystemKind::Cluster, 8).time("DELICIOUS", Library::MpiCuda)
+        / panel(SystemKind::Cluster, 8).time("DELICIOUS", Library::Mpi);
+
+    let topo = SystemKind::Cluster.build();
+    let sweep = gdr_limit_sweep(
+        &topo,
+        &datasets::delicious(),
+        8,
+        1,
+        &[16, 1 << 20, 4 << 20, 8 << 20, 64 << 20, 512 << 20],
+    );
+    let times: Vec<f64> = sweep.iter().map(|&(_, t)| t).collect();
+    let gdr = times.iter().cloned().fold(0.0, f64::max)
+        / times.iter().cloned().fold(f64::INFINITY, f64::min);
+
+    Findings {
+        osu_dgx_vs_cluster_nccl: osu_ratio,
+        tensor_dgx_vs_cluster_nccl: tensor_ratio,
+        cluster_nccl_advantage: geomean(&cluster_ratios),
+        nell1_2gpu_flip: nell1_flip,
+        delicious_mpicuda_vs_mpi: delicious,
+        gdr_sensitivity: gdr,
+    }
+}
+
+pub fn render(f: &Findings) -> String {
+    format!(
+        "HEADLINE FINDINGS (ours vs paper §VI)\n\
+         1. DGX-1 vs cluster, NCCL:   OSU up to {:.1}x (paper: 8.3x); tensors up to {:.1}x (paper: 4.7x)\n\
+         2. NCCL vs MVAPICH-GDR on the cluster (tensors, geomean): {:.2}x faster (paper: 1.2x)\n\
+         3. Irregularity effects:\n\
+            - NELL-1 @2 GPUs on DGX-1: MPI-CUDA/NCCL = {:.2}x (paper: 3.1x; OSU says NCCL slower)\n\
+            - DELICIOUS @8 GPUs cluster: MPI-CUDA/MPI = {:.2}x (paper: 1.73x slower)\n\
+            - MV2_GPUDIRECT_LIMIT sweep swing on DELICIOUS: {:.2}x (paper: 3.1x)\n",
+        f.osu_dgx_vs_cluster_nccl,
+        f.tensor_dgx_vs_cluster_nccl,
+        f.cluster_nccl_advantage,
+        f.nell1_2gpu_flip,
+        f.delicious_mpicuda_vs_mpi,
+        f.gdr_sensitivity,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn findings_reproduce_paper_directions() {
+        let f = compute();
+        // Direction and rough magnitude of every §VI claim:
+        assert!(f.osu_dgx_vs_cluster_nccl > 2.5, "{f:?}");
+        assert!(f.tensor_dgx_vs_cluster_nccl > 1.5, "{f:?}");
+        assert!(f.cluster_nccl_advantage > 0.95, "{f:?}");
+        assert!(f.nell1_2gpu_flip > 1.0, "{f:?}");
+        assert!(f.gdr_sensitivity > 1.3, "{f:?}");
+        let txt = render(&f);
+        assert!(txt.contains("HEADLINE"));
+    }
+}

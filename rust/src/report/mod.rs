@@ -1,0 +1,61 @@
+//! Renderers regenerating every table and figure of the paper, plus the
+//! §VI headline findings (see DESIGN.md §5 experiment index).
+//!
+//! Each function returns plain text (and the grid builders return data
+//! the bench targets and CSV writers reuse). Grid evaluation fans out
+//! over `std::thread` — every (system, library, GPU-count) cell is an
+//! independent pure simulation.
+
+pub mod fig2;
+pub mod fig3;
+pub mod findings;
+pub mod table1;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV string to `dir/name`, creating the directory if needed.
+pub fn write_csv(dir: &Path, name: &str, csv: &str) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(csv.as_bytes())?;
+    Ok(path)
+}
+
+/// Run closures on worker threads and collect results in order.
+pub fn parallel_map<T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let handles: Vec<_> = jobs
+        .into_iter()
+        .map(|job| std::thread::spawn(job))
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().expect("worker panicked"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..16usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = parallel_map(jobs);
+        assert_eq!(out, (0..16usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn write_csv_roundtrip() {
+        let dir = std::env::temp_dir().join("agv_csv_test");
+        let p = write_csv(&dir, "t.csv", "a,b\n1,2\n").unwrap();
+        assert_eq!(std::fs::read_to_string(p).unwrap(), "a,b\n1,2\n");
+    }
+}

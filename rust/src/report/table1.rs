@@ -1,0 +1,131 @@
+//! Table I: properties of the data sets — dimensions, nonzeros, and the
+//! Allgatherv message statistics (avg / min / max / CV) at 2 and 8 GPUs,
+//! printed next to the paper's reported values.
+
+use crate::tensor::datasets;
+use crate::tensor::messages::MsgStats;
+
+/// Paper-reported Table I values for side-by-side comparison.
+/// (name, [avg2, avg8], [min2, max2], [min8, max8], [cv2, cv8]) — MB.
+pub const PAPER: &[(&str, [f64; 2], [f64; 2], [f64; 2], [f64; 2])] = &[
+    ("NETFLIX", [6.4, 1.6], [0.04, 26.5], [0.01, 13.5], [1.5, 1.84]),
+    ("AMAZON", [65.2, 16.3], [24.6, 89.5], [5.9, 23.7], [0.44, 0.44]),
+    ("DELICIOUS", [128.9, 32.2], [0.2, 496.2], [0.006, 152.4], [1.35, 1.48]),
+    ("NELL-1", [291.3, 72.8], [61.3, 729.8], [14.7, 183.5], [1.06, 1.06]),
+];
+
+/// Full Table I row: ours and the paper's.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub name: &'static str,
+    pub dims: [u64; 3],
+    pub nnz: u64,
+    pub ours: [MsgStats; 2],  // 2 and 8 GPUs
+}
+
+pub fn rows() -> Vec<Table1Row> {
+    datasets::all()
+        .into_iter()
+        .map(|d| Table1Row {
+            name: d.name,
+            dims: d.dims(),
+            nnz: d.nnz,
+            ours: [MsgStats::of(&d, 2), MsgStats::of(&d, 8)],
+        })
+        .collect()
+}
+
+fn dims_str(d: [u64; 3]) -> String {
+    fn h(x: u64) -> String {
+        if x >= 1_000_000 {
+            format!("{}M", (x as f64 / 1e6).round() as u64)
+        } else {
+            format!("{}K", x / 1000)
+        }
+    }
+    format!("{} x {} x {}", h(d[0]), h(d[1]), h(d[2]))
+}
+
+/// Render the table (ours vs paper).
+pub fn render() -> String {
+    let mut out = String::new();
+    out.push_str("TABLE I — PROPERTIES OF DATA SETS (ours | paper), R=16, f32\n");
+    out.push_str(&format!(
+        "{:<10} {:<16} {:>6}  {:>18} {:>18}  {:>26} {:>26}  {:>13} {:>13}\n",
+        "Name", "Dimensions", "NNZ",
+        "Avg 2GPU (MB)", "Avg 8GPU (MB)",
+        "Min/Max 2GPU (MB)", "Min/Max 8GPU (MB)",
+        "CV 2GPU", "CV 8GPU",
+    ));
+    for (row, paper) in rows().iter().zip(PAPER) {
+        assert_eq!(row.name, paper.0);
+        let s2 = &row.ours[0];
+        let s8 = &row.ours[1];
+        out.push_str(&format!(
+            "{:<10} {:<16} {:>5}M  {:>8.1} | {:<7.1} {:>8.1} | {:<7.1}  {:>11} | {:<12} {:>11} | {:<12}  {:>5.2} | {:<5.2} {:>5.2} | {:<5.2}\n",
+            row.name,
+            dims_str(row.dims),
+            row.nnz / 1_000_000,
+            s2.avg_mb(), paper.1[0],
+            s8.avg_mb(), paper.1[1],
+            format!("{:.2}/{:.1}", s2.min_mb(), s2.max_mb()),
+            format!("{:.2}/{:.1}", paper.2[0], paper.2[1]),
+            format!("{:.3}/{:.1}", s8.min_mb(), s8.max_mb()),
+            format!("{:.3}/{:.1}", paper.3[0], paper.3[1]),
+            s2.cv(), paper.4[0],
+            s8.cv(), paper.4[1],
+        ));
+    }
+    out
+}
+
+/// CSV of ours-vs-paper.
+pub fn csv() -> String {
+    let mut out = String::from(
+        "dataset,gpus,avg_mb,min_mb,max_mb,cv,paper_avg_mb,paper_min_mb,paper_max_mb,paper_cv\n",
+    );
+    for (row, paper) in rows().iter().zip(PAPER) {
+        for (gi, gpus) in [2usize, 8].iter().enumerate() {
+            let s = &row.ours[gi];
+            let (pavg, pcv) = (paper.1[gi], paper.4[gi]);
+            let (pmin, pmax) = if gi == 0 {
+                (paper.2[0], paper.2[1])
+            } else {
+                (paper.3[0], paper.3[1])
+            };
+            out.push_str(&format!(
+                "{},{},{:.3},{:.4},{:.2},{:.3},{},{},{},{}\n",
+                row.name, gpus, s.avg_mb(), s.min_mb(), s.max_mb(), s.cv(),
+                pavg, pmin, pmax, pcv,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_datasets() {
+        let t = render();
+        for name in ["NETFLIX", "AMAZON", "DELICIOUS", "NELL-1"] {
+            assert!(t.contains(name), "{name} missing");
+        }
+        assert!(t.contains("480K"));
+    }
+
+    #[test]
+    fn csv_has_8_rows() {
+        let c = csv();
+        assert_eq!(c.trim().lines().count(), 9); // header + 4x2
+    }
+
+    #[test]
+    fn paper_reference_is_table1() {
+        assert_eq!(PAPER.len(), 4);
+        assert_eq!(PAPER[2].0, "DELICIOUS");
+        assert!((PAPER[2].2[1] - 496.2).abs() < 1e-9);
+    }
+}

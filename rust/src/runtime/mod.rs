@@ -1,0 +1,275 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the rust hot path. Python never runs here — `make artifacts`
+//! produced the `.hlo.txt` files and `meta.json` once at build time.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids — see
+//! DESIGN.md and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// Shape + dtype of one artifact input or output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata of one AOT artifact (from meta.json).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// A host-side tensor passed to / returned from an executable.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    fn to_literal(&self, meta: &TensorMeta) -> Result<xla::Literal> {
+        if self.len() != meta.elems() {
+            bail!(
+                "input has {} elements, artifact expects {:?} = {}",
+                self.len(), meta.shape, meta.elems()
+            );
+        }
+        if self.dtype() != meta.dtype {
+            bail!("input dtype {:?} != artifact dtype {:?}", self.dtype(), meta.dtype);
+        }
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+fn parse_tensor_meta(j: &Json) -> Result<TensorMeta> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = match j.get("dtype").and_then(Json::as_str) {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => bail!("unsupported dtype {other:?}"),
+    };
+    Ok(TensorMeta { shape, dtype })
+}
+
+/// The runtime: a PJRT CPU client plus lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    meta: HashMap<String, ArtifactMeta>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain meta.json).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} (run `make artifacts`)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("parsing meta.json: {e}"))?;
+        let mut meta = HashMap::new();
+        for (name, art) in json.as_obj().ok_or_else(|| anyhow!("meta.json not an object"))? {
+            let file = art
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?
+                .to_string();
+            let parse_list = |key: &str| -> Result<Vec<TensorMeta>> {
+                art.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing {key}"))?
+                    .iter()
+                    .map(parse_tensor_meta)
+                    .collect()
+            };
+            meta.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, meta, executables: HashMap::new() })
+    }
+
+    /// Artifact names available.
+    pub fn artifacts(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.meta.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.meta.get(name)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact now (otherwise compiled on first execute).
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .meta
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let path = self.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs; returns host outputs.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.ensure_compiled(name)?;
+        let meta = self.meta.get(name).unwrap().clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact `{name}` takes {} inputs, got {}",
+                meta.inputs.len(), inputs.len()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .zip(&meta.inputs)
+            .enumerate()
+            .map(|(i, (t, m))| {
+                t.to_literal(m).with_context(|| format!("artifact `{name}` input {i}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let exe = self.executables.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact `{name}` declared {} outputs, produced {}",
+                meta.outputs.len(), parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, m)| {
+                Ok(match m.dtype {
+                    DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+                    DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+                })
+            })
+            .collect()
+    }
+}
+
+/// Default artifacts directory: $AGV_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AGV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_meta_elems() {
+        let m = TensorMeta { shape: vec![128, 16], dtype: DType::F32 };
+        assert_eq!(m.elems(), 2048);
+        let s = TensorMeta { shape: vec![], dtype: DType::F32 };
+        assert_eq!(s.elems(), 1);
+    }
+
+    #[test]
+    fn host_tensor_checks() {
+        let t = HostTensor::F32(vec![1.0; 4]);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.len(), 4);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let bad = t.to_literal(&TensorMeta { shape: vec![8], dtype: DType::F32 });
+        assert!(bad.is_err());
+        let badt = t.to_literal(&TensorMeta { shape: vec![4], dtype: DType::I32 });
+        assert!(badt.is_err());
+        let ok = t.to_literal(&TensorMeta { shape: vec![2, 2], dtype: DType::F32 });
+        assert!(ok.is_ok());
+    }
+}

@@ -1,0 +1,126 @@
+//! The paper's four real-world data sets (Table I), modeled as calibrated
+//! per-mode power-law profiles.
+//!
+//! Dimensions and nonzero counts are the paper's exactly; the per-mode
+//! skew exponents are calibrated so the DFacTo partition reproduces
+//! Table I's message statistics (avg / min / max / CV at 2 and 8 GPUs)
+//! at rank R = 16, single precision:
+//!
+//! - NETFLIX mode 0 (480K users, skew 0.65) yields the 66K/414K row split
+//!   behind the paper's 26.5 MB max / 2-GPU message;
+//! - DELICIOUS mode 0 (532K, skew 0.86) produces the 0.2 MB minimum and,
+//!   with the 17M mode, the >2000x min/max spread;
+//! - AMAZON is the mild one (CV 0.44);
+//! - NELL-1 is dominated by its 25M-row mode (729 MB-class messages) with
+//!   mild within-mode skew (CV ~ 1.06).
+//!
+//! The paper's exact rank is unstated and its per-data-set averages imply
+//! slightly different R per set; we fix R = 16 and reproduce the *shape*
+//! (ordering, spreads, CVs) — see EXPERIMENTS.md for measured-vs-paper.
+
+use super::{ModeProfile, TensorSpec};
+
+/// Rank of the decomposition used throughout (single precision).
+pub const RANK: usize = 16;
+/// Bytes per factor row communicated: R x f32.
+pub const ROW_BYTES: u64 = (RANK * 4) as u64;
+
+pub fn netflix() -> TensorSpec {
+    TensorSpec {
+        name: "NETFLIX",
+        modes: [
+            ModeProfile { dim: 480_000, skew: 0.65 },
+            ModeProfile { dim: 18_000, skew: 0.50 },
+            ModeProfile { dim: 2_000, skew: 0.40 },
+        ],
+        nnz: 100_000_000,
+    }
+}
+
+pub fn amazon() -> TensorSpec {
+    TensorSpec {
+        name: "AMAZON",
+        modes: [
+            ModeProfile { dim: 524_000, skew: 0.30 },
+            ModeProfile { dim: 2_000_000, skew: 0.25 },
+            ModeProfile { dim: 2_000_000, skew: 0.25 },
+        ],
+        // paper: modified to 200M of the original 1.7B nonzeros
+        nnz: 200_000_000,
+    }
+}
+
+pub fn delicious() -> TensorSpec {
+    TensorSpec {
+        name: "DELICIOUS",
+        modes: [
+            ModeProfile { dim: 532_000, skew: 0.86 },
+            ModeProfile { dim: 17_000_000, skew: 0.35 },
+            ModeProfile { dim: 2_000_000, skew: 0.60 },
+        ],
+        nnz: 140_000_000,
+    }
+}
+
+pub fn nell1() -> TensorSpec {
+    TensorSpec {
+        name: "NELL-1",
+        modes: [
+            ModeProfile { dim: 3_000_000, skew: 0.15 },
+            ModeProfile { dim: 2_000_000, skew: 0.10 },
+            ModeProfile { dim: 25_000_000, skew: 0.15 },
+        ],
+        nnz: 143_000_000,
+    }
+}
+
+/// Table I order: ascending average message size.
+pub fn all() -> Vec<TensorSpec> {
+    vec![netflix(), amazon(), delicious(), nell1()]
+}
+
+pub fn by_name(name: &str) -> Option<TensorSpec> {
+    all()
+        .into_iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name) || d.name.replace('-', "").eq_ignore_ascii_case(&name.replace('-', "")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_dimensions() {
+        let n = netflix();
+        assert_eq!(n.dims(), [480_000, 18_000, 2_000]);
+        assert_eq!(n.nnz, 100_000_000);
+        let d = delicious();
+        assert_eq!(d.dims(), [532_000, 17_000_000, 2_000_000]);
+        let l = nell1();
+        assert_eq!(l.dims(), [3_000_000, 2_000_000, 25_000_000]);
+        assert_eq!(amazon().nnz, 200_000_000);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("netflix").unwrap().name, "NETFLIX");
+        assert_eq!(by_name("NELL-1").unwrap().name, "NELL-1");
+        assert_eq!(by_name("nell1").unwrap().name, "NELL-1");
+        assert!(by_name("unknown").is_none());
+    }
+
+    #[test]
+    fn table_order_is_ascending_avg() {
+        use crate::tensor::messages::message_trace;
+        let avgs: Vec<f64> = all()
+            .iter()
+            .map(|d| {
+                let t = message_trace(d, 2);
+                t.iter().sum::<f64>() / t.len() as f64
+            })
+            .collect();
+        for w in avgs.windows(2) {
+            assert!(w[1] > w[0], "not ascending: {avgs:?}");
+        }
+    }
+}

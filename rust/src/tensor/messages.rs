@@ -1,0 +1,147 @@
+//! Allgatherv message traces and Table I statistics.
+//!
+//! During one CP-ALS iteration ReFacTo performs one Allgatherv per mode;
+//! rank r contributes rows(r, mode) x R x 4 bytes. The message population
+//! of a factorization is therefore {rows(r, m) x 64 : r in ranks, m in
+//! modes} (identical every iteration). Table I reports avg / min / max /
+//! CV of exactly this population at 2 and 8 GPUs.
+
+use crate::util::stats::Summary;
+
+use super::datasets::ROW_BYTES;
+use super::partition::profile_rows;
+use super::TensorSpec;
+
+/// Per-mode per-rank Allgatherv counts (bytes) for a data set at P ranks.
+pub fn mode_counts(spec: &TensorSpec, parts: usize) -> [Vec<u64>; 3] {
+    let mk = |m| {
+        profile_rows(&spec.modes[m], parts)
+            .into_iter()
+            .map(|rows| rows * ROW_BYTES)
+            .collect::<Vec<u64>>()
+    };
+    [mk(0), mk(1), mk(2)]
+}
+
+/// All messages sent by all ranks in one iteration (bytes, f64 for stats).
+pub fn message_trace(spec: &TensorSpec, parts: usize) -> Vec<f64> {
+    mode_counts(spec, parts)
+        .iter()
+        .flat_map(|c| c.iter().map(|&b| b as f64))
+        .collect()
+}
+
+/// One Table I row at a given GPU count.
+#[derive(Clone, Debug)]
+pub struct MsgStats {
+    pub gpus: usize,
+    pub summary: Summary,
+}
+
+impl MsgStats {
+    pub fn of(spec: &TensorSpec, gpus: usize) -> MsgStats {
+        MsgStats { gpus, summary: Summary::of(&message_trace(spec, gpus)) }
+    }
+
+    pub fn avg_mb(&self) -> f64 {
+        self.summary.mean / (1 << 20) as f64
+    }
+
+    pub fn min_mb(&self) -> f64 {
+        self.summary.min / (1 << 20) as f64
+    }
+
+    pub fn max_mb(&self) -> f64 {
+        self.summary.max / (1 << 20) as f64
+    }
+
+    pub fn cv(&self) -> f64 {
+        self.summary.cv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::datasets;
+
+    /// Table I calibration: our analytic profiles must land in the same
+    /// regime as the paper's measurements (shape, not absolutes —
+    /// tolerances are generous because the paper's rank R is unstated).
+    #[test]
+    fn netflix_table1_2gpus() {
+        let s = MsgStats::of(&datasets::netflix(), 2);
+        assert!((4.0..9.0).contains(&s.avg_mb()), "avg {}", s.avg_mb());
+        assert!((0.02..0.08).contains(&s.min_mb()), "min {}", s.min_mb());
+        assert!((20.0..33.0).contains(&s.max_mb()), "max {}", s.max_mb());
+        assert!((1.1..2.2).contains(&s.cv()), "cv {}", s.cv());
+    }
+
+    #[test]
+    fn amazon_table1_2gpus() {
+        let s = MsgStats::of(&datasets::amazon(), 2);
+        assert!((40.0..90.0).contains(&s.avg_mb()), "avg {}", s.avg_mb());
+        assert!(s.cv() < 0.7, "cv {}", s.cv());
+        assert!(s.summary.spread() < 10.0, "spread {}", s.summary.spread());
+    }
+
+    #[test]
+    fn delicious_table1_2gpus() {
+        let s = MsgStats::of(&datasets::delicious(), 2);
+        assert!((0.1..0.4).contains(&s.min_mb()), "min {}", s.min_mb());
+        assert!(s.max_mb() > 400.0, "max {}", s.max_mb());
+        // the paper's headline: >2,000x spread within one data set
+        assert!(s.summary.spread() > 1000.0, "spread {}", s.summary.spread());
+        assert!((1.0..1.8).contains(&s.cv()), "cv {}", s.cv());
+    }
+
+    #[test]
+    fn nell1_table1_2gpus() {
+        let s = MsgStats::of(&datasets::nell1(), 2);
+        assert!((50.0..80.0).contains(&s.min_mb()), "min {}", s.min_mb());
+        assert!((600.0..1000.0).contains(&s.max_mb()), "max {}", s.max_mb());
+        assert!((0.8..1.4).contains(&s.cv()), "cv {}", s.cv());
+    }
+
+    #[test]
+    fn cv_roughly_stable_in_gpu_count() {
+        // Table I: CVs barely move between 2 and 8 GPUs (0.44/0.44,
+        // 1.06/1.06, 1.35->1.48, 1.5->1.84)
+        for d in datasets::all() {
+            let c2 = MsgStats::of(&d, 2).cv();
+            let c8 = MsgStats::of(&d, 8).cv();
+            assert!(
+                (c8 - c2).abs() < 0.75,
+                "{}: cv2={c2} cv8={c8}",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn eight_gpus_smaller_messages() {
+        for d in datasets::all() {
+            let s2 = MsgStats::of(&d, 2);
+            let s8 = MsgStats::of(&d, 8);
+            assert!(s8.avg_mb() < s2.avg_mb(), "{}", d.name);
+            assert!(s8.max_mb() < s2.max_mb(), "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn trace_length_is_3p() {
+        let t = message_trace(&datasets::netflix(), 8);
+        assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn counts_total_matches_dims() {
+        // per mode, sum of per-rank bytes == dim x ROW_BYTES
+        let d = datasets::delicious();
+        let counts = mode_counts(&d, 16);
+        for (m, c) in counts.iter().enumerate() {
+            let total: u64 = c.iter().sum();
+            assert_eq!(total, d.modes[m].dim * ROW_BYTES, "mode {m}");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Sparse tensor substrate for the ReFacTo case study (paper §III,
+//! Table I).
+//!
+//! ReFacTo's communication volume is fully determined by the *per-mode
+//! nonzero distributions*: DFacTo assigns each rank a contiguous slice of
+//! every mode, balancing nonzeros, and each rank's Allgatherv message for
+//! a mode is (rows in its slice) x R x 4 bytes. We therefore model each
+//! data set as per-mode fiber-density profiles (power-law over index
+//! order, per-mode exponent), calibrated in [`datasets`] so the resulting
+//! message statistics reproduce Table I; coordinates only need to be
+//! materialized for the small end-to-end tensors ([`synth`]).
+
+pub mod datasets;
+pub mod messages;
+pub mod partition;
+pub mod synth;
+
+/// Power-law fiber-density profile along one mode: density(i) ~ (i+1)^-s
+/// over index order. `skew = 0` is uniform; larger values concentrate
+/// nonzeros in a small index prefix (what makes DFacTo's nnz-balanced
+/// slices so uneven in rows, and hence the messages so irregular).
+#[derive(Clone, Copy, Debug)]
+pub struct ModeProfile {
+    pub dim: u64,
+    pub skew: f64,
+}
+
+/// A (3-mode) sparse tensor described by its mode profiles — enough to
+/// derive every communication quantity in the paper.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: &'static str,
+    pub modes: [ModeProfile; 3],
+    pub nnz: u64,
+}
+
+impl TensorSpec {
+    pub fn dims(&self) -> [u64; 3] {
+        [self.modes[0].dim, self.modes[1].dim, self.modes[2].dim]
+    }
+}
+
+/// A materialized sparse tensor in COO format (only used for the small
+/// end-to-end workloads; the paper-scale data sets never materialize).
+#[derive(Clone, Debug)]
+pub struct CooTensor {
+    pub dims: [u64; 3],
+    pub i: Vec<u32>,
+    pub j: Vec<u32>,
+    pub k: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl CooTensor {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn norm_sq(&self) -> f64 {
+        self.vals.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Histogram of nonzeros along one mode (for exact partitioning).
+    pub fn mode_histogram(&self, mode: usize) -> Vec<u64> {
+        let (idx, dim) = match mode {
+            0 => (&self.i, self.dims[0]),
+            1 => (&self.j, self.dims[1]),
+            2 => (&self.k, self.dims[2]),
+            _ => panic!("mode out of range"),
+        };
+        let mut h = vec![0u64; dim as usize];
+        for &x in idx.iter() {
+            h[x as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coo_histogram_counts() {
+        let t = CooTensor {
+            dims: [4, 2, 2],
+            i: vec![0, 0, 3, 1],
+            j: vec![0, 1, 1, 0],
+            k: vec![0, 0, 1, 1],
+            vals: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(t.mode_histogram(0), vec![2, 1, 0, 1]);
+        assert_eq!(t.mode_histogram(1), vec![2, 2]);
+        assert_eq!(t.nnz(), 4);
+        assert!((t.norm_sq() - 30.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,207 @@
+//! DFacTo/ReFacTo coarse-grained partitioning (paper §III-A): each rank
+//! owns a *contiguous* slice of every mode, chosen to balance nonzeros.
+//! The slice widths (row counts) are exactly the Allgatherv message sizes
+//! (x R x 4 bytes), so this module is the bridge from data-set shape to
+//! communication irregularity.
+
+use super::ModeProfile;
+
+/// Slice boundaries from the analytic power-law density profile:
+/// density(t) ~ t^-s on (0, dim], so the nnz CDF is F(x) = (x/dim)^(1-s)
+/// and the k-th boundary is dim * (k/P)^(1/(1-s)). Returns P+1 indices,
+/// first 0 and last `dim`, each slice non-empty where dim >= P.
+pub fn profile_boundaries(mode: &ModeProfile, parts: usize) -> Vec<u64> {
+    assert!(parts >= 1);
+    assert!(
+        (0.0..1.0).contains(&mode.skew),
+        "skew must be in [0,1), got {}",
+        mode.skew
+    );
+    let d = mode.dim as f64;
+    let inv = 1.0 / (1.0 - mode.skew);
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0u64);
+    for k in 1..parts {
+        let frac = (k as f64 / parts as f64).powf(inv);
+        let mut x = (d * frac).round() as u64;
+        // keep slices non-empty and monotone
+        let prev = *bounds.last().unwrap();
+        if x <= prev {
+            x = prev + 1;
+        }
+        x = x.min(mode.dim - (parts - k) as u64);
+        bounds.push(x);
+    }
+    bounds.push(mode.dim);
+    bounds
+}
+
+/// Rows per rank from the analytic profile.
+pub fn profile_rows(mode: &ModeProfile, parts: usize) -> Vec<u64> {
+    let b = profile_boundaries(mode, parts);
+    b.windows(2).map(|w| w[1] - w[0]).collect()
+}
+
+/// Exact nnz-balanced contiguous partition of a materialized histogram:
+/// greedy sweep placing boundaries at the nnz quantiles.
+pub fn histogram_boundaries(hist: &[u64], parts: usize) -> Vec<u64> {
+    assert!(parts >= 1);
+    let total: u64 = hist.iter().sum();
+    let dim = hist.len() as u64;
+    let mut bounds = vec![0u64];
+    let mut acc = 0u64;
+    let mut next_quota = 1u64;
+    for (i, &h) in hist.iter().enumerate() {
+        acc += h;
+        while next_quota < parts as u64
+            && acc * parts as u64 >= total * next_quota
+        {
+            let mut x = (i + 1) as u64;
+            let prev = *bounds.last().unwrap();
+            if x <= prev {
+                x = prev + 1;
+            }
+            x = x.min(dim - (parts as u64 - next_quota));
+            bounds.push(x);
+            next_quota += 1;
+        }
+    }
+    while bounds.len() < parts {
+        let prev = *bounds.last().unwrap();
+        bounds.push((prev + 1).min(dim - 1));
+    }
+    bounds.push(dim);
+    bounds
+}
+
+/// Rows per rank for an exact histogram.
+pub fn histogram_rows(hist: &[u64], parts: usize) -> Vec<u64> {
+    let b = histogram_boundaries(hist, parts);
+    b.windows(2).map(|w| w[1] - w[0]).collect()
+}
+
+/// Nonzeros per rank implied by the analytic profile (for load-balance
+/// verification): integrate the density over each slice.
+pub fn profile_nnz_share(mode: &ModeProfile, parts: usize, nnz: u64) -> Vec<u64> {
+    let b = profile_boundaries(mode, parts);
+    let d = mode.dim as f64;
+    let e = 1.0 - mode.skew;
+    let cdf = |x: u64| (x as f64 / d).powf(e);
+    b.windows(2)
+        .map(|w| ((cdf(w[1]) - cdf(w[0])) * nnz as f64).round() as u64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Rng;
+    use crate::util::prop::check;
+
+    #[test]
+    fn uniform_profile_splits_evenly() {
+        let m = ModeProfile { dim: 1000, skew: 0.0 };
+        let rows = profile_rows(&m, 4);
+        assert_eq!(rows, vec![250, 250, 250, 250]);
+    }
+
+    #[test]
+    fn skewed_profile_front_slices_are_narrow() {
+        let m = ModeProfile { dim: 480_000, skew: 0.65 };
+        let rows = profile_rows(&m, 2);
+        // the dense head slice is much narrower
+        assert!(rows[0] < rows[1] / 4, "{rows:?}");
+        assert_eq!(rows.iter().sum::<u64>(), 480_000);
+        // calibration anchor: ~66K/414K (NETFLIX mode-0, Table I's 26.5MB)
+        assert!((60_000..75_000).contains(&rows[0]), "{rows:?}");
+    }
+
+    #[test]
+    fn boundaries_are_monotone_and_complete() {
+        for parts in [1usize, 2, 3, 8, 16] {
+            for skew in [0.0, 0.3, 0.86, 0.95] {
+                let m = ModeProfile { dim: 10_000, skew };
+                let b = profile_boundaries(&m, parts);
+                assert_eq!(b.len(), parts + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), 10_000);
+                for w in b.windows(2) {
+                    assert!(w[1] > w[0], "parts={parts} skew={skew} {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_dim_still_nonempty_slices() {
+        let m = ModeProfile { dim: 16, skew: 0.9 };
+        let rows = profile_rows(&m, 16);
+        assert!(rows.iter().all(|&r| r >= 1), "{rows:?}");
+        assert_eq!(rows.iter().sum::<u64>(), 16);
+    }
+
+    #[test]
+    fn histogram_partition_balances_nnz() {
+        let mut rng = Rng::new(1);
+        let hist: Vec<u64> = (0..1000).map(|_| rng.gen_range(100)).collect();
+        let total: u64 = hist.iter().sum();
+        let parts = 8;
+        let b = histogram_boundaries(&hist, parts);
+        let shares: Vec<u64> = b
+            .windows(2)
+            .map(|w| hist[w[0] as usize..w[1] as usize].iter().sum())
+            .collect();
+        let target = total / parts as u64;
+        for s in &shares {
+            // contiguous greedy can't be perfect; bounded imbalance
+            assert!(
+                (*s as i64 - target as i64).unsigned_abs() < target,
+                "share {s} vs target {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn profile_nnz_share_is_balanced() {
+        let m = ModeProfile { dim: 1_000_000, skew: 0.7 };
+        let shares = profile_nnz_share(&m, 8, 100_000_000);
+        let target = 100_000_000 / 8;
+        for s in &shares {
+            let rel = (*s as f64 - target as f64).abs() / target as f64;
+            assert!(rel < 0.05, "share {s} vs {target}");
+        }
+    }
+
+    #[test]
+    fn prop_histogram_boundaries_valid() {
+        check("hist-bounds", 64, |rng| {
+            let dim = 16 + rng.gen_range(2000) as usize;
+            let parts = 1 + rng.gen_range(16) as usize;
+            if dim < parts {
+                return Ok(());
+            }
+            let hist: Vec<u64> = (0..dim).map(|_| rng.gen_range(50)).collect();
+            let b = histogram_boundaries(&hist, parts);
+            prop_assert!(b.len() == parts + 1, "len {}", b.len());
+            prop_assert!(b[0] == 0 && *b.last().unwrap() == dim as u64);
+            for w in b.windows(2) {
+                prop_assert!(w[1] > w[0], "non-monotone {b:?}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_profile_rows_partition_dim() {
+        check("profile-rows", 64, |rng| {
+            let dim = 64 + rng.gen_range(1_000_000);
+            let parts = 1 + rng.gen_range(16) as usize;
+            let skew = rng.gen_f64(0.0, 0.99);
+            let rows = profile_rows(&ModeProfile { dim, skew }, parts);
+            prop_assert!(rows.iter().sum::<u64>() == dim);
+            prop_assert!(rows.iter().all(|&r| r >= 1));
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Materialized synthetic tensors for the end-to-end workloads.
+//!
+//! Coordinates are drawn from the same power-law profiles as the
+//! paper-scale data sets (inverse-CDF sampling per mode); values can be
+//! pure noise or planted low-rank structure (so CP-ALS has something to
+//! converge to and the e2e fit curve is meaningful).
+
+use crate::util::prng::Rng;
+
+use super::{CooTensor, TensorSpec};
+
+/// Inverse-CDF sample of the power-law profile: u ~ U[0,1) ->
+/// floor(dim * u^(1/(1-s))).
+fn sample_index(rng: &mut Rng, dim: u64, skew: f64) -> u32 {
+    let u = rng.next_f64();
+    let x = (dim as f64 * u.powf(1.0 / (1.0 - skew))) as u64;
+    x.min(dim - 1) as u32
+}
+
+/// Draw `nnz` coordinates with iid per-mode profiles and N(0,1) values.
+pub fn random_coo(spec: &TensorSpec, nnz: usize, seed: u64) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    let dims = spec.dims();
+    let mut t = CooTensor {
+        dims,
+        i: Vec::with_capacity(nnz),
+        j: Vec::with_capacity(nnz),
+        k: Vec::with_capacity(nnz),
+        vals: Vec::with_capacity(nnz),
+    };
+    for _ in 0..nnz {
+        t.i.push(sample_index(&mut rng, dims[0], spec.modes[0].skew));
+        t.j.push(sample_index(&mut rng, dims[1], spec.modes[1].skew));
+        t.k.push(sample_index(&mut rng, dims[2], spec.modes[2].skew));
+        t.vals.push(rng.normal() as f32);
+    }
+    t
+}
+
+/// Plant a rank-`true_rank` low-rank signal: coordinates as in
+/// [`random_coo`], values = sum_r a_i b_j c_k + noise_scale * N(0,1).
+pub fn low_rank_coo(
+    spec: &TensorSpec,
+    nnz: usize,
+    true_rank: usize,
+    noise_scale: f32,
+    seed: u64,
+) -> CooTensor {
+    let mut rng = Rng::new(seed);
+    let dims = spec.dims();
+    let factor = |rng: &mut Rng, d: u64| -> Vec<f32> {
+        (0..d as usize * true_rank).map(|_| rng.normal() as f32 * 0.5).collect()
+    };
+    let fa = factor(&mut rng, dims[0]);
+    let fb = factor(&mut rng, dims[1]);
+    let fc = factor(&mut rng, dims[2]);
+    let mut t = random_coo(spec, nnz, seed ^ 0xD00D);
+    for n in 0..nnz {
+        let (i, j, k) = (t.i[n] as usize, t.j[n] as usize, t.k[n] as usize);
+        let mut v = 0.0f32;
+        for r in 0..true_rank {
+            v += fa[i * true_rank + r] * fb[j * true_rank + r] * fc[k * true_rank + r];
+        }
+        t.vals[n] = v + noise_scale * rng.normal() as f32;
+    }
+    t
+}
+
+/// Pad a COO tensor to `n_pad` entries with (val=0, idx=0) so its shape
+/// matches an AOT artifact (the model treats zero-valued entries as
+/// no-ops). Panics if the tensor is larger than the padded size.
+pub fn pad_coo(t: &CooTensor, n_pad: usize) -> CooTensor {
+    assert!(t.nnz() <= n_pad, "tensor ({}) larger than pad ({n_pad})", t.nnz());
+    let mut out = t.clone();
+    out.i.resize(n_pad, 0);
+    out.j.resize(n_pad, 0);
+    out.k.resize(n_pad, 0);
+    out.vals.resize(n_pad, 0.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ModeProfile;
+
+    fn small_spec() -> TensorSpec {
+        TensorSpec {
+            name: "small",
+            modes: [
+                ModeProfile { dim: 128, skew: 0.6 },
+                ModeProfile { dim: 64, skew: 0.3 },
+                ModeProfile { dim: 64, skew: 0.0 },
+            ],
+            nnz: 2048,
+        }
+    }
+
+    #[test]
+    fn random_coo_in_bounds() {
+        let t = random_coo(&small_spec(), 2048, 7);
+        assert_eq!(t.nnz(), 2048);
+        assert!(t.i.iter().all(|&x| (x as u64) < 128));
+        assert!(t.j.iter().all(|&x| (x as u64) < 64));
+        assert!(t.k.iter().all(|&x| (x as u64) < 64));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = random_coo(&small_spec(), 512, 42);
+        let b = random_coo(&small_spec(), 512, 42);
+        assert_eq!(a.i, b.i);
+        assert_eq!(a.vals, b.vals);
+        let c = random_coo(&small_spec(), 512, 43);
+        assert_ne!(a.i, c.i);
+    }
+
+    #[test]
+    fn skew_concentrates_head() {
+        let t = random_coo(&small_spec(), 8192, 3);
+        let h = t.mode_histogram(0);
+        let head: u64 = h[..16].iter().sum();
+        let tail: u64 = h[112..].iter().sum();
+        assert!(head > 4 * tail, "head={head} tail={tail}");
+        // mode 2 is uniform: no such concentration
+        let h2 = t.mode_histogram(2);
+        let head2: u64 = h2[..8].iter().sum();
+        let tail2: u64 = h2[56..].iter().sum();
+        assert!(head2 < 3 * tail2.max(1), "head2={head2} tail2={tail2}");
+    }
+
+    #[test]
+    fn low_rank_has_structure() {
+        // planted low-rank values should have larger magnitude than noise
+        let t = low_rank_coo(&small_spec(), 4096, 4, 0.01, 11);
+        let energy: f64 = t.norm_sq() / t.nnz() as f64;
+        assert!(energy > 0.05, "energy {energy}");
+    }
+
+    #[test]
+    fn pad_extends_with_zeros() {
+        let t = random_coo(&small_spec(), 100, 5);
+        let p = pad_coo(&t, 256);
+        assert_eq!(p.nnz(), 256);
+        assert_eq!(p.vals[100..], vec![0.0; 156][..]);
+        assert_eq!(&p.vals[..100], &t.vals[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than pad")]
+    fn pad_rejects_shrink() {
+        let t = random_coo(&small_spec(), 100, 5);
+        let _ = pad_coo(&t, 50);
+    }
+}

@@ -1,0 +1,405 @@
+//! GPU network topology substrate (paper Fig. 1, §V-A).
+//!
+//! Models a multi-GPU system as a graph of devices (GPUs, CPUs/root
+//! complexes, PCIe switches, NICs, IB switches) connected by typed links
+//! (NVLink, bonded NVLink, PCIe, QPI, FDR InfiniBand). The three systems
+//! the paper evaluates — the 16-node K40m cluster, NVIDIA's DGX-1 and
+//! Cray's CS-Storm — are constructed in [`systems`] with the bandwidths
+//! Fig. 1 reports.
+//!
+//! The topology answers the questions the communication libraries ask:
+//! - what is the route between two endpoints (`route`)?
+//! - is GPUDirect P2P possible between two GPUs (`p2p_accessible`)?
+//!   (MVAPICH requires it for direct copies; NCCL does NOT, which is the
+//!   paper's explanation of NCCL's DGX-1 advantage — §II-B)
+//! - which links are NVLink, so NCCL's ring search can prefer them?
+
+pub mod routing;
+pub mod systems;
+
+pub use routing::Path;
+
+/// Index of a device in [`Topology::devices`].
+pub type DeviceId = usize;
+/// Index of a link in [`Topology::links`].
+pub type LinkId = usize;
+
+/// Device classes in a multi-GPU system.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// A GPU; `rank` is the MPI-rank-visible ordinal (device ID).
+    Gpu { rank: usize },
+    /// CPU socket / PCIe root complex; `node` is the host it belongs to.
+    Cpu { socket: usize },
+    /// PCIe switch fanning out several GPUs (CS-Storm, DGX-1).
+    PcieSwitch,
+    /// Host channel adapter (InfiniBand NIC).
+    Nic,
+    /// Top-of-rack InfiniBand switch (cluster star topology).
+    IbSwitch,
+}
+
+/// A device plus the host node it lives on (nodes matter for "intra- vs
+/// inter-node" decisions: GDR only applies across nodes, P2P within one).
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub kind: DeviceKind,
+    pub node: usize,
+    pub name: String,
+}
+
+/// Link technology classes with the paper's unidirectional bandwidths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Single NVLink 1.0 connection point: 20 GB/s unidirectional.
+    NvLink,
+    /// CS-Storm bonded set of 4 NVLinks: 80 GB/s unidirectional.
+    NvLinkBonded4,
+    /// PCIe 3.0 x16: ~16 GB/s peak, ~12.5 GB/s effective.
+    PcieGen3x16,
+    /// QPI between sockets.
+    Qpi,
+    /// 56 Gbit/s FDR InfiniBand: 7 GB/s peak, ~6.2 GB/s effective.
+    InfinibandFdr,
+}
+
+impl LinkClass {
+    /// Effective unidirectional bandwidth in bytes/second.
+    pub fn bandwidth(self) -> f64 {
+        match self {
+            LinkClass::NvLink => 18.0e9,        // 20 GB/s peak, ~90% achievable
+            LinkClass::NvLinkBonded4 => 72.0e9, // 4x bonded
+            LinkClass::PcieGen3x16 => 12.5e9,   // protocol overhead off 15.75
+            LinkClass::Qpi => 16.0e9,
+            LinkClass::InfinibandFdr => 6.2e9,  // 56 Gbit/s minus encoding
+        }
+    }
+
+    /// Per-hop wire latency in seconds.
+    pub fn latency(self) -> f64 {
+        match self {
+            LinkClass::NvLink | LinkClass::NvLinkBonded4 => 1.3e-6,
+            LinkClass::PcieGen3x16 => 1.5e-6,
+            LinkClass::Qpi => 0.5e-6,
+            LinkClass::InfinibandFdr => 1.0e-6,
+        }
+    }
+
+    pub fn is_nvlink(self) -> bool {
+        matches!(self, LinkClass::NvLink | LinkClass::NvLinkBonded4)
+    }
+}
+
+/// An undirected physical link between two devices.
+///
+/// Bandwidth is modeled per direction (full duplex): the simulator tracks
+/// contention separately for each direction.
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub a: DeviceId,
+    pub b: DeviceId,
+    pub class: LinkClass,
+}
+
+/// A complete system topology.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    pub devices: Vec<Device>,
+    pub links: Vec<Link>,
+    /// adjacency: device -> [(link, peer device)]
+    adj: Vec<Vec<(LinkId, DeviceId)>>,
+    /// GPU rank -> device id (dense, rank i at index i).
+    gpus: Vec<DeviceId>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>) -> Topology {
+        Topology {
+            name: name.into(),
+            devices: Vec::new(),
+            links: Vec::new(),
+            adj: Vec::new(),
+            gpus: Vec::new(),
+        }
+    }
+
+    pub fn add_device(&mut self, kind: DeviceKind, node: usize, name: impl Into<String>) -> DeviceId {
+        let id = self.devices.len();
+        if let DeviceKind::Gpu { rank } = kind {
+            assert_eq!(rank, self.gpus.len(), "GPU ranks must be added in order");
+            self.gpus.push(id);
+        }
+        self.devices.push(Device { kind, node, name: name.into() });
+        self.adj.push(Vec::new());
+        id
+    }
+
+    pub fn add_link(&mut self, a: DeviceId, b: DeviceId, class: LinkClass) -> LinkId {
+        assert!(a < self.devices.len() && b < self.devices.len());
+        assert_ne!(a, b, "self-links are not allowed");
+        let id = self.links.len();
+        self.links.push(Link { a, b, class });
+        self.adj[a].push((id, b));
+        self.adj[b].push((id, a));
+        id
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// Device id of GPU with the given rank.
+    pub fn gpu(&self, rank: usize) -> DeviceId {
+        self.gpus[rank]
+    }
+
+    pub fn neighbors(&self, d: DeviceId) -> &[(LinkId, DeviceId)] {
+        &self.adj[d]
+    }
+
+    /// The CPU socket that owns a device's PCIe hierarchy (walks up
+    /// through PCIe switches). Used for host-staging endpoints.
+    pub fn host_cpu(&self, d: DeviceId) -> DeviceId {
+        // BFS limited to PCIe links until a CPU is reached.
+        let mut visited = vec![false; self.devices.len()];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(d);
+        visited[d] = true;
+        while let Some(cur) = queue.pop_front() {
+            if matches!(self.devices[cur].kind, DeviceKind::Cpu { .. }) {
+                return cur;
+            }
+            for &(l, peer) in &self.adj[cur] {
+                if !visited[peer]
+                    && self.devices[peer].node == self.devices[d].node
+                    && matches!(self.links[l].class, LinkClass::PcieGen3x16 | LinkClass::Qpi)
+                {
+                    visited[peer] = true;
+                    queue.push_back(peer);
+                }
+            }
+        }
+        panic!("device {d} has no host CPU reachable over PCIe");
+    }
+
+    /// Are two GPUs on the same host node?
+    pub fn same_node(&self, rank_a: usize, rank_b: usize) -> bool {
+        self.devices[self.gpu(rank_a)].node == self.devices[self.gpu(rank_b)].node
+    }
+
+    /// Is there a *direct* NVLink connection between two GPUs?
+    pub fn nvlink_direct(&self, rank_a: usize, rank_b: usize) -> bool {
+        let (da, db) = (self.gpu(rank_a), self.gpu(rank_b));
+        self.adj[da]
+            .iter()
+            .any(|&(l, peer)| peer == db && self.links[l].class.is_nvlink())
+    }
+
+    /// GPUDirect P2P capability (the rule MVAPICH is constrained by,
+    /// §II-B): P2P works iff the GPUs share a node AND are connected by a
+    /// direct NVLink OR hang off the same PCIe switch/root complex
+    /// *without* crossing QPI. Notably, multi-hop NVLink (e.g. DGX-1
+    /// GPU 0 -> 5) is NOT P2P-capable — MVAPICH falls back to PCIe/host
+    /// for those pairs while NCCL does not.
+    pub fn p2p_accessible(&self, rank_a: usize, rank_b: usize) -> bool {
+        if rank_a == rank_b {
+            return true;
+        }
+        if !self.same_node(rank_a, rank_b) {
+            return false;
+        }
+        if self.nvlink_direct(rank_a, rank_b) {
+            return true;
+        }
+        // Same PCIe switch hierarchy: reachable over PCIe links without
+        // transiting the root complex (peer-to-peer through the CPU/QPI
+        // is not supported — the reason CS-Storm GPUs on different
+        // switches and DGX-1 cross-quad pairs fall back to host staging).
+        let (da, db) = (self.gpu(rank_a), self.gpu(rank_b));
+        let mut visited = vec![false; self.devices.len()];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(da);
+        visited[da] = true;
+        while let Some(cur) = queue.pop_front() {
+            if cur == db {
+                return true;
+            }
+            if cur != da && matches!(self.devices[cur].kind, DeviceKind::Cpu { .. }) {
+                continue; // endpoints may touch the CPU; transit may not
+            }
+            for &(l, peer) in &self.adj[cur] {
+                if !visited[peer] && self.links[l].class == LinkClass::PcieGen3x16 {
+                    visited[peer] = true;
+                    queue.push_back(peer);
+                }
+            }
+        }
+        false
+    }
+
+    /// Route between two devices: maximize bottleneck bandwidth, then
+    /// minimize hop count (a "widest-shortest" path, which is how both
+    /// NVLink-first and PCIe-fallback routing behave in practice).
+    pub fn route(&self, from: DeviceId, to: DeviceId) -> Option<Path> {
+        routing::widest_shortest_path(self, from, to)
+    }
+
+    /// Route between GPUs by rank.
+    pub fn route_gpus(&self, rank_a: usize, rank_b: usize) -> Option<Path> {
+        self.route(self.gpu(rank_a), self.gpu(rank_b))
+    }
+
+    /// Route restricted to NVLink fabric only (what NCCL's topology
+    /// detection searches). None if the GPUs aren't NVLink-connected.
+    pub fn route_nvlink_only(&self, rank_a: usize, rank_b: usize) -> Option<Path> {
+        routing::nvlink_path(self, self.gpu(rank_a), self.gpu(rank_b))
+    }
+
+    /// Re-map MPI ranks to GPUs (paper §III-B: ReFacTo "added the
+    /// capability to associate the MPI ranks with specific GPUs, allowing
+    /// for more flexibility on systems where a sequential assignment
+    /// would not be optimal"). `perm[rank] = old GPU rank`; returns a
+    /// topology whose GPU registry is permuted accordingly — every
+    /// communication model then sees the new binding transparently.
+    pub fn remap_gpus(&self, perm: &[usize]) -> Topology {
+        assert_eq!(perm.len(), self.gpus.len(), "permutation must cover all GPUs");
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!(p < perm.len() && !seen[p], "not a permutation: {perm:?}");
+            seen[p] = true;
+        }
+        let mut t = self.clone();
+        t.name = format!("{}-remapped", self.name);
+        for (new_rank, &old_rank) in perm.iter().enumerate() {
+            let dev = self.gpus[old_rank];
+            t.gpus[new_rank] = dev;
+            if let DeviceKind::Gpu { rank } = &mut t.devices[dev].kind {
+                *rank = new_rank;
+            }
+        }
+        t
+    }
+
+    /// Bottleneck bandwidth along a path.
+    pub fn path_bandwidth(&self, path: &Path) -> f64 {
+        path.links
+            .iter()
+            .map(|&l| self.links[l].class.bandwidth())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Sum of per-hop latencies along a path.
+    pub fn path_latency(&self, path: &Path) -> f64 {
+        path.links.iter().map(|&l| self.links[l].class.latency()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_gpu_nvlink() -> Topology {
+        let mut t = Topology::new("test");
+        let cpu = t.add_device(DeviceKind::Cpu { socket: 0 }, 0, "cpu0");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "gpu0");
+        let g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 0, "gpu1");
+        t.add_link(g0, cpu, LinkClass::PcieGen3x16);
+        t.add_link(g1, cpu, LinkClass::PcieGen3x16);
+        t.add_link(g0, g1, LinkClass::NvLink);
+        t
+    }
+
+    #[test]
+    fn gpu_registry() {
+        let t = two_gpu_nvlink();
+        assert_eq!(t.num_gpus(), 2);
+        assert_eq!(t.devices[t.gpu(0)].name, "gpu0");
+        assert_eq!(t.devices[t.gpu(1)].name, "gpu1");
+    }
+
+    #[test]
+    fn nvlink_direct_detection() {
+        let t = two_gpu_nvlink();
+        assert!(t.nvlink_direct(0, 1));
+        assert!(t.p2p_accessible(0, 1));
+    }
+
+    #[test]
+    fn route_prefers_nvlink_over_pcie() {
+        let t = two_gpu_nvlink();
+        let p = t.route_gpus(0, 1).unwrap();
+        assert_eq!(p.links.len(), 1);
+        assert!(t.links[p.links[0]].class.is_nvlink());
+        assert!((t.path_bandwidth(&p) - LinkClass::NvLink.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn host_cpu_walks_pcie() {
+        let t = two_gpu_nvlink();
+        let cpu = t.host_cpu(t.gpu(0));
+        assert!(matches!(t.devices[cpu].kind, DeviceKind::Cpu { .. }));
+    }
+
+    #[test]
+    fn p2p_same_pcie_switch_without_nvlink() {
+        let mut t = Topology::new("pcie-only");
+        let cpu = t.add_device(DeviceKind::Cpu { socket: 0 }, 0, "cpu0");
+        let sw = t.add_device(DeviceKind::PcieSwitch, 0, "plx0");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "gpu0");
+        let g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 0, "gpu1");
+        let g2 = t.add_device(DeviceKind::Gpu { rank: 2 }, 0, "gpu2");
+        t.add_link(sw, cpu, LinkClass::PcieGen3x16);
+        t.add_link(g0, sw, LinkClass::PcieGen3x16);
+        t.add_link(g1, sw, LinkClass::PcieGen3x16);
+        t.add_link(g2, cpu, LinkClass::PcieGen3x16); // directly on the root
+        // same switch: P2P works without NVLink
+        assert!(t.p2p_accessible(0, 1));
+        assert!(!t.nvlink_direct(0, 1));
+        // through the root complex: no P2P
+        assert!(!t.p2p_accessible(0, 2));
+        assert!(t.route_gpus(0, 2).is_some());
+    }
+
+    #[test]
+    fn p2p_blocked_across_qpi() {
+        // GPUs on different sockets joined only via QPI: no P2P.
+        let mut t = Topology::new("qpi-split");
+        let cpu0 = t.add_device(DeviceKind::Cpu { socket: 0 }, 0, "cpu0");
+        let cpu1 = t.add_device(DeviceKind::Cpu { socket: 1 }, 0, "cpu1");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "gpu0");
+        let g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 0, "gpu1");
+        t.add_link(g0, cpu0, LinkClass::PcieGen3x16);
+        t.add_link(g1, cpu1, LinkClass::PcieGen3x16);
+        t.add_link(cpu0, cpu1, LinkClass::Qpi);
+        assert!(!t.p2p_accessible(0, 1));
+        // ... but still routable (through QPI).
+        assert!(t.route_gpus(0, 1).is_some());
+    }
+
+    #[test]
+    fn p2p_blocked_across_nodes() {
+        let mut t = Topology::new("two-node");
+        let sw = t.add_device(DeviceKind::IbSwitch, usize::MAX, "ib");
+        for n in 0..2 {
+            let cpu = t.add_device(DeviceKind::Cpu { socket: 0 }, n, "cpu");
+            let g = t.add_device(DeviceKind::Gpu { rank: n }, n, "gpu");
+            let nic = t.add_device(DeviceKind::Nic, n, "nic");
+            t.add_link(g, cpu, LinkClass::PcieGen3x16);
+            t.add_link(cpu, nic, LinkClass::PcieGen3x16);
+            t.add_link(nic, sw, LinkClass::InfinibandFdr);
+        }
+        assert!(!t.p2p_accessible(0, 1));
+        let p = t.route_gpus(0, 1).unwrap();
+        // bottleneck must be the IB link
+        assert!((t.path_bandwidth(&p) - LinkClass::InfinibandFdr.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-links")]
+    fn self_link_rejected() {
+        let mut t = Topology::new("bad");
+        let g = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "g");
+        t.add_link(g, g, LinkClass::NvLink);
+    }
+}

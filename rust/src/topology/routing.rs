@@ -1,0 +1,224 @@
+//! Path search over the device graph.
+//!
+//! Two searches are provided:
+//! - [`widest_shortest_path`]: maximize bottleneck bandwidth, tie-break on
+//!   hop count then total latency. This is the "sensible driver" route a
+//!   GPU-to-GPU copy takes (NVLink if direct, else PCIe/QPI/IB).
+//! - [`nvlink_path`]: BFS restricted to NVLink-class links — the search
+//!   NCCL's topology detection performs. It finds multi-hop NVLink routes
+//!   (e.g. DGX-1 GPU 0 -> GPU 5 in two hops) that GPUDirect-P2P-gated
+//!   libraries cannot use (paper §II-B).
+
+use super::{DeviceId, LinkId, Topology};
+
+/// A route: the device sequence and the links traversed (links.len() ==
+/// devices.len() - 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Path {
+    pub devices: Vec<DeviceId>,
+    pub links: Vec<LinkId>,
+}
+
+impl Path {
+    pub fn hops(&self) -> usize {
+        self.links.len()
+    }
+}
+
+/// Widest-shortest path: Dijkstra on (−bottleneck_bw, hops, latency).
+pub fn widest_shortest_path(topo: &Topology, from: DeviceId, to: DeviceId) -> Option<Path> {
+    if from == to {
+        return Some(Path { devices: vec![from], links: vec![] });
+    }
+    let n = topo.devices.len();
+    // best[(bw, hops, lat)] per device; we maximize bw then minimize hops/lat.
+    #[derive(Clone, Copy, PartialEq)]
+    struct Cost {
+        bw: f64,
+        hops: usize,
+        lat: f64,
+    }
+    impl Cost {
+        fn better_than(&self, o: &Cost) -> bool {
+            if self.bw != o.bw {
+                return self.bw > o.bw;
+            }
+            if self.hops != o.hops {
+                return self.hops < o.hops;
+            }
+            self.lat < o.lat
+        }
+    }
+    let mut best: Vec<Option<Cost>> = vec![None; n];
+    let mut prev: Vec<Option<(DeviceId, LinkId)>> = vec![None; n];
+    best[from] = Some(Cost { bw: f64::INFINITY, hops: 0, lat: 0.0 });
+    // Simple O(V^2) scan — topologies have < 100 devices.
+    let mut done = vec![false; n];
+    loop {
+        let mut cur: Option<DeviceId> = None;
+        for d in 0..n {
+            if !done[d] && best[d].is_some() {
+                if let Some(c) = cur {
+                    if best[d].unwrap().better_than(&best[c].unwrap()) {
+                        cur = Some(d);
+                    }
+                } else {
+                    cur = Some(d);
+                }
+            }
+        }
+        let Some(cur) = cur else { break };
+        if cur == to {
+            break;
+        }
+        done[cur] = true;
+        let cost = best[cur].unwrap();
+        for &(l, peer) in topo.neighbors(cur) {
+            if done[peer] {
+                continue;
+            }
+            let link = &topo.links[l];
+            let cand = Cost {
+                bw: cost.bw.min(link.class.bandwidth()),
+                hops: cost.hops + 1,
+                lat: cost.lat + link.class.latency(),
+            };
+            let improves = match best[peer] {
+                None => true,
+                Some(existing) => cand.better_than(&existing),
+            };
+            if improves {
+                best[peer] = Some(cand);
+                prev[peer] = Some((cur, l));
+            }
+        }
+    }
+    best[to]?;
+    let mut devices = vec![to];
+    let mut links = Vec::new();
+    let mut cur = to;
+    while let Some((p, l)) = prev[cur] {
+        devices.push(p);
+        links.push(l);
+        cur = p;
+    }
+    devices.reverse();
+    links.reverse();
+    debug_assert_eq!(devices[0], from);
+    Some(Path { devices, links })
+}
+
+/// BFS over NVLink-class links only (fewest NVLink hops).
+pub fn nvlink_path(topo: &Topology, from: DeviceId, to: DeviceId) -> Option<Path> {
+    if from == to {
+        return Some(Path { devices: vec![from], links: vec![] });
+    }
+    let n = topo.devices.len();
+    let mut prev: Vec<Option<(DeviceId, LinkId)>> = vec![None; n];
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    visited[from] = true;
+    queue.push_back(from);
+    while let Some(cur) = queue.pop_front() {
+        if cur == to {
+            break;
+        }
+        for &(l, peer) in topo.neighbors(cur) {
+            if !visited[peer] && topo.links[l].class.is_nvlink() {
+                visited[peer] = true;
+                prev[peer] = Some((cur, l));
+                queue.push_back(peer);
+            }
+        }
+    }
+    if !visited[to] {
+        return None;
+    }
+    let mut devices = vec![to];
+    let mut links = Vec::new();
+    let mut cur = to;
+    while let Some((p, l)) = prev[cur] {
+        devices.push(p);
+        links.push(l);
+        cur = p;
+    }
+    devices.reverse();
+    links.reverse();
+    Some(Path { devices, links })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{DeviceKind, LinkClass};
+
+    /// Diamond: g0 -(nvlink)- g1 -(nvlink)- g3, and g0 -(pcie)- g2 -(pcie)- g3.
+    fn diamond() -> Topology {
+        let mut t = Topology::new("diamond");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "g0");
+        let g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 0, "g1");
+        let g2 = t.add_device(DeviceKind::Gpu { rank: 2 }, 0, "g2");
+        let g3 = t.add_device(DeviceKind::Gpu { rank: 3 }, 0, "g3");
+        t.add_link(g0, g1, LinkClass::NvLink);
+        t.add_link(g1, g3, LinkClass::NvLink);
+        t.add_link(g0, g2, LinkClass::PcieGen3x16);
+        t.add_link(g2, g3, LinkClass::PcieGen3x16);
+        t
+    }
+
+    #[test]
+    fn widest_takes_two_hop_nvlink_over_two_hop_pcie() {
+        let t = diamond();
+        let p = t.route_gpus(0, 3).unwrap();
+        assert_eq!(p.hops(), 2);
+        assert!(p.links.iter().all(|&l| t.links[l].class.is_nvlink()));
+    }
+
+    #[test]
+    fn nvlink_path_multi_hop() {
+        let t = diamond();
+        let p = t.route_nvlink_only(0, 3).unwrap();
+        assert_eq!(p.hops(), 2);
+        assert_eq!(p.devices, vec![t.gpu(0), t.gpu(1), t.gpu(3)]);
+    }
+
+    #[test]
+    fn nvlink_path_absent_when_disconnected() {
+        let mut t = Topology::new("split");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "g0");
+        let g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 0, "g1");
+        t.add_link(g0, g1, LinkClass::PcieGen3x16);
+        assert!(t.route_nvlink_only(0, 1).is_none());
+        assert!(t.route_gpus(0, 1).is_some());
+    }
+
+    #[test]
+    fn identity_path() {
+        let t = diamond();
+        let p = t.route(t.gpu(0), t.gpu(0)).unwrap();
+        assert_eq!(p.hops(), 0);
+        assert_eq!(p.devices, vec![t.gpu(0)]);
+    }
+
+    #[test]
+    fn unreachable_is_none() {
+        let mut t = Topology::new("islands");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "g0");
+        let _g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 1, "g1");
+        let _ = g0;
+        assert!(t.route_gpus(0, 1).is_none());
+    }
+
+    #[test]
+    fn path_endpoints_consistent() {
+        let t = diamond();
+        for a in 0..4 {
+            for b in 0..4 {
+                let p = t.route_gpus(a, b).unwrap();
+                assert_eq!(p.devices[0], t.gpu(a));
+                assert_eq!(*p.devices.last().unwrap(), t.gpu(b));
+                assert_eq!(p.links.len() + 1, p.devices.len());
+            }
+        }
+    }
+}

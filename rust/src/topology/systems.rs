@@ -1,0 +1,351 @@
+//! The three systems of the paper, as described in §V-A and Fig. 1.
+//!
+//! - `cluster(n)`: n-node FDR InfiniBand star, one K40m per node on
+//!   PCIe 3.0 x16, NIC per node, single IB switch. (Paper: 16 nodes.)
+//! - `dgx1()`: 8 P100s in NVLink hybrid cube-mesh (4 connection points
+//!   per GPU, 20 GB/s each), two quads, PCIe switches pairing GPUs under
+//!   two Xeon sockets joined by QPI.
+//! - `cs_storm()`: 16 P100s in pairs bonded by 4 NVLinks (80 GB/s per
+//!   pair); pairs hang off shared PCIe switches (4 GPUs per switch),
+//!   two switches per socket, QPI between sockets.
+
+use super::{DeviceKind, LinkClass, Topology};
+
+/// Which of the paper's systems to build (plus GPU-count slicing as in
+/// the experiments: the paper runs 2/8/16 GPUs where the system allows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    Cluster,
+    Dgx1,
+    CsStorm,
+}
+
+impl SystemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemKind::Cluster => "cluster",
+            SystemKind::Dgx1 => "dgx1",
+            SystemKind::CsStorm => "cs-storm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SystemKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "cluster" => Some(SystemKind::Cluster),
+            "dgx1" | "dgx-1" => Some(SystemKind::Dgx1),
+            "cs-storm" | "csstorm" | "storm" => Some(SystemKind::CsStorm),
+            _ => None,
+        }
+    }
+
+    /// Max GPUs the paper uses on this system.
+    pub fn max_gpus(self) -> usize {
+        match self {
+            SystemKind::Cluster => 16,
+            SystemKind::Dgx1 => 8,
+            SystemKind::CsStorm => 16,
+        }
+    }
+
+    pub fn build(self) -> Topology {
+        match self {
+            SystemKind::Cluster => cluster(16),
+            SystemKind::Dgx1 => dgx1(),
+            SystemKind::CsStorm => cs_storm(),
+        }
+    }
+
+    pub fn all() -> [SystemKind; 3] {
+        [SystemKind::Cluster, SystemKind::Dgx1, SystemKind::CsStorm]
+    }
+}
+
+/// Traditional cluster: `n` nodes, 1 GPU each, FDR IB star (Fig. 1 left).
+pub fn cluster(n: usize) -> Topology {
+    let mut t = Topology::new(format!("cluster-{n}"));
+    let ib = t.add_device(DeviceKind::IbSwitch, usize::MAX, "ib-switch");
+    for node in 0..n {
+        let cpu = t.add_device(DeviceKind::Cpu { socket: 0 }, node, format!("n{node}.cpu"));
+        let gpu = t.add_device(DeviceKind::Gpu { rank: node }, node, format!("n{node}.k40m"));
+        let nic = t.add_device(DeviceKind::Nic, node, format!("n{node}.hca"));
+        // Each GPU has exclusive access to its local PCIe bus (paper §V-B).
+        t.add_link(gpu, cpu, LinkClass::PcieGen3x16);
+        t.add_link(cpu, nic, LinkClass::PcieGen3x16);
+        t.add_link(nic, ib, LinkClass::InfinibandFdr);
+    }
+    t
+}
+
+/// NVIDIA DGX-1 (P100): hybrid cube-mesh (Fig. 1 right).
+///
+/// NVLink edges: each quad {0,1,2,3} and {4,5,6,7} is fully connected
+/// (6 edges each) and the quads are joined by 0-4, 1-5, 2-6, 3-7 —
+/// exactly 4 NVLink connection points per GPU. Any GPU reaches any other
+/// in at most two NVLink hops (the property NCCL exploits, §V-B).
+///
+/// PCIe: GPUs {0,1} and {2,3} under switches on socket 0; {4,5}, {6,7}
+/// on socket 1; QPI joins the sockets.
+pub fn dgx1() -> Topology {
+    let mut t = Topology::new("dgx1");
+    let cpu0 = t.add_device(DeviceKind::Cpu { socket: 0 }, 0, "cpu0");
+    let cpu1 = t.add_device(DeviceKind::Cpu { socket: 1 }, 0, "cpu1");
+    t.add_link(cpu0, cpu1, LinkClass::Qpi);
+    let mut gpus = Vec::new();
+    for rank in 0..8 {
+        gpus.push(t.add_device(DeviceKind::Gpu { rank }, 0, format!("p100-{rank}")));
+    }
+    // PCIe fan-out: pairs of GPUs behind a switch, two switches per socket.
+    for (sw_idx, pair) in [[0, 1], [2, 3], [4, 5], [6, 7]].iter().enumerate() {
+        let cpu = if sw_idx < 2 { cpu0 } else { cpu1 };
+        let sw = t.add_device(DeviceKind::PcieSwitch, 0, format!("plx{sw_idx}"));
+        t.add_link(sw, cpu, LinkClass::PcieGen3x16);
+        for &g in pair {
+            t.add_link(gpus[g], sw, LinkClass::PcieGen3x16);
+        }
+    }
+    // NVLink hybrid cube-mesh.
+    let quad_edges = |base: usize| {
+        [
+            (base, base + 1),
+            (base, base + 2),
+            (base, base + 3),
+            (base + 1, base + 2),
+            (base + 1, base + 3),
+            (base + 2, base + 3),
+        ]
+    };
+    for (a, b) in quad_edges(0).into_iter().chain(quad_edges(4)) {
+        t.add_link(gpus[a], gpus[b], LinkClass::NvLink);
+    }
+    for i in 0..4 {
+        t.add_link(gpus[i], gpus[i + 4], LinkClass::NvLink);
+    }
+    t
+}
+
+/// Cray CS-Storm: 16 P100s, NVLink-bonded pairs, shared PCIe switches
+/// (Fig. 1 middle).
+pub fn cs_storm() -> Topology {
+    let mut t = Topology::new("cs-storm");
+    let cpu0 = t.add_device(DeviceKind::Cpu { socket: 0 }, 0, "cpu0");
+    let cpu1 = t.add_device(DeviceKind::Cpu { socket: 1 }, 0, "cpu1");
+    t.add_link(cpu0, cpu1, LinkClass::Qpi);
+    let mut gpus = Vec::new();
+    for rank in 0..16 {
+        gpus.push(t.add_device(DeviceKind::Gpu { rank }, 0, format!("p100-{rank}")));
+    }
+    // Bonded 4x NVLink within each pair (2i, 2i+1): 80 GB/s.
+    for i in 0..8 {
+        t.add_link(gpus[2 * i], gpus[2 * i + 1], LinkClass::NvLinkBonded4);
+    }
+    // PCIe switches: 4 GPUs (2 pairs) per switch, 2 switches per socket.
+    // Sharing a switch is what degrades CS-Storm at 16 GPUs vs the
+    // cluster's exclusive per-GPU PCIe (paper §V-B).
+    for sw_idx in 0..4 {
+        let cpu = if sw_idx < 2 { cpu0 } else { cpu1 };
+        let sw = t.add_device(DeviceKind::PcieSwitch, 0, format!("plx{sw_idx}"));
+        t.add_link(sw, cpu, LinkClass::PcieGen3x16);
+        for g in 0..4 {
+            t.add_link(gpus[sw_idx * 4 + g], sw, LinkClass::PcieGen3x16);
+        }
+    }
+    t
+}
+
+/// Future-work extension (paper §VI: "systems with more GPUs per node"):
+/// a cluster of `nodes` DGX-1-class machines joined by an FDR IB star.
+/// GPU ranks are dense: node n hosts ranks 8n..8n+8 with the full
+/// hybrid cube-mesh inside each node; inter-node traffic crosses
+/// PCIe -> NIC -> IB exactly like the paper's cluster.
+pub fn multi_dgx(nodes: usize) -> Topology {
+    assert!(nodes >= 1);
+    let mut t = Topology::new(format!("multi-dgx-{nodes}"));
+    let ib = t.add_device(DeviceKind::IbSwitch, usize::MAX, "ib-switch");
+    for node in 0..nodes {
+        let cpu0 = t.add_device(DeviceKind::Cpu { socket: 0 }, node, format!("n{node}.cpu0"));
+        let cpu1 = t.add_device(DeviceKind::Cpu { socket: 1 }, node, format!("n{node}.cpu1"));
+        t.add_link(cpu0, cpu1, LinkClass::Qpi);
+        let nic = t.add_device(DeviceKind::Nic, node, format!("n{node}.hca"));
+        t.add_link(cpu0, nic, LinkClass::PcieGen3x16);
+        t.add_link(nic, ib, LinkClass::InfinibandFdr);
+        let mut gpus = Vec::new();
+        for g in 0..8 {
+            gpus.push(t.add_device(
+                DeviceKind::Gpu { rank: node * 8 + g },
+                node,
+                format!("n{node}.p100-{g}"),
+            ));
+        }
+        for (sw_idx, pair) in [[0usize, 1], [2, 3], [4, 5], [6, 7]].iter().enumerate() {
+            let cpu = if sw_idx < 2 { cpu0 } else { cpu1 };
+            let sw = t.add_device(DeviceKind::PcieSwitch, node, format!("n{node}.plx{sw_idx}"));
+            t.add_link(sw, cpu, LinkClass::PcieGen3x16);
+            for &g in pair {
+                t.add_link(gpus[g], sw, LinkClass::PcieGen3x16);
+            }
+        }
+        let quad_edges = |base: usize| {
+            [
+                (base, base + 1),
+                (base, base + 2),
+                (base, base + 3),
+                (base + 1, base + 2),
+                (base + 1, base + 3),
+                (base + 2, base + 3),
+            ]
+        };
+        for (a, b) in quad_edges(0).into_iter().chain(quad_edges(4)) {
+            t.add_link(gpus[a], gpus[b], LinkClass::NvLink);
+        }
+        for i in 0..4 {
+            t.add_link(gpus[i], gpus[i + 4], LinkClass::NvLink);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_shape() {
+        let t = cluster(16);
+        assert_eq!(t.num_gpus(), 16);
+        // 16 nodes x 3 devices + 1 switch
+        assert_eq!(t.devices.len(), 49);
+        // every pair crosses IB; no P2P anywhere
+        assert!(!t.p2p_accessible(0, 1));
+        assert!(!t.same_node(0, 1));
+        let p = t.route_gpus(0, 15).unwrap();
+        assert!((t.path_bandwidth(&p) - LinkClass::InfinibandFdr.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn dgx1_every_gpu_has_four_nvlinks() {
+        let t = dgx1();
+        assert_eq!(t.num_gpus(), 8);
+        for r in 0..8 {
+            let d = t.gpu(r);
+            let nv = t
+                .neighbors(d)
+                .iter()
+                .filter(|&&(l, _)| t.links[l].class.is_nvlink())
+                .count();
+            assert_eq!(nv, 4, "gpu {r} has {nv} NVLinks");
+        }
+    }
+
+    #[test]
+    fn dgx1_two_hop_nvlink_everywhere() {
+        // "any GPU can be reached by another with at most two NVLink hops"
+        let t = dgx1();
+        for a in 0..8 {
+            for b in 0..8 {
+                let p = t.route_nvlink_only(a, b).unwrap();
+                assert!(p.hops() <= 2, "gpu {a}->{b} needs {} hops", p.hops());
+            }
+        }
+    }
+
+    #[test]
+    fn dgx1_p2p_matches_paper_example() {
+        // Paper §II-B: GPU 0 cannot P2P with GPUs 5, 6, 7 (two NVLink
+        // hops, different PCIe root for 4-7) but can with 1-4.
+        let t = dgx1();
+        for peer in [1, 2, 3, 4] {
+            assert!(t.p2p_accessible(0, peer), "0<->{peer}");
+        }
+        for peer in [5, 6, 7] {
+            assert!(!t.p2p_accessible(0, peer), "0<->{peer}");
+            // ...yet NCCL finds a 2-hop NVLink route:
+            assert_eq!(t.route_nvlink_only(0, peer).unwrap().hops(), 2);
+        }
+    }
+
+    #[test]
+    fn cs_storm_pairs_bonded() {
+        let t = cs_storm();
+        assert_eq!(t.num_gpus(), 16);
+        for i in 0..8 {
+            assert!(t.nvlink_direct(2 * i, 2 * i + 1));
+            let p = t.route_gpus(2 * i, 2 * i + 1).unwrap();
+            assert!(
+                (t.path_bandwidth(&p) - LinkClass::NvLinkBonded4.bandwidth()).abs() < 1.0
+            );
+        }
+        // Across pairs: no NVLink at all.
+        assert!(t.route_nvlink_only(0, 2).is_none());
+        // Same switch: P2P over PCIe works for 0<->2 (switch 0 hosts 0-3).
+        assert!(t.p2p_accessible(0, 2));
+        // Across sockets (0 on sw0/cpu0, 15 on sw3/cpu1): no P2P.
+        assert!(!t.p2p_accessible(0, 15));
+    }
+
+    #[test]
+    fn multi_dgx_structure() {
+        let t = multi_dgx(2);
+        assert_eq!(t.num_gpus(), 16);
+        // intra-node: 2-hop NVLink everywhere, as on a single DGX-1
+        for a in 0..8 {
+            for b in 0..8 {
+                assert!(t.route_nvlink_only(a, b).unwrap().hops() <= 2);
+            }
+        }
+        // inter-node: no NVLink, no P2P, IB bottleneck
+        assert!(t.route_nvlink_only(0, 8).is_none());
+        assert!(!t.p2p_accessible(0, 8));
+        let p = t.route_gpus(0, 8).unwrap();
+        assert!((t.path_bandwidth(&p) - LinkClass::InfinibandFdr.bandwidth()).abs() < 1.0);
+        assert!(t.same_node(0, 7));
+        assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn remap_gpus_swaps_bindings() {
+        let t = cs_storm();
+        // "spread" mapping: ranks 0..8 land on one GPU of each pair —
+        // a sequential 8-rank job then has NO NVLink pairs at all.
+        let spread: Vec<usize> = (0..16).map(|r| (r % 8) * 2 + r / 8).collect();
+        let t2 = t.remap_gpus(&spread);
+        assert!(t.nvlink_direct(0, 1), "sequential pairs bonded");
+        assert!(!t2.nvlink_direct(0, 1), "spread mapping splits pairs");
+        // the permutation is total: every device still owns one rank
+        for r in 0..16 {
+            assert!(matches!(
+                t2.devices[t2.gpu(r)].kind,
+                crate::topology::DeviceKind::Gpu { rank } if rank == r
+            ));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn remap_rejects_non_permutation() {
+        let t = dgx1();
+        let _ = t.remap_gpus(&[0, 0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn system_kind_roundtrip() {
+        for k in SystemKind::all() {
+            assert_eq!(SystemKind::parse(k.name()), Some(k));
+            let t = k.build();
+            assert_eq!(t.num_gpus(), k.max_gpus());
+        }
+        assert_eq!(SystemKind::parse("DGX-1"), Some(SystemKind::Dgx1));
+        assert_eq!(SystemKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_gpu_pairs_routable_on_all_systems() {
+        for k in SystemKind::all() {
+            let t = k.build();
+            for a in 0..t.num_gpus() {
+                for b in 0..t.num_gpus() {
+                    assert!(t.route_gpus(a, b).is_some(), "{} {a}->{b}", t.name);
+                }
+            }
+        }
+    }
+}

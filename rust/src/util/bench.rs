@@ -1,0 +1,94 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Every `cargo bench` target (`harness = false`) uses this: warmup,
+//! fixed-count timed iterations, and a stable one-line report with
+//! mean / p50 / p95 / min. Results are also returned so bench binaries
+//! can dump CSV next to the figure data.
+
+use std::time::Instant;
+
+use super::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<48} {:>6} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            super::fmt_time(self.mean_s),
+            super::fmt_time(self.p50_s),
+            super::fmt_time(self.p95_s),
+            super::fmt_time(self.min_s),
+        )
+    }
+}
+
+/// Run `f` with `warmup` discarded iterations then `iters` timed ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean_s = samples.iter().sum::<f64>() / iters as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s,
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut count = 0usize;
+        let r = bench("t", 2, 5, || count += 1);
+        assert_eq!(count, 7); // warmup + timed
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s * 1.0001);
+    }
+
+    #[test]
+    fn bench_orders_percentiles() {
+        let r = bench("t", 0, 20, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.min_s <= r.p50_s);
+        assert!(r.p50_s <= r.p95_s * 1.0001);
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let r = bench("my_bench", 0, 1, || {});
+        assert!(r.report_line().contains("my_bench"));
+    }
+}

@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // --key=value, --key value, or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+}
+
+/// Parse byte sizes like "4KB", "1MB", "16", "512mb".
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_uppercase();
+    let (num, mult) = if let Some(n) = t.strip_suffix("GB") {
+        (n, 1024 * 1024 * 1024)
+    } else if let Some(n) = t.strip_suffix("MB") {
+        (n, 1024 * 1024)
+    } else if let Some(n) = t.strip_suffix("KB") {
+        (n, 1024)
+    } else if let Some(n) = t.strip_suffix('B') {
+        (n, 1)
+    } else {
+        (t.as_str(), 1)
+    };
+    num.trim().parse::<f64>().ok().map(|v| (v * mult as f64) as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["osu", "--system", "dgx1", "--gpus", "8", "--csv"]);
+        assert_eq!(a.subcommand.as_deref(), Some("osu"));
+        assert_eq!(a.get("system"), Some("dgx1"));
+        assert_eq!(a.get_usize("gpus", 2), 8);
+        assert!(a.flag("csv"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["run", "--seed=42"]);
+        assert_eq!(a.get_u64("seed", 0), 42);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["table1", "netflix", "amazon"]);
+        assert_eq!(a.positional, vec!["netflix", "amazon"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+    }
+
+    #[test]
+    fn parse_bytes_units() {
+        assert_eq!(parse_bytes("4KB"), Some(4096));
+        assert_eq!(parse_bytes("1MB"), Some(1024 * 1024));
+        assert_eq!(parse_bytes("16"), Some(16));
+        assert_eq!(parse_bytes("0.5MB"), Some(512 * 1024));
+        assert_eq!(parse_bytes("2gb"), Some(2 * 1024 * 1024 * 1024));
+        assert_eq!(parse_bytes("junk"), None);
+    }
+}

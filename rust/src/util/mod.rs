@@ -1,0 +1,73 @@
+//! Self-contained utilities.
+//!
+//! The offline build environment only ships the `xla` crate's vendored
+//! dependency closure — no `rand`, `criterion`, `proptest` or `clap` — so
+//! this module provides the small, tested equivalents the rest of the
+//! crate needs: a seeded PRNG, summary statistics, a benchmark harness
+//! (used by every `cargo bench` target), a property-test runner, a CLI
+//! parser and ASCII plotting for figure reproduction.
+
+pub mod bench;
+pub mod cli;
+pub mod plot;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+
+/// Pretty-print a byte count the way the paper's axes do (4KB, 1MB, ...).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+    if bytes >= GB && bytes % GB == 0 {
+        format!("{}GB", bytes / GB)
+    } else if bytes >= MB && bytes % MB == 0 {
+        format!("{}MB", bytes / MB)
+    } else if bytes >= KB && bytes < MB && bytes % KB == 0 {
+        format!("{}KB", bytes / KB)
+    } else if bytes >= MB {
+        format!("{:.1}MB", bytes as f64 / MB as f64)
+    } else if bytes >= KB {
+        format!("{:.1}KB", bytes as f64 / KB as f64)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Format seconds with a sensible unit (matches the paper's ms/s axes).
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.1}us", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_exact_units() {
+        assert_eq!(fmt_bytes(4096), "4KB");
+        assert_eq!(fmt_bytes(1024 * 1024), "1MB");
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024 * 1024), "3GB");
+    }
+
+    #[test]
+    fn fmt_bytes_fractional() {
+        assert_eq!(fmt_bytes(1536), "1.5KB");
+        assert_eq!(fmt_bytes(1024 * 1024 + 512 * 1024), "1.5MB");
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert_eq!(fmt_time(2.5), "2.500s");
+        assert_eq!(fmt_time(0.0125), "12.500ms");
+        assert_eq!(fmt_time(42e-6), "42.0us");
+    }
+}

@@ -1,0 +1,168 @@
+//! ASCII rendering of the paper's figures: log-log line charts (Fig. 2)
+//! and grouped bar charts (Fig. 3), plus CSV emission for external
+//! plotting.
+
+/// A named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
+        Series { name: name.into(), points }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+/// Render series on a log-x / log-y grid (the paper's Fig. 2 axes).
+pub fn log_log_chart(title: &str, xlabel: &str, ylabel: &str, series: &[Series],
+                     width: usize, height: usize) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        pts.extend(s.points.iter().filter(|(x, y)| *x > 0.0 && *y > 0.0));
+    }
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x.ln());
+        x1 = x1.max(x.ln());
+        y0 = y0.min(y.ln());
+        y1 = y1.max(y.ln());
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in s.points.iter().filter(|(x, y)| *x > 0.0 && *y > 0.0) {
+            let cx = ((x.ln() - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+            let cy = ((y.ln() - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("  y: {ylabel} (log)\n"));
+    for row in &grid {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("   x: {xlabel} (log)\n"));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+/// Grouped horizontal bar chart (the paper's Fig. 3 layout): one group per
+/// label, one bar per series.
+pub fn bar_chart(title: &str, labels: &[&str], series: &[Series], width: usize) -> String {
+    let max = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|p| p.1))
+        .fold(0.0_f64, f64::max);
+    let mut out = format!("{title}\n");
+    if max <= 0.0 {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    for (li, label) in labels.iter().enumerate() {
+        out.push_str(&format!("  {label}\n"));
+        for (si, s) in series.iter().enumerate() {
+            let v = s.points.get(li).map(|p| p.1).unwrap_or(0.0);
+            let n = ((v / max) * width as f64).round() as usize;
+            out.push_str(&format!(
+                "    {:<10} |{}{} {}\n",
+                s.name,
+                MARKS[si % MARKS.len()].to_string().repeat(n.max(if v > 0.0 { 1 } else { 0 })),
+                "",
+                crate::util::fmt_time(v),
+            ));
+        }
+    }
+    out
+}
+
+/// CSV emission: header `x,<name1>,<name2>,...`, one row per x of the
+/// first series (series must share x grids).
+pub fn to_csv(series: &[Series]) -> String {
+    let mut out = String::from("x");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.name);
+    }
+    out.push('\n');
+    if series.is_empty() {
+        return out;
+    }
+    for (i, &(x, _)) in series[0].points.iter().enumerate() {
+        out.push_str(&format!("{x}"));
+        for s in series {
+            match s.points.get(i) {
+                Some(&(_, y)) => out.push_str(&format!(",{y}")),
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_contains_marks_and_legend() {
+        let s = vec![
+            Series::new("mpi", vec![(4096.0, 1e-3), (1e6, 1e-2)]),
+            Series::new("nccl", vec![(4096.0, 5e-4), (1e6, 2e-2)]),
+        ];
+        let c = log_log_chart("Fig2", "bytes", "s", &s, 40, 10);
+        assert!(c.contains('*'));
+        assert!(c.contains('o'));
+        assert!(c.contains("mpi"));
+        assert!(c.contains("nccl"));
+    }
+
+    #[test]
+    fn chart_empty_data() {
+        let c = log_log_chart("t", "x", "y", &[], 10, 5);
+        assert!(c.contains("no data"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let s = vec![
+            Series::new("a", vec![(1.0, 2.0), (3.0, 4.0)]),
+            Series::new("b", vec![(1.0, 5.0), (3.0, 6.0)]),
+        ];
+        let csv = to_csv(&s);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines[0], "x,a,b");
+        assert_eq!(lines[1], "1,2,5");
+        assert_eq!(lines[2], "3,4,6");
+    }
+
+    #[test]
+    fn bars_render_each_label() {
+        let s = vec![Series::new("mpi", vec![(0.0, 1.0), (1.0, 2.0)])];
+        let c = bar_chart("Fig3", &["NETFLIX", "AMAZON"], &s, 20);
+        assert!(c.contains("NETFLIX"));
+        assert!(c.contains("AMAZON"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Property-test runner (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases`
+//! independently-seeded PRNGs and panics with the failing seed so a
+//! regression can be replayed deterministically with `check_seed`.
+
+use super::prng::Rng;
+
+/// Run `property` for `cases` random cases. The closure receives a seeded
+/// generator; return `Err(msg)` (or panic) to fail. On failure the seed is
+/// reported so the case can be replayed.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xA6C0_5EED ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F>(name: &str, seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = property(&mut rng) {
+        panic!("property `{name}` failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Assert helper producing `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 32, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `bad` failed")]
+    fn failing_property_reports_seed() {
+        check("bad", 8, |rng| {
+            let x = rng.gen_range(100);
+            if x < 1000 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn macro_returns_err() {
+        fn prop(v: u64) -> Result<(), String> {
+            prop_assert!(v < 10, "v too big: {v}");
+            Ok(())
+        }
+        assert!(prop(5).is_ok());
+        assert!(prop(50).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Summary statistics: mean, std, CV (Table I's irregularity measure),
+//! min/max, percentiles.
+
+/// Summary of a sample of non-negative measurements (message sizes, times).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    /// Coefficient of variation = std / mean — the paper's Table I
+    /// "Msg Size CV" irregularity measure.
+    pub cv: f64,
+    pub min: f64,
+    pub max: f64,
+    pub sum: f64,
+}
+
+impl Summary {
+    /// Population statistics (ddof = 0), matching the paper's CV usage.
+    pub fn of(xs: &[f64]) -> Summary {
+        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        let n = xs.len();
+        let sum: f64 = xs.iter().sum();
+        let mean = sum / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let std = var.sqrt();
+        let cv = if mean != 0.0 { std / mean } else { 0.0 };
+        let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Summary { n, mean, std, cv, min, max, sum }
+    }
+
+    /// Max/min ratio — the paper's "25,400x difference" style metric.
+    pub fn spread(&self) -> f64 {
+        if self.min > 0.0 {
+            self.max / self.min
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// q-th percentile (0..=100) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    assert!((0.0..=100.0).contains(&q));
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Geometric mean (used for the paper's "1.2x faster on average" claims).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant_sample() {
+        let s = Summary::of(&[5.0, 5.0, 5.0]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.cv, 0.0);
+        assert_eq!(s.spread(), 1.0);
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12); // classic population-std example
+        assert!((s.cv - 0.4).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn spread_matches_paper_metric() {
+        // DELICIOUS-like: 0.02MB min, 508MB max -> 25,400x
+        let s = Summary::of(&[0.02, 508.0]);
+        assert!((s.spread() - 25_400.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentile_interpolation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_known() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_empty_panics() {
+        let _ = Summary::of(&[]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Integration: communication-library behaviour across modules
+//! (topology x sim x algorithms), beyond the per-module unit tests.
+
+use agv_bench::comm::{run_allgatherv, Library, Params};
+use agv_bench::topology::systems::{cluster, cs_storm, dgx1, SystemKind};
+
+#[test]
+fn all_libraries_run_on_all_systems_and_counts() {
+    for sys in SystemKind::all() {
+        let topo = sys.build();
+        for gpus in [1usize, 2, 3, 5, 8] {
+            if gpus > topo.num_gpus() {
+                continue;
+            }
+            let counts: Vec<u64> = (0..gpus).map(|r| ((r + 1) as u64) << 16).collect();
+            for lib in Library::all() {
+                let r = run_allgatherv(lib, &topo, &counts);
+                if gpus > 1 {
+                    assert!(r.time > 0.0, "{} {} {gpus}", sys.name(), lib.name());
+                } else {
+                    // degenerate single-rank collective: nothing moves
+                    // (plain MPI still pays its explicit staging copies)
+                    assert!(r.time >= 0.0);
+                }
+                assert!(r.time.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn cost_scales_roughly_linearly_at_large_sizes() {
+    let topo = dgx1();
+    for lib in Library::all() {
+        let t1 = run_allgatherv(lib, &topo, &[32 << 20; 8]).time;
+        let t2 = run_allgatherv(lib, &topo, &[64 << 20; 8]).time;
+        let ratio = t2 / t1;
+        assert!(
+            (1.6..2.4).contains(&ratio),
+            "{}: doubling size gives {ratio}x",
+            lib.name()
+        );
+    }
+}
+
+#[test]
+fn irregular_cost_at_least_uniform_cost_of_same_total() {
+    // concentrating all bytes on one rank can't be cheaper than one
+    // balanced call for ring-style schedules
+    let topo = cluster(8);
+    for lib in Library::all() {
+        let uniform = run_allgatherv(lib, &topo, &[8 << 20; 8]).time;
+        let mut counts = vec![0u64; 8];
+        counts[3] = 64 << 20;
+        let skewed = run_allgatherv(lib, &topo, &counts).time;
+        assert!(
+            skewed > 0.5 * uniform,
+            "{}: skewed {skewed} vs uniform {uniform}",
+            lib.name()
+        );
+    }
+}
+
+#[test]
+fn zero_counts_everywhere_is_cheap() {
+    let topo = dgx1();
+    for lib in Library::all() {
+        let r = run_allgatherv(lib, &topo, &[0; 8]);
+        assert!(r.time < 1e-3, "{}: {r:?}", lib.name());
+    }
+}
+
+#[test]
+fn ring_serialization_hurts_mpicuda_on_dominant_block() {
+    // the mechanism behind the Fig. 3 irregularity effects: a dominant
+    // block crosses P-1 ring steps under MPI but is pipelined by NCCL
+    let topo = dgx1();
+    let mut counts = vec![256u64 << 10; 8];
+    counts[0] = 128 << 20;
+    let nccl = run_allgatherv(Library::Nccl, &topo, &counts).time;
+    let cuda = run_allgatherv(Library::MpiCuda, &topo, &counts).time;
+    assert!(nccl < cuda, "nccl {nccl} !< mpicuda {cuda}");
+}
+
+#[test]
+fn params_are_actually_plumbed() {
+    // doubling NCCL launch overhead must slow small-message collectives
+    let topo = cs_storm();
+    let counts = vec![4u64 << 10; 16];
+    let base = Library::Nccl.build(Params::default()).allgatherv(&topo, &counts);
+    let slow_params = Params { nccl_launch_overhead: 90.0e-6, ..Params::default() };
+    let slow = Library::Nccl.build(slow_params).allgatherv(&topo, &counts);
+    assert!(slow.time > base.time * 2.0, "{} vs {}", base.time, slow.time);
+
+    // shrinking the eager limit must slow small MPI messages
+    let fast = Library::Mpi.build(Params::default()).allgatherv(&topo, &counts);
+    let no_eager = Params { eager_limit: 0, ..Params::default() };
+    let slower = Library::Mpi.build(no_eager).allgatherv(&topo, &counts);
+    assert!(slower.time > fast.time, "{} vs {}", fast.time, slower.time);
+}
+
+#[test]
+fn multi_dgx_nccl_ring_spans_nodes() {
+    // future-work system: NCCL must still build a valid ring across two
+    // NVLink islands and complete collectives; intra-node stays NVLink.
+    use agv_bench::comm::nccl::detect_ring;
+    use agv_bench::topology::systems::multi_dgx;
+    let t = multi_dgx(2);
+    let ring = detect_ring(&t, 16);
+    let mut sorted = ring.clone();
+    sorted.sort_unstable();
+    assert_eq!(sorted, (0..16).collect::<Vec<_>>());
+    for lib in Library::all() {
+        let r = run_allgatherv(lib, &t, &vec![4u64 << 20; 16]);
+        assert!(r.time > 0.0 && r.time.is_finite(), "{}", lib.name());
+    }
+    // 16 GPUs on 2 DGX nodes beat 16 single-GPU cluster nodes (more
+    // NVLink, fewer IB crossings)
+    let clu = cluster(16);
+    let m = vec![16u64 << 20; 16];
+    let t_mdgx = run_allgatherv(Library::Nccl, &t, &m).time;
+    let t_clu = run_allgatherv(Library::Nccl, &clu, &m).time;
+    assert!(t_mdgx < t_clu, "multi-dgx {t_mdgx} !< cluster {t_clu}");
+}
+
+#[test]
+fn rank_remapping_changes_cost_on_cs_storm() {
+    // paper §III-B: sequential rank->GPU binding is not always neutral;
+    // a mapping that splits the bonded pairs must cost more at 2 ranks.
+    let storm = cs_storm();
+    let spread: Vec<usize> = (0..16).map(|r| (r % 8) * 2 + r / 8).collect();
+    let remapped = storm.remap_gpus(&spread);
+    let counts = vec![64u64 << 20; 2];
+    let seq = run_allgatherv(Library::MpiCuda, &storm, &counts).time;
+    let spr = run_allgatherv(Library::MpiCuda, &remapped, &counts).time;
+    assert!(
+        spr > 2.0 * seq,
+        "splitting the NVLink pair should hurt: seq={seq} spread={spr}"
+    );
+}
+
+#[test]
+fn flows_counted() {
+    let topo = cluster(4);
+    let r = run_allgatherv(Library::Mpi, &topo, &[1 << 20; 4]);
+    // ring: 4 ranks x 3 steps = 12 wire sends, plus 4 D2H + 4 H2D staging
+    assert!(r.flows >= 12, "{}", r.flows);
+}

@@ -1,0 +1,109 @@
+//! Integration: Fig. 3 qualitative shape assertions (paper §V-C) over
+//! the full (dataset x system x library x GPUs) grid.
+
+use agv_bench::comm::Library::{Mpi, MpiCuda, Nccl};
+use agv_bench::report::fig3::{panels, Fig3Panel};
+use agv_bench::topology::systems::SystemKind;
+use once_cell::sync::Lazy;
+
+static PANELS: Lazy<Vec<Fig3Panel>> = Lazy::new(|| panels(1));
+
+fn panel(system: SystemKind, gpus: usize) -> &'static Fig3Panel {
+    PANELS
+        .iter()
+        .find(|p| p.system == system && p.gpus == gpus)
+        .unwrap()
+}
+
+#[test]
+fn grid_complete_and_positive() {
+    assert_eq!(PANELS.len(), 8);
+    for p in PANELS.iter() {
+        for row in &p.reports {
+            for r in row {
+                assert!(r.total_time > 0.0 && r.total_time.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn nccl_dgx1_vs_cluster_tensor_headline() {
+    // §VI: "On the tensor data sets, we observed as much as a 4.7x
+    // difference" (DGX-1 vs cluster, NCCL)
+    let mut best = 0.0f64;
+    for d in ["NETFLIX", "AMAZON", "DELICIOUS", "NELL-1"] {
+        let ratio = panel(SystemKind::Cluster, 8).time(d, Nccl)
+            / panel(SystemKind::Dgx1, 8).time(d, Nccl);
+        assert!(ratio > 1.0, "{d}: DGX-1 not faster ({ratio})");
+        best = best.max(ratio);
+    }
+    assert!(best > 1.8, "max advantage only {best}x");
+}
+
+#[test]
+fn nccl_beats_mpicuda_on_irregular_2gpu_nvlink_but_not_amazon() {
+    // "NCCL on all of the systems when using two GPUs exhibits better
+    // performance than MPI-CUDA across all of the tensors with the
+    // exception of AMAZON" — our model reproduces the flip on the
+    // NVLink systems for the data sets whose dominant blocks cross the
+    // IPC cliff (DELICIOUS, NELL-1); see EXPERIMENTS.md for NETFLIX.
+    for sys in [SystemKind::Dgx1, SystemKind::CsStorm] {
+        let p = panel(sys, 2);
+        for d in ["DELICIOUS", "NELL-1"] {
+            assert!(
+                p.time(d, Nccl) < p.time(d, MpiCuda),
+                "{} {d}: NCCL not faster",
+                sys.name()
+            );
+        }
+        assert!(
+            p.time("AMAZON", MpiCuda) < p.time("AMAZON", Nccl),
+            "{}: AMAZON should keep the benchmark ordering",
+            sys.name()
+        );
+    }
+}
+
+#[test]
+fn mpicuda_nell1_improves_from_2_to_8_gpus_on_dgx1() {
+    // "the performance of MPI-CUDA on the NELL-1 data set when using 8
+    // GPUs on the DGX-1 improves by 3.14x when compared to ... two GPUs"
+    // (because per-rank blocks drop below the staging cliff)
+    let t2 = panel(SystemKind::Dgx1, 2).time("NELL-1", MpiCuda);
+    let t8 = panel(SystemKind::Dgx1, 8).time("NELL-1", MpiCuda);
+    assert!(t8 < t2, "8 GPUs ({t8}) not faster than 2 ({t2})");
+}
+
+#[test]
+fn cluster_library_times_within_sane_band() {
+    // on the cluster all libraries share the same wire; no library may
+    // win by more than ~10x on any data set (the paper's gaps are small)
+    for gpus in [2usize, 8, 16] {
+        let p = panel(SystemKind::Cluster, gpus);
+        for d in ["NETFLIX", "AMAZON", "DELICIOUS", "NELL-1"] {
+            let times = [p.time(d, Mpi), p.time(d, MpiCuda), p.time(d, Nccl)];
+            let max = times.iter().cloned().fold(0.0, f64::max);
+            let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(max / min < 10.0, "{d}@{gpus}: spread {}", max / min);
+        }
+    }
+}
+
+#[test]
+fn totals_increase_with_dataset_size_for_fixed_config() {
+    // Fig. 3's x-axis ordering: bigger data sets cost more to communicate
+    for sys in SystemKind::all() {
+        let p = panel(sys, 8);
+        for lib in [Mpi, MpiCuda, Nccl] {
+            let nf = p.time("NETFLIX", lib);
+            let nell = p.time("NELL-1", lib);
+            assert!(
+                nell > nf,
+                "{} {}: NELL-1 ({nell}) !> NETFLIX ({nf})",
+                sys.name(),
+                lib.name()
+            );
+        }
+    }
+}

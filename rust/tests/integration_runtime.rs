@@ -1,0 +1,249 @@
+//! Integration: the PJRT runtime against the real AOT artifacts, plus
+//! the end-to-end driver. Requires `make artifacts` (tests are skipped
+//! with a message when artifacts are absent, e.g. in a docs-only
+//! checkout).
+
+use agv_bench::comm::Library;
+use agv_bench::cpals::driver::Driver;
+use agv_bench::runtime::{HostTensor, Runtime};
+use agv_bench::tensor::synth::{low_rank_coo, pad_coo};
+use agv_bench::tensor::{ModeProfile, TensorSpec};
+use agv_bench::topology::systems::dgx1;
+use agv_bench::util::prng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("meta.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+/// Host-side MTTKRP reference (mode 0 semantics).
+fn host_mttkrp(
+    vals: &[f32],
+    rows: &[i32],
+    cols_b: &[i32],
+    cols_c: &[i32],
+    fb: &[f32],
+    fc: &[f32],
+    out_rows: usize,
+    r: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; out_rows * r];
+    for n in 0..vals.len() {
+        let (row, cb, cc) = (rows[n] as usize, cols_b[n] as usize, cols_c[n] as usize);
+        for x in 0..r {
+            out[row * r + x] += vals[n] * fb[cb * r + x] * fc[cc * r + x];
+        }
+    }
+    out
+}
+
+#[test]
+fn artifacts_inventory() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(dir).unwrap();
+    let names = rt.artifacts();
+    for base in [
+        "als_sweep", "mttkrp_mode0", "mttkrp_mode1", "mttkrp_mode2",
+        "update_post_mode0", "update_post_mode1", "update_post_mode2", "fit",
+    ] {
+        for cfg in ["small", "e2e"] {
+            assert!(
+                names.contains(&format!("{base}_{cfg}").as_str()),
+                "missing {base}_{cfg}"
+            );
+        }
+    }
+    assert_eq!(rt.platform(), "cpu");
+}
+
+#[test]
+fn mttkrp_artifact_matches_host_reference() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let meta = rt.meta("mttkrp_mode0_small").unwrap().clone();
+    let n = meta.inputs[0].shape[0];
+    let (j_dim, r) = (meta.inputs[4].shape[0], meta.inputs[4].shape[1]);
+    let k_dim = meta.inputs[5].shape[0];
+    let i_dim = meta.outputs[0].shape[0];
+
+    let mut rng = Rng::new(7);
+    let vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let rows: Vec<i32> = (0..n).map(|_| rng.gen_range(i_dim as u64) as i32).collect();
+    let cb: Vec<i32> = (0..n).map(|_| rng.gen_range(j_dim as u64) as i32).collect();
+    let cc: Vec<i32> = (0..n).map(|_| rng.gen_range(k_dim as u64) as i32).collect();
+    let fb: Vec<f32> = (0..j_dim * r).map(|_| rng.normal() as f32 * 0.3).collect();
+    let fc: Vec<f32> = (0..k_dim * r).map(|_| rng.normal() as f32 * 0.3).collect();
+
+    let outs = rt
+        .execute(
+            "mttkrp_mode0_small",
+            &[
+                HostTensor::F32(vals.clone()),
+                HostTensor::I32(rows.clone()),
+                HostTensor::I32(cb.clone()),
+                HostTensor::I32(cc.clone()),
+                HostTensor::F32(fb.clone()),
+                HostTensor::F32(fc.clone()),
+            ],
+        )
+        .unwrap();
+    let got = outs[0].as_f32().unwrap();
+    let expect = host_mttkrp(&vals, &rows, &cb, &cc, &fb, &fc, i_dim, r);
+    assert_eq!(got.len(), expect.len());
+    let mut max_err = 0.0f32;
+    for (g, e) in got.iter().zip(&expect) {
+        max_err = max_err.max((g - e).abs());
+    }
+    assert!(max_err < 1e-3, "max abs err {max_err}");
+}
+
+#[test]
+fn update_post_produces_unit_columns() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let meta = rt.meta("update_post_mode0_small").unwrap().clone();
+    let (i_dim, r) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+    let (j_dim, k_dim) = (meta.inputs[1].shape[0], meta.inputs[2].shape[0]);
+    let mut rng = Rng::new(3);
+    let m: Vec<f32> = (0..i_dim * r).map(|_| rng.normal() as f32).collect();
+    let fb: Vec<f32> = (0..j_dim * r).map(|_| rng.normal() as f32 * 0.5).collect();
+    let fc: Vec<f32> = (0..k_dim * r).map(|_| rng.normal() as f32 * 0.5).collect();
+    let outs = rt
+        .execute(
+            "update_post_mode0_small",
+            &[HostTensor::F32(m), HostTensor::F32(fb), HostTensor::F32(fc)],
+        )
+        .unwrap();
+    let a = outs[0].as_f32().unwrap();
+    let lam = outs[1].as_f32().unwrap();
+    assert_eq!(a.len(), i_dim * r);
+    assert_eq!(lam.len(), r);
+    // columns are unit-norm (or zero)
+    for col in 0..r {
+        let norm: f32 = (0..i_dim).map(|i| a[i * r + col].powi(2)).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3 || norm < 1e-6, "col {col} norm {norm}");
+        assert!(lam[col].is_finite());
+    }
+}
+
+#[test]
+fn als_sweep_artifact_improves_fit() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::open(dir).unwrap();
+    let meta = rt.meta("als_sweep_small").unwrap().clone();
+    let n = meta.inputs[0].shape[0];
+    let (i_dim, r) = (meta.outputs[0].shape[0], meta.outputs[0].shape[1]);
+    let j_dim = meta.outputs[1].shape[0];
+    let k_dim = meta.outputs[2].shape[0];
+
+    let spec = TensorSpec {
+        name: "t",
+        modes: [
+            ModeProfile { dim: i_dim as u64, skew: 0.5 },
+            ModeProfile { dim: j_dim as u64, skew: 0.3 },
+            ModeProfile { dim: k_dim as u64, skew: 0.0 },
+        ],
+        nnz: n as u64,
+    };
+    let t = pad_coo(&low_rank_coo(&spec, n - n / 8, 4, 0.05, 11), n);
+    let to_i32 = |v: &[u32]| v.iter().map(|&x| x as i32).collect::<Vec<i32>>();
+    let norm = t.norm_sq() as f32;
+
+    let mut rng = Rng::new(5);
+    let mut fb: Vec<f32> = (0..j_dim * r).map(|_| rng.normal() as f32 * 0.3).collect();
+    let mut fc: Vec<f32> = (0..k_dim * r).map(|_| rng.normal() as f32 * 0.3).collect();
+    let mut fits = Vec::new();
+    for _ in 0..5 {
+        let outs = rt
+            .execute(
+                "als_sweep_small",
+                &[
+                    HostTensor::F32(t.vals.clone()),
+                    HostTensor::I32(to_i32(&t.i)),
+                    HostTensor::I32(to_i32(&t.j)),
+                    HostTensor::I32(to_i32(&t.k)),
+                    HostTensor::F32(fb.clone()),
+                    HostTensor::F32(fc.clone()),
+                    HostTensor::F32(vec![norm]),
+                ],
+            )
+            .unwrap();
+        // outs[0] is the new A; the next sweep only consumes B and C
+        fb = outs[1].as_f32().unwrap().to_vec();
+        fc = outs[2].as_f32().unwrap().to_vec();
+        fits.push(outs[4].as_f32().unwrap()[0]);
+    }
+    assert!(
+        fits.last().unwrap() > &fits[0],
+        "fit not improving: {fits:?}"
+    );
+    assert!(fits.iter().all(|f| f.is_finite()));
+}
+
+#[test]
+fn e2e_driver_2_and_4_ranks_agree() {
+    // distributed invariance: the factorization result (fit trajectory)
+    // must not depend on the number of simulated GPUs
+    let dir = require_artifacts!();
+    let topo = dgx1();
+    let spec = TensorSpec {
+        name: "t",
+        modes: [
+            ModeProfile { dim: 128, skew: 0.5 },
+            ModeProfile { dim: 64, skew: 0.3 },
+            ModeProfile { dim: 64, skew: 0.0 },
+        ],
+        nnz: 1800,
+    };
+    let tensor = low_rank_coo(&spec, 1800, 4, 0.05, 21);
+    let mut fits = Vec::new();
+    for gpus in [2usize, 4] {
+        let rt = Runtime::open(&dir).unwrap();
+        let mut driver = Driver::new(rt, "small", &topo, gpus, vec![Library::Nccl]);
+        let report = driver.run(&tensor, 3, 21).unwrap();
+        fits.push(report.iters.iter().map(|l| l.fit).collect::<Vec<_>>());
+        assert!(report.final_fit() > 0.0);
+    }
+    for (a, b) in fits[0].iter().zip(&fits[1]) {
+        assert!(
+            (a - b).abs() < 5e-3,
+            "fit diverges between rank counts: {:?} vs {:?}",
+            fits[0], fits[1]
+        );
+    }
+}
+
+#[test]
+fn driver_comm_times_ranked_by_library() {
+    let dir = require_artifacts!();
+    let topo = dgx1();
+    let spec = TensorSpec {
+        name: "t",
+        modes: [
+            ModeProfile { dim: 128, skew: 0.6 },
+            ModeProfile { dim: 64, skew: 0.4 },
+            ModeProfile { dim: 64, skew: 0.2 },
+        ],
+        nnz: 1800,
+    };
+    let tensor = low_rank_coo(&spec, 1800, 4, 0.05, 33);
+    let rt = Runtime::open(&dir).unwrap();
+    let mut driver = Driver::new(rt, "small", &topo, 8, Library::all().to_vec());
+    let report = driver.run(&tensor, 2, 33).unwrap();
+    assert_eq!(report.comm_totals.len(), 3);
+    for (_, t) in &report.comm_totals {
+        assert!(*t > 0.0 && t.is_finite());
+    }
+}

@@ -1,0 +1,110 @@
+//! Integration: Fig. 1 topology invariants across the full systems.
+
+use agv_bench::topology::systems::{cluster, cs_storm, dgx1, SystemKind};
+use agv_bench::topology::LinkClass;
+
+#[test]
+fn fig1_bandwidth_classes() {
+    // paper Fig. 1 bandwidths (unidirectional): NVLink 20 GB/s class,
+    // bonded 4x on CS-Storm, PCIe gen3 x16, FDR IB 56 Gbit/s
+    assert!(LinkClass::NvLink.bandwidth() > 15.0e9 && LinkClass::NvLink.bandwidth() <= 20.0e9);
+    assert!((LinkClass::NvLinkBonded4.bandwidth() / LinkClass::NvLink.bandwidth() - 4.0).abs() < 1e-9);
+    assert!(LinkClass::PcieGen3x16.bandwidth() < LinkClass::NvLink.bandwidth());
+    assert!(LinkClass::InfinibandFdr.bandwidth() < LinkClass::PcieGen3x16.bandwidth());
+    // 56 Gbit/s = 7 GB/s raw; effective must be below that
+    assert!(LinkClass::InfinibandFdr.bandwidth() <= 7.0e9);
+}
+
+#[test]
+fn cluster_star_has_no_gpu_to_gpu_shortcut() {
+    let t = cluster(16);
+    for a in 0..16 {
+        for b in 0..16 {
+            if a == b {
+                continue;
+            }
+            let p = t.route_gpus(a, b).unwrap();
+            // GPU -> CPU -> NIC -> IB -> NIC -> CPU -> GPU: 6 hops
+            assert_eq!(p.hops(), 6, "{a}->{b}");
+            assert!(!t.p2p_accessible(a, b));
+        }
+    }
+}
+
+#[test]
+fn dgx1_hybrid_cube_mesh_structure() {
+    let t = dgx1();
+    // 16 NVLink edges: 6 per quad + 4 cross
+    let nv_edges = t.links.iter().filter(|l| l.class.is_nvlink()).count();
+    assert_eq!(nv_edges, 16);
+    // quads fully connected
+    for base in [0usize, 4] {
+        for a in base..base + 4 {
+            for b in base..base + 4 {
+                if a != b {
+                    assert!(t.nvlink_direct(a, b), "{a}<->{b}");
+                }
+            }
+        }
+    }
+    // cross links i <-> i+4 only
+    for i in 0..4 {
+        assert!(t.nvlink_direct(i, i + 4));
+    }
+    assert!(!t.nvlink_direct(0, 5));
+    assert!(!t.nvlink_direct(1, 6));
+}
+
+#[test]
+fn dgx1_paper_example_gpu0_reaches_567_via_two_nvlink_hops() {
+    // §II-B: "GPU 0 can communicate with GPUs 5, 6 and 7 by traversing
+    // two NVLink connections or by going through the PCIe network"
+    let t = dgx1();
+    for peer in [5usize, 6, 7] {
+        let nv = t.route_nvlink_only(0, peer).unwrap();
+        assert_eq!(nv.hops(), 2, "0->{peer}");
+        assert!(!t.p2p_accessible(0, peer), "MVAPICH must not see P2P 0<->{peer}");
+        // the PCIe fallback exists
+        assert!(t.route_gpus(0, peer).is_some());
+    }
+}
+
+#[test]
+fn cs_storm_shared_pcie_switches() {
+    let t = cs_storm();
+    // 4 GPUs per switch: GPUs 0-3 share one switch (P2P among them),
+    // and the switch uplink is a single PCIe link - the 16-GPU bottleneck.
+    for a in 0..4 {
+        for b in 0..4 {
+            assert!(t.p2p_accessible(a, b), "{a}<->{b}");
+        }
+    }
+    assert!(!t.p2p_accessible(0, 4), "different switches, same socket");
+    // pairs bonded at 4x
+    let p = t.route_gpus(4, 5).unwrap();
+    assert_eq!(p.hops(), 1);
+    assert!((t.path_bandwidth(&p) - LinkClass::NvLinkBonded4.bandwidth()).abs() < 1.0);
+}
+
+#[test]
+fn per_system_gpu_inventory_and_symmetry() {
+    for (kind, gpus) in [
+        (SystemKind::Cluster, 16),
+        (SystemKind::Dgx1, 8),
+        (SystemKind::CsStorm, 16),
+    ] {
+        let t = kind.build();
+        assert_eq!(t.num_gpus(), gpus);
+        // symmetric routing: bandwidth(a->b) == bandwidth(b->a)
+        for a in 0..gpus.min(6) {
+            for b in 0..gpus.min(6) {
+                if a == b {
+                    continue;
+                }
+                let ab = t.path_bandwidth(&t.route_gpus(a, b).unwrap());
+                let ba = t.path_bandwidth(&t.route_gpus(b, a).unwrap());
+                assert!((ab - ba).abs() < 1.0, "{} {a}<->{b}", t.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Cross-module property tests (randomized invariants with replayable
+//! seeds; see util::prop).
+
+use agv_bench::comm::algorithms::{
+    all_delivered, bcast_series_allgatherv, bruck_allgatherv, execute,
+    recursive_doubling_allgatherv, ring_allgatherv, Schedule,
+};
+use agv_bench::comm::{run_allgatherv, Library};
+use agv_bench::prop_assert;
+use agv_bench::sim::Sim;
+use agv_bench::tensor::partition::{profile_nnz_share, profile_rows};
+use agv_bench::tensor::ModeProfile;
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::prop::check;
+
+#[test]
+fn prop_any_algorithm_delivers_everything() {
+    check("algorithms-deliver", 96, |rng| {
+        let p = 1 + rng.gen_range(16) as usize;
+        let pick = rng.gen_range(4);
+        let schedules: Vec<Schedule> = match pick {
+            0 => vec![ring_allgatherv(p, None)],
+            1 => vec![bruck_allgatherv(p)],
+            2 => {
+                let pp = p.next_power_of_two();
+                vec![recursive_doubling_allgatherv(pp)]
+            }
+            _ => bcast_series_allgatherv(p, None),
+        };
+        let p_eff = if pick == 2 { p.next_power_of_two() } else { p };
+        let refs: Vec<&Schedule> = schedules.iter().collect();
+        prop_assert!(all_delivered(&execute(p_eff, &refs)), "p={p} pick={pick}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_time_monotone_under_scaling() {
+    // multiplying every count by 4 must not make any library faster
+    check("comm-scaling", 12, |rng| {
+        let sys = SystemKind::all()[rng.gen_range(3) as usize];
+        let topo = sys.build();
+        let p = 2 + rng.gen_range(6) as usize;
+        let counts: Vec<u64> = (0..p).map(|_| (16 << 10) + rng.gen_range(16 << 20)).collect();
+        let big: Vec<u64> = counts.iter().map(|c| c * 4).collect();
+        for lib in Library::all() {
+            let t1 = run_allgatherv(lib, &topo, &counts).time;
+            let t2 = run_allgatherv(lib, &topo, &big).time;
+            prop_assert!(
+                t2 > t1,
+                "{} {}: 4x bytes not slower ({t1} -> {t2})",
+                sys.name(), lib.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_deterministic() {
+    check("comm-deterministic", 8, |rng| {
+        let topo = SystemKind::Dgx1.build();
+        let p = 2 + rng.gen_range(7) as usize;
+        let counts: Vec<u64> = (0..p).map(|_| rng.gen_range(32 << 20)).collect();
+        for lib in Library::all() {
+            let a = run_allgatherv(lib, &topo, &counts).time;
+            let b = run_allgatherv(lib, &topo, &counts).time;
+            prop_assert!(a.to_bits() == b.to_bits(), "{}", lib.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_is_exhaustive_and_balanced() {
+    check("partition", 64, |rng| {
+        let dim = 1000 + rng.gen_range(10_000_000);
+        let skew = rng.gen_f64(0.0, 0.95);
+        let parts = 1 + rng.gen_range(16) as usize;
+        let mode = ModeProfile { dim, skew };
+        let rows = profile_rows(&mode, parts);
+        prop_assert!(rows.iter().sum::<u64>() == dim, "rows don't cover dim");
+        prop_assert!(rows.iter().all(|&r| r >= 1), "empty slice");
+        // nnz shares balanced within 10% for moderate skew; at extreme
+        // skew a single head row can hold >= a full share (integer
+        // granularity breaks the continuous model), so only boundedness
+        // is required there.
+        let nnz_total = 1_000_000_000u64;
+        let shares = profile_nnz_share(&mode, parts, nnz_total);
+        let target = nnz_total / parts as u64;
+        let sum: u64 = shares.iter().sum();
+        let sum_rel = (sum as f64 - nnz_total as f64).abs() / nnz_total as f64;
+        prop_assert!(sum_rel < 0.01, "shares don't sum to nnz: {sum}");
+        if skew < 0.7 {
+            for s in shares {
+                let rel = (s as f64 - target as f64).abs() / target as f64;
+                prop_assert!(rel < 0.1, "share {s} vs {target} (dim={dim} skew={skew})");
+            }
+        }
+        // at extreme skew a single head row can legally hold several
+        // shares (integer granularity); only the sum invariant holds.
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_conserves_bytes() {
+    // total bytes recorded on links == sum over flows of bytes x hops
+    check("sim-conservation", 24, |rng| {
+        let topo = SystemKind::Dgx1.build();
+        let mut sim = Sim::new(&topo);
+        let mut expected = 0.0f64;
+        let n = 1 + rng.gen_range(20) as usize;
+        let mut last = None;
+        for _ in 0..n {
+            let a = rng.gen_range(8) as usize;
+            let mut b = rng.gen_range(8) as usize;
+            if a == b {
+                b = (b + 1) % 8;
+            }
+            let path = topo.route_gpus(a, b).unwrap();
+            let bytes = 1.0 + rng.gen_range(1 << 22) as f64;
+            expected += bytes * path.links.len() as f64;
+            let deps: Vec<_> = if rng.next_f64() < 0.5 {
+                last.into_iter().collect()
+            } else {
+                vec![]
+            };
+            last = Some(sim.flow(path, bytes, 0.0, &deps));
+        }
+        let res = sim.run();
+        let moved: f64 = res.linkdir_bytes.iter().sum();
+        let rel = (moved - expected).abs() / expected;
+        prop_assert!(rel < 1e-6, "moved {moved} expected {expected}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nccl_bcast_series_delivers_on_detected_rings() {
+    // The timed NCCL model hand-builds its pipelined broadcasts in the
+    // simulator; this property ties its ring ordering back to the
+    // validated logical executor: the same bcast-series schedule over
+    // the *detected* ring must deliver every block to every rank, on
+    // every system at every rank count.
+    check("nccl-delivery", 48, |rng| {
+        let sys = SystemKind::all()[rng.gen_range(3) as usize];
+        let topo = sys.build();
+        let p = 1 + rng.gen_range(topo.num_gpus() as u64) as usize;
+        let ring = agv_bench::comm::nccl::detect_ring(&topo, p);
+        let series = bcast_series_allgatherv(p, Some(&ring));
+        let refs: Vec<&Schedule> = series.iter().collect();
+        prop_assert!(
+            all_delivered(&execute(p, &refs)),
+            "{} p={p} ring={ring:?}",
+            sys.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nccl_ring_is_permutation() {
+    check("nccl-ring", 48, |rng| {
+        let sys = SystemKind::all()[rng.gen_range(3) as usize];
+        let topo = sys.build();
+        let p = 1 + rng.gen_range(topo.num_gpus() as u64) as usize;
+        let ring = agv_bench::comm::nccl::detect_ring(&topo, p);
+        let mut sorted = ring.clone();
+        sorted.sort_unstable();
+        prop_assert!(
+            sorted == (0..p).collect::<Vec<_>>(),
+            "{}: ring {ring:?} not a permutation of 0..{p}",
+            sys.name()
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,27 @@
+# Convenience targets. Tier-1 verify is `make verify`.
+
+.PHONY: build test verify bench artifacts fmt clippy
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+verify: build test
+
+bench:
+	cargo bench --bench bench_engine
+	cargo bench --bench bench_ablations
+
+fmt:
+	cargo fmt --all --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+# AOT-lower the JAX/Pallas CP-ALS model to HLO-text artifacts for the
+# rust runtime (DESIGN.md §6). Needs a Python environment with JAX;
+# execution additionally needs a build with real XLA bindings.
+artifacts:
+	cd python && python -m compile.aot --out ../rust/artifacts

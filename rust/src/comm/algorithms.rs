@@ -20,12 +20,16 @@
 /// contributions travel (byte size resolved against `counts`).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SendOp {
+    /// Sending rank.
     pub from: usize,
+    /// Receiving rank.
     pub to: usize,
+    /// Which ranks' contributions travel in this send.
     pub blocks: Vec<usize>,
 }
 
 impl SendOp {
+    /// Byte size of the send given per-rank contribution counts.
     pub fn bytes(&self, counts: &[u64]) -> u64 {
         self.blocks.iter().map(|&b| counts[b]).sum()
     }
@@ -36,14 +40,18 @@ impl SendOp {
 /// step-s ops; different ranks proceed independently unless data flows).
 #[derive(Clone, Debug, Default)]
 pub struct Schedule {
+    /// Steps of concurrent sends, in dependency order.
     pub steps: Vec<Vec<SendOp>>,
 }
 
 impl Schedule {
+    /// Total number of point-to-point sends across all steps.
     pub fn num_sends(&self) -> usize {
         self.steps.iter().map(|s| s.len()).sum()
     }
 
+    /// Total number of (send, block) transfers — the volume proxy the
+    /// conservation property tests assert on.
     pub fn total_block_transfers(&self) -> usize {
         self.steps
             .iter()

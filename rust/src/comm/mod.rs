@@ -39,6 +39,7 @@ pub struct CommResult {
 
 /// A GPU collective communication library model.
 pub trait CommLibrary {
+    /// Human-readable library name ("MPI", "MPI-CUDA", "NCCL").
     fn name(&self) -> &'static str;
 
     /// Irregular all-gather: rank r contributes `counts[r]` bytes; on
@@ -51,12 +52,18 @@ pub trait CommLibrary {
 /// The three libraries of the paper, by name.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Library {
+    /// Traditional MPI (MVAPICH, CUDA support disabled): explicit
+    /// host staging around a host-to-host collective (§II-A).
     Mpi,
+    /// CUDA-aware MVAPICH with GPUDirect P2P/RDMA data paths (§II-A).
     MpiCuda,
+    /// NCCL 2.x with the paper's Listing-1 bcast-series Allgatherv
+    /// (§II-B).
     Nccl,
 }
 
 impl Library {
+    /// Display name used in every table/figure.
     pub fn name(self) -> &'static str {
         match self {
             Library::Mpi => "MPI",
@@ -65,6 +72,7 @@ impl Library {
         }
     }
 
+    /// Parse a library name as accepted by the `agv` CLI's `--lib` flag.
     pub fn parse(s: &str) -> Option<Library> {
         match s.to_ascii_lowercase().as_str() {
             "mpi" => Some(Library::Mpi),
@@ -74,6 +82,7 @@ impl Library {
         }
     }
 
+    /// All three libraries, in the paper's plotting order.
     pub fn all() -> [Library; 3] {
         [Library::Mpi, Library::MpiCuda, Library::Nccl]
     }
@@ -89,6 +98,18 @@ impl Library {
 }
 
 /// Convenience: run a library's allgatherv with default parameters.
+///
+/// ```
+/// use agv_bench::comm::{run_allgatherv, Library};
+/// use agv_bench::topology::systems::SystemKind;
+///
+/// // Irregular contributions on a DGX-1: one dominant block.
+/// let topo = SystemKind::Dgx1.build();
+/// let counts = [64 << 10, 16 << 20, 256 << 10, 1 << 20];
+/// let r = run_allgatherv(Library::Nccl, &topo, &counts);
+/// assert!(r.time > 0.0 && r.time.is_finite());
+/// assert!(r.flows > 0);
+/// ```
 pub fn run_allgatherv(lib: Library, topo: &Topology, counts: &[u64]) -> CommResult {
     lib.build(Params::default()).allgatherv(topo, counts)
 }

@@ -17,11 +17,13 @@ use super::algorithms::{bruck_allgatherv, ring_allgatherv, Schedule};
 use super::transport::{dtoh, host_to_host, htod, run_schedule};
 use super::{CommLibrary, CommResult, Params};
 
+/// Traditional MPI model: explicit staging + host-to-host collective.
 pub struct Mpi {
     params: Params,
 }
 
 impl Mpi {
+    /// Build the model with the given protocol parameters.
     pub fn new(params: Params) -> Mpi {
         Mpi { params }
     }

@@ -22,11 +22,13 @@ use super::mpi::{pt2pt_overhead, select_algorithm};
 use super::transport::{direct_flow, gdr_send, run_schedule, staged_pipeline, staged_serial};
 use super::{CommLibrary, CommResult, Params};
 
+/// CUDA-aware MVAPICH model: GPUDirect P2P/RDMA with staged fallbacks.
 pub struct MpiCuda {
     params: Params,
 }
 
 impl MpiCuda {
+    /// Build the model with the given protocol parameters.
     pub fn new(params: Params) -> MpiCuda {
         MpiCuda { params }
     }

@@ -16,11 +16,13 @@ use crate::topology::Topology;
 
 use super::{CommLibrary, CommResult, Params};
 
+/// NCCL model: topology-detected ring + chunk-pipelined bcast series.
 pub struct Nccl {
     params: Params,
 }
 
 impl Nccl {
+    /// Build the model with the given protocol parameters.
     pub fn new(params: Params) -> Nccl {
         Nccl { params }
     }

@@ -16,11 +16,16 @@ use crate::topology::Topology;
 /// Default iteration count for the factorization experiments.
 pub const DEFAULT_ITERS: usize = 10;
 
+/// One (data set, system, library, GPU count) cell of Fig. 3.
 #[derive(Clone, Debug)]
 pub struct RefactoReport {
+    /// Data-set name (Table I).
     pub dataset: &'static str,
+    /// Library that ran the collectives.
     pub library: Library,
+    /// Simulated GPU (rank) count.
     pub gpus: usize,
+    /// CP-ALS iterations the total covers.
     pub iters: usize,
     /// total communication time over the whole factorization (seconds)
     pub total_time: f64,

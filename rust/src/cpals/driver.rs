@@ -9,9 +9,9 @@
 //! equals_full), while the *cost* of the gather comes from the simulated
 //! communication library on the chosen system topology.
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
 use crate::comm::{Library, Params};
+use crate::util::error::Result;
 use crate::runtime::{HostTensor, Runtime};
 use crate::tensor::datasets::ROW_BYTES;
 use crate::tensor::partition::histogram_boundaries;
@@ -22,6 +22,7 @@ use crate::util::prng::Rng;
 /// Per-iteration log entry.
 #[derive(Clone, Debug)]
 pub struct IterLog {
+    /// Iteration index (0-based).
     pub iter: usize,
     /// CP fit (1 - relative residual); higher is better.
     pub fit: f64,
@@ -31,20 +32,29 @@ pub struct IterLog {
     pub comm_secs: Vec<(Library, f64)>,
 }
 
+/// Result of one end-to-end factorization run.
 #[derive(Clone, Debug)]
 pub struct DriverReport {
+    /// Artifact config the run used ("small" / "e2e").
     pub config: String,
+    /// Simulated GPU count.
     pub gpus: usize,
+    /// Padded tensor dimensions from the artifact.
     pub dims: [usize; 3],
+    /// Actual (unpadded) nonzero count.
     pub nnz: usize,
+    /// Decomposition rank R.
     pub rank: usize,
+    /// Per-iteration fit/compute/comm log.
     pub iters: Vec<IterLog>,
     /// total simulated communication per library
     pub comm_totals: Vec<(Library, f64)>,
+    /// Total real PJRT compute seconds across iterations.
     pub compute_total: f64,
 }
 
 impl DriverReport {
+    /// Fit after the last iteration (0.0 if no iterations ran).
     pub fn final_fit(&self) -> f64 {
         self.iters.last().map(|l| l.fit).unwrap_or(0.0)
     }
@@ -109,15 +119,22 @@ fn mode_slices(t: &CooTensor, mode: usize, bounds: &[u64], n_pad: usize) -> Vec<
 
 /// Driver configuration.
 pub struct Driver<'t> {
+    /// PJRT runtime holding the AOT artifacts.
     pub runtime: Runtime,
+    /// Artifact config suffix ("small" / "e2e").
     pub config: String,
+    /// System the communication is simulated on.
     pub topo: &'t Topology,
+    /// Simulated GPU (rank) count.
     pub gpus: usize,
+    /// Libraries whose communication time is simulated per iteration.
     pub libraries: Vec<Library>,
+    /// Protocol parameters for the simulated libraries.
     pub params: Params,
 }
 
 impl<'t> Driver<'t> {
+    /// Assemble a driver; communication params default.
     pub fn new(
         runtime: Runtime,
         config: &str,

@@ -13,6 +13,8 @@
 //! - [`runtime`]: AOT HLO-text loading + execution (xla/PJRT);
 //! - [`report`]: renderers regenerating every paper table and figure;
 //! - [`util`]: self-contained PRNG / stats / bench / prop-test / CLI.
+#![warn(missing_docs)]
+
 pub mod comm;
 pub mod cpals;
 pub mod osu;

@@ -252,7 +252,10 @@ fn cmd_e2e(args: &Args) {
     });
     let topo = system.build();
     let mut driver = Driver::new(runtime, &config, &topo, gpus, Library::all().to_vec());
-    let ([di, dj, dk], n_pad, rank) = driver.shapes().expect("artifact shapes");
+    let ([di, dj, dk], n_pad, rank) = driver.shapes().unwrap_or_else(|e| {
+        eprintln!("cannot read artifact shapes: {e:#}");
+        std::process::exit(1);
+    });
     println!(
         "e2e factorization: config={config} dims={di}x{dj}x{dk} nnz<={n_pad} R={rank} on {} @ {gpus} GPUs",
         system.name()
@@ -267,7 +270,10 @@ fn cmd_e2e(args: &Args) {
         nnz: (n_pad - n_pad / 8) as u64,
     };
     let tensor = synth::low_rank_coo(&spec, n_pad - n_pad / 8, 8, 0.05, seed);
-    let report = driver.run(&tensor, iters, seed).expect("driver run");
+    let report = driver.run(&tensor, iters, seed).unwrap_or_else(|e| {
+        eprintln!("factorization failed: {e:#}");
+        std::process::exit(1);
+    });
     println!("iter  fit       compute(real)   comm/iter(sim: MPI | MPI-CUDA | NCCL)");
     for l in &report.iters {
         println!(

@@ -30,6 +30,7 @@ pub enum Distribution {
 }
 
 impl Distribution {
+    /// Report label of the distribution.
     pub fn name(self) -> &'static str {
         match self {
             Distribution::Uniform => "uniform",
@@ -40,6 +41,7 @@ impl Distribution {
         }
     }
 
+    /// All distributions, mildest first.
     pub fn all() -> [Distribution; 5] {
         [
             Distribution::Uniform,
@@ -92,8 +94,11 @@ impl Distribution {
 /// One measured cell of the distribution study.
 #[derive(Clone, Debug)]
 pub struct DistPoint {
+    /// Which distribution generated the counts.
     pub dist: Distribution,
+    /// Which library ran the collective.
     pub library: Library,
+    /// Simulated collective time in seconds.
     pub time: f64,
     /// CV of the counts actually used (the irregularity knob)
     pub cv: f64,

@@ -24,6 +24,7 @@ pub struct OsuConfig {
     pub total_volume_cap: u64,
     /// Smallest per-rank message (paper: 4 KB).
     pub min_msg: u64,
+    /// Protocol parameters handed to every library model.
     pub params: Params,
 }
 
@@ -40,8 +41,11 @@ impl Default for OsuConfig {
 /// One measured point: per-rank message size -> total communication time.
 #[derive(Clone, Copy, Debug)]
 pub struct OsuPoint {
+    /// Per-rank message size in bytes.
     pub msg_size: u64,
+    /// Total simulated collective time in seconds.
     pub time: f64,
+    /// Point-to-point flows the simulation executed.
     pub flows: usize,
 }
 
@@ -75,8 +79,11 @@ pub fn run_osu(cfg: &OsuConfig, topo: &Topology, lib: Library, gpus: usize) -> V
 /// A full Fig. 2 cell: all three libraries on one system at one GPU count.
 #[derive(Clone, Debug)]
 pub struct Fig2Cell {
+    /// Which system the cell belongs to.
     pub system: SystemKind,
+    /// GPU count of the cell.
     pub gpus: usize,
+    /// One sweep per library.
     pub series: Vec<(Library, Vec<OsuPoint>)>,
 }
 
@@ -106,6 +113,7 @@ pub fn fig2_grid(cfg: &OsuConfig) -> Vec<Fig2Cell> {
 }
 
 impl Fig2Cell {
+    /// The sweep points of one library (panics if absent).
     pub fn points(&self, lib: Library) -> &[OsuPoint] {
         &self
             .series

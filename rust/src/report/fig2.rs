@@ -84,6 +84,7 @@ pub fn csv(cell: &Fig2Cell) -> String {
     to_csv(&cell_series(cell))
 }
 
+/// File name the CLI writes a cell's CSV under.
 pub fn csv_name(cell: &Fig2Cell) -> String {
     format!("fig2_{}_{}gpus.csv", cell.system.name(), cell.gpus)
 }

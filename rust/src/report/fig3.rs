@@ -10,7 +10,9 @@ use crate::util::plot::{bar_chart, Series};
 /// One Fig. 3 panel: a system at a GPU count, all data sets x libraries.
 #[derive(Clone, Debug)]
 pub struct Fig3Panel {
+    /// System of this panel.
     pub system: SystemKind,
+    /// GPU count of this panel.
     pub gpus: usize,
     /// reports indexed \[dataset\]\[library\]
     pub reports: Vec<Vec<RefactoReport>>,
@@ -46,11 +48,13 @@ pub fn panels(iters: usize) -> Vec<Fig3Panel> {
     super::parallel_map(jobs)
 }
 
+/// Panels at the paper's default iteration count.
 pub fn default_panels() -> Vec<Fig3Panel> {
     panels(DEFAULT_ITERS)
 }
 
 impl Fig3Panel {
+    /// Total communication time of one (data set, library) bar.
     pub fn time(&self, dataset: &str, lib: Library) -> f64 {
         let di = datasets::all()
             .iter()

@@ -18,6 +18,7 @@ use crate::util::stats::geomean;
 use super::fig2::grid as fig2_grid;
 use super::fig3::{default_panels, Fig3Panel};
 
+/// The recomputed §VI headline ratios.
 #[derive(Clone, Debug)]
 pub struct Findings {
     /// max over message sizes of cluster/DGX-1 NCCL time ratio (OSU, 8 GPUs)
@@ -34,6 +35,7 @@ pub struct Findings {
     pub gdr_sensitivity: f64,
 }
 
+/// Recompute every §VI headline from the Fig. 2/3 grids.
 pub fn compute() -> Findings {
     let fig2 = fig2_grid();
     let dgx8 = fig2
@@ -101,6 +103,7 @@ pub fn compute() -> Findings {
     }
 }
 
+/// Render the findings next to the paper's reported numbers.
 pub fn render(f: &Findings) -> String {
     format!(
         "HEADLINE FINDINGS (ours vs paper §VI)\n\

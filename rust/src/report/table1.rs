@@ -17,12 +17,17 @@ pub const PAPER: &[(&str, [f64; 2], [f64; 2], [f64; 2], [f64; 2])] = &[
 /// Full Table I row: ours and the paper's.
 #[derive(Clone, Debug)]
 pub struct Table1Row {
+    /// Data-set name.
     pub name: &'static str,
+    /// Mode dimensions.
     pub dims: [u64; 3],
+    /// Nonzero count.
     pub nnz: u64,
-    pub ours: [MsgStats; 2],  // 2 and 8 GPUs
+    /// Our measured statistics at 2 and 8 GPUs.
+    pub ours: [MsgStats; 2],
 }
 
+/// Compute every Table I row from the calibrated profiles.
 pub fn rows() -> Vec<Table1Row> {
     datasets::all()
         .into_iter()

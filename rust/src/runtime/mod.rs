@@ -4,30 +4,44 @@
 //!
 //! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's
 //! 64-bit-id serialized protos; the text parser reassigns ids — see
-//! DESIGN.md and /opt/xla-example/README.md).
+//! DESIGN.md §6).
+//!
+//! This offline build compiles against [`xla_stub`], a faithful stand-in
+//! for the `xla` crate's API subset we call: metadata loading and shape
+//! inspection work everywhere; compilation/execution require a build
+//! that vendors the real PJRT bindings.
+
+mod xla_stub;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::{anyhow, bail};
+
+use self::xla_stub as xla;
 
 /// Element type of an artifact input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 /// Shape + dtype of one artifact input or output.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorMeta {
+    /// Logical dimensions (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: DType,
 }
 
 impl TensorMeta {
+    /// Total element count (1 for scalars).
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -36,20 +50,27 @@ impl TensorMeta {
 /// Metadata of one AOT artifact (from meta.json).
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Artifact name (meta.json key).
     pub name: String,
+    /// HLO text file name inside the artifacts directory.
     pub file: String,
+    /// Input shapes/dtypes, in call order.
     pub inputs: Vec<TensorMeta>,
+    /// Output shapes/dtypes, in tuple order.
     pub outputs: Vec<TensorMeta>,
 }
 
 /// A host-side tensor passed to / returned from an executable.
 #[derive(Clone, Debug)]
 pub enum HostTensor {
+    /// f32 data.
     F32(Vec<f32>),
+    /// i32 data.
     I32(Vec<i32>),
 }
 
 impl HostTensor {
+    /// Element type of this tensor.
     pub fn dtype(&self) -> DType {
         match self {
             HostTensor::F32(_) => DType::F32,
@@ -57,6 +78,7 @@ impl HostTensor {
         }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
             HostTensor::F32(v) => v.len(),
@@ -64,10 +86,12 @@ impl HostTensor {
         }
     }
 
+    /// True if the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Borrow as f32 data (error if the tensor is i32).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostTensor::F32(v) => Ok(v),
@@ -75,6 +99,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow as i32 data (error if the tensor is f32).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostTensor::I32(v) => Ok(v),
@@ -169,10 +194,12 @@ impl Runtime {
         v
     }
 
+    /// Metadata of one artifact, if present.
     pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
         self.meta.get(name)
     }
 
+    /// PJRT platform name ("cpu" on real builds, a stub marker here).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -239,11 +266,21 @@ impl Runtime {
     }
 }
 
-/// Default artifacts directory: $AGV_ARTIFACTS or ./artifacts.
+/// Default artifacts directory: `$AGV_ARTIFACTS` if set; else the first
+/// of `./artifacts` and `./rust/artifacts` that holds a `meta.json`
+/// (so `make artifacts` output is found from both the repo root and
+/// `rust/`); else `./artifacts` for the error message.
 pub fn default_artifacts_dir() -> PathBuf {
-    std::env::var_os("AGV_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"))
+    if let Some(p) = std::env::var_os("AGV_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    for candidate in ["artifacts", "rust/artifacts"] {
+        let dir = PathBuf::from(candidate);
+        if dir.join("meta.json").exists() {
+            return dir;
+        }
+    }
+    PathBuf::from("artifacts")
 }
 
 #[cfg(test)]

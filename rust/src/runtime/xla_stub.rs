@@ -1,0 +1,212 @@
+//! Offline stand-in for the `xla` crate's PJRT bindings (DESIGN.md §6).
+//!
+//! The runtime's public API (`Runtime::open`, artifact listing, shape
+//! metadata) works against this stub — only HLO *compilation and
+//! execution* are unavailable, and fail with a clear error naming the
+//! missing backend. A build environment that vendors the real
+//! `xla`/`xla_extension` crate can swap this module for the genuine
+//! bindings without touching `runtime/mod.rs`: the API surface below is
+//! the exact subset the runtime calls.
+
+use std::fmt;
+
+/// Error raised by the stubbed XLA operations.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+const UNAVAILABLE: &str = "XLA/PJRT backend not available in this build \
+(the offline toolchain vendors no `xla` crate); artifact metadata is \
+readable but HLO compilation/execution is not — see DESIGN.md §6";
+
+fn unavailable() -> XlaError {
+    XlaError(UNAVAILABLE.to_string())
+}
+
+/// Element payload of a [`Literal`].
+#[derive(Clone, Debug)]
+pub enum LiteralData {
+    /// 32-bit floats.
+    F32(Vec<f32>),
+    /// 32-bit signed integers.
+    I32(Vec<i32>),
+}
+
+/// Host-side typed array, the PJRT interchange value.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    /// Flat element storage.
+    pub data: LiteralData,
+    /// Logical dimensions.
+    pub dims: Vec<i64>,
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait Element: Sized {
+    /// Wrap a slice into literal storage.
+    fn wrap(data: &[Self]) -> LiteralData;
+    /// Extract a typed copy if the storage matches `Self`.
+    fn extract(data: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap(data: &[Self]) -> LiteralData {
+        LiteralData::F32(data.to_vec())
+    }
+    fn extract(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: &[Self]) -> LiteralData {
+        LiteralData::I32(data.to_vec())
+    }
+    fn extract(data: &LiteralData) -> Option<Vec<Self>> {
+        match data {
+            LiteralData::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret the literal with new dimensions (element count must
+    /// match).
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let n: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        };
+        if n as usize != have {
+            return Err(XlaError(format!(
+                "reshape to {dims:?} ({n} elements) from {have} elements"
+            )));
+        }
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    /// Typed copy of the elements.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, XlaError> {
+        T::extract(&self.data).ok_or_else(|| XlaError("literal dtype mismatch".to_string()))
+    }
+
+    /// Destructure a tuple literal (stub: never produced, always errors).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Stub PJRT client.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create the (stub) CPU client. Always succeeds so artifact
+    /// metadata can be inspected without a backend.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    /// Platform identifier; the stub is explicit about being one.
+    pub fn platform_name(&self) -> String {
+        "stub (no PJRT backend)".to_string()
+    }
+
+    /// Compile a computation (stub: always errors).
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (stub: loading always errors).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (stub: always errors with the backend
+    /// message — the file is not read).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Compiled executable handle (stub: never constructed).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (stub: always errors).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Device-resident result buffer (stub: never constructed).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal (stub: always errors).
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims, vec![4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims, vec![2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        let bad = Literal::vec1(&[1i32, 2]).reshape(&[3]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn backend_operations_error_clearly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("XLA/PJRT backend not available"));
+    }
+}

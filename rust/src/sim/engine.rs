@@ -99,6 +99,7 @@ pub struct SimResult {
 }
 
 impl SimResult {
+    /// Completion time of a task (virtual seconds).
     pub fn finish(&self, id: TaskId) -> f64 {
         self.finish[id]
     }
@@ -117,10 +118,12 @@ pub struct Sim<'t> {
 }
 
 impl<'t> Sim<'t> {
+    /// Start building a simulation over a topology.
     pub fn new(topo: &'t Topology) -> Sim<'t> {
         Sim { topo, tasks: Vec::new(), roots: Vec::new() }
     }
 
+    /// The topology this simulation runs over.
     pub fn topology(&self) -> &Topology {
         self.topo
     }

@@ -34,27 +34,34 @@ pub fn message_trace(spec: &TensorSpec, parts: usize) -> Vec<f64> {
 /// One Table I row at a given GPU count.
 #[derive(Clone, Debug)]
 pub struct MsgStats {
+    /// GPU (rank) count of this table row.
     pub gpus: usize,
+    /// Statistics over all per-rank per-mode message sizes (bytes).
     pub summary: Summary,
 }
 
 impl MsgStats {
+    /// Message statistics for a data set at a given GPU count.
     pub fn of(spec: &TensorSpec, gpus: usize) -> MsgStats {
         MsgStats { gpus, summary: Summary::of(&message_trace(spec, gpus)) }
     }
 
+    /// Mean message size in MB (Table I "Avg").
     pub fn avg_mb(&self) -> f64 {
         self.summary.mean / (1 << 20) as f64
     }
 
+    /// Smallest message in MB (Table I "Min").
     pub fn min_mb(&self) -> f64 {
         self.summary.min / (1 << 20) as f64
     }
 
+    /// Largest message in MB (Table I "Max").
     pub fn max_mb(&self) -> f64 {
         self.summary.max / (1 << 20) as f64
     }
 
+    /// Coefficient of variation (Table I's irregularity measure).
     pub fn cv(&self) -> f64 {
         self.summary.cv
     }

@@ -21,7 +21,9 @@ pub mod synth;
 /// slices so uneven in rows, and hence the messages so irregular).
 #[derive(Clone, Copy, Debug)]
 pub struct ModeProfile {
+    /// Number of indices (rows) along this mode.
     pub dim: u64,
+    /// Power-law skew exponent in [0, 1): 0 is uniform.
     pub skew: f64,
 }
 
@@ -29,12 +31,16 @@ pub struct ModeProfile {
 /// derive every communication quantity in the paper.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Data-set name as printed in Table I.
     pub name: &'static str,
+    /// Per-mode density profiles.
     pub modes: [ModeProfile; 3],
+    /// Number of nonzeros.
     pub nnz: u64,
 }
 
 impl TensorSpec {
+    /// The three mode dimensions.
     pub fn dims(&self) -> [u64; 3] {
         [self.modes[0].dim, self.modes[1].dim, self.modes[2].dim]
     }
@@ -44,18 +50,25 @@ impl TensorSpec {
 /// end-to-end workloads; the paper-scale data sets never materialize).
 #[derive(Clone, Debug)]
 pub struct CooTensor {
+    /// Mode dimensions.
     pub dims: [u64; 3],
+    /// Mode-0 coordinates, one per nonzero.
     pub i: Vec<u32>,
+    /// Mode-1 coordinates.
     pub j: Vec<u32>,
+    /// Mode-2 coordinates.
     pub k: Vec<u32>,
+    /// Nonzero values.
     pub vals: Vec<f32>,
 }
 
 impl CooTensor {
+    /// Number of stored entries (including any zero padding).
     pub fn nnz(&self) -> usize {
         self.vals.len()
     }
 
+    /// Squared Frobenius norm of the stored values.
     pub fn norm_sq(&self) -> f64 {
         self.vals.iter().map(|&v| (v as f64) * (v as f64)).sum()
     }

@@ -43,8 +43,11 @@ pub enum DeviceKind {
 /// inter-node" decisions: GDR only applies across nodes, P2P within one).
 #[derive(Clone, Debug)]
 pub struct Device {
+    /// What the device is.
     pub kind: DeviceKind,
+    /// Host node index it lives on.
     pub node: usize,
+    /// Human-readable name for reports.
     pub name: String,
 }
 
@@ -85,6 +88,7 @@ impl LinkClass {
         }
     }
 
+    /// Is this an NVLink-class link (single or bonded)?
     pub fn is_nvlink(self) -> bool {
         matches!(self, LinkClass::NvLink | LinkClass::NvLinkBonded4)
     }
@@ -96,16 +100,22 @@ impl LinkClass {
 /// contention separately for each direction.
 #[derive(Clone, Debug)]
 pub struct Link {
+    /// One endpoint.
     pub a: DeviceId,
+    /// The other endpoint.
     pub b: DeviceId,
+    /// Link technology (bandwidth/latency class).
     pub class: LinkClass,
 }
 
 /// A complete system topology.
 #[derive(Clone, Debug)]
 pub struct Topology {
+    /// System name (e.g. "dgx1", "cluster-16").
     pub name: String,
+    /// All devices, indexed by [`DeviceId`].
     pub devices: Vec<Device>,
+    /// All links, indexed by [`LinkId`].
     pub links: Vec<Link>,
     /// adjacency: device -> [(link, peer device)]
     adj: Vec<Vec<(LinkId, DeviceId)>>,
@@ -114,6 +124,7 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Create an empty topology with the given name.
     pub fn new(name: impl Into<String>) -> Topology {
         Topology {
             name: name.into(),
@@ -124,6 +135,7 @@ impl Topology {
         }
     }
 
+    /// Register a device; GPUs must be added in rank order.
     pub fn add_device(&mut self, kind: DeviceKind, node: usize, name: impl Into<String>) -> DeviceId {
         let id = self.devices.len();
         if let DeviceKind::Gpu { rank } = kind {
@@ -135,6 +147,7 @@ impl Topology {
         id
     }
 
+    /// Connect two distinct devices with an undirected link.
     pub fn add_link(&mut self, a: DeviceId, b: DeviceId, class: LinkClass) -> LinkId {
         assert!(a < self.devices.len() && b < self.devices.len());
         assert_ne!(a, b, "self-links are not allowed");
@@ -145,6 +158,7 @@ impl Topology {
         id
     }
 
+    /// Number of GPUs registered.
     pub fn num_gpus(&self) -> usize {
         self.gpus.len()
     }
@@ -154,6 +168,7 @@ impl Topology {
         self.gpus[rank]
     }
 
+    /// Adjacent (link, peer) pairs of a device.
     pub fn neighbors(&self, d: DeviceId) -> &[(LinkId, DeviceId)] {
         &self.adj[d]
     }

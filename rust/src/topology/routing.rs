@@ -15,11 +15,14 @@ use super::{DeviceId, LinkId, Topology};
 /// devices.len() - 1).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Path {
+    /// Devices visited, endpoints included.
     pub devices: Vec<DeviceId>,
+    /// Links traversed between consecutive devices.
     pub links: Vec<LinkId>,
 }
 
 impl Path {
+    /// Number of links traversed.
     pub fn hops(&self) -> usize {
         self.links.len()
     }

@@ -15,12 +15,16 @@ use super::{DeviceKind, LinkClass, Topology};
 /// the experiments: the paper runs 2/8/16 GPUs where the system allows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SystemKind {
+    /// 16-node K40m cluster, FDR InfiniBand star.
     Cluster,
+    /// NVIDIA DGX-1: 8 P100s in the NVLink hybrid cube-mesh.
     Dgx1,
+    /// Cray CS-Storm: 16 P100s in 4x-NVLink-bonded pairs.
     CsStorm,
 }
 
 impl SystemKind {
+    /// CLI/report name ("cluster", "dgx1", "cs-storm").
     pub fn name(self) -> &'static str {
         match self {
             SystemKind::Cluster => "cluster",
@@ -29,6 +33,7 @@ impl SystemKind {
         }
     }
 
+    /// Parse a system name as accepted by the `agv` CLI's `--system`.
     pub fn parse(s: &str) -> Option<SystemKind> {
         match s.to_ascii_lowercase().as_str() {
             "cluster" => Some(SystemKind::Cluster),
@@ -47,6 +52,7 @@ impl SystemKind {
         }
     }
 
+    /// Construct the full topology of this system (Fig. 1).
     pub fn build(self) -> Topology {
         match self {
             SystemKind::Cluster => cluster(16),
@@ -55,6 +61,7 @@ impl SystemKind {
         }
     }
 
+    /// All three systems, in the paper's plotting order.
     pub fn all() -> [SystemKind; 3] {
         [SystemKind::Cluster, SystemKind::Dgx1, SystemKind::CsStorm]
     }

@@ -9,17 +9,25 @@ use std::time::Instant;
 
 use super::stats::percentile;
 
+/// Timing summary of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name as printed in the report.
     pub name: String,
+    /// Timed iterations (excluding warmup).
     pub iters: usize,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Median seconds per iteration.
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration.
     pub p95_s: f64,
+    /// Fastest iteration in seconds.
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// Stable one-line report (name, iters, mean/p50/p95/min).
     pub fn report_line(&self) -> String {
         format!(
             "{:<48} {:>6} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",

@@ -4,11 +4,17 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positionals, `--key value` options
+/// and bare `--flag`s.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First bare argument, if any.
     pub subcommand: Option<String>,
+    /// Bare arguments after the subcommand.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s (no value).
     pub flags: Vec<String>,
 }
 
@@ -41,34 +47,41 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (argv\[0\] skipped).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Is the bare `--name` flag present?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// `--name` parsed as `usize` (panics with a usage message on junk).
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as `u64` (panics with a usage message on junk).
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
             .unwrap_or(default)
     }
 
+    /// `--name` parsed as `f64` (panics with a usage message on junk).
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))

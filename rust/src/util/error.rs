@@ -1,0 +1,159 @@
+//! Minimal error type with human-readable context chains (anyhow is
+//! unavailable offline).
+//!
+//! Mirrors the subset of `anyhow` the crate uses: the [`anyhow!`] and
+//! [`bail!`] macros, a [`Context`] extension trait with
+//! `context`/`with_context`, and an [`Error`] whose alternate `{:#}`
+//! Display prints the full cause chain (`outer: inner: root`).
+//!
+//! [`anyhow!`]: crate::anyhow
+//! [`bail!`]: crate::bail
+
+use std::fmt;
+
+/// An error carrying a chain of context layers, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap this error with an outer context layer.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context/cause layers, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain on one line, anyhow-style.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion (what makes `?` work on io/json/xla errors)
+// cannot conflict with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Alias defaulting the error type to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension adding context layers to any `Result` whose error converts
+/// into [`Error`].
+pub trait Context<T> {
+    /// Wrap the error (if any) with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error (if any) with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (like `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($fmt:tt)+) => {
+        $crate::util::error::Error::msg(format!($($fmt)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string (like
+/// `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($fmt:tt)+) => {
+        return Err($crate::anyhow!($($fmt)+).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading meta.json")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading meta.json");
+        assert_eq!(format!("{e:#}"), "reading meta.json: no such file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("artifact `{}` missing", "fit");
+        assert_eq!(format!("{e}"), "artifact `fit` missing");
+        fn f() -> Result<()> {
+            bail!("bad {}", 7);
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "bad 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn chain_preserves_layers() {
+        let e = Error::msg("root").context("mid").context("outer");
+        let layers: Vec<&str> = e.chain().collect();
+        assert_eq!(layers, vec!["outer", "mid", "root"]);
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"));
+    }
+}

@@ -7,19 +7,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (all JSON numbers are f64 here).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (sorted keys for deterministic iteration).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with the byte offset it occurred at.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte position in the input.
     pub pos: usize,
+    /// What was expected/found.
     pub msg: String,
 }
 
@@ -32,6 +42,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), pos: 0 };
         p.ws();
@@ -43,6 +54,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (None for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -50,6 +62,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -57,6 +70,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -64,10 +78,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -75,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The key-value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

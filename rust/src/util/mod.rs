@@ -9,8 +9,9 @@
 
 pub mod bench;
 pub mod cli;
-pub mod plot;
+pub mod error;
 pub mod json;
+pub mod plot;
 pub mod prng;
 pub mod prop;
 pub mod stats;

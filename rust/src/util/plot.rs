@@ -5,11 +5,14 @@
 /// A named series of (x, y) points.
 #[derive(Clone, Debug)]
 pub struct Series {
+    /// Legend label.
     pub name: String,
+    /// The (x, y) samples.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// Build a series from a label and points.
     pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Series {
         Series { name: name.into(), points }
     }

@@ -19,6 +19,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (splitmix64-expanded into the xoshiro state).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let s = [
@@ -30,6 +31,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

@@ -4,14 +4,20 @@
 /// Summary of a sample of non-negative measurements (message sizes, times).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation (ddof = 0).
     pub std: f64,
     /// Coefficient of variation = std / mean — the paper's Table I
     /// "Msg Size CV" irregularity measure.
     pub cv: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// Largest observation.
     pub max: f64,
+    /// Sum of all observations.
     pub sum: f64,
 }
 

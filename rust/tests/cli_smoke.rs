@@ -1,0 +1,158 @@
+//! Smoke tests for the `agv` binary's CLI surface: every subcommand
+//! listed in `main.rs::HELP` must parse (i.e. never hit the
+//! unknown-command path, which exits 2), and `agv findings` must emit
+//! the §VI ratio lines.
+
+use std::process::{Command, Output};
+
+fn agv(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_agv"))
+        .args(args)
+        .output()
+        .expect("spawning agv")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).into_owned()
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stderr).into_owned()
+}
+
+/// Every subcommand in HELP. Kept in sync by `help_lists_every_subcommand`.
+const COMMANDS: &[&str] = &[
+    "topo", "fig2", "table1", "fig3", "findings", "osu", "refacto",
+    "sweep-gdr", "e2e", "artifacts", "help",
+];
+
+#[test]
+fn help_lists_every_subcommand() {
+    let out = agv(&["help"]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    for cmd in COMMANDS {
+        assert!(
+            text.lines().any(|l| l.trim_start().starts_with(cmd)),
+            "HELP does not list `{cmd}`:\n{text}"
+        );
+    }
+}
+
+#[test]
+fn no_args_prints_help() {
+    let out = agv(&[]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("USAGE: agv"));
+}
+
+#[test]
+fn unknown_command_exits_2() {
+    let out = agv(&["frobnicate"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("unknown command"));
+}
+
+/// A subcommand "parses" iff it never reaches the unknown-command path:
+/// exit code 2 with an "unknown command" message is the parse failure
+/// signal (`e2e`/`artifacts` legitimately exit 1 when no AOT artifacts
+/// are built — that is an environment error, not a parse error).
+fn assert_parses(args: &[&str]) {
+    let out = agv(args);
+    let err = stderr(&out);
+    assert!(
+        !err.contains("unknown command"),
+        "`agv {}` hit the unknown-command path:\n{err}",
+        args.join(" ")
+    );
+    if !out.status.success() {
+        assert_ne!(
+            out.status.code(),
+            Some(2),
+            "`agv {}` exited 2 (CLI parse failure):\n{err}",
+            args.join(" ")
+        );
+    }
+}
+
+#[test]
+fn topo_runs() {
+    let out = agv(&["topo"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    for system in ["cluster-16", "dgx1", "cs-storm"] {
+        assert!(text.contains(system), "missing {system}");
+    }
+}
+
+#[test]
+fn table1_runs() {
+    let out = agv(&["table1"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("TABLE I"));
+    for d in ["NETFLIX", "AMAZON", "DELICIOUS", "NELL-1"] {
+        assert!(text.contains(d), "missing {d}");
+    }
+}
+
+#[test]
+fn osu_single_cell_runs() {
+    assert_parses(&["osu", "--system", "dgx1", "--gpus", "2", "--lib", "nccl"]);
+}
+
+#[test]
+fn refacto_single_cell_runs() {
+    let out = agv(&[
+        "refacto", "--dataset", "netflix", "--system", "dgx1", "--gpus", "2",
+        "--lib", "nccl", "--iters", "1",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("NETFLIX"));
+}
+
+#[test]
+fn sweep_gdr_runs() {
+    let out = agv(&["sweep-gdr", "--dataset", "netflix", "--gpus", "2", "--limits", "16,1MB"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("<-- best"));
+}
+
+#[test]
+fn fig3_minimal_runs() {
+    let out = agv(&["fig3", "--iters", "1"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("FIG. 3"));
+}
+
+#[test]
+#[ignore = "full Fig. 2 grid; covered in release by CI's paper-artifacts step and internally by `findings`"]
+fn fig2_runs_to_completion() {
+    let out = agv(&["fig2"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("FIG. 2"));
+    assert!(text.contains("MPI-CUDA"));
+}
+
+#[test]
+fn findings_emits_section_vi_ratio_lines() {
+    let out = agv(&["findings"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("HEADLINE FINDINGS"), "no headline:\n{text}");
+    // The three §VI ratio lines, each naming ours and the paper's value.
+    assert!(text.contains("(paper: 8.3x)"), "OSU DGX-1-vs-cluster line missing");
+    assert!(text.contains("(paper: 1.2x)"), "cluster NCCL-vs-GDR line missing");
+    assert!(text.contains("MV2_GPUDIRECT_LIMIT"), "GDR sweep line missing");
+    // every reported ratio is a real number, not NaN/inf
+    assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+}
+
+#[test]
+fn e2e_and_artifacts_parse_without_artifacts() {
+    // Without `make artifacts` these exit 1 ("cannot open artifacts"),
+    // which still proves the subcommands parse.
+    assert_parses(&["artifacts"]);
+    assert_parses(&["e2e", "--config", "small", "--gpus", "2", "--iters", "1"]);
+}

@@ -4,12 +4,13 @@
 //! times — our substrate is a flow-level simulator, not the authors'
 //! testbed (DESIGN.md §2).
 
+use std::sync::LazyLock;
+
 use agv_bench::comm::Library::{Mpi, MpiCuda, Nccl};
 use agv_bench::osu::{fig2_grid, Fig2Cell, OsuConfig};
 use agv_bench::topology::systems::SystemKind;
-use once_cell::sync::Lazy;
 
-static GRID: Lazy<Vec<Fig2Cell>> = Lazy::new(|| fig2_grid(&OsuConfig::default()));
+static GRID: LazyLock<Vec<Fig2Cell>> = LazyLock::new(|| fig2_grid(&OsuConfig::default()));
 
 fn cell(system: SystemKind, gpus: usize) -> &'static Fig2Cell {
     GRID.iter()

@@ -1,12 +1,13 @@
 //! Integration: Fig. 3 qualitative shape assertions (paper §V-C) over
 //! the full (dataset x system x library x GPUs) grid.
 
+use std::sync::LazyLock;
+
 use agv_bench::comm::Library::{Mpi, MpiCuda, Nccl};
 use agv_bench::report::fig3::{panels, Fig3Panel};
 use agv_bench::topology::systems::SystemKind;
-use once_cell::sync::Lazy;
 
-static PANELS: Lazy<Vec<Fig3Panel>> = Lazy::new(|| panels(1));
+static PANELS: LazyLock<Vec<Fig3Panel>> = LazyLock::new(|| panels(1));
 
 fn panel(system: SystemKind, gpus: usize) -> &'static Fig3Panel {
     PANELS

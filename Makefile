@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test verify bench artifacts fmt clippy
+.PHONY: build test verify bench bench-smoke artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -10,9 +10,22 @@ test:
 
 verify: build test
 
+# Full measurement run; bench_engine writes BENCH_engine.json at the
+# repo root (event-driven vs reference engine, flows/s, speedups).
 bench:
-	cargo bench --bench bench_engine
+	cargo bench --bench bench_engine -- --json
 	cargo bench --bench bench_ablations
+
+# CI smoke: every bench target builds and runs with slashed iteration
+# counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick
+# mode bench_engine writes BENCH_engine.quick.json (scratch), never
+# the canonical BENCH_engine.json.
+bench-smoke:
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_engine -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_ablations
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_osu_fig2
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_refacto_fig3
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_table1
 
 fmt:
 	cargo fmt --all --check

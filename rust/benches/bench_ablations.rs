@@ -20,6 +20,7 @@ use agv_bench::tensor::datasets::{self, ROW_BYTES};
 use agv_bench::tensor::partition::profile_rows;
 use agv_bench::tensor::ModeProfile;
 use agv_bench::topology::systems::{cluster, dgx1};
+use agv_bench::util::bench::quick_mode;
 use agv_bench::util::stats::Summary;
 use agv_bench::util::{fmt_bytes, fmt_time};
 
@@ -43,9 +44,17 @@ fn main() {
     let dgx = dgx1();
     let clu = cluster(16);
 
+    // AGV_BENCH_QUICK=1 (CI smoke) drops the largest message sizes —
+    // the regime coverage matters for the report, not for bit-rot
+    let sizes: &[u64] = if quick_mode() {
+        &[4 << 10, 1 << 20]
+    } else {
+        &[4 << 10, 64 << 10, 1 << 20, 16 << 20, 128 << 20]
+    };
+
     println!("=== ablation: allgatherv algorithm x message regime (DGX-1, 8 GPUs) ===");
     println!("{:>10} {:>14} {:>14} {:>14}", "size", "ring", "bruck", "rec-dbl");
-    for msg in [4u64 << 10, 64 << 10, 1 << 20, 16 << 20, 128 << 20] {
+    for &msg in sizes {
         let counts = vec![msg; 8];
         let ring = schedule_time(&dgx, &ring_allgatherv(8, None), 8, &counts);
         let bruck = schedule_time(&dgx, &bruck_allgatherv(8), 8, &counts);

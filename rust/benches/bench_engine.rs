@@ -1,47 +1,94 @@
 //! Microbenchmarks of the substrate hot paths: the discrete-event flow
-//! engine, routing, and one full collective of each library — the L3
-//! performance targets of DESIGN.md §8 (>= 1e5 simulated transfers/s).
-//! `cargo bench --bench bench_engine`.
+//! engine (event-driven vs the retained reference core), routing, and
+//! one full collective of each library — the L3 performance targets of
+//! DESIGN.md §8 (>= 1e5 simulated transfers/s).
+//!
+//! `cargo bench --bench bench_engine [-- --json]`
+//!
+//! With `--json` (what `make bench` passes) the results are also written
+//! to `BENCH_engine.json` at the repo root: per-case timing plus the
+//! event-engine/reference-engine speedup per DAG size, so the perf
+//! trajectory accumulates in-tree run over run. `AGV_BENCH_QUICK=1`
+//! slashes iteration counts for the CI smoke step.
 
 use agv_bench::comm::{run_allgatherv, Library};
-use agv_bench::sim::Sim;
+use agv_bench::sim::{Sim, SimResult};
 use agv_bench::topology::systems::{cluster, dgx1};
-use agv_bench::util::bench::{bench, black_box};
+use agv_bench::topology::Topology;
+use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
+use agv_bench::util::json::{obj, Json};
 use agv_bench::util::prng::Rng;
 
+/// Random contended DAG over the DGX-1: ~70% independent flows, ~30%
+/// chained onto the previous one (same construction the seed bench
+/// used, so numbers stay comparable release over release).
+fn build_random_dag(topo: &Topology, n_flows: usize) -> Sim<'_> {
+    let mut rng = Rng::new(42);
+    let mut sim = Sim::new(topo);
+    let mut last = None;
+    for _ in 0..n_flows {
+        let a = rng.gen_range(8) as usize;
+        let mut b = rng.gen_range(8) as usize;
+        if a == b {
+            b = (b + 1) % 8;
+        }
+        let path = topo.route_gpus(a, b).unwrap();
+        let deps: Vec<_> = if rng.next_f64() < 0.3 {
+            last.into_iter().collect()
+        } else {
+            vec![]
+        };
+        last = Some(sim.flow(path, 1e6 + rng.gen_range(1 << 22) as f64, 1e-6, &deps));
+    }
+    sim
+}
+
 fn main() {
+    let json_out = std::env::args().any(|a| a == "--json");
     let dgx = dgx1();
     let clu = cluster(16);
 
-    // raw engine throughput: chains of random flows with contention
+    let mut cases: Vec<Json> = Vec::new();
+    let mut speedups: Vec<(&str, f64)> = Vec::new();
+
+    // raw engine throughput, event-driven vs reference, same DAGs
     for n_flows in [100usize, 1000, 5000] {
-        let name = format!("engine/random_dag/{n_flows}_flows");
-        let r = bench(&name, 1, 8, || {
-            let mut rng = Rng::new(42);
-            let mut sim = Sim::new(&dgx);
-            let mut last = None;
-            for _ in 0..n_flows {
-                let a = rng.gen_range(8) as usize;
-                let mut b = rng.gen_range(8) as usize;
-                if a == b {
-                    b = (b + 1) % 8;
-                }
-                let path = dgx.route_gpus(a, b).unwrap();
-                let deps: Vec<_> = if rng.next_f64() < 0.3 {
-                    last.into_iter().collect()
-                } else {
-                    vec![]
-                };
-                last = Some(sim.flow(path, 1e6 + rng.gen_range(1 << 22) as f64, 1e-6, &deps));
-            }
-            black_box(sim.run());
+        let event_name = format!("engine/random_dag/{n_flows}_flows");
+        let event = bench(&event_name, warmup(1), iters(8), || {
+            black_box(build_random_dag(&dgx, n_flows).run());
         });
-        let flows_per_sec = n_flows as f64 / r.mean_s;
-        println!("{}   ({:.0} flows/s)", r.report_line(), flows_per_sec);
+        let flows_per_sec = n_flows as f64 / event.mean_s;
+        println!("{}   ({:.0} flows/s)", event.report_line(), flows_per_sec);
+        cases.push(event.to_json(&[("flows_per_s", flows_per_sec)]));
+
+        let ref_name = format!("engine_reference/random_dag/{n_flows}_flows");
+        let reference = bench(&ref_name, warmup(1), iters(4), || {
+            black_box(build_random_dag(&dgx, n_flows).run_reference());
+        });
+        let ref_flows_per_sec = n_flows as f64 / reference.mean_s;
+        println!("{}   ({:.0} flows/s)", reference.report_line(), ref_flows_per_sec);
+        cases.push(reference.to_json(&[("flows_per_s", ref_flows_per_sec)]));
+
+        let speedup = reference.mean_s / event.mean_s;
+        let label: &str = match n_flows {
+            100 => "random_dag/100_flows",
+            1000 => "random_dag/1000_flows",
+            _ => "random_dag/5000_flows",
+        };
+        println!("  -> event-driven speedup over reference: {speedup:.2}x\n");
+        speedups.push((label, speedup));
+    }
+
+    // sanity while we have both engines in hand: identical results
+    {
+        let new: SimResult = build_random_dag(&dgx, 200).run();
+        let old: SimResult = build_random_dag(&dgx, 200).run_reference();
+        let rel = (new.makespan - old.makespan).abs() / old.makespan;
+        assert!(rel < 1e-9, "engines diverged: {} vs {}", new.makespan, old.makespan);
     }
 
     // routing cost
-    let r = bench("topology/route_all_pairs/cluster16", 2, 20, || {
+    let r = bench("topology/route_all_pairs/cluster16", warmup(2), iters(20), || {
         for a in 0..16 {
             for b in 0..16 {
                 if a != b {
@@ -51,16 +98,43 @@ fn main() {
         }
     });
     println!("{}", r.report_line());
+    cases.push(r.to_json(&[]));
 
     // one full collective per library (the Fig. 2/3 inner loop)
     for lib in Library::all() {
         for (topo, label, gpus) in [(&dgx, "dgx1", 8usize), (&clu, "cluster", 16)] {
             let counts = vec![16u64 << 20; gpus];
             let name = format!("allgatherv/{}/{}x16MB", lib.name(), label);
-            let r = bench(&name, 1, 10, || {
+            let r = bench(&name, warmup(1), iters(10), || {
                 black_box(run_allgatherv(lib, topo, &counts));
             });
             println!("{}", r.report_line());
+            cases.push(r.to_json(&[]));
         }
+    }
+
+    if json_out {
+        let doc = obj(vec![
+            ("bench", Json::Str("bench_engine".into())),
+            ("quick", Json::Bool(quick_mode())),
+            ("cases", Json::Arr(cases)),
+            (
+                "speedup_vs_reference",
+                obj(speedups
+                    .into_iter()
+                    .map(|(k, v)| (k, Json::Num(v)))
+                    .collect()),
+            ),
+        ]);
+        // quick-mode (smoke) numbers are meaningless as measurements:
+        // write them to a scratch name so CI/contributor smoke runs
+        // never clobber the canonical BENCH_engine.json log
+        let path = if quick_mode() {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.quick.json")
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engine.json")
+        };
+        std::fs::write(path, doc.render() + "\n").expect("write BENCH_engine json");
+        println!("\nwrote {path}");
     }
 }

@@ -9,7 +9,7 @@ use agv_bench::comm::Library;
 use agv_bench::osu::{run_osu, OsuConfig};
 use agv_bench::report::fig2;
 use agv_bench::topology::systems::SystemKind;
-use agv_bench::util::bench::{bench, black_box};
+use agv_bench::util::bench::{bench, black_box, iters, warmup};
 
 fn main() {
     println!("=== Fig. 2 data (per-rank message size -> total time) ===\n");
@@ -22,7 +22,7 @@ fn main() {
         let topo = system.build();
         for lib in Library::all() {
             let name = format!("osu_sweep/{}/{}/8gpus", system.name(), lib.name());
-            let r = bench(&name, 1, 5, || {
+            let r = bench(&name, warmup(1), iters(5), || {
                 black_box(run_osu(&cfg, &topo, lib, 8.min(topo.num_gpus())));
             });
             println!("{}", r.report_line());

@@ -6,7 +6,7 @@ use agv_bench::cpals::comm_model::refacto_comm;
 use agv_bench::report::fig3;
 use agv_bench::tensor::datasets;
 use agv_bench::topology::systems::SystemKind;
-use agv_bench::util::bench::{bench, black_box};
+use agv_bench::util::bench::{bench, black_box, iters, warmup};
 
 fn main() {
     println!("=== Fig. 3 data (10 CP-ALS iterations) ===\n");
@@ -18,7 +18,7 @@ fn main() {
         let topo = system.build();
         for d in datasets::all() {
             let name = format!("refacto/{}/{}/8gpus", system.name(), d.name);
-            let r = bench(&name, 1, 5, || {
+            let r = bench(&name, warmup(1), iters(5), || {
                 for lib in Library::all() {
                     black_box(refacto_comm(&topo, lib, Params::default(), &d, 8, 1));
                 }

@@ -4,7 +4,7 @@
 use agv_bench::report::table1;
 use agv_bench::tensor::datasets;
 use agv_bench::tensor::messages::MsgStats;
-use agv_bench::util::bench::{bench, black_box};
+use agv_bench::util::bench::{bench, black_box, iters, warmup};
 
 fn main() {
     println!("=== Table I ===\n");
@@ -14,7 +14,7 @@ fn main() {
     println!("=== harness timing ===");
     for d in datasets::all() {
         let name = format!("table1_stats/{}", d.name);
-        let r = bench(&name, 2, 10, || {
+        let r = bench(&name, warmup(2), iters(10), || {
             for gpus in [2usize, 8, 16] {
                 black_box(MsgStats::of(&d, gpus));
             }

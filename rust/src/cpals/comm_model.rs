@@ -68,6 +68,10 @@ pub fn refacto_comm(
 
 /// Sweep `MV2_GPUDIRECT_LIMIT` for one configuration (paper §V-C): the
 /// MPI-CUDA library is rebuilt per value; returns (limit, total time).
+///
+/// Limits fan out over the bounded worker pool — each point is an
+/// independent pure simulation, and the scoped pool lets the jobs
+/// borrow `topo`/`spec` directly.
 pub fn gdr_limit_sweep(
     topo: &Topology,
     spec: &TensorSpec,
@@ -75,14 +79,17 @@ pub fn gdr_limit_sweep(
     iters: usize,
     limits: &[u64],
 ) -> Vec<(u64, f64)> {
-    limits
+    let jobs: Vec<_> = limits
         .iter()
         .map(|&limit| {
-            let params = Params::default().with_gpudirect_limit(limit);
-            let r = refacto_comm(topo, Library::MpiCuda, params, spec, gpus, iters);
-            (limit, r.total_time)
+            move || {
+                let params = Params::default().with_gpudirect_limit(limit);
+                let r = refacto_comm(topo, Library::MpiCuda, params, spec, gpus, iters);
+                (limit, r.total_time)
+            }
         })
-        .collect()
+        .collect();
+    crate::util::pool::parallel_map(jobs)
 }
 
 #[cfg(test)]

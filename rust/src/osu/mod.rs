@@ -96,8 +96,31 @@ pub fn gpu_counts(system: SystemKind) -> Vec<usize> {
     }
 }
 
-/// Reproduce the whole Fig. 2 grid.
+/// Reproduce the whole Fig. 2 grid. Cells fan out over the bounded
+/// worker pool ([`crate::util::pool`]) — each (system, GPU-count) cell
+/// is an independent pure simulation.
 pub fn fig2_grid(cfg: &OsuConfig) -> Vec<Fig2Cell> {
+    let mut jobs: Vec<Box<dyn FnOnce() -> Fig2Cell + Send>> = Vec::new();
+    for system in SystemKind::all() {
+        for gpus in gpu_counts(system) {
+            let cfg = *cfg;
+            jobs.push(Box::new(move || {
+                let topo = system.build();
+                let series = Library::all()
+                    .into_iter()
+                    .map(|lib| (lib, run_osu(&cfg, &topo, lib, gpus)))
+                    .collect();
+                Fig2Cell { system, gpus, series }
+            }));
+        }
+    }
+    crate::util::pool::parallel_map(jobs)
+}
+
+/// Serial variant of [`fig2_grid`] for callers that must avoid worker
+/// threads (single-threaded profiling, engine A/B comparisons through
+/// the thread-local reference override).
+pub fn fig2_grid_serial(cfg: &OsuConfig) -> Vec<Fig2Cell> {
     let mut cells = Vec::new();
     for system in SystemKind::all() {
         let topo = system.build();

@@ -2,32 +2,18 @@
 //! size, per system / library / GPU count.
 
 use crate::comm::Library;
-use crate::osu::{fig2_grid, Fig2Cell, OsuConfig};
-use crate::topology::systems::SystemKind;
+use crate::osu::{fig2_grid, fig2_grid_serial, Fig2Cell, OsuConfig};
 use crate::util::plot::{log_log_chart, to_csv, Series};
 
-/// Build the grid (parallel over cells).
+/// Build the grid (parallel over cells, bounded worker pool).
 pub fn grid() -> Vec<Fig2Cell> {
-    let cfg = OsuConfig::default();
-    let mut jobs: Vec<Box<dyn FnOnce() -> Fig2Cell + Send>> = Vec::new();
-    for system in SystemKind::all() {
-        for gpus in crate::osu::gpu_counts(system) {
-            jobs.push(Box::new(move || {
-                let topo = system.build();
-                let series = Library::all()
-                    .into_iter()
-                    .map(|lib| (lib, crate::osu::run_osu(&cfg, &topo, lib, gpus)))
-                    .collect();
-                Fig2Cell { system, gpus, series }
-            }));
-        }
-    }
-    super::parallel_map(jobs)
+    fig2_grid(&OsuConfig::default())
 }
 
-/// Serial version used when thread spawning is undesirable (benches).
+/// Serial version used when thread spawning is undesirable (benches,
+/// engine A/B runs through the thread-local reference override).
 pub fn grid_serial() -> Vec<Fig2Cell> {
-    fig2_grid(&OsuConfig::default())
+    fig2_grid_serial(&OsuConfig::default())
 }
 
 fn cell_series(cell: &Fig2Cell) -> Vec<Series> {

@@ -24,19 +24,17 @@ pub fn write_csv(dir: &Path, name: &str, csv: &str) -> std::io::Result<std::path
 }
 
 /// Run closures on worker threads and collect results in order.
+///
+/// Delegates to the bounded pool in [`crate::util::pool`]: at most
+/// `available_parallelism` workers, regardless of grid size (the old
+/// implementation spawned one OS thread per job). Kept here because
+/// every grid builder in this module calls it by this path.
 pub fn parallel_map<T, F>(jobs: Vec<F>) -> Vec<T>
 where
-    T: Send + 'static,
-    F: FnOnce() -> T + Send + 'static,
+    T: Send,
+    F: FnOnce() -> T + Send,
 {
-    let handles: Vec<_> = jobs
-        .into_iter()
-        .map(|job| std::thread::spawn(job))
-        .collect();
-    handles
-        .into_iter()
-        .map(|h| h.join().expect("worker panicked"))
-        .collect()
+    crate::util::pool::parallel_map(jobs)
 }
 
 #[cfg(test)]

@@ -1,5 +1,33 @@
 //! The event engine: task DAG execution with max-min fair flow rates.
+//!
+//! This is the **event-driven** core (DESIGN.md §8). The previous
+//! generation of the engine — kept verbatim in [`super::reference`] as a
+//! differential-testing oracle — scanned every active flow at every
+//! event to find the next completion, advanced byte accounting for every
+//! flow at every event, and rebuilt max-min rates from scratch on every
+//! start/finish: O(F²·L) for F concurrent flows. This engine replaces
+//! all three hot paths:
+//!
+//! 1. **Prediction heap** — predicted flow completions live in a lazy
+//!    min-heap keyed by `(now + remaining/rate, seq)`. Every entry is
+//!    stamped with the flow's *epoch* (bumped on every rate change);
+//!    stale entries are discarded on pop instead of being searched for
+//!    and removed. Finding the next completion is O(log F).
+//! 2. **Lazy settlement** — rates are piecewise constant between rate
+//!    changes, so each flow records `last_update` and settles its
+//!    `remaining`/`linkdir_bytes` only when its rate changes, when it
+//!    completes, or never again (run end implies completion). Events
+//!    that do not touch a flow cost it nothing.
+//! 3. **Incremental max-min** — per-linkdir membership lists let the
+//!    progressive-filling refill visit only linkdirs that are actually
+//!    loaded, and two *fast paths* skip the refill entirely: a flow
+//!    finishing whose linkdirs are all unsaturated (or left empty by its
+//!    departure) cannot raise anyone else's rate, and a flow starting on
+//!    linkdirs it occupies alone takes the spare capacity without
+//!    disturbing anyone. Serialized chains — the common shape of
+//!    staged/pipelined transports — never trigger a full refill.
 
+use std::cell::Cell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -9,10 +37,10 @@ use crate::topology::{LinkId, Path, Topology};
 pub type TaskId = usize;
 
 /// A (link, direction) capacity domain. Direction 0 = a->b, 1 = b->a.
-type LinkDir = usize;
+pub(crate) type LinkDir = usize;
 
 #[derive(Clone, Debug)]
-enum TaskSpec {
+pub(crate) enum TaskSpec {
     /// Bytes moving along `linkdirs`; `latency` elapses between readiness
     /// and the first byte (wire latency + protocol overhead).
     Flow {
@@ -25,19 +53,19 @@ enum TaskSpec {
 }
 
 #[derive(Clone, Debug)]
-struct Task {
-    spec: TaskSpec,
+pub(crate) struct Task {
+    pub(crate) spec: TaskSpec,
     /// Number of incomplete dependencies.
-    pending_deps: usize,
+    pub(crate) pending_deps: usize,
     /// Tasks to notify on completion.
-    dependents: Vec<TaskId>,
+    pub(crate) dependents: Vec<TaskId>,
     /// Completion time, once known.
-    finish: Option<f64>,
+    pub(crate) finish: Option<f64>,
 }
 
 /// Scheduled discrete event.
 #[derive(Clone, Copy, Debug)]
-enum Event {
+pub(crate) enum Event {
     /// A flow's latency elapsed: its bytes start moving.
     Activate(TaskId),
     /// A delay task finished.
@@ -46,10 +74,10 @@ enum Event {
 
 /// Min-heap entry ordered by (time, seq) for determinism.
 #[derive(Clone, Copy, Debug)]
-struct HeapEntry {
-    time: f64,
-    seq: u64,
-    event: Event,
+pub(crate) struct HeapEntry {
+    pub(crate) time: f64,
+    pub(crate) seq: u64,
+    pub(crate) event: Event,
 }
 
 impl PartialEq for HeapEntry {
@@ -73,22 +101,90 @@ impl Ord for HeapEntry {
     }
 }
 
-/// An active flow being rate-controlled. `linkdirs` is moved out of the
-/// task spec at activation so the hot loops (rate recomputation, byte
-/// accounting) touch a flat, cache-friendly array instead of chasing the
-/// task table.
+/// Predicted completion of an active flow. Stale entries (the flow's
+/// rate changed since the prediction, bumping its epoch, or the slot was
+/// recycled) are discarded lazily on pop.
+#[derive(Clone, Copy, Debug)]
+struct Prediction {
+    time: f64,
+    seq: u64,
+    slot: u32,
+    epoch: u64,
+}
+
+impl PartialEq for Prediction {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Prediction {}
+impl PartialOrd for Prediction {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Prediction {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: earliest prediction first, push order breaks ties
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// An active flow slot. Slots live in a slab (`free` list recycles them)
+/// so per-linkdir membership lists can hold stable `u32` indices.
 #[derive(Clone, Debug)]
-struct ActiveFlow {
+struct FlowSlot {
     task: TaskId,
+    /// Bytes left as of `last_update` (settled lazily).
     remaining: f64,
     rate: f64,
+    /// Virtual time up to which `remaining`/`linkdir_bytes` are settled.
+    last_update: f64,
+    /// Bumped on every rate change; invalidates heap predictions.
+    epoch: u64,
+    alive: bool,
+    /// Position in `active_list` for O(1) swap-removal.
+    list_pos: u32,
     linkdirs: Vec<LinkDir>,
+    /// `member_pos[k]` = this flow's position in
+    /// `members[linkdirs[k]]`, for O(1) membership swap-removal
+    /// (a linear scan here would reintroduce O(F²) work on
+    /// shared-link completion batches).
+    member_pos: Vec<u32>,
+}
+
+/// Engine instrumentation counters, reported on [`SimResult::stats`].
+///
+/// These exist so scaling regressions are testable by *counting work*
+/// instead of timing it: `tests/engine_scaling.rs` asserts linear bounds
+/// on them for workloads the old quadratic core handled in O(F²).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimStats {
+    /// Discrete events fired (activations + delay completions).
+    pub events: u64,
+    /// Flow completions delivered from the prediction heap.
+    pub completions: u64,
+    /// Full progressive-filling rate recomputations.
+    pub full_refills: u64,
+    /// Flow visits summed over all refill rounds — the engine's actual
+    /// rate-recompute work, which is where quadratic behavior would
+    /// resurface (the scaling regression test bounds this).
+    pub refill_flow_visits: u64,
+    /// Flow starts/finishes absorbed by the incremental fast paths.
+    pub fast_updates: u64,
+    /// Lazy byte settlements that actually moved bytes.
+    pub settlements: u64,
+    /// Completion predictions pushed onto the heap.
+    pub heap_pushes: u64,
 }
 
 /// Simulation outcome.
 #[derive(Clone, Debug)]
 pub struct SimResult {
-    finish: Vec<f64>,
+    pub(crate) finish: Vec<f64>,
     /// Virtual time when the last task completed.
     pub makespan: f64,
     /// Total bytes carried per (link, direction) — for utilization
@@ -96,6 +192,8 @@ pub struct SimResult {
     pub linkdir_bytes: Vec<f64>,
     /// Number of flows simulated.
     pub flows: usize,
+    /// Engine work counters (all-zero when the reference engine ran).
+    pub stats: SimStats,
 }
 
 impl SimResult {
@@ -104,17 +202,46 @@ impl SimResult {
         self.finish[id]
     }
 
+    /// Completion times of every task, in task order.
+    pub fn finish_times(&self) -> &[f64] {
+        &self.finish
+    }
+
     /// Total bytes over a link, both directions.
     pub fn link_bytes(&self, link: LinkId) -> f64 {
         self.linkdir_bytes[2 * link] + self.linkdir_bytes[2 * link + 1]
     }
 }
 
+thread_local! {
+    /// When set, [`Sim::run`] dispatches to the reference engine. Tests
+    /// use this (via [`with_reference_engine`]) to route entire comm
+    /// models through the pre-rewrite core for differential comparison.
+    static FORCE_REFERENCE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Run `f` with every [`Sim::run`] on this thread dispatched to the
+/// reference (pre-rewrite) engine — the seam differential tests and the
+/// engine A/B bench use to drive unmodified comm models through both
+/// cores. Thread-local, so parallel tests do not interfere; note that
+/// worker threads spawned inside `f` (e.g. `util::pool`) do *not*
+/// inherit the override.
+pub fn with_reference_engine<T>(f: impl FnOnce() -> T) -> T {
+    struct Reset(bool);
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            FORCE_REFERENCE.with(|c| c.set(self.0));
+        }
+    }
+    let _reset = Reset(FORCE_REFERENCE.with(|c| c.replace(true)));
+    f()
+}
+
 /// Simulator for one collective (or one batched schedule of them).
 pub struct Sim<'t> {
-    topo: &'t Topology,
-    tasks: Vec<Task>,
-    roots: Vec<TaskId>,
+    pub(crate) topo: &'t Topology,
+    pub(crate) tasks: Vec<Task>,
+    pub(crate) roots: Vec<TaskId>,
 }
 
 impl<'t> Sim<'t> {
@@ -179,141 +306,235 @@ impl<'t> Sim<'t> {
     }
 
     /// Execute the DAG; consumes the builder.
+    ///
+    /// Dispatches to [`Sim::run_reference`] inside
+    /// [`with_reference_engine`] scopes; otherwise runs the event-driven
+    /// engine below.
     pub fn run(self) -> SimResult {
+        if FORCE_REFERENCE.with(|c| c.get()) {
+            return self.run_reference();
+        }
+        self.run_event_driven()
+    }
+
+    fn run_event_driven(self) -> SimResult {
         let Sim { topo, mut tasks, roots } = self;
         let n_linkdirs = topo.links.len() * 2;
         let caps: Vec<f64> = (0..n_linkdirs)
             .map(|ld| topo.links[ld / 2].class.bandwidth())
             .collect();
         let mut linkdir_bytes = vec![0.0; n_linkdirs];
+        let mut stats = SimStats::default();
 
-        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+        // Discrete events (activations, delays), as in the reference.
+        let mut events: BinaryHeap<HeapEntry> = BinaryHeap::new();
         let mut seq = 0u64;
-        let mut schedule = |heap: &mut BinaryHeap<HeapEntry>, time: f64, event: Event| {
-            let s = seq;
-            seq += 1;
-            heap.push(HeapEntry { time, seq: s, event });
-        };
 
-        let mut active: Vec<ActiveFlow> = Vec::new();
+        // Lazy completion-prediction heap (§8 item 1).
+        let mut predictions: BinaryHeap<Prediction> = BinaryHeap::new();
+        let mut pred_seq = 0u64;
+
+        // Flow slab + O(1)-removal active list + per-linkdir membership.
+        let mut flows: Vec<FlowSlot> = Vec::new();
+        let mut free: Vec<u32> = Vec::new();
+        let mut active_list: Vec<u32> = Vec::new();
+        // members[ld] holds (slot, k) with flows[slot].linkdirs[k] == ld
+        // and flows[slot].member_pos[k] == position in members[ld]
+        let mut members: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n_linkdirs];
+        // Leftover capacity per linkdir under the current allocation.
+        // Invariant: members[ld].is_empty() implies spare[ld] == caps[ld]
+        // bitwise (restored exactly on last-member departure, so idle
+        // links never accumulate floating-point drift).
+        let mut spare: Vec<f64> = caps.clone();
+
         let mut now = 0.0f64;
         let mut flows_total = 0usize;
         let mut completed = 0usize;
         let total = tasks.len();
+        // saturation threshold, as in the reference refill
+        let eps = 1e-9;
 
-        // Readiness propagation: when a task becomes ready at time t,
-        // schedule its activation/completion event.
         let mut ready_queue: Vec<(TaskId, f64)> = roots.iter().map(|&r| (r, 0.0)).collect();
 
         macro_rules! drain_ready {
             () => {
                 while let Some((id, t)) = ready_queue.pop() {
-                    match tasks[id].spec {
-                        TaskSpec::Flow { latency, .. } => {
-                            schedule(&mut heap, t + latency, Event::Activate(id));
-                        }
-                        TaskSpec::Delay { secs } => {
-                            schedule(&mut heap, t + secs, Event::DelayDone(id));
-                        }
-                    }
+                    let time = match tasks[id].spec {
+                        TaskSpec::Flow { latency, .. } => t + latency,
+                        TaskSpec::Delay { secs } => t + secs,
+                    };
+                    let event = match tasks[id].spec {
+                        TaskSpec::Flow { .. } => Event::Activate(id),
+                        TaskSpec::Delay { .. } => Event::DelayDone(id),
+                    };
+                    let s = seq;
+                    seq += 1;
+                    events.push(HeapEntry { time, seq: s, event });
                 }
             };
         }
 
-        // Recompute max-min fair rates via progressive filling. Scratch
-        // buffers are hoisted out of the closure and reused across calls
-        // (§Perf: allocation in this loop dominated grid regeneration).
-        let mut scratch_cap: Vec<f64> = caps.clone();
+        macro_rules! finish_task {
+            ($id:expr, $t:expr) => {{
+                let id: TaskId = $id;
+                tasks[id].finish = Some($t);
+                completed += 1;
+                for di in 0..tasks[id].dependents.len() {
+                    let dep = tasks[id].dependents[di];
+                    tasks[dep].pending_deps -= 1;
+                    if tasks[dep].pending_deps == 0 {
+                        ready_queue.push((dep, $t));
+                    }
+                }
+            }};
+        }
+
+        // Settle a flow's lazy byte accounting up to `t` (§8 item 2).
+        fn settle(f: &mut FlowSlot, linkdir_bytes: &mut [f64], t: f64, stats: &mut SimStats) {
+            let dt = t - f.last_update;
+            if dt > 0.0 && f.rate > 0.0 && f.remaining > 0.0 {
+                let moved = (f.rate * dt).min(f.remaining);
+                f.remaining -= moved;
+                for &ld in &f.linkdirs {
+                    linkdir_bytes[ld] += moved;
+                }
+                stats.settlements += 1;
+            }
+            f.last_update = t;
+        }
+
+        macro_rules! push_prediction {
+            ($slot:expr) => {{
+                let s: u32 = $slot;
+                let f = &flows[s as usize];
+                let time = if f.remaining <= 0.0 || f.rate.is_infinite() {
+                    now
+                } else if f.rate > 0.0 {
+                    now + f.remaining / f.rate
+                } else {
+                    f64::INFINITY // stalled: revived by a later rate change
+                };
+                if time.is_finite() {
+                    let ps = pred_seq;
+                    pred_seq += 1;
+                    predictions.push(Prediction { time, seq: ps, slot: s, epoch: f.epoch });
+                    stats.heap_pushes += 1;
+                }
+            }};
+        }
+
+        // Scratch for the progressive-filling refill (hoisted, reused).
+        let mut scratch_unfrozen: Vec<u32> = Vec::new();
+        let mut scratch_loaded: Vec<LinkDir> = Vec::new();
+        let mut scratch_touched: Vec<u64> = vec![0; n_linkdirs];
         let mut scratch_cnt: Vec<u32> = vec![0; n_linkdirs];
-        let mut scratch_frozen: Vec<bool> = Vec::new();
-        let mut scratch_unfrozen: Vec<usize> = Vec::new();
-        let mut recompute = |active: &mut [ActiveFlow]| {
-            if active.is_empty() {
-                return;
-            }
-            scratch_cap.copy_from_slice(&caps);
-            let remaining_cap = &mut scratch_cap;
-            // compact list of still-unfrozen flow indices: each round
-            // touches only the flows whose rate is still rising, so the
-            // total refill cost is ~ sum over rounds of survivors rather
-            // than rounds x all flows (§Perf iteration 2).
-            scratch_frozen.clear(); // reused as usize storage via indices
-            let unfrozen_idx = &mut scratch_unfrozen;
-            unfrozen_idx.clear();
-            unfrozen_idx.extend(0..active.len());
-            for f in active.iter_mut() {
-                f.rate = 0.0;
-            }
-            // per-round counts (the linkdir arrays are tiny — zeroing
-            // them wholesale beats touched-set bookkeeping, §Perf iter 3)
-            let cnt = &mut scratch_cnt;
-            while !unfrozen_idx.is_empty() {
-                cnt.iter_mut().for_each(|c| *c = 0);
-                for &fi in unfrozen_idx.iter() {
-                    for &ld in &active[fi].linkdirs {
-                        cnt[ld] += 1;
+        let mut scratch_rate: Vec<f64> = Vec::new();
+        let mut refill_id = 0u64;
+
+        // Full max-min recompute via progressive filling (§8 item 3):
+        // identical arithmetic to the reference, but the per-round scans
+        // touch only loaded linkdirs (`scratch_loaded`) instead of every
+        // linkdir in the topology, and new rates are *compared* to the
+        // old ones so only flows whose rate actually changed pay a
+        // settlement, an epoch bump and a heap push.
+        macro_rules! full_refill {
+            () => {{
+                if !active_list.is_empty() {
+                    stats.full_refills += 1;
+                    refill_id += 1;
+                    scratch_loaded.clear();
+                    scratch_unfrozen.clear();
+                    scratch_unfrozen.extend(active_list.iter().copied());
+                    if scratch_rate.len() < flows.len() {
+                        scratch_rate.resize(flows.len(), 0.0);
+                    }
+                    for &s in &scratch_unfrozen {
+                        scratch_rate[s as usize] = 0.0;
+                        for &ld in &flows[s as usize].linkdirs {
+                            if scratch_touched[ld] != refill_id {
+                                scratch_touched[ld] = refill_id;
+                                scratch_loaded.push(ld);
+                                spare[ld] = caps[ld];
+                            }
+                        }
+                    }
+                    while !scratch_unfrozen.is_empty() {
+                        stats.refill_flow_visits += scratch_unfrozen.len() as u64;
+                        for &ld in &scratch_loaded {
+                            scratch_cnt[ld] = 0;
+                        }
+                        for &s in &scratch_unfrozen {
+                            for &ld in &flows[s as usize].linkdirs {
+                                scratch_cnt[ld] += 1;
+                            }
+                        }
+                        // smallest fair increment across loaded linkdirs
+                        let mut inc = f64::INFINITY;
+                        for &ld in &scratch_loaded {
+                            if scratch_cnt[ld] > 0 {
+                                inc = inc.min(spare[ld] / scratch_cnt[ld] as f64);
+                            }
+                        }
+                        if !inc.is_finite() {
+                            for &s in &scratch_unfrozen {
+                                scratch_rate[s as usize] = f64::INFINITY;
+                            }
+                            break;
+                        }
+                        for &s in &scratch_unfrozen {
+                            scratch_rate[s as usize] += inc;
+                        }
+                        for &ld in &scratch_loaded {
+                            spare[ld] -= inc * scratch_cnt[ld] as f64;
+                        }
+                        // freeze flows crossing saturated linkdirs
+                        let before = scratch_unfrozen.len();
+                        scratch_unfrozen.retain(|&s| {
+                            let saturated = flows[s as usize]
+                                .linkdirs
+                                .iter()
+                                .any(|&ld| spare[ld] <= eps * caps[ld]);
+                            !saturated
+                        });
+                        if scratch_unfrozen.len() == before {
+                            // Numerical safety: freeze all at current rates.
+                            scratch_unfrozen.clear();
+                        }
+                    }
+                    // apply: settle + re-predict only flows whose rate changed
+                    for &s in &active_list {
+                        let si = s as usize;
+                        let r = scratch_rate[si];
+                        if r.to_bits() != flows[si].rate.to_bits() {
+                            settle(&mut flows[si], &mut linkdir_bytes, now, &mut stats);
+                            flows[si].rate = r;
+                            flows[si].epoch += 1;
+                            push_prediction!(s);
+                        }
                     }
                 }
-                // smallest fair increment across loaded linkdirs
-                let mut inc = f64::INFINITY;
-                for ld in 0..cnt.len() {
-                    if cnt[ld] > 0 {
-                        inc = inc.min(remaining_cap[ld] / cnt[ld] as f64);
-                    }
-                }
-                if !inc.is_finite() {
-                    for &fi in unfrozen_idx.iter() {
-                        active[fi].rate = f64::INFINITY;
-                    }
-                    break;
-                }
-                // raise all unfrozen flows by inc, charge links
-                for &fi in unfrozen_idx.iter() {
-                    active[fi].rate += inc;
-                }
-                for ld in 0..cnt.len() {
-                    remaining_cap[ld] -= inc * cnt[ld] as f64;
-                }
-                // freeze flows crossing saturated linkdirs
-                let eps = 1e-9;
-                let before = unfrozen_idx.len();
-                unfrozen_idx.retain(|&fi| {
-                    let saturated = active[fi]
-                        .linkdirs
-                        .iter()
-                        .any(|&ld| remaining_cap[ld] <= eps * caps[ld]);
-                    !saturated
-                });
-                if unfrozen_idx.len() == before {
-                    // Numerical safety: freeze everything at current rates.
-                    unfrozen_idx.clear();
-                }
-            }
-        };
+            }};
+        }
 
         drain_ready!();
-        recompute(&mut active);
 
+        let mut started: Vec<u32> = Vec::new();
         while completed < total {
-            // Next discrete event vs next flow completion.
-            let next_event_t = heap.peek().map(|e| e.time);
-            let mut next_flow: Option<(usize, f64)> = None;
-            for (fi, f) in active.iter().enumerate() {
-                let t = if f.rate > 0.0 {
-                    now + f.remaining / f.rate
-                } else if f.remaining <= 0.0 {
-                    now
-                } else {
-                    f64::INFINITY
-                };
-                if next_flow.map(|(_, bt)| t < bt).unwrap_or(true) {
-                    next_flow = Some((fi, t));
+            // Next valid predicted completion (discard stale entries).
+            let mut next_completion = None;
+            while let Some(p) = predictions.peek() {
+                let f = &flows[p.slot as usize];
+                if f.alive && f.epoch == p.epoch {
+                    next_completion = Some(p.time);
+                    break;
                 }
+                predictions.pop();
             }
-            let t_star = match (next_event_t, next_flow) {
-                (Some(te), Some((_, tf))) => te.min(tf),
+            let next_event_t = events.peek().map(|e| e.time);
+            let t_star = match (next_event_t, next_completion) {
+                (Some(te), Some(tf)) => te.min(tf),
                 (Some(te), None) => te,
-                (None, Some((_, tf))) => tf,
+                (None, Some(tf)) => tf,
                 (None, None) => panic!(
                     "simulation deadlock: {completed}/{total} tasks done, no runnable events \
                      (cyclic or unsatisfiable dependencies?)"
@@ -323,62 +544,89 @@ impl<'t> Sim<'t> {
                 t_star >= now - 1e-12,
                 "time went backwards: {t_star} < {now}"
             );
-            // Advance all active flows to t_star.
-            let dt = (t_star - now).max(0.0);
-            if dt > 0.0 {
-                for f in active.iter_mut() {
-                    let moved = (f.rate * dt).min(f.remaining);
-                    f.remaining -= moved;
-                    for &ld in &f.linkdirs {
+            now = t_star;
+
+            let mut needs_refill = false;
+            let mut any_finished = false;
+            started.clear();
+
+            // Deliver every flow completion due now. The flow's entire
+            // leftover is charged to its linkdirs (exact conservation:
+            // the per-flow charges sum to precisely its byte count).
+            while let Some(p) = predictions.peek() {
+                if p.time > now {
+                    break;
+                }
+                let p = *p;
+                predictions.pop();
+                let si = p.slot as usize;
+                if !flows[si].alive || flows[si].epoch != p.epoch {
+                    continue;
+                }
+                let moved = flows[si].remaining;
+                if moved > 0.0 {
+                    for &ld in &flows[si].linkdirs {
                         linkdir_bytes[ld] += moved;
                     }
                 }
-            }
-            now = t_star;
-
-            let mut topology_changed = false;
-
-            // Complete any flows that drained (tolerate fp dust).
-            let mut fi = 0;
-            while fi < active.len() {
-                if active[fi].remaining <= 1e-6_f64.max(active[fi].rate * 1e-15) {
-                    let task_id = active.swap_remove(fi).task;
-                    tasks[task_id].finish = Some(now);
-                    completed += 1;
-                    for di in 0..tasks[task_id].dependents.len() {
-                        let dep = tasks[task_id].dependents[di];
-                        tasks[dep].pending_deps -= 1;
-                        if tasks[dep].pending_deps == 0 {
-                            ready_queue.push((dep, now));
-                        }
-                    }
-                    topology_changed = true;
-                } else {
-                    fi += 1;
+                flows[si].remaining = 0.0;
+                flows[si].last_update = now;
+                flows[si].alive = false;
+                let task_id = flows[si].task;
+                let rate = flows[si].rate;
+                // O(1) active-list removal
+                let pos = flows[si].list_pos as usize;
+                active_list.swap_remove(pos);
+                if pos < active_list.len() {
+                    flows[active_list[pos] as usize].list_pos = pos as u32;
                 }
+                free.push(p.slot);
+                // Membership + spare maintenance, and the finish fast
+                // path decision (§8 item 3): a departure only forces a
+                // refill if it leaves co-members behind on a saturated
+                // linkdir — only they could now be entitled to rise.
+                // Removal is O(1) per linkdir via member_pos (fix up the
+                // swapped-in entry's back-pointer).
+                let lds = std::mem::take(&mut flows[si].linkdirs);
+                let mps = std::mem::take(&mut flows[si].member_pos);
+                for (&ld, &mpos) in lds.iter().zip(&mps) {
+                    let mpos = mpos as usize;
+                    let list = &mut members[ld];
+                    debug_assert_eq!(list[mpos].0, p.slot, "membership back-pointer corrupt");
+                    list.swap_remove(mpos);
+                    if mpos < list.len() {
+                        let (s2, k2) = list[mpos];
+                        flows[s2 as usize].member_pos[k2 as usize] = mpos as u32;
+                    }
+                    let list = &mut members[ld];
+                    if list.is_empty() {
+                        spare[ld] = caps[ld]; // idle again: exact restore
+                    } else {
+                        if spare[ld] <= eps * caps[ld] {
+                            needs_refill = true;
+                        }
+                        spare[ld] += rate;
+                    }
+                }
+                finish_task!(task_id, now);
+                any_finished = true;
+                stats.completions += 1;
             }
 
             // Fire discrete events at t_star.
-            while let Some(e) = heap.peek() {
+            while let Some(e) = events.peek() {
                 if e.time > now + 1e-18 {
                     break;
                 }
-                let e = heap.pop().unwrap();
+                let e = events.pop().unwrap();
+                stats.events += 1;
                 match e.event {
                     Event::Activate(id) => {
                         let TaskSpec::Flow { bytes, .. } = tasks[id].spec else {
                             unreachable!()
                         };
                         if bytes <= 0.0 {
-                            tasks[id].finish = Some(now);
-                            completed += 1;
-                            for di in 0..tasks[id].dependents.len() {
-                                let dep = tasks[id].dependents[di];
-                                tasks[dep].pending_deps -= 1;
-                                if tasks[dep].pending_deps == 0 {
-                                    ready_queue.push((dep, now));
-                                }
-                            }
+                            finish_task!(id, now);
                         } else {
                             // move the linkdirs out of the spec: the flow
                             // owns them for its active lifetime
@@ -386,40 +634,96 @@ impl<'t> Sim<'t> {
                                 TaskSpec::Flow { linkdirs, .. } => std::mem::take(linkdirs),
                                 TaskSpec::Delay { .. } => unreachable!(),
                             };
-                            active.push(ActiveFlow {
-                                task: id,
-                                remaining: bytes,
-                                rate: 0.0,
-                                linkdirs,
-                            });
                             flows_total += 1;
-                            topology_changed = true;
+                            if linkdirs.is_empty() {
+                                // nothing to contend on: instant delivery
+                                finish_task!(id, now);
+                            } else {
+                                let slot = if let Some(s) = free.pop() {
+                                    let f = &mut flows[s as usize];
+                                    f.task = id;
+                                    f.remaining = bytes;
+                                    f.rate = 0.0;
+                                    f.last_update = now;
+                                    f.epoch += 1; // invalidate recycled-slot leftovers
+                                    f.alive = true;
+                                    f.linkdirs = linkdirs;
+                                    s
+                                } else {
+                                    flows.push(FlowSlot {
+                                        task: id,
+                                        remaining: bytes,
+                                        rate: 0.0,
+                                        last_update: now,
+                                        epoch: 0,
+                                        alive: true,
+                                        list_pos: 0,
+                                        linkdirs,
+                                        member_pos: Vec::new(),
+                                    });
+                                    (flows.len() - 1) as u32
+                                };
+                                flows[slot as usize].list_pos = active_list.len() as u32;
+                                active_list.push(slot);
+                                let mut mp = Vec::with_capacity(
+                                    flows[slot as usize].linkdirs.len(),
+                                );
+                                for (k, &ld) in
+                                    flows[slot as usize].linkdirs.iter().enumerate()
+                                {
+                                    mp.push(members[ld].len() as u32);
+                                    members[ld].push((slot, k as u32));
+                                }
+                                flows[slot as usize].member_pos = mp;
+                                started.push(slot);
+                            }
                         }
                     }
                     Event::DelayDone(id) => {
-                        tasks[id].finish = Some(now);
-                        completed += 1;
-                        for di in 0..tasks[id].dependents.len() {
-                            let dep = tasks[id].dependents[di];
-                            tasks[dep].pending_deps -= 1;
-                            if tasks[dep].pending_deps == 0 {
-                                ready_queue.push((dep, now));
-                            }
-                        }
+                        finish_task!(id, now);
                     }
                 }
             }
 
             drain_ready!();
-            // Rates only change when the active-flow set changes; skip the
-            // O(flows x links) refill otherwise (§Perf).
-            if topology_changed {
-                recompute(&mut active);
+
+            // Rate maintenance (§8 item 3). The start fast path applies
+            // only when every starter is the sole occupant of all its
+            // linkdirs: it then takes the spare capacity (== full caps on
+            // idle links) without disturbing any existing allocation. Any
+            // sharing — including two simultaneous starters on one link —
+            // falls back to the full refill, as does any departure that
+            // left co-members on a saturated linkdir.
+            if !started.is_empty() || any_finished {
+                let fast_start_ok = !needs_refill
+                    && started.iter().all(|&s| {
+                        flows[s as usize].linkdirs.iter().all(|&ld| members[ld].len() == 1)
+                    });
+                if fast_start_ok {
+                    for &s in &started {
+                        let si = s as usize;
+                        let mut r = f64::INFINITY;
+                        for &ld in &flows[si].linkdirs {
+                            r = r.min(spare[ld]);
+                        }
+                        flows[si].rate = r;
+                        for &ld in &flows[si].linkdirs {
+                            spare[ld] -= r;
+                        }
+                        push_prediction!(s);
+                        stats.fast_updates += 1;
+                    }
+                    if any_finished {
+                        stats.fast_updates += 1;
+                    }
+                } else {
+                    full_refill!();
+                }
             }
         }
 
         let finish: Vec<f64> = tasks.iter().map(|t| t.finish.unwrap()).collect();
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
-        SimResult { finish, makespan, linkdir_bytes, flows: flows_total }
+        SimResult { finish, makespan, linkdir_bytes, flows: flows_total, stats }
     }
 }

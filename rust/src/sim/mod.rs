@@ -16,10 +16,19 @@
 //!   model adds);
 //! - rates are recomputed with progressive filling whenever a flow starts
 //!   or finishes — piecewise-constant max-min rates between events.
+//!
+//! Two interchangeable cores execute the DAG:
+//! - [`engine`] — the event-driven engine (completion-prediction heap,
+//!   lazy byte settlement, incremental max-min; DESIGN.md §8). This is
+//!   what [`Sim::run`] uses.
+//! - [`reference`] — the pre-rewrite O(F²·L) core, retained as a
+//!   differential-testing oracle ([`Sim::run_reference`], or route whole
+//!   comm models through it with [`engine::with_reference_engine`]).
 
 pub mod engine;
+pub mod reference;
 
-pub use engine::{Sim, SimResult, TaskId};
+pub use engine::{with_reference_engine, Sim, SimResult, SimStats, TaskId};
 
 #[cfg(test)]
 mod tests {
@@ -150,6 +159,68 @@ mod tests {
         let b = sim.flow(p12, 1.0e9, 0.0, &[]);
         let res = sim.run();
         assert_eq!(res.makespan, res.finish(a).max(res.finish(b)));
+    }
+
+    /// Every unit-test scenario above, plus a contended all-pairs DAG,
+    /// must agree between the event-driven engine and the pre-rewrite
+    /// reference core. Settlement order differs (lazy vs per-event), so
+    /// agreement is to tight relative tolerance, not bit-for-bit — see
+    /// the numerical contract note in [`super::reference`].
+    #[test]
+    fn engines_agree_on_contended_dag() {
+        let t = crate::topology::systems::dgx1();
+        let build = |t: &crate::topology::Topology| {
+            let mut sim = Sim::new(t);
+            let mut last = None;
+            for a in 0..8usize {
+                for b in 0..8usize {
+                    if a != b {
+                        let p = t.route_gpus(a, b).unwrap();
+                        let lat = t.path_latency(&p);
+                        let deps: Vec<TaskId> = if (a + b) % 3 == 0 {
+                            last.into_iter().collect()
+                        } else {
+                            vec![]
+                        };
+                        last = Some(sim.flow(p, (a * 131 + b) as f64 * 1e6 + 1.0, lat, &deps));
+                    }
+                }
+            }
+            sim
+        };
+        let new = build(&t).run();
+        let old = build(&t).run_reference();
+        assert_eq!(new.flows, old.flows);
+        let rel = (new.makespan - old.makespan).abs() / old.makespan;
+        assert!(rel < 1e-9, "makespan diverged: {} vs {}", new.makespan, old.makespan);
+        for (i, (a, b)) in new.finish_times().iter().zip(old.finish_times()).enumerate() {
+            // mixed tolerance: the reference core's 1e-6-byte early-
+            // completion window shifts finishes absolutely, not relatively
+            assert!((a - b).abs() < 1e-11 + 1e-9 * b.abs(), "task {i}: {a} vs {b}");
+        }
+        for (ld, (a, b)) in new.linkdir_bytes.iter().zip(&old.linkdir_bytes).enumerate() {
+            let denom = b.abs().max(1.0);
+            assert!((a - b).abs() / denom < 1e-6, "linkdir {ld}: {a} vs {b}");
+        }
+    }
+
+    /// `with_reference_engine` must reroute `Sim::run` on this thread
+    /// (and restore the default afterwards): the reference core reports
+    /// all-zero stats while the event engine counts its work.
+    #[test]
+    fn reference_override_is_scoped() {
+        let t = line_topo();
+        let run_once = || {
+            let mut sim = Sim::new(&t);
+            let path = t.route_gpus(0, 1).unwrap();
+            sim.flow(path, 1.0e9, 0.0, &[]);
+            sim.run()
+        };
+        let via_ref = crate::sim::with_reference_engine(&run_once);
+        assert_eq!(via_ref.stats, Default::default());
+        let via_event = run_once();
+        assert!(via_event.stats.heap_pushes > 0, "override leaked out of scope");
+        assert!((via_ref.makespan - via_event.makespan).abs() / via_event.makespan < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! The pre-rewrite simulation core, kept as a differential-testing
+//! oracle for the event-driven engine in [`super::engine`].
+//!
+//! This is the seed engine exactly as it shipped (minus one dead scratch
+//! buffer): it scans **all** active flows at every event to find the
+//! next completion, advances byte accounting for every flow at every
+//! event, and rebuilds max-min rates from scratch on every start/finish
+//! — O(F²·L) for F concurrent flows, which is why it was replaced
+//! (DESIGN.md §8). It stays in the tree because:
+//!
+//! - parity tests (`tests/proptests.rs`, `tests/engine_scaling.rs`)
+//!   assert the event-driven engine reproduces its results on random
+//!   DAGs and on the paper's own fig2 workloads — the "golden values
+//!   before the rewrite" are regenerated on demand instead of pinned as
+//!   constants;
+//! - `bench_engine` runs both cores on the same DAGs and reports the
+//!   speedup (`BENCH_engine.json`), so the ≥3× acceptance bar is
+//!   measured, not asserted.
+//!
+//! Numerical contract: both engines integrate the same piecewise-
+//! constant max-min rates, but this one settles byte accounting at every
+//! event while the event-driven core settles lazily per rate change.
+//! f64 addition is not associative, so results agree to ~1e-9 relative
+//! tolerance, not bit-for-bit; each engine is individually bit-exact
+//! deterministic across runs.
+
+use std::collections::BinaryHeap;
+
+use super::engine::{Event, HeapEntry, LinkDir, Sim, SimResult, SimStats, TaskSpec};
+
+/// An active flow being rate-controlled. `linkdirs` is moved out of the
+/// task spec at activation so the hot loops (rate recomputation, byte
+/// accounting) touch a flat, cache-friendly array instead of chasing the
+/// task table.
+#[derive(Clone, Debug)]
+struct ActiveFlow {
+    task: usize,
+    remaining: f64,
+    rate: f64,
+    linkdirs: Vec<LinkDir>,
+}
+
+impl<'t> Sim<'t> {
+    /// Execute the DAG on the pre-rewrite reference core; consumes the
+    /// builder. Produces a [`SimResult`] with all-zero
+    /// [`SimStats`] (this engine predates the counters).
+    pub fn run_reference(self) -> SimResult {
+        let Sim { topo, mut tasks, roots } = self;
+        let n_linkdirs = topo.links.len() * 2;
+        let caps: Vec<f64> = (0..n_linkdirs)
+            .map(|ld| topo.links[ld / 2].class.bandwidth())
+            .collect();
+        let mut linkdir_bytes = vec![0.0; n_linkdirs];
+
+        let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut schedule = |heap: &mut BinaryHeap<HeapEntry>, time: f64, event: Event| {
+            let s = seq;
+            seq += 1;
+            heap.push(HeapEntry { time, seq: s, event });
+        };
+
+        let mut active: Vec<ActiveFlow> = Vec::new();
+        let mut now = 0.0f64;
+        let mut flows_total = 0usize;
+        let mut completed = 0usize;
+        let total = tasks.len();
+
+        // Readiness propagation: when a task becomes ready at time t,
+        // schedule its activation/completion event.
+        let mut ready_queue: Vec<(usize, f64)> = roots.iter().map(|&r| (r, 0.0)).collect();
+
+        macro_rules! drain_ready {
+            () => {
+                while let Some((id, t)) = ready_queue.pop() {
+                    match tasks[id].spec {
+                        TaskSpec::Flow { latency, .. } => {
+                            schedule(&mut heap, t + latency, Event::Activate(id));
+                        }
+                        TaskSpec::Delay { secs } => {
+                            schedule(&mut heap, t + secs, Event::DelayDone(id));
+                        }
+                    }
+                }
+            };
+        }
+
+        // Recompute max-min fair rates via progressive filling. Scratch
+        // buffers are hoisted out of the closure and reused across calls
+        // (§Perf: allocation in this loop dominated grid regeneration).
+        let mut scratch_cap: Vec<f64> = caps.clone();
+        let mut scratch_cnt: Vec<u32> = vec![0; n_linkdirs];
+        let mut scratch_unfrozen: Vec<usize> = Vec::new();
+        let mut recompute = |active: &mut [ActiveFlow]| {
+            if active.is_empty() {
+                return;
+            }
+            scratch_cap.copy_from_slice(&caps);
+            let remaining_cap = &mut scratch_cap;
+            // compact list of still-unfrozen flow indices: each round
+            // touches only the flows whose rate is still rising, so the
+            // total refill cost is ~ sum over rounds of survivors rather
+            // than rounds x all flows (§Perf iteration 2).
+            let unfrozen_idx = &mut scratch_unfrozen;
+            unfrozen_idx.clear();
+            unfrozen_idx.extend(0..active.len());
+            for f in active.iter_mut() {
+                f.rate = 0.0;
+            }
+            // per-round counts (the linkdir arrays are tiny — zeroing
+            // them wholesale beats touched-set bookkeeping, §Perf iter 3)
+            let cnt = &mut scratch_cnt;
+            while !unfrozen_idx.is_empty() {
+                cnt.iter_mut().for_each(|c| *c = 0);
+                for &fi in unfrozen_idx.iter() {
+                    for &ld in &active[fi].linkdirs {
+                        cnt[ld] += 1;
+                    }
+                }
+                // smallest fair increment across loaded linkdirs
+                let mut inc = f64::INFINITY;
+                for ld in 0..cnt.len() {
+                    if cnt[ld] > 0 {
+                        inc = inc.min(remaining_cap[ld] / cnt[ld] as f64);
+                    }
+                }
+                if !inc.is_finite() {
+                    for &fi in unfrozen_idx.iter() {
+                        active[fi].rate = f64::INFINITY;
+                    }
+                    break;
+                }
+                // raise all unfrozen flows by inc, charge links
+                for &fi in unfrozen_idx.iter() {
+                    active[fi].rate += inc;
+                }
+                for ld in 0..cnt.len() {
+                    remaining_cap[ld] -= inc * cnt[ld] as f64;
+                }
+                // freeze flows crossing saturated linkdirs
+                let eps = 1e-9;
+                let before = unfrozen_idx.len();
+                unfrozen_idx.retain(|&fi| {
+                    let saturated = active[fi]
+                        .linkdirs
+                        .iter()
+                        .any(|&ld| remaining_cap[ld] <= eps * caps[ld]);
+                    !saturated
+                });
+                if unfrozen_idx.len() == before {
+                    // Numerical safety: freeze everything at current rates.
+                    unfrozen_idx.clear();
+                }
+            }
+        };
+
+        drain_ready!();
+        recompute(&mut active);
+
+        while completed < total {
+            // Next discrete event vs next flow completion.
+            let next_event_t = heap.peek().map(|e| e.time);
+            let mut next_flow: Option<(usize, f64)> = None;
+            for (fi, f) in active.iter().enumerate() {
+                let t = if f.rate > 0.0 {
+                    now + f.remaining / f.rate
+                } else if f.remaining <= 0.0 {
+                    now
+                } else {
+                    f64::INFINITY
+                };
+                if next_flow.map(|(_, bt)| t < bt).unwrap_or(true) {
+                    next_flow = Some((fi, t));
+                }
+            }
+            let t_star = match (next_event_t, next_flow) {
+                (Some(te), Some((_, tf))) => te.min(tf),
+                (Some(te), None) => te,
+                (None, Some((_, tf))) => tf,
+                (None, None) => panic!(
+                    "simulation deadlock: {completed}/{total} tasks done, no runnable events \
+                     (cyclic or unsatisfiable dependencies?)"
+                ),
+            };
+            assert!(
+                t_star >= now - 1e-12,
+                "time went backwards: {t_star} < {now}"
+            );
+            // Advance all active flows to t_star.
+            let dt = (t_star - now).max(0.0);
+            if dt > 0.0 {
+                for f in active.iter_mut() {
+                    let moved = (f.rate * dt).min(f.remaining);
+                    f.remaining -= moved;
+                    for &ld in &f.linkdirs {
+                        linkdir_bytes[ld] += moved;
+                    }
+                }
+            }
+            now = t_star;
+
+            let mut topology_changed = false;
+
+            // Complete any flows that drained (tolerate fp dust).
+            let mut fi = 0;
+            while fi < active.len() {
+                if active[fi].remaining <= 1e-6_f64.max(active[fi].rate * 1e-15) {
+                    let task_id = active.swap_remove(fi).task;
+                    tasks[task_id].finish = Some(now);
+                    completed += 1;
+                    for di in 0..tasks[task_id].dependents.len() {
+                        let dep = tasks[task_id].dependents[di];
+                        tasks[dep].pending_deps -= 1;
+                        if tasks[dep].pending_deps == 0 {
+                            ready_queue.push((dep, now));
+                        }
+                    }
+                    topology_changed = true;
+                } else {
+                    fi += 1;
+                }
+            }
+
+            // Fire discrete events at t_star.
+            while let Some(e) = heap.peek() {
+                if e.time > now + 1e-18 {
+                    break;
+                }
+                let e = heap.pop().unwrap();
+                match e.event {
+                    Event::Activate(id) => {
+                        let TaskSpec::Flow { bytes, .. } = tasks[id].spec else {
+                            unreachable!()
+                        };
+                        if bytes <= 0.0 {
+                            tasks[id].finish = Some(now);
+                            completed += 1;
+                            for di in 0..tasks[id].dependents.len() {
+                                let dep = tasks[id].dependents[di];
+                                tasks[dep].pending_deps -= 1;
+                                if tasks[dep].pending_deps == 0 {
+                                    ready_queue.push((dep, now));
+                                }
+                            }
+                        } else {
+                            // move the linkdirs out of the spec: the flow
+                            // owns them for its active lifetime
+                            let linkdirs = match &mut tasks[id].spec {
+                                TaskSpec::Flow { linkdirs, .. } => std::mem::take(linkdirs),
+                                TaskSpec::Delay { .. } => unreachable!(),
+                            };
+                            active.push(ActiveFlow {
+                                task: id,
+                                remaining: bytes,
+                                rate: 0.0,
+                                linkdirs,
+                            });
+                            flows_total += 1;
+                            topology_changed = true;
+                        }
+                    }
+                    Event::DelayDone(id) => {
+                        tasks[id].finish = Some(now);
+                        completed += 1;
+                        for di in 0..tasks[id].dependents.len() {
+                            let dep = tasks[id].dependents[di];
+                            tasks[dep].pending_deps -= 1;
+                            if tasks[dep].pending_deps == 0 {
+                                ready_queue.push((dep, now));
+                            }
+                        }
+                    }
+                }
+            }
+
+            drain_ready!();
+            // Rates only change when the active-flow set changes; skip the
+            // O(flows x links) refill otherwise (§Perf).
+            if topology_changed {
+                recompute(&mut active);
+            }
+        }
+
+        let finish: Vec<f64> = tasks.iter().map(|t| t.finish.unwrap()).collect();
+        let makespan = finish.iter().cloned().fold(0.0, f64::max);
+        SimResult {
+            finish,
+            makespan,
+            linkdir_bytes,
+            flows: flows_total,
+            stats: SimStats::default(),
+        }
+    }
+}

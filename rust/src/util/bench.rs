@@ -7,7 +7,35 @@
 
 use std::time::Instant;
 
+use super::json::{obj, Json};
 use super::stats::percentile;
+
+/// Is quick (smoke) mode on? Set `AGV_BENCH_QUICK=1` to slash iteration
+/// counts across every bench target — the CI bench-smoke step uses this
+/// so the bench binaries keep building and running without burning
+/// minutes on real measurement.
+pub fn quick_mode() -> bool {
+    std::env::var("AGV_BENCH_QUICK").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// `n` normally, 1 in quick mode. Wrap every bench target's timed
+/// iteration count in this.
+pub fn iters(n: usize) -> usize {
+    if quick_mode() {
+        1
+    } else {
+        n
+    }
+}
+
+/// `n` normally, 0 in quick mode. Wrap warmup counts in this.
+pub fn warmup(n: usize) -> usize {
+    if quick_mode() {
+        0
+    } else {
+        n
+    }
+}
 
 /// Timing summary of one benchmark case.
 #[derive(Clone, Debug)]
@@ -27,6 +55,23 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form for `BENCH_*.json` files. `extra` appends
+    /// derived metrics (e.g. `flows_per_s`) next to the timing fields.
+    pub fn to_json(&self, extra: &[(&str, f64)]) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("p50_s", Json::Num(self.p50_s)),
+            ("p95_s", Json::Num(self.p95_s)),
+            ("min_s", Json::Num(self.min_s)),
+        ];
+        for &(k, v) in extra {
+            pairs.push((k, Json::Num(v)));
+        }
+        obj(pairs)
+    }
+
     /// Stable one-line report (name, iters, mean/p50/p95/min).
     pub fn report_line(&self) -> String {
         format!(
@@ -99,4 +144,21 @@ mod tests {
         let r = bench("my_bench", 0, 1, || {});
         assert!(r.report_line().contains("my_bench"));
     }
+
+    #[test]
+    fn to_json_has_timing_and_extra_fields() {
+        let r = bench("j", 0, 3, || {});
+        let j = r.to_json(&[("flows_per_s", 123.5)]);
+        assert_eq!(j.get("name").unwrap().as_str(), Some("j"));
+        assert_eq!(j.get("iters").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("flows_per_s").unwrap().as_f64(), Some(123.5));
+        assert!(j.get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        // must render to parseable JSON for the BENCH_*.json artifacts
+        let rendered = j.render();
+        assert_eq!(crate::util::json::Json::parse(&rendered).unwrap(), j);
+    }
+
+    // quick_mode()/iters()/warmup() read the environment; mutating env
+    // vars in parallel unit tests races, so their contract is exercised
+    // by the CI bench-smoke step (AGV_BENCH_QUICK=1 make bench-smoke).
 }

@@ -98,6 +98,75 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize back to JSON text (compact, deterministic: object keys
+    /// come out in `BTreeMap` order). Non-finite numbers — which JSON
+    /// cannot represent — serialize as `null`. Round-trips through
+    /// [`Json::parse`]; `BENCH_*.json` emission uses this.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // `{}` on f64 prints the shortest exact round-trip form
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Build a [`Json::Obj`] from key/value pairs (serialization helper).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 struct Parser<'a> {
@@ -187,6 +256,24 @@ impl<'a> Parser<'a> {
                         b'n' => '\n',
                         b't' => '\t',
                         b'r' => '\r',
+                        b'u' => {
+                            // \uXXXX basic-plane escapes (no surrogate pairs)
+                            if self.pos + 4 > self.b.len() {
+                                return Err(self.err("eof in \\u escape"));
+                            }
+                            let digits = &self.b[self.pos..self.pos + 4];
+                            // from_str_radix alone would accept "+041"
+                            if !digits.iter().all(|b| b.is_ascii_hexdigit()) {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(digits)
+                                .ok()
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            char::from_u32(hex)
+                                .ok_or_else(|| self.err("surrogate \\u escape unsupported"))?
+                        }
                         _ => return Err(self.err("unsupported escape")),
                     });
                 }
@@ -311,5 +398,44 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        for doc in [
+            r#"{"a":[1,2.5,-3],"b":"x\ny","c":{"nested":true},"d":null}"#,
+            "[]",
+            "{}",
+            r#""quote \" backslash \\ tab \t""#,
+            "-1.5e2",
+        ] {
+            let v = Json::parse(doc).unwrap();
+            let rendered = v.render();
+            assert_eq!(Json::parse(&rendered).unwrap(), v, "doc: {doc}");
+        }
+    }
+
+    #[test]
+    fn render_is_compact_and_sorted() {
+        let v = obj(vec![
+            ("zeta", Json::Num(1.0)),
+            ("alpha", Json::Str("s".into())),
+        ]);
+        assert_eq!(v.render(), r#"{"alpha":"s","zeta":1}"#);
+    }
+
+    #[test]
+    fn render_nonfinite_as_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn unicode_escape_parses() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap().as_str(), Some("A"));
+        assert_eq!(Json::parse("\"\\u000a\"").unwrap().as_str(), Some("\n"));
+        assert!(Json::parse("\"\\ud800\"").is_err());
+        assert!(Json::parse("\"\\u00g1\"").is_err());
+        assert!(Json::parse("\"\\u+041\"").is_err());
     }
 }

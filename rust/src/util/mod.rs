@@ -4,14 +4,16 @@
 //! dependency closure — no `rand`, `criterion`, `proptest` or `clap` — so
 //! this module provides the small, tested equivalents the rest of the
 //! crate needs: a seeded PRNG, summary statistics, a benchmark harness
-//! (used by every `cargo bench` target), a property-test runner, a CLI
-//! parser and ASCII plotting for figure reproduction.
+//! (used by every `cargo bench` target), a bounded worker pool for grid
+//! fan-out, a property-test runner, a CLI parser and ASCII plotting for
+//! figure reproduction.
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
 pub mod plot;
+pub mod pool;
 pub mod prng;
 pub mod prop;
 pub mod stats;

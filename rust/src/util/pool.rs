@@ -1,0 +1,129 @@
+//! Bounded worker pool for embarrassingly parallel job batches.
+//!
+//! The first generation of `report::parallel_map` spawned **one OS
+//! thread per job** — fine for the 8-cell fig2 grid, pathological for
+//! sweeps with hundreds of cells (thread churn, stack memory, scheduler
+//! pressure). This pool spawns at most
+//! [`std::thread::available_parallelism`] scoped workers and feeds them
+//! jobs through an atomic cursor; results come back in job order.
+//!
+//! Scoped threads (stable since 1.63) mean jobs may borrow from the
+//! caller's stack — the gdr-limit sweep hands workers `&Topology` /
+//! `&TensorSpec` directly instead of cloning into `'static` closures.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of workers a batch of `jobs` jobs will use: the machine's
+/// available parallelism (fallback 4 if undetectable), capped by the job
+/// count.
+pub fn worker_count(jobs: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    // not .clamp(): jobs may be 0, and clamp(1, 0) would panic
+    if jobs == 0 {
+        1
+    } else {
+        hw.min(jobs)
+    }
+}
+
+/// Run every job on a bounded pool of scoped worker threads and collect
+/// the results in job order.
+///
+/// Jobs are claimed through an atomic cursor, so a long job does not
+/// hold up the queue behind it. A panicking job propagates: the scope
+/// join panics the caller, matching the old spawn-per-job behavior.
+pub fn parallel_map<T, F>(jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = jobs.len();
+    // zero/one job or a single-core box: run inline, no threads
+    let workers = worker_count(n);
+    if n <= 1 || workers == 1 {
+        return jobs.into_iter().map(|j| j()).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let jobs: Vec<Mutex<Option<F>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i]
+                    .lock()
+                    .expect("job slot poisoned")
+                    .take()
+                    .expect("job claimed twice");
+                let out = job();
+                *results[i].lock().expect("result slot poisoned") = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("worker panicked")
+                .expect("job skipped")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<_> = (0..64usize).map(|i| move || i * i).collect();
+        let out = parallel_map(jobs);
+        assert_eq!(out, (0..64usize).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_many_more_jobs_than_cores() {
+        // the old spawn-per-job implementation created 1000 OS threads
+        // here; the pool must stay bounded and still finish correctly
+        let jobs: Vec<_> = (0..1000usize).map(|i| move || i + 1).collect();
+        let out = parallel_map(jobs);
+        assert_eq!(out.len(), 1000);
+        assert_eq!(out[999], 1000);
+        assert_eq!(out.iter().sum::<usize>(), 1000 * 1001 / 2);
+    }
+
+    #[test]
+    fn jobs_may_borrow_from_the_caller() {
+        // scoped workers: no 'static bound on the closures
+        let data: Vec<u64> = (0..100).collect();
+        let jobs: Vec<_> = (0..10usize)
+            .map(|c| {
+                let data = &data;
+                move || data.iter().skip(c * 10).take(10).sum::<u64>()
+            })
+            .collect();
+        let out = parallel_map(jobs);
+        assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<fn() -> u8> = Vec::new();
+        assert!(parallel_map(empty).is_empty());
+        assert_eq!(parallel_map(vec![|| 7u8]), vec![7]);
+    }
+
+    #[test]
+    fn worker_count_is_bounded() {
+        assert_eq!(worker_count(0), 1);
+        assert_eq!(worker_count(1), 1);
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        assert_eq!(worker_count(10_000), hw);
+    }
+}

@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test verify bench bench-smoke artifacts fmt clippy
+.PHONY: build test test-conformance verify bench bench-smoke artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -8,20 +8,27 @@ build:
 test:
 	cargo test -q
 
+# The schedule-conformance property harness on its own (CI runs this as
+# a dedicated step; it is also part of `make test`).
+test-conformance:
+	cargo test --test schedule_conformance
+
 verify: build test
 
-# Full measurement run; bench_engine writes BENCH_engine.json at the
-# repo root (event-driven vs reference engine, flows/s, speedups).
+# Full measurement run; bench_engine writes BENCH_engine.json and
+# bench_hierarchy writes BENCH_hierarchy.json at the repo root.
 bench:
 	cargo bench --bench bench_engine -- --json
+	cargo bench --bench bench_hierarchy -- --json
 	cargo bench --bench bench_ablations
 
 # CI smoke: every bench target builds and runs with slashed iteration
 # counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick
-# mode bench_engine writes BENCH_engine.quick.json (scratch), never
-# the canonical BENCH_engine.json.
+# mode bench_engine/bench_hierarchy write BENCH_*.quick.json (scratch),
+# never the canonical BENCH_*.json.
 bench-smoke:
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_engine -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_hierarchy -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_ablations
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_osu_fig2
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_refacto_fig3

@@ -1,0 +1,124 @@
+//! Hierarchical Allgatherv + auto-selection benchmarks: wall-clock cost
+//! of schedule construction and of the selector's exhaustive argmin,
+//! plus the *simulated* times the hierarchy is about — hierarchical vs
+//! flat vs NCCL on multi-DGX, and auto vs the best fixed library.
+//!
+//! `cargo bench --bench bench_hierarchy [-- --json]`
+//!
+//! With `--json` (what `make bench` passes) results land in
+//! `BENCH_hierarchy.json` at the repo root (quick mode writes the
+//! scratch `BENCH_hierarchy.quick.json` instead, like `bench_engine`).
+
+use agv_bench::comm::algorithms::{hierarchical_allgatherv, ring_allgatherv, LeaderAlgo};
+use agv_bench::comm::select::{simulate, Algo, AlgoSelector, Candidate};
+use agv_bench::comm::{run_allgatherv, Library, Params};
+use agv_bench::topology::systems::{multi_dgx, node_groups};
+use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
+use agv_bench::util::json::{obj, Json};
+use agv_bench::util::{fmt_bytes, fmt_time};
+
+fn main() {
+    let json_out = std::env::args().any(|a| a == "--json");
+    let params = Params::default();
+    let topo = multi_dgx(2);
+    let p = 16;
+    let groups = node_groups(&topo, p);
+
+    let mut cases: Vec<Json> = Vec::new();
+
+    // schedule construction cost (hierarchical vs flat ring)
+    let r = bench("schedule/hierarchical_ring/multi_dgx2_p16", warmup(2), iters(200), || {
+        black_box(hierarchical_allgatherv(p, &groups, LeaderAlgo::Ring));
+    });
+    println!("{}", r.report_line());
+    cases.push(r.to_json(&[]));
+    let r = bench("schedule/flat_ring/p16", warmup(2), iters(200), || {
+        black_box(ring_allgatherv(p, None));
+    });
+    println!("{}", r.report_line());
+    cases.push(r.to_json(&[]));
+
+    // selector cost: exhaustive argmin vs one cached decision
+    let cv = vec![4u64 << 20; p];
+    let r = bench("selector/select_fresh/multi_dgx2_16x4MB", warmup(1), iters(10), || {
+        let sel = AlgoSelector::new(params);
+        black_box(sel.select_fresh(&topo, &cv));
+    });
+    println!("{}", r.report_line());
+    cases.push(r.to_json(&[]));
+    let r = bench("selector/select_cached/multi_dgx2_16x4MB", warmup(1), iters(10), || {
+        let mut sel = AlgoSelector::new(params);
+        sel.select(&topo, &cv); // miss fills the table
+        for _ in 0..8 {
+            // hits simulate only the cached winner + library defaults
+            black_box(sel.select(&topo, &cv));
+        }
+    });
+    println!("{}", r.report_line());
+    cases.push(r.to_json(&[]));
+
+    // simulated-time table: hierarchical vs flat vs NCCL vs auto
+    println!("\n=== simulated Allgatherv on multi-dgx-2 @ 16 GPUs (regular counts) ===");
+    println!(
+        "{:>10} {:>14} {:>14} {:>14} {:>14} {:>14}",
+        "size/rank", "flat-ring", "hier-ring", "hier-bruck", "nccl", "auto"
+    );
+    let sizes: &[u64] = if quick_mode() {
+        &[64 << 10, 1 << 20]
+    } else {
+        &[64 << 10, 1 << 20, 4 << 20, 16 << 20]
+    };
+    let mut simulated: Vec<Json> = Vec::new();
+    let mut auto_speedups: Vec<Json> = Vec::new();
+    for &m in sizes {
+        let cv = vec![m; p];
+        let t = |c: Candidate| simulate(&topo, params, c, &cv).map(|r| r.time).unwrap_or(f64::NAN);
+        let flat = t(Candidate { lib: Library::MpiCuda, algo: Algo::Ring });
+        let hring = t(Candidate { lib: Library::MpiCuda, algo: Algo::HierarchicalRing });
+        let hbruck = t(Candidate { lib: Library::MpiCuda, algo: Algo::HierarchicalBruck });
+        let nccl = run_allgatherv(Library::Nccl, &topo, &cv).time;
+        let auto = AlgoSelector::new(params).select_fresh(&topo, &cv);
+        println!(
+            "{:>10} {:>14} {:>14} {:>14} {:>14} {:>14}  <- {}",
+            fmt_bytes(m),
+            fmt_time(flat),
+            fmt_time(hring),
+            fmt_time(hbruck),
+            fmt_time(nccl),
+            fmt_time(auto.time),
+            auto.candidate.label()
+        );
+        let best_fixed = Library::all()
+            .into_iter()
+            .map(|l| run_allgatherv(l, &topo, &cv).time)
+            .fold(f64::INFINITY, f64::min);
+        simulated.push(obj(vec![
+            ("per_rank_bytes", Json::Num(m as f64)),
+            ("flat_ring_s", Json::Num(flat)),
+            ("hier_ring_s", Json::Num(hring)),
+            ("hier_bruck_s", Json::Num(hbruck)),
+            ("nccl_s", Json::Num(nccl)),
+            ("auto_s", Json::Num(auto.time)),
+            ("auto_choice", Json::Str(auto.candidate.label())),
+            ("auto_speedup_vs_best_fixed", Json::Num(best_fixed / auto.time)),
+        ]));
+        auto_speedups.push(Json::Num(best_fixed / auto.time));
+    }
+
+    if json_out {
+        let doc = obj(vec![
+            ("bench", Json::Str("bench_hierarchy".into())),
+            ("quick", Json::Bool(quick_mode())),
+            ("cases", Json::Arr(cases)),
+            ("simulated_multi_dgx2_16", Json::Arr(simulated)),
+            ("auto_speedup_vs_best_fixed", Json::Arr(auto_speedups)),
+        ]);
+        let path = if quick_mode() {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hierarchy.quick.json")
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hierarchy.json")
+        };
+        std::fs::write(path, doc.render() + "\n").expect("write BENCH_hierarchy json");
+        println!("\nwrote {path}");
+    }
+}

@@ -194,6 +194,162 @@ pub fn bcast_series_allgatherv(p: usize, order: Option<&[usize]>) -> Vec<Schedul
     (0..p).map(|root| ring_bcast(p, root, order)).collect()
 }
 
+/// Which algorithm the group leaders run among themselves in a
+/// hierarchical schedule (phase 2 of [`hierarchical_allgatherv`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaderAlgo {
+    /// Ring over the leader set: G-1 steps, bandwidth-optimal — each
+    /// group's block set crosses every inter-group boundary exactly once.
+    Ring,
+    /// Bruck over the leader set: ceil(log2 G) steps, latency-optimal.
+    Bruck,
+}
+
+/// Two-level (hierarchical) Allgatherv over a node grouping (Awan et
+/// al.'s dense-GPU two-level design; see DESIGN.md §3):
+///
+/// 1. **intra-group exchange** — one step in which every member sends
+///    its own block to every other member of its group (the NVLink mesh
+///    absorbs the fan-out; afterwards each member, including the group
+///    leader `groups[g][0]`, holds its whole group);
+/// 2. **inter-group allgatherv among the leaders** — ring or Bruck over
+///    the leader set, moving whole *group block sets*; only these sends
+///    cross group (node) boundaries;
+/// 3. **intra-group dissemination of the remote blocks** — a binomial
+///    tree per group, rooted at the leader, shipping every block *not*
+///    in the group (members already own the local ones from phase 1).
+///    The power-of-two strides land on NVLink edges on DGX-class nodes.
+///
+/// Every block still moves exactly P-1 times (the delivery-minimal
+/// count shared by all flat Allgatherv schedules here): local members
+/// get it in phase 1, leaders in phase 2, remote members in phase 3 —
+/// the conformance harness asserts this closed form per block.
+///
+/// `groups` must partition `0..p`; group g's leader is `groups[g][0]`.
+pub fn hierarchical_allgatherv(p: usize, groups: &[Vec<usize>], inter: LeaderAlgo) -> Schedule {
+    assert!(p >= 1 && !groups.is_empty(), "need ranks and at least one group");
+    let mut seen = vec![false; p];
+    for g in groups {
+        assert!(!g.is_empty(), "empty group");
+        for &r in g {
+            assert!(r < p && !seen[r], "groups must partition 0..{p}: rank {r}");
+            seen[r] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "groups must cover every rank 0..{p}");
+    let g_count = groups.len();
+    let leaders: Vec<usize> = groups.iter().map(|g| g[0]).collect();
+    let mut steps: Vec<Vec<SendOp>> = Vec::new();
+
+    // Phase 1: one-step all-pairs exchange inside each group.
+    let mut exchange = Vec::new();
+    for g in groups {
+        for &from in g {
+            for &to in g {
+                if from != to {
+                    exchange.push(SendOp { from, to, blocks: vec![from] });
+                }
+            }
+        }
+    }
+    if !exchange.is_empty() {
+        steps.push(exchange);
+    }
+
+    // Phase 2: allgatherv among the leaders; the unit of exchange is a
+    // whole group's block set.
+    match inter {
+        LeaderAlgo::Ring => {
+            // step s: leader at position i forwards group (i - s) mod G.
+            for s in 0..g_count.saturating_sub(1) {
+                let mut ops = Vec::new();
+                for pos in 0..g_count {
+                    let src_group = (pos + g_count - s) % g_count;
+                    ops.push(SendOp {
+                        from: leaders[pos],
+                        to: leaders[(pos + 1) % g_count],
+                        blocks: groups[src_group].clone(),
+                    });
+                }
+                steps.push(ops);
+            }
+        }
+        LeaderAlgo::Bruck => {
+            // held group-ids per leader position; send what the receiver
+            // is missing (exactly one delivery per (group, leader)).
+            let mut held: Vec<Vec<usize>> = (0..g_count).map(|i| vec![i]).collect();
+            let mut dist = 1;
+            while dist < g_count {
+                let mut ops = Vec::new();
+                let mut new_held = held.clone();
+                for pos in 0..g_count {
+                    let to_pos = (pos + g_count - dist) % g_count;
+                    let missing: Vec<usize> = held[pos]
+                        .iter()
+                        .copied()
+                        .filter(|gi| !held[to_pos].contains(gi))
+                        .collect();
+                    if !missing.is_empty() {
+                        new_held[to_pos].extend(missing.iter().copied());
+                        let blocks: Vec<usize> = missing
+                            .iter()
+                            .flat_map(|&gi| groups[gi].iter().copied())
+                            .collect();
+                        ops.push(SendOp {
+                            from: leaders[pos],
+                            to: leaders[to_pos],
+                            blocks,
+                        });
+                    }
+                }
+                for h in new_held.iter_mut() {
+                    h.sort_unstable();
+                    h.dedup();
+                }
+                held = new_held;
+                steps.push(ops);
+                dist <<= 1;
+            }
+        }
+    }
+
+    // Phase 3: per-group binomial dissemination of the remote blocks,
+    // rooted at the leader (relative index 0). Rounds are merged across
+    // groups so independent groups proceed concurrently.
+    let mut rounds: Vec<Vec<SendOp>> = Vec::new();
+    for g in groups {
+        let k = g.len();
+        if k < 2 || g_count < 2 {
+            continue; // nothing remote, or nobody to forward to
+        }
+        let in_group = |b: usize| g.contains(&b);
+        let remote: Vec<usize> = (0..p).filter(|&b| !in_group(b)).collect();
+        let mut round = 0usize;
+        let mut dist = k.next_power_of_two() / 2;
+        while dist >= 1 {
+            let mut ops = Vec::new();
+            for rr in (0..k).step_by(2 * dist) {
+                if rr + dist < k {
+                    ops.push(SendOp {
+                        from: g[rr],
+                        to: g[rr + dist],
+                        blocks: remote.clone(),
+                    });
+                }
+            }
+            if rounds.len() <= round {
+                rounds.push(Vec::new());
+            }
+            rounds[round].extend(ops);
+            round += 1;
+            dist /= 2;
+        }
+    }
+    steps.extend(rounds.into_iter().filter(|r| !r.is_empty()));
+
+    Schedule { steps }
+}
+
 // ---------------------------------------------------------------------------
 // Logical executor: verifies delivery correctness of any schedule.
 // ---------------------------------------------------------------------------
@@ -306,6 +462,18 @@ mod tests {
     }
 
     #[test]
+    fn sendop_bytes_zero_counts_and_empty_blocks() {
+        // zero-count blocks contribute nothing (the §IV zero-heavy
+        // vectors exercise this through every schedule); an empty block
+        // list is a zero-byte send, not an error
+        let op = SendOp { from: 0, to: 1, blocks: vec![0, 1, 2] };
+        assert_eq!(op.bytes(&[0, 0, 0]), 0);
+        assert_eq!(op.bytes(&[0, 7, 0]), 7);
+        let empty = SendOp { from: 0, to: 1, blocks: vec![] };
+        assert_eq!(empty.bytes(&[1, 2, 3]), 0);
+    }
+
+    #[test]
     fn ring_step_volume_is_irregular_counts() {
         // with irregular counts the per-step bytes differ per rank
         let counts = [100u64, 5, 60];
@@ -338,6 +506,75 @@ mod tests {
             prop_assert!(all_delivered(&execute(p, &refs)), "p={p}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn hierarchical_delivers_all_groupings() {
+        // contiguous node-style groupings of every shape
+        for p in 1..=12usize {
+            for gsize in 1..=p {
+                let groups: Vec<Vec<usize>> =
+                    (0..p).collect::<Vec<_>>().chunks(gsize).map(|c| c.to_vec()).collect();
+                for inter in [LeaderAlgo::Ring, LeaderAlgo::Bruck] {
+                    let s = hierarchical_allgatherv(p, &groups, inter);
+                    assert!(
+                        all_delivered(&execute(p, &[&s])),
+                        "p={p} gsize={gsize} inter={inter:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_is_delivery_minimal() {
+        // every block moves exactly p-1 times — the same closed form as
+        // the flat schedules (conformance harness contract)
+        let p = 16;
+        let groups: Vec<Vec<usize>> =
+            (0..p).collect::<Vec<_>>().chunks(8).map(|c| c.to_vec()).collect();
+        for inter in [LeaderAlgo::Ring, LeaderAlgo::Bruck] {
+            let s = hierarchical_allgatherv(p, &groups, inter);
+            let mut per_block = vec![0usize; p];
+            for op in s.steps.iter().flatten() {
+                for &b in &op.blocks {
+                    per_block[b] += 1;
+                }
+            }
+            assert!(per_block.iter().all(|&n| n == p - 1), "{inter:?}: {per_block:?}");
+            assert_eq!(s.total_block_transfers(), p * (p - 1));
+        }
+    }
+
+    #[test]
+    fn hierarchical_step_count_beats_flat_ring() {
+        // 4 nodes x 8 GPUs: phase 1 (1) + ring leaders (3) + binomial (3)
+        // steps, far below the flat ring's p-1 = 31 synchronized steps.
+        let p = 32;
+        let groups: Vec<Vec<usize>> =
+            (0..p).collect::<Vec<_>>().chunks(8).map(|c| c.to_vec()).collect();
+        let s = hierarchical_allgatherv(p, &groups, LeaderAlgo::Ring);
+        assert!(all_delivered(&execute(p, &[&s])));
+        assert_eq!(s.steps.len(), 1 + 3 + 3);
+        assert!(s.steps.len() < ring_allgatherv(p, None).steps.len());
+    }
+
+    #[test]
+    fn hierarchical_noncontiguous_groups_and_leaders() {
+        // groups need not be contiguous or sorted; the leader is the
+        // first listed member
+        let groups = vec![vec![3, 0, 5], vec![1, 4], vec![2]];
+        for inter in [LeaderAlgo::Ring, LeaderAlgo::Bruck] {
+            let s = hierarchical_allgatherv(6, &groups, inter);
+            assert!(all_delivered(&execute(6, &[&s])), "{inter:?}");
+            assert_eq!(s.total_block_transfers(), 6 * 5, "{inter:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "partition")]
+    fn hierarchical_rejects_non_partition() {
+        let _ = hierarchical_allgatherv(4, &[vec![0, 1], vec![1, 2, 3]], LeaderAlgo::Ring);
     }
 
     #[test]

@@ -11,6 +11,10 @@
 //!   given library (host staging, GPUDirect P2P, GDR, pipelined chunks);
 //! - [`mpi`] / [`mpi_cuda`] / [`nccl`]: the three libraries, composing an
 //!   algorithm choice with a transport;
+//! - [`select`]: the `auto` choice — simulates every applicable
+//!   (library, algorithm) candidate (including the hierarchical
+//!   two-level schedules) on the actual counts and topology, returns
+//!   the argmin, and caches decisions per irregularity bucket;
 //! - [`params`]: protocol constants and tunables, including the
 //!   `MV2_GPUDIRECT_LIMIT` knob the paper sweeps in §V-C.
 
@@ -19,6 +23,7 @@ pub mod mpi;
 pub mod mpi_cuda;
 pub mod nccl;
 pub mod params;
+pub mod select;
 pub mod transport;
 
 use crate::topology::Topology;

@@ -27,6 +27,39 @@ impl Mpi {
     pub fn new(params: Params) -> Mpi {
         Mpi { params }
     }
+
+    /// Run the staged host collective with an explicit schedule. The
+    /// auto-selection engine (`comm::select`) simulates candidate
+    /// algorithms through this entry point; [`CommLibrary::allgatherv`]
+    /// composes it with the MVAPICH mean-size selection.
+    pub fn allgatherv_with(&self, topo: &Topology, counts: &[u64], sched: &Schedule) -> CommResult {
+        let p = counts.len();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let total: u64 = counts.iter().sum();
+        let mut sim = Sim::new(topo);
+
+        // Explicit D2H of each rank's own contribution.
+        let entry: Vec<Option<crate::sim::TaskId>> = (0..p)
+            .map(|r| Some(dtoh(&mut sim, topo, r, counts[r] as f64, &[])))
+            .collect();
+
+        let params = self.params;
+        let finals = run_schedule(&mut sim, p, sched, &entry, |sim, op, deps| {
+            let bytes = op.bytes(counts);
+            let ready = sim.delay(pt2pt_overhead(&params, bytes), deps);
+            host_to_host(sim, topo, &params, op.from, op.to, bytes as f64, &[ready])
+        });
+
+        // Explicit H2D of the full gathered buffer on every rank.
+        let mut tails = Vec::new();
+        for (r, f) in finals.iter().enumerate() {
+            let deps: Vec<_> = f.or(entry[r]).into_iter().collect();
+            tails.push(htod(&mut sim, topo, r, total as f64, &deps));
+        }
+        let _ = tails;
+        let res = sim.run();
+        CommResult { time: res.makespan, flows: res.flows }
+    }
 }
 
 /// MVAPICH-style algorithm selection, shared with the CUDA-aware path.
@@ -55,33 +88,7 @@ impl CommLibrary for Mpi {
     }
 
     fn allgatherv(&self, topo: &Topology, counts: &[u64]) -> CommResult {
-        let p = counts.len();
-        assert!(p >= 1 && p <= topo.num_gpus());
-        let total: u64 = counts.iter().sum();
-        let mut sim = Sim::new(topo);
-
-        // Explicit D2H of each rank's own contribution.
-        let entry: Vec<Option<crate::sim::TaskId>> = (0..p)
-            .map(|r| Some(dtoh(&mut sim, topo, r, counts[r] as f64, &[])))
-            .collect();
-
-        let sched = select_algorithm(&self.params, counts);
-        let params = self.params;
-        let finals = run_schedule(&mut sim, p, &sched, &entry, |sim, op, deps| {
-            let bytes = op.bytes(counts);
-            let ready = sim.delay(pt2pt_overhead(&params, bytes), deps);
-            host_to_host(sim, topo, &params, op.from, op.to, bytes as f64, &[ready])
-        });
-
-        // Explicit H2D of the full gathered buffer on every rank.
-        let mut tails = Vec::new();
-        for (r, f) in finals.iter().enumerate() {
-            let deps: Vec<_> = f.or(entry[r]).into_iter().collect();
-            tails.push(htod(&mut sim, topo, r, total as f64, &deps));
-        }
-        let _ = tails;
-        let res = sim.run();
-        CommResult { time: res.makespan, flows: res.flows }
+        self.allgatherv_with(topo, counts, &select_algorithm(&self.params, counts))
     }
 }
 

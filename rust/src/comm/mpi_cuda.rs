@@ -33,6 +33,28 @@ impl MpiCuda {
         MpiCuda { params }
     }
 
+    /// Run the CUDA-aware collective with an explicit schedule (the
+    /// auto-selection engine simulates candidate algorithms — including
+    /// the hierarchical two-level ones — through this entry point);
+    /// [`CommLibrary::allgatherv`] composes it with the MVAPICH
+    /// mean-size selection.
+    pub fn allgatherv_with(
+        &self,
+        topo: &Topology,
+        counts: &[u64],
+        sched: &super::algorithms::Schedule,
+    ) -> CommResult {
+        let p = counts.len();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let mut sim = Sim::new(topo);
+        let entry = vec![None; p];
+        let _ = run_schedule(&mut sim, p, sched, &entry, |sim, op, deps| {
+            self.send(sim, topo, op.from, op.to, op.bytes(counts), deps)
+        });
+        let res = sim.run();
+        CommResult { time: res.makespan, flows: res.flows }
+    }
+
     /// Emit one CUDA-aware send; returns its completion task.
     fn send(
         &self,
@@ -88,16 +110,7 @@ impl CommLibrary for MpiCuda {
     }
 
     fn allgatherv(&self, topo: &Topology, counts: &[u64]) -> CommResult {
-        let p = counts.len();
-        assert!(p >= 1 && p <= topo.num_gpus());
-        let mut sim = Sim::new(topo);
-        let sched = select_algorithm(&self.params, counts);
-        let entry = vec![None; p];
-        let _ = run_schedule(&mut sim, p, &sched, &entry, |sim, op, deps| {
-            self.send(sim, topo, op.from, op.to, op.bytes(counts), deps)
-        });
-        let res = sim.run();
-        CommResult { time: res.makespan, flows: res.flows }
+        self.allgatherv_with(topo, counts, &select_algorithm(&self.params, counts))
     }
 }
 

@@ -1,0 +1,540 @@
+//! Auto-selection of a (library, algorithm) pair per Allgatherv call.
+//!
+//! The paper's core finding is that *no single library wins*: NCCL and
+//! MVAPICH flip between systems, GPU counts and irregularity regimes
+//! (§V-B/§V-C). This module closes that gap the way the simulator makes
+//! cheap: [`AlgoSelector`] simulates every applicable **candidate** —
+//! flat ring / topology-ordered ring / Bruck / recursive doubling on
+//! the MPI and MPI-CUDA transports, the hierarchical two-level
+//! schedules where the node grouping is non-trivial, and NCCL's
+//! Listing-1 bcast series — on the *actual count vector and topology*,
+//! and returns the argmin.
+//!
+//! A **decision table** keyed by (system, gpus, irregularity bucket)
+//! caches past winners: a bucket hit shrinks the candidate set to the
+//! remembered winner plus the three library defaults (four simulations
+//! instead of ~a dozen) — so a cached decision can still never lose to
+//! a fixed library; a miss runs the exhaustive argmin and records the
+//! winner. Buckets combine a mean-size class with a
+//! coefficient-of-variation class, so regular benchmark sweeps and the
+//! paper's heavy-tailed tensor modes land in different rows
+//! (DESIGN.md §3).
+
+use std::collections::HashMap;
+
+use crate::topology::routing::bandwidth_ring;
+use crate::topology::systems::node_groups;
+use crate::topology::Topology;
+
+use super::algorithms::{
+    bruck_allgatherv, hierarchical_allgatherv, recursive_doubling_allgatherv, ring_allgatherv,
+    LeaderAlgo, Schedule,
+};
+use super::{mpi, mpi_cuda, nccl, CommLibrary, CommResult, Library, Params};
+
+/// Allgatherv algorithm choices the selector can simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Flat ring in rank order (the MVAPICH large-message default).
+    Ring,
+    /// Flat ring over the bandwidth-greedy topology ordering
+    /// ([`bandwidth_ring`]).
+    RingTopo,
+    /// Bruck (the MVAPICH small-message default; any P).
+    Bruck,
+    /// Recursive doubling (power-of-two P only).
+    RecursiveDoubling,
+    /// The paper's Listing-1 broadcast series (NCCL's native strategy).
+    BcastSeries,
+    /// Two-level: intra-node exchange, ring among node leaders,
+    /// binomial dissemination of the remote blocks.
+    HierarchicalRing,
+    /// Two-level with Bruck among the node leaders.
+    HierarchicalBruck,
+}
+
+impl Algo {
+    /// CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Ring => "ring",
+            Algo::RingTopo => "ring-topo",
+            Algo::Bruck => "bruck",
+            Algo::RecursiveDoubling => "rec-dbl",
+            Algo::BcastSeries => "bcast-series",
+            Algo::HierarchicalRing => "hier-ring",
+            Algo::HierarchicalBruck => "hier-bruck",
+        }
+    }
+
+    /// Parse an algorithm name as printed by [`Algo::name`].
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "ring" => Some(Algo::Ring),
+            "ring-topo" | "ringtopo" => Some(Algo::RingTopo),
+            "bruck" => Some(Algo::Bruck),
+            "rec-dbl" | "recdbl" | "recursive-doubling" => Some(Algo::RecursiveDoubling),
+            "bcast-series" | "bcastseries" => Some(Algo::BcastSeries),
+            "hier-ring" | "hierring" => Some(Algo::HierarchicalRing),
+            "hier-bruck" | "hierbruck" => Some(Algo::HierarchicalBruck),
+            _ => None,
+        }
+    }
+
+    /// All algorithms, in candidate-enumeration order.
+    pub fn all() -> [Algo; 7] {
+        [
+            Algo::Ring,
+            Algo::RingTopo,
+            Algo::Bruck,
+            Algo::RecursiveDoubling,
+            Algo::BcastSeries,
+            Algo::HierarchicalRing,
+            Algo::HierarchicalBruck,
+        ]
+    }
+
+    /// Build this algorithm's logical schedule on a topology, if it
+    /// applies there. `None` means inapplicable: recursive doubling on
+    /// non-power-of-two P, topology ring when the ordering degenerates
+    /// to rank order (duplicate of [`Algo::Ring`]), hierarchical on a
+    /// trivial grouping (one node, or one GPU per node — the flat
+    /// schedules already are those shapes), and [`Algo::BcastSeries`],
+    /// which is NCCL-native and has no step-schedule form.
+    pub fn schedule(self, topo: &Topology, p: usize) -> Option<Schedule> {
+        match self {
+            Algo::Ring => Some(ring_allgatherv(p, None)),
+            Algo::RingTopo => {
+                let order = bandwidth_ring(topo, p);
+                if order == (0..p).collect::<Vec<_>>() {
+                    None
+                } else {
+                    Some(ring_allgatherv(p, Some(&order)))
+                }
+            }
+            Algo::Bruck => Some(bruck_allgatherv(p)),
+            Algo::RecursiveDoubling => {
+                if p.is_power_of_two() {
+                    Some(recursive_doubling_allgatherv(p))
+                } else {
+                    None
+                }
+            }
+            Algo::BcastSeries => None,
+            Algo::HierarchicalRing | Algo::HierarchicalBruck => {
+                let mut groups = node_groups(topo, p);
+                if groups.len() < 2 || groups.len() == p {
+                    return None;
+                }
+                // order the leader ring by link bandwidth, not group
+                // discovery order (identical on homogeneous fabrics,
+                // where ties resolve back to rank order)
+                let leaders: Vec<usize> = groups.iter().map(|g| g[0]).collect();
+                let order = crate::topology::routing::bandwidth_ring_over(topo, &leaders);
+                groups.sort_by_key(|g| order.iter().position(|&l| l == g[0]).unwrap());
+                let inter = if self == Algo::HierarchicalRing {
+                    LeaderAlgo::Ring
+                } else {
+                    LeaderAlgo::Bruck
+                };
+                Some(hierarchical_allgatherv(p, &groups, inter))
+            }
+        }
+    }
+
+    /// The six schedule-driven algorithms, in the deterministic order
+    /// [`candidates`] and [`AlgoSelector::evaluate`] enumerate them.
+    fn scheduled() -> [Algo; 6] {
+        [
+            Algo::Ring,
+            Algo::RingTopo,
+            Algo::Bruck,
+            Algo::RecursiveDoubling,
+            Algo::HierarchicalRing,
+            Algo::HierarchicalBruck,
+        ]
+    }
+}
+
+/// One (library, algorithm) pair the selector can pick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    /// Library whose transport executes the schedule.
+    pub lib: Library,
+    /// Algorithm the schedule implements.
+    pub algo: Algo,
+}
+
+impl Candidate {
+    /// Report label, e.g. "MPI-CUDA/hier-ring".
+    pub fn label(self) -> String {
+        format!("{}/{}", self.lib.name(), self.algo.name())
+    }
+}
+
+/// The candidate set for a topology and rank count: every applicable
+/// schedule-driven algorithm on the MPI and MPI-CUDA transports, plus
+/// NCCL's bcast series. Order is deterministic and matches
+/// [`AlgoSelector::evaluate`] (ties in the argmin break toward the
+/// earlier candidate).
+pub fn candidates(topo: &Topology, p: usize) -> Vec<Candidate> {
+    let mut out = Vec::new();
+    for algo in Algo::scheduled() {
+        if algo.schedule(topo, p).is_some() {
+            for lib in [Library::Mpi, Library::MpiCuda] {
+                out.push(Candidate { lib, algo });
+            }
+        }
+    }
+    out.push(Candidate { lib: Library::Nccl, algo: Algo::BcastSeries });
+    out
+}
+
+/// The three fixed libraries' *default* (library, algorithm) choices
+/// for a count vector — what each library would run on its own: the
+/// MVAPICH mean-size switch for MPI and MPI-CUDA, the bcast series for
+/// NCCL. The decision table's hit path always re-simulates these, so a
+/// cached decision can never lose to a fixed library.
+pub fn default_candidates(params: &Params, counts: &[u64]) -> [Candidate; 3] {
+    let p = counts.len();
+    // keep in sync with mpi::select_algorithm (asserted equal-to-the-
+    // library in this module's tests)
+    let avg = counts.iter().sum::<u64>() / p.max(1) as u64;
+    let def = if avg <= params.allgatherv_algo_switch { Algo::Bruck } else { Algo::Ring };
+    [
+        Candidate { lib: Library::Mpi, algo: def },
+        Candidate { lib: Library::MpiCuda, algo: def },
+        Candidate { lib: Library::Nccl, algo: Algo::BcastSeries },
+    ]
+}
+
+/// Simulate one candidate on the actual counts; `None` if the pair is
+/// inapplicable (algorithm unavailable on this topology, or a
+/// library/algorithm mismatch such as NCCL with a step schedule).
+pub fn simulate(
+    topo: &Topology,
+    params: Params,
+    cand: Candidate,
+    counts: &[u64],
+) -> Option<CommResult> {
+    let p = counts.len();
+    match (cand.lib, cand.algo) {
+        (Library::Nccl, Algo::BcastSeries) => {
+            Some(nccl::Nccl::new(params).allgatherv(topo, counts))
+        }
+        (Library::Nccl, _) | (_, Algo::BcastSeries) => None,
+        (Library::Mpi, algo) => {
+            let sched = algo.schedule(topo, p)?;
+            Some(mpi::Mpi::new(params).allgatherv_with(topo, counts, &sched))
+        }
+        (Library::MpiCuda, algo) => {
+            let sched = algo.schedule(topo, p)?;
+            Some(mpi_cuda::MpiCuda::new(params).allgatherv_with(topo, counts, &sched))
+        }
+    }
+}
+
+/// Decision-table bucket of a count vector: 4 mean-size classes × 4
+/// irregularity (coefficient-of-variation) classes. Two vectors in the
+/// same bucket on the same (system, gpus) share a cached decision.
+pub fn irregularity_bucket(counts: &[u64]) -> u8 {
+    let p = counts.len().max(1) as f64;
+    let mean = counts.iter().map(|&c| c as f64).sum::<f64>() / p;
+    let size_class: u8 = if mean < (64u64 << 10) as f64 {
+        0
+    } else if mean < (1u64 << 20) as f64 {
+        1
+    } else if mean < (64u64 << 20) as f64 {
+        2
+    } else {
+        3
+    };
+    // all-zero vectors are perfectly regular; guard the division
+    let cv = if mean > 0.0 {
+        let var = counts
+            .iter()
+            .map(|&c| {
+                let d = c as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / p;
+        var.sqrt() / mean
+    } else {
+        0.0
+    };
+    let cv_class: u8 = if cv < 0.1 {
+        0
+    } else if cv < 0.75 {
+        1
+    } else if cv < 1.5 {
+        2
+    } else {
+        3
+    };
+    size_class * 4 + cv_class
+}
+
+/// The selector's verdict for one call.
+#[derive(Clone, Copy, Debug)]
+pub struct Selection {
+    /// Winning (library, algorithm) pair.
+    pub candidate: Candidate,
+    /// Simulated Allgatherv time of the winner on the actual counts.
+    pub time: f64,
+    /// Point-to-point flows the winning simulation executed.
+    pub flows: usize,
+    /// Whether the decision came from the table (the time is still
+    /// re-simulated on the actual counts).
+    pub cached: bool,
+}
+
+/// Key of the decision table: (system name, rank count, bucket).
+type CacheKey = (String, usize, u8);
+
+/// Simulation-driven (library, algorithm) auto-selection with a
+/// decision-table cache (module docs).
+pub struct AlgoSelector {
+    params: Params,
+    table: HashMap<CacheKey, Candidate>,
+    hits: usize,
+    misses: usize,
+}
+
+impl AlgoSelector {
+    /// Build a selector with the given protocol parameters and an empty
+    /// decision table.
+    pub fn new(params: Params) -> AlgoSelector {
+        AlgoSelector { params, table: HashMap::new(), hits: 0, misses: 0 }
+    }
+
+    /// Simulate every applicable candidate, in [`candidates`] order.
+    /// Each algorithm's schedule is built once and shared between the
+    /// MPI and MPI-CUDA transports (the schedule is the expensive part
+    /// for the topology-derived orderings).
+    pub fn evaluate(&self, topo: &Topology, counts: &[u64]) -> Vec<(Candidate, CommResult)> {
+        let p = counts.len();
+        let mut out = Vec::new();
+        for algo in Algo::scheduled() {
+            if let Some(sched) = algo.schedule(topo, p) {
+                out.push((
+                    Candidate { lib: Library::Mpi, algo },
+                    mpi::Mpi::new(self.params).allgatherv_with(topo, counts, &sched),
+                ));
+                out.push((
+                    Candidate { lib: Library::MpiCuda, algo },
+                    mpi_cuda::MpiCuda::new(self.params).allgatherv_with(topo, counts, &sched),
+                ));
+            }
+        }
+        let nccl_cand = Candidate { lib: Library::Nccl, algo: Algo::BcastSeries };
+        out.push((nccl_cand, nccl::Nccl::new(self.params).allgatherv(topo, counts)));
+        out
+    }
+
+    /// Exhaustive argmin over the candidate set, bypassing the decision
+    /// table. Ties break toward the earlier candidate.
+    pub fn select_fresh(&self, topo: &Topology, counts: &[u64]) -> Selection {
+        let evals = self.evaluate(topo, counts);
+        let mut best: Option<(Candidate, CommResult)> = None;
+        for &(c, r) in &evals {
+            match best {
+                Some((_, br)) if br.time <= r.time => {}
+                _ => best = Some((c, r)),
+            }
+        }
+        let (candidate, res) = best.expect("the NCCL bcast-series candidate always applies");
+        Selection { candidate, time: res.time, flows: res.flows, cached: false }
+    }
+
+    /// Table-backed selection: a bucket hit shrinks the candidate set
+    /// to the remembered winner plus the three library defaults
+    /// ([`default_candidates`]) and takes their argmin on the actual
+    /// counts — four simulations instead of ~a dozen, and never worse
+    /// than any fixed library by construction. A miss runs
+    /// [`AlgoSelector::select_fresh`] and records the winner.
+    pub fn select(&mut self, topo: &Topology, counts: &[u64]) -> Selection {
+        let key = (topo.name.clone(), counts.len(), irregularity_bucket(counts));
+        if let Some(&cached) = self.table.get(&key) {
+            let mut shortlist = default_candidates(&self.params, counts).to_vec();
+            if !shortlist.contains(&cached) {
+                shortlist.insert(0, cached);
+            }
+            let mut best: Option<(Candidate, CommResult)> = None;
+            for cand in shortlist {
+                if let Some(r) = simulate(topo, self.params, cand, counts) {
+                    match best {
+                        Some((_, br)) if br.time <= r.time => {}
+                        _ => best = Some((cand, r)),
+                    }
+                }
+            }
+            if let Some((candidate, res)) = best {
+                self.hits += 1;
+                return Selection {
+                    candidate,
+                    time: res.time,
+                    flows: res.flows,
+                    cached: true,
+                };
+            }
+        }
+        self.misses += 1;
+        let sel = self.select_fresh(topo, counts);
+        self.table.insert(key, sel.candidate);
+        sel
+    }
+
+    /// (hits, misses) of the decision table so far.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.hits, self.misses)
+    }
+}
+
+/// One-shot exhaustive auto-selection with default parameters (the
+/// `auto` counterpart of [`crate::comm::run_allgatherv`]).
+pub fn auto_allgatherv(topo: &Topology, counts: &[u64]) -> Selection {
+    AlgoSelector::new(Params::default()).select_fresh(topo, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_allgatherv;
+    use crate::topology::systems::{multi_dgx, SystemKind};
+
+    #[test]
+    fn candidate_sets_follow_topology() {
+        // DGX-1 @ 8: power-of-two so rec-dbl applies; one node, so no
+        // hierarchical candidates
+        let dgx = SystemKind::Dgx1.build();
+        let c8 = candidates(&dgx, 8);
+        assert!(c8.iter().any(|c| c.algo == Algo::RecursiveDoubling));
+        assert!(!c8.iter().any(|c| matches!(
+            c.algo,
+            Algo::HierarchicalRing | Algo::HierarchicalBruck
+        )));
+        assert!(c8.iter().any(|c| c.lib == Library::Nccl && c.algo == Algo::BcastSeries));
+        // cluster: one GPU per node — hierarchical degenerates to flat
+        let clu = SystemKind::Cluster.build();
+        assert!(!candidates(&clu, 8).iter().any(|c| matches!(
+            c.algo,
+            Algo::HierarchicalRing | Algo::HierarchicalBruck
+        )));
+        // multi-DGX @ 16: both hierarchical variants available
+        let m = multi_dgx(2);
+        let c16 = candidates(&m, 16);
+        for algo in [Algo::HierarchicalRing, Algo::HierarchicalBruck] {
+            assert!(
+                c16.iter().any(|c| c.lib == Library::MpiCuda && c.algo == algo),
+                "{algo:?} missing"
+            );
+        }
+    }
+
+    #[test]
+    fn every_candidate_simulates() {
+        let m = multi_dgx(2);
+        let counts = vec![1u64 << 20; 16];
+        for cand in candidates(&m, 16) {
+            let r = simulate(&m, Params::default(), cand, &counts)
+                .unwrap_or_else(|| panic!("{} did not simulate", cand.label()));
+            assert!(r.time > 0.0 && r.time.is_finite(), "{}", cand.label());
+            assert!(r.flows > 0, "{}", cand.label());
+        }
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in Algo::all() {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("nope"), None);
+    }
+
+    #[test]
+    fn bucket_classes() {
+        // regular small vs regular large: different size classes
+        let small = irregularity_bucket(&[4 << 10; 8]);
+        let large = irregularity_bucket(&[128 << 20; 8]);
+        assert_ne!(small, large);
+        // single hot rank: maximal CV class within its size class
+        let hot = irregularity_bucket(&[1 << 10, 1 << 10, 1 << 10, 512 << 20]);
+        assert_eq!(hot % 4, 3);
+        // regular vectors land in CV class 0; all-zero is regular too
+        assert_eq!(irregularity_bucket(&[7 << 20; 4]) % 4, 0);
+        assert_eq!(irregularity_bucket(&[0; 8]), 0);
+    }
+
+    #[test]
+    fn fresh_selection_is_argmin_and_never_loses_to_fixed_libraries() {
+        let sel = AlgoSelector::new(Params::default());
+        for topo in [SystemKind::Dgx1.build(), multi_dgx(2)] {
+            let p = if topo.num_gpus() >= 16 { 16 } else { 8 };
+            let counts: Vec<u64> = (0..p).map(|r| ((r as u64 % 3) + 1) << 18).collect();
+            let evals = sel.evaluate(&topo, &counts);
+            let s = sel.select_fresh(&topo, &counts);
+            let min = evals.iter().map(|(_, r)| r.time).fold(f64::INFINITY, f64::min);
+            assert_eq!(s.time.to_bits(), min.to_bits(), "{}", topo.name);
+            // the candidate set contains each library's default choice,
+            // so auto can never lose to a fixed library
+            for lib in Library::all() {
+                let fixed = run_allgatherv(lib, &topo, &counts).time;
+                assert!(
+                    s.time <= fixed,
+                    "{}: auto {} slower than {} {}",
+                    topo.name, s.time, lib.name(), fixed
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decision_table_hits_within_bucket() {
+        let topo = multi_dgx(2);
+        let mut sel = AlgoSelector::new(Params::default());
+        let a = sel.select(&topo, &[1 << 20; 16]);
+        assert!(!a.cached);
+        // same bucket (same size class, still regular): table hit — the
+        // shortlist argmin still can't lose to any library default
+        let b = sel.select(&topo, &[2 << 20; 16]);
+        assert!(b.cached);
+        for lib in Library::all() {
+            let fixed = run_allgatherv(lib, &topo, &[2 << 20; 16]).time;
+            assert!(b.time <= fixed, "cached pick loses to {}", lib.name());
+        }
+        assert_eq!(sel.cache_stats(), (1, 1));
+        // different size class: miss again
+        let c = sel.select(&topo, &[1 << 10; 16]);
+        assert!(!c.cached);
+        assert_eq!(sel.cache_stats(), (1, 2));
+    }
+
+    #[test]
+    fn default_candidates_track_the_mean_size_switch() {
+        let p = Params::default();
+        // small mean: Bruck on both MPI transports (mirrors
+        // mpi::select_algorithm), NCCL always bcast-series
+        let small = default_candidates(&p, &[1024; 8]);
+        assert!(small.iter().take(2).all(|c| c.algo == Algo::Bruck));
+        assert_eq!(small[2].algo, Algo::BcastSeries);
+        let large = default_candidates(&p, &[10 << 20; 8]);
+        assert!(large.iter().take(2).all(|c| c.algo == Algo::Ring));
+        // the defaults simulate to exactly the libraries' own times
+        let topo = SystemKind::Dgx1.build();
+        let counts = [10u64 << 20; 8];
+        for cand in default_candidates(&p, &counts) {
+            let via_cand = simulate(&topo, p, cand, &counts).unwrap().time;
+            let via_lib = run_allgatherv(cand.lib, &topo, &counts).time;
+            assert_eq!(via_cand.to_bits(), via_lib.to_bits(), "{}", cand.label());
+        }
+    }
+
+    #[test]
+    fn auto_allgatherv_one_shot() {
+        let topo = SystemKind::CsStorm.build();
+        let s = auto_allgatherv(&topo, &[4 << 20; 16]);
+        assert!(s.time > 0.0 && s.time.is_finite());
+        assert!(s.candidate.label().contains('/'));
+    }
+}

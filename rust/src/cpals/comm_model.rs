@@ -8,6 +8,7 @@
 //! tensor factorization, including HtoD/DtoH transfers when applicable" —
 //! the library models already include those.
 
+use crate::comm::select::{AlgoSelector, Selection};
 use crate::comm::{Library, Params};
 use crate::tensor::messages::mode_counts;
 use crate::tensor::TensorSpec;
@@ -63,6 +64,52 @@ pub fn refacto_comm(
         total_time: once * iters as f64,
         per_mode,
         flows,
+    }
+}
+
+/// The `auto` counterpart of [`RefactoReport`]: per mode, the
+/// selector's winning (library, algorithm) pair and its time.
+#[derive(Clone, Debug)]
+pub struct AutoRefactoReport {
+    /// Data-set name (Table I).
+    pub dataset: &'static str,
+    /// Simulated GPU (rank) count.
+    pub gpus: usize,
+    /// CP-ALS iterations the total covers.
+    pub iters: usize,
+    /// total communication time over the whole factorization (seconds)
+    pub total_time: f64,
+    /// per-mode selector verdicts (single iteration)
+    pub per_mode: [Selection; 3],
+}
+
+/// Simulate ReFacTo's communication with per-mode auto-selection: each
+/// mode's count vector gets its own exhaustive (library, algorithm)
+/// argmin — the three modes of one data set can legitimately pick
+/// different winners (the paper's "no single library wins" finding,
+/// taken to its per-call conclusion).
+pub fn refacto_comm_auto(
+    topo: &Topology,
+    params: Params,
+    spec: &TensorSpec,
+    gpus: usize,
+    iters: usize,
+) -> AutoRefactoReport {
+    assert!(gpus >= 1 && gpus <= topo.num_gpus());
+    let selector = AlgoSelector::new(params);
+    let counts = mode_counts(spec, gpus);
+    let per_mode = [
+        selector.select_fresh(topo, &counts[0]),
+        selector.select_fresh(topo, &counts[1]),
+        selector.select_fresh(topo, &counts[2]),
+    ];
+    let once: f64 = per_mode.iter().map(|s| s.time).sum();
+    AutoRefactoReport {
+        dataset: spec.name,
+        gpus,
+        iters,
+        total_time: once * iters as f64,
+        per_mode,
     }
 }
 
@@ -167,6 +214,37 @@ mod tests {
         let n = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 2, 1);
         let m = refacto_comm(&topo, Library::MpiCuda, Params::default(), &d, 2, 1);
         assert!(m.total_time < n.total_time, "nccl={} mpicuda={}", n.total_time, m.total_time);
+    }
+
+    #[test]
+    fn auto_never_loses_to_fixed_libraries_on_tensors() {
+        // the candidate set contains each library's default, so the
+        // per-mode argmin can only match or beat every fixed choice
+        let topo = dgx1();
+        for d in datasets::all() {
+            let auto = refacto_comm_auto(&topo, Params::default(), &d, 8, 1);
+            for lib in [Library::Mpi, Library::MpiCuda, Library::Nccl] {
+                let fixed = refacto_comm(&topo, lib, Params::default(), &d, 8, 1);
+                assert!(
+                    auto.total_time <= fixed.total_time,
+                    "{}: auto {} slower than {} {}",
+                    d.name, auto.total_time, lib.name(), fixed.total_time
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_totals_scale_with_iterations() {
+        let topo = dgx1();
+        let d = datasets::netflix();
+        let one = refacto_comm_auto(&topo, Params::default(), &d, 8, 1);
+        let ten = refacto_comm_auto(&topo, Params::default(), &d, 8, 10);
+        assert!((ten.total_time - 10.0 * one.total_time).abs() < 1e-9);
+        assert_eq!(
+            one.per_mode.map(|s| s.candidate),
+            ten.per_mode.map(|s| s.candidate)
+        );
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! communication library on the chosen system topology.
 
 use crate::anyhow;
+use crate::comm::select::{AlgoSelector, Selection};
 use crate::comm::{Library, Params};
 use crate::util::error::Result;
 use crate::runtime::{HostTensor, Runtime};
@@ -49,8 +50,21 @@ pub struct DriverReport {
     pub iters: Vec<IterLog>,
     /// total simulated communication per library
     pub comm_totals: Vec<(Library, f64)>,
+    /// auto-selection verdict: per-mode winning (library, algorithm)
+    /// and the total auto communication time across iterations
+    pub auto_comm: AutoComm,
     /// Total real PJRT compute seconds across iterations.
     pub compute_total: f64,
+}
+
+/// The `auto` communication summary of one run: what the selector
+/// picked for each mode's count vector, and the resulting total.
+#[derive(Clone, Debug)]
+pub struct AutoComm {
+    /// per-mode selector verdicts (single iteration)
+    pub per_mode: [Selection; 3],
+    /// total simulated auto communication across all iterations
+    pub total: f64,
 }
 
 impl DriverReport {
@@ -228,6 +242,14 @@ impl<'t> Driver<'t> {
             }
             comm_once.push((lib, per));
         }
+        // ... and the auto-selection verdict per mode.
+        let selector = AlgoSelector::new(self.params);
+        let auto_per_mode = [
+            selector.select_fresh(self.topo, &counts[0]),
+            selector.select_fresh(self.topo, &counts[1]),
+            selector.select_fresh(self.topo, &counts[2]),
+        ];
+        let auto_once: f64 = auto_per_mode.iter().map(|s| s.time).sum();
 
         let mut logs = Vec::new();
         let mut compute_total = 0.0;
@@ -259,6 +281,10 @@ impl<'t> Driver<'t> {
             rank,
             iters: logs,
             comm_totals,
+            auto_comm: AutoComm {
+                per_mode: auto_per_mode,
+                total: auto_once * iters as f64,
+            },
             compute_total,
         })
     }

@@ -5,9 +5,9 @@
 use std::path::PathBuf;
 
 use agv_bench::comm::{Library, Params};
-use agv_bench::cpals::comm_model::{gdr_limit_sweep, refacto_comm, DEFAULT_ITERS};
+use agv_bench::cpals::comm_model::{gdr_limit_sweep, refacto_comm, refacto_comm_auto, DEFAULT_ITERS};
 use agv_bench::cpals::driver::Driver;
-use agv_bench::report::{fig2, fig3, findings, table1, write_csv};
+use agv_bench::report::{auto as report_auto, fig2, fig3, findings, table1, write_csv};
 use agv_bench::runtime::{default_artifacts_dir, Runtime};
 use agv_bench::tensor::{datasets, synth};
 use agv_bench::topology::systems::SystemKind;
@@ -26,10 +26,12 @@ COMMANDS
   fig3 [--iters N] [--csv-dir DIR]
                                Fig. 3: ReFacTo communication time grid
   findings                     §VI headline ratios, ours vs paper
+  auto [--dataset D] [--gpus N] [--csv-dir DIR]
+                               auto-selected (library, algorithm) vs each fixed library
   osu --system S --gpus N [--lib L]
-                               one OSU sweep (S: cluster|dgx1|cs-storm)
+                               one OSU sweep (S: cluster|dgx1|cs-storm; L: mpi|mpi-cuda|nccl|auto)
   refacto --dataset D --system S --gpus N [--lib L] [--iters N]
-                               one ReFacTo communication simulation
+                               one ReFacTo communication simulation (--lib auto picks per mode)
   sweep-gdr [--dataset D] [--gpus N] [--limits CSV]
                                MV2_GPUDIRECT_LIMIT sweep (paper §V-C)
   e2e [--config small|e2e] [--system S] [--gpus N] [--iters N] [--seed N]
@@ -47,6 +49,7 @@ fn main() {
         "table1" => cmd_table1(&args),
         "fig3" => cmd_fig3(&args),
         "findings" => cmd_findings(),
+        "auto" => cmd_auto(&args),
         "osu" => cmd_osu(&args),
         "refacto" => cmd_refacto(&args),
         "sweep-gdr" => cmd_sweep_gdr(&args),
@@ -153,11 +156,47 @@ fn cmd_findings() {
     print!("{}", findings::render(&findings::compute()));
 }
 
+/// Is `--lib auto` requested? (Handled before [`library_arg`], which
+/// only knows the three fixed libraries.)
+fn auto_lib(args: &Args) -> bool {
+    args.get("lib").is_some_and(|s| s.eq_ignore_ascii_case("auto"))
+}
+
+fn cmd_auto(args: &Args) {
+    let specs = match args.get("dataset") {
+        Some(d) => vec![datasets::by_name(d).unwrap_or_else(|| {
+            eprintln!("unknown dataset `{d}`");
+            std::process::exit(2);
+        })],
+        None => datasets::all(),
+    };
+    let gpus_filter = args.get("gpus").map(|_| args.get_usize("gpus", 8));
+    let rows = report_auto::grid(&specs, gpus_filter);
+    print!("{}", report_auto::render(&rows));
+    if let Some(dir) = csv_dir(args) {
+        let p = write_csv(&dir, "auto.csv", &report_auto::csv(&rows)).unwrap();
+        eprintln!("wrote {}", p.display());
+    }
+}
+
 fn cmd_osu(args: &Args) {
     let system = system_arg(args);
     let gpus = args.get_usize("gpus", 2);
     let cfg = agv_bench::osu::OsuConfig::default();
     let topo = system.build();
+    if auto_lib(args) {
+        println!("OSU Allgatherv — {} @ {gpus} GPUs (auto selection)", system.name());
+        println!("{:>10} {:>14}  choice", "size", "auto");
+        for (pt, cand) in agv_bench::osu::run_osu_auto(&cfg, &topo, gpus) {
+            println!(
+                "{:>10} {:>14}  {}",
+                fmt_bytes(pt.msg_size),
+                fmt_time(pt.time),
+                cand.label()
+            );
+        }
+        return;
+    }
     let libs = library_arg(args)
         .map(|l| vec![l])
         .unwrap_or_else(|| Library::all().to_vec());
@@ -190,6 +229,23 @@ fn cmd_refacto(args: &Args) {
         std::process::exit(2);
     });
     let topo = system.build();
+    if auto_lib(args) {
+        let r = refacto_comm_auto(&topo, Params::default(), &spec, gpus, iters);
+        println!(
+            "ReFacTo communication — {} on {} @ {gpus} GPUs, {iters} iterations (auto selection)",
+            spec.name,
+            system.name()
+        );
+        println!("  auto      total {:>12}", fmt_time(r.total_time));
+        for (m, sel) in r.per_mode.iter().enumerate() {
+            println!(
+                "    mode {m}: {:>12}/iter via {}",
+                fmt_time(sel.time),
+                sel.candidate.label()
+            );
+        }
+        return;
+    }
     let libs = library_arg(args)
         .map(|l| vec![l])
         .unwrap_or_else(|| Library::all().to_vec());
@@ -294,6 +350,18 @@ fn cmd_e2e(args: &Args) {
     for (lib, t) in &report.comm_totals {
         println!("  simulated comm total {:<9} {}", lib.name(), fmt_time(*t));
     }
+    let labels: Vec<String> = report
+        .auto_comm
+        .per_mode
+        .iter()
+        .map(|s| s.candidate.label())
+        .collect();
+    println!(
+        "  simulated comm total {:<9} {} ({})",
+        "auto",
+        fmt_time(report.auto_comm.total),
+        labels.join(" | ")
+    );
 }
 
 fn cmd_artifacts(args: &Args) {

@@ -76,6 +76,32 @@ pub fn run_osu(cfg: &OsuConfig, topo: &Topology, lib: Library, gpus: usize) -> V
         .collect()
 }
 
+/// The auto-selection variant of [`run_osu`]: per message size the
+/// [`crate::comm::select::AlgoSelector`] picks the fastest
+/// (library, algorithm) pair for that size's regular count vector; the
+/// winner typically flips across the sweep (log-step schedules at
+/// small sizes, bandwidth-optimal ones at large) — the paper's
+/// "no single library wins" finding per point. The sweep is the
+/// decision table's home workload: consecutive sizes share an
+/// irregularity bucket, so most points ride the cached shortlist
+/// (which still never loses to a fixed library).
+pub fn run_osu_auto(
+    cfg: &OsuConfig,
+    topo: &Topology,
+    gpus: usize,
+) -> Vec<(OsuPoint, crate::comm::select::Candidate)> {
+    assert!(gpus >= 1 && gpus <= topo.num_gpus());
+    let mut selector = crate::comm::select::AlgoSelector::new(cfg.params);
+    sweep_sizes(cfg, gpus)
+        .into_iter()
+        .map(|m| {
+            let counts = vec![m; gpus];
+            let sel = selector.select(topo, &counts);
+            (OsuPoint { msg_size: m, time: sel.time, flows: sel.flows }, sel.candidate)
+        })
+        .collect()
+}
+
 /// A full Fig. 2 cell: all three libraries on one system at one GPU count.
 #[derive(Clone, Debug)]
 pub struct Fig2Cell {
@@ -180,6 +206,27 @@ mod tests {
             assert!(!pts.is_empty());
             // times monotone-ish in size: last > first
             assert!(pts.last().unwrap().time > pts.first().unwrap().time);
+        }
+    }
+
+    #[test]
+    fn osu_auto_never_loses_to_any_fixed_sweep() {
+        let cfg = OsuConfig::default();
+        let topo = SystemKind::Dgx1.build();
+        let auto = run_osu_auto(&cfg, &topo, 4);
+        let fixed: Vec<Vec<OsuPoint>> = Library::all()
+            .into_iter()
+            .map(|lib| run_osu(&cfg, &topo, lib, 4))
+            .collect();
+        assert_eq!(auto.len(), fixed[0].len());
+        for (i, (pt, cand)) in auto.iter().enumerate() {
+            for f in &fixed {
+                assert!(
+                    pt.time <= f[i].time,
+                    "size {}: auto {} ({}) slower than fixed {}",
+                    pt.msg_size, pt.time, cand.label(), f[i].time
+                );
+            }
         }
     }
 

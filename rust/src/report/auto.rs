@@ -1,0 +1,208 @@
+//! Auto-selection study: the [`crate::comm::select::AlgoSelector`]'s
+//! per-mode choice next to each fixed library, across the paper's data
+//! sets, the three systems, and the §VI future-work multi-DGX — the
+//! "no single library wins" finding (§V-B/§V-C) answered with a
+//! per-call argmin. Rendered by `agv auto`.
+
+use crate::comm::{CommLibrary, Library, Params};
+use crate::cpals::comm_model::refacto_comm_auto;
+use crate::tensor::messages::mode_counts;
+use crate::tensor::TensorSpec;
+use crate::topology::systems::{multi_dgx, SystemKind};
+use crate::topology::Topology;
+use crate::util::{fmt_time, stats};
+
+/// One (data set, system, gpus) row of the comparison.
+#[derive(Clone, Debug)]
+pub struct AutoRow {
+    /// Data-set name (Table I).
+    pub dataset: &'static str,
+    /// System name the row was simulated on.
+    pub system: String,
+    /// Simulated GPU (rank) count.
+    pub gpus: usize,
+    /// One-iteration communication total per fixed library.
+    pub fixed: Vec<(Library, f64)>,
+    /// One-iteration total of the selector's per-mode choices.
+    pub auto_time: f64,
+    /// The winning candidate label per mode (e.g. "MPI-CUDA/hier-ring").
+    pub auto_labels: [String; 3],
+}
+
+impl AutoRow {
+    /// Fastest fixed-library total of the row.
+    pub fn best_fixed(&self) -> f64 {
+        self.fixed.iter().map(|&(_, t)| t).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// The systems of the study: the paper's three (with the Fig. 2 GPU
+/// counts) plus a 2-node multi-DGX at 16 GPUs, where the hierarchical
+/// schedules have a non-trivial grouping to exploit.
+fn systems() -> Vec<(String, Topology, Vec<usize>)> {
+    let mut out: Vec<(String, Topology, Vec<usize>)> = SystemKind::all()
+        .into_iter()
+        .map(|k| (k.name().to_string(), k.build(), crate::osu::gpu_counts(k)))
+        .collect();
+    out.push(("multi-dgx-2".to_string(), multi_dgx(2), vec![16]));
+    out
+}
+
+/// Build the comparison grid for the given data sets, optionally
+/// restricted to one GPU count. Rows fan out over the bounded worker
+/// pool — each is an independent pure simulation.
+pub fn grid(specs: &[TensorSpec], gpus_filter: Option<usize>) -> Vec<AutoRow> {
+    let mut jobs: Vec<Box<dyn FnOnce() -> AutoRow + Send>> = Vec::new();
+    for (name, topo, gpu_counts) in systems() {
+        for &gpus in &gpu_counts {
+            if gpus_filter.is_some_and(|g| g != gpus) {
+                continue;
+            }
+            for spec in specs {
+                let (name, topo, spec) = (name.clone(), topo.clone(), spec.clone());
+                jobs.push(Box::new(move || row(&name, &topo, &spec, gpus)));
+            }
+        }
+    }
+    crate::util::pool::parallel_map(jobs)
+}
+
+fn row(system: &str, topo: &Topology, spec: &TensorSpec, gpus: usize) -> AutoRow {
+    let params = Params::default();
+    let counts = mode_counts(spec, gpus);
+    let fixed: Vec<(Library, f64)> = Library::all()
+        .into_iter()
+        .map(|lib| {
+            let l = lib.build(params);
+            let total: f64 = counts.iter().map(|c| l.allgatherv(topo, c).time).sum();
+            (lib, total)
+        })
+        .collect();
+    let auto = refacto_comm_auto(topo, params, spec, gpus, 1);
+    AutoRow {
+        dataset: spec.name,
+        system: system.to_string(),
+        gpus,
+        fixed,
+        auto_time: auto.total_time,
+        auto_labels: auto.per_mode.map(|s| s.candidate.label()),
+    }
+}
+
+/// Render the comparison as a text table with an aggregate footer.
+pub fn render(rows: &[AutoRow]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "AUTO-SELECTION vs FIXED LIBRARIES — simulated ReFacTo communication, one CP-ALS iteration\n",
+    );
+    out.push_str(&format!(
+        "{:<10} {:<12} {:>4} {:>12} {:>12} {:>12} {:>12} {:>8}  choices (modes 0|1|2)\n",
+        "dataset", "system", "gpus", "MPI", "MPI-CUDA", "NCCL", "auto", "vs best"
+    ));
+    let mut speedups = Vec::new();
+    let mut wins = 0usize;
+    for r in rows {
+        let best = r.best_fixed();
+        let speedup = best / r.auto_time;
+        speedups.push(speedup);
+        if r.auto_time <= best {
+            wins += 1;
+        }
+        let t = |lib: Library| {
+            r.fixed
+                .iter()
+                .find(|&&(l, _)| l == lib)
+                .map(|&(_, t)| fmt_time(t))
+                .unwrap_or_else(|| "-".to_string())
+        };
+        out.push_str(&format!(
+            "{:<10} {:<12} {:>4} {:>12} {:>12} {:>12} {:>12} {:>7.2}x  {}\n",
+            r.dataset,
+            r.system,
+            r.gpus,
+            t(Library::Mpi),
+            t(Library::MpiCuda),
+            t(Library::Nccl),
+            fmt_time(r.auto_time),
+            speedup,
+            r.auto_labels.join(" | "),
+        ));
+    }
+    if !rows.is_empty() {
+        out.push_str(&format!(
+            "\nauto matches or beats the best fixed library on {wins}/{} rows; \
+             geomean speedup vs best fixed {:.2}x\n",
+            rows.len(),
+            stats::geomean(&speedups),
+        ));
+    }
+    out
+}
+
+/// CSV form of the grid (one row per cell).
+pub fn csv(rows: &[AutoRow]) -> String {
+    let mut out = String::from(
+        "dataset,system,gpus,mpi_s,mpi_cuda_s,nccl_s,auto_s,choice_mode0,choice_mode1,choice_mode2\n",
+    );
+    for r in rows {
+        let t = |lib: Library| {
+            r.fixed
+                .iter()
+                .find(|&&(l, _)| l == lib)
+                .map(|&(_, t)| format!("{t:.9}"))
+                .unwrap_or_default()
+        };
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{:.9},{},{},{}\n",
+            r.dataset,
+            r.system,
+            r.gpus,
+            t(Library::Mpi),
+            t(Library::MpiCuda),
+            t(Library::Nccl),
+            r.auto_time,
+            r.auto_labels[0],
+            r.auto_labels[1],
+            r.auto_labels[2],
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::datasets;
+
+    #[test]
+    fn single_cell_grid_renders_and_auto_wins() {
+        let rows = grid(&[datasets::netflix()], Some(2));
+        // three paper systems at 2 GPUs (multi-dgx only runs at 16)
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.auto_time > 0.0 && r.auto_time.is_finite());
+            assert!(
+                r.auto_time <= r.best_fixed(),
+                "{} {}: auto {} vs best fixed {}",
+                r.dataset, r.system, r.auto_time, r.best_fixed()
+            );
+        }
+        let text = render(&rows);
+        assert!(text.contains("AUTO-SELECTION"));
+        assert!(text.contains("NETFLIX"));
+        assert!(text.contains("geomean"));
+        let c = csv(&rows);
+        assert_eq!(c.lines().count(), 4);
+        assert!(c.starts_with("dataset,"));
+    }
+
+    #[test]
+    fn multi_dgx_rows_present_at_16() {
+        let rows = grid(&[datasets::amazon()], Some(16));
+        assert!(rows.iter().any(|r| r.system == "multi-dgx-2"));
+        // every 16-GPU system except the DGX-1 (max 8) shows up
+        assert!(rows.iter().any(|r| r.system == "cluster"));
+        assert!(rows.iter().any(|r| r.system == "cs-storm"));
+        assert!(!rows.iter().any(|r| r.system == "dgx1"));
+    }
+}

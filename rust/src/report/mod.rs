@@ -6,6 +6,7 @@
 //! over `std::thread` — every (system, library, GPU-count) cell is an
 //! independent pure simulation.
 
+pub mod auto;
 pub mod fig2;
 pub mod fig3;
 pub mod findings;

@@ -111,6 +111,51 @@ pub fn widest_shortest_path(topo: &Topology, from: DeviceId, to: DeviceId) -> Op
     Some(Path { devices, links })
 }
 
+/// Bandwidth-greedy ring ordering of GPU ranks `0..p`: starting at rank
+/// 0, repeatedly append the unvisited rank whose route from the current
+/// chain end has the highest bottleneck bandwidth (ties: fewer hops,
+/// then lower rank). Unlike [`nvlink_path`]-based detection this uses
+/// the *actual link bandwidths*, so it keeps CS-Storm's bonded-4x pairs
+/// adjacent, prefers NVLink over PCIe on the DGX-1, and degrades to
+/// rank order on the homogeneous cluster — the ordering the
+/// topology-aware ring schedules run over (DESIGN.md §3).
+pub fn bandwidth_ring(topo: &Topology, p: usize) -> Vec<usize> {
+    assert!(p >= 1 && p <= topo.num_gpus());
+    let ranks: Vec<usize> = (0..p).collect();
+    bandwidth_ring_over(topo, &ranks)
+}
+
+/// [`bandwidth_ring`] over an arbitrary rank set (e.g. the leader set of
+/// a hierarchical schedule). The chain starts at `ranks[0]`; the result
+/// is a permutation of `ranks`.
+pub fn bandwidth_ring_over(topo: &Topology, ranks: &[usize]) -> Vec<usize> {
+    assert!(!ranks.is_empty(), "bandwidth ring needs at least one rank");
+    let mut ring = vec![ranks[0]];
+    let mut left: Vec<usize> = ranks[1..].to_vec();
+    while !left.is_empty() {
+        let cur = *ring.last().unwrap();
+        let mut best_i = 0usize;
+        let mut best: Option<(f64, usize, usize)> = None; // (bw, hops, rank)
+        for (i, &r) in left.iter().enumerate() {
+            let path = topo.route_gpus(cur, r).expect("ring ranks must be routable");
+            let bw = topo.path_bandwidth(&path);
+            let hops = path.hops();
+            let better = match best {
+                None => true,
+                Some((bb, bh, br)) => {
+                    bw > bb || (bw == bb && (hops < bh || (hops == bh && r < br)))
+                }
+            };
+            if better {
+                best = Some((bw, hops, r));
+                best_i = i;
+            }
+        }
+        ring.push(left.remove(best_i));
+    }
+    ring
+}
+
 /// BFS over NVLink-class links only (fewest NVLink hops).
 pub fn nvlink_path(topo: &Topology, from: DeviceId, to: DeviceId) -> Option<Path> {
     if from == to {
@@ -210,6 +255,67 @@ mod tests {
         let _g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 1, "g1");
         let _ = g0;
         assert!(t.route_gpus(0, 1).is_none());
+    }
+
+    #[test]
+    fn bandwidth_ring_is_permutation_everywhere() {
+        use crate::topology::systems::SystemKind;
+        for k in SystemKind::all() {
+            let t = k.build();
+            for p in 1..=t.num_gpus() {
+                let ring = bandwidth_ring(&t, p);
+                let mut sorted = ring.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..p).collect::<Vec<_>>(), "{} p={p}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_ring_keeps_cs_storm_pairs_adjacent() {
+        let t = crate::topology::systems::cs_storm();
+        let ring = bandwidth_ring(&t, 16);
+        for pair in 0..8 {
+            let (a, b) = (2 * pair, 2 * pair + 1);
+            let pa = ring.iter().position(|&r| r == a).unwrap();
+            let adj = ring[(pa + 1) % 16] == b || ring[(pa + 15) % 16] == b;
+            assert!(adj, "bonded pair ({a},{b}) split in {ring:?}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_ring_identity_on_homogeneous_cluster() {
+        // all routes bottleneck on the same IB link: ties resolve to
+        // rank order, so the cluster keeps the identity ring
+        let t = crate::topology::systems::cluster(8);
+        assert_eq!(bandwidth_ring(&t, 8), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bandwidth_ring_prefers_nvlink_on_dgx1() {
+        // every greedy chain hop on the DGX-1 should be an NVLink route
+        // (18 GB/s beats any PCIe/QPI alternative)
+        let t = crate::topology::systems::dgx1();
+        let ring = bandwidth_ring(&t, 8);
+        for w in ring.windows(2) {
+            let p = t.route_gpus(w[0], w[1]).unwrap();
+            assert!(
+                p.links.iter().all(|&l| t.links[l].class.is_nvlink()),
+                "chain hop {}->{} left NVLink: {ring:?}",
+                w[0], w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn bandwidth_ring_over_subset() {
+        let t = crate::topology::systems::cs_storm();
+        // leader-style subset: one GPU of each of four pairs
+        let ring = bandwidth_ring_over(&t, &[0, 2, 4, 6]);
+        let mut sorted = ring.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 2, 4, 6]);
+        assert_eq!(ring[0], 0);
     }
 
     #[test]

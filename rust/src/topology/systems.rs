@@ -67,6 +67,26 @@ impl SystemKind {
     }
 }
 
+/// Group the first `p` GPU ranks by host node — the grouping the
+/// hierarchical two-level schedules are parameterized by (DESIGN.md §3).
+/// Groups appear in order of their lowest rank; members stay in rank
+/// order, so `groups[g][0]` (the hierarchical leader) is the lowest
+/// rank on its node. Single-node systems collapse to one group; the
+/// one-GPU-per-node cluster yields `p` singleton groups; `multi_dgx(n)`
+/// yields one 8-member group per node.
+pub fn node_groups(topo: &Topology, p: usize) -> Vec<Vec<usize>> {
+    assert!(p >= 1 && p <= topo.num_gpus(), "p={p} exceeds {} GPUs", topo.num_gpus());
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for r in 0..p {
+        let node = topo.devices[topo.gpu(r)].node;
+        match groups.iter_mut().find(|(n, _)| *n == node) {
+            Some((_, members)) => members.push(r),
+            None => groups.push((node, vec![r])),
+        }
+    }
+    groups.into_iter().map(|(_, members)| members).collect()
+}
+
 /// Traditional cluster: `n` nodes, 1 GPU each, FDR IB star (Fig. 1 left).
 pub fn cluster(n: usize) -> Topology {
     let mut t = Topology::new(format!("cluster-{n}"));
@@ -306,6 +326,31 @@ mod tests {
         assert!((t.path_bandwidth(&p) - LinkClass::InfinibandFdr.bandwidth()).abs() < 1.0);
         assert!(t.same_node(0, 7));
         assert!(!t.same_node(7, 8));
+    }
+
+    #[test]
+    fn node_groups_shapes() {
+        // single-node systems: one group holding every rank
+        for t in [dgx1(), cs_storm()] {
+            let g = node_groups(&t, t.num_gpus());
+            assert_eq!(g.len(), 1, "{}", t.name);
+            assert_eq!(g[0], (0..t.num_gpus()).collect::<Vec<_>>());
+        }
+        // one-GPU-per-node cluster: p singleton groups
+        let c = cluster(16);
+        let g = node_groups(&c, 8);
+        assert_eq!(g.len(), 8);
+        assert!(g.iter().enumerate().all(|(i, m)| m == &vec![i]));
+        // multi-DGX: 8-member groups in node order, leaders at 8k
+        let m = multi_dgx(3);
+        let g = node_groups(&m, 24);
+        assert_eq!(g.len(), 3);
+        for (n, members) in g.iter().enumerate() {
+            assert_eq!(members, &(8 * n..8 * n + 8).collect::<Vec<_>>());
+        }
+        // slicing mid-node leaves a ragged last group
+        let g = node_groups(&m, 10);
+        assert_eq!(g, vec![(0..8).collect::<Vec<_>>(), vec![8, 9]]);
     }
 
     #[test]

@@ -33,6 +33,60 @@ where
     }
 }
 
+/// Count-vector generators mirroring the paper's §IV tensor
+/// irregularity regimes, for reuse across property tests (the
+/// schedule-conformance harness and `proptests.rs` both draw from
+/// these). All sizes are bytes; every generator is deterministic in
+/// the seeded [`Rng`].
+pub mod counts {
+    use crate::util::prng::Rng;
+
+    /// Regular vector: every rank contributes `base` bytes (the OSU
+    /// fixed-size shape).
+    pub fn regular(p: usize, base: u64) -> Vec<u64> {
+        vec![base; p]
+    }
+
+    /// Power-law skewed vector (AMAZON/NETFLIX-style): rank shares fall
+    /// off as `1/(i+1)^a` with a random exponent, scattered over random
+    /// ranks, topping out near `max`.
+    pub fn skewed(rng: &mut Rng, p: usize, max: u64) -> Vec<u64> {
+        let a = rng.gen_f64(0.5, 2.0);
+        let mut v: Vec<u64> = (0..p)
+            .map(|i| ((max as f64) / ((i + 1) as f64).powf(a)).max(1.0) as u64)
+            .collect();
+        rng.shuffle(&mut v);
+        v
+    }
+
+    /// Zero-heavy vector (DELICIOUS-style min ≈ 0): roughly half the
+    /// ranks contribute nothing at all.
+    pub fn zero_heavy(rng: &mut Rng, p: usize, max: u64) -> Vec<u64> {
+        (0..p)
+            .map(|_| if rng.gen_range(2) == 0 { 0 } else { 1 + rng.gen_range(max) })
+            .collect()
+    }
+
+    /// Single hot rank (NELL-1-style dominant block): one rank holds a
+    /// message orders of magnitude above the rest.
+    pub fn single_hot(rng: &mut Rng, p: usize, hot: u64) -> Vec<u64> {
+        let mut v: Vec<u64> = (0..p).map(|_| 1 + rng.gen_range((hot / 256).max(1))).collect();
+        let i = rng.gen_range(p as u64) as usize;
+        v[i] = hot;
+        v
+    }
+
+    /// Random irregularity regime: one of the shapes above, uniformly.
+    pub fn irregular(rng: &mut Rng, p: usize, max: u64) -> Vec<u64> {
+        match rng.gen_range(4) {
+            0 => regular(p, 1 + rng.gen_range(max)),
+            1 => skewed(rng, p, max),
+            2 => zero_heavy(rng, p, max),
+            _ => single_hot(rng, p, max),
+        }
+    }
+}
+
 /// Assert helper producing `Result` for use inside properties.
 #[macro_export]
 macro_rules! prop_assert {
@@ -73,6 +127,28 @@ mod tests {
                 Ok(())
             }
         });
+    }
+
+    #[test]
+    fn count_generators_have_their_shapes() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(99);
+        let p = 16;
+        assert_eq!(counts::regular(p, 4096), vec![4096u64; p]);
+        let sk = counts::skewed(&mut rng, p, 1 << 20);
+        assert_eq!(sk.len(), p);
+        assert!(sk.iter().all(|&c| c >= 1));
+        assert_eq!(*sk.iter().max().unwrap(), 1 << 20);
+        let zh = counts::zero_heavy(&mut rng, 64, 1 << 20);
+        let zeros = zh.iter().filter(|&&c| c == 0).count();
+        assert!(zeros > 8 && zeros < 56, "zeros={zeros}");
+        let hot = counts::single_hot(&mut rng, p, 512 << 20);
+        assert_eq!(hot.iter().filter(|&&c| c == 512 << 20).count(), 1);
+        assert!(hot.iter().filter(|&&c| c < 4 << 20).count() >= p - 1);
+        for _ in 0..32 {
+            let v = counts::irregular(&mut rng, p, 1 << 24);
+            assert_eq!(v.len(), p);
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ fn stderr(o: &Output) -> String {
 
 /// Every subcommand in HELP. Kept in sync by `help_lists_every_subcommand`.
 const COMMANDS: &[&str] = &[
-    "topo", "fig2", "table1", "fig3", "findings", "osu", "refacto",
+    "topo", "fig2", "table1", "fig3", "findings", "auto", "osu", "refacto",
     "sweep-gdr", "e2e", "artifacts", "help",
 ];
 
@@ -109,6 +109,38 @@ fn refacto_single_cell_runs() {
     ]);
     assert!(out.status.success(), "{}", stderr(&out));
     assert!(stdout(&out).contains("NETFLIX"));
+}
+
+#[test]
+fn auto_report_single_cell_runs() {
+    let out = agv(&["auto", "--dataset", "netflix", "--gpus", "2"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("AUTO-SELECTION"), "{text}");
+    assert!(text.contains("NETFLIX"), "{text}");
+    assert!(text.contains("geomean"), "{text}");
+}
+
+#[test]
+fn osu_auto_lib_runs() {
+    let out = agv(&["osu", "--system", "dgx1", "--gpus", "2", "--lib", "auto"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("auto selection"), "{text}");
+    // every printed choice is a (library, algorithm) label
+    assert!(text.contains('/'), "{text}");
+}
+
+#[test]
+fn refacto_auto_lib_runs() {
+    let out = agv(&[
+        "refacto", "--dataset", "netflix", "--system", "dgx1", "--gpus", "2",
+        "--lib", "auto", "--iters", "1",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("auto selection"), "{text}");
+    assert!(text.contains("mode 0"), "{text}");
 }
 
 #[test]

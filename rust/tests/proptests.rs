@@ -3,15 +3,17 @@
 
 use agv_bench::comm::algorithms::{
     all_delivered, bcast_series_allgatherv, bruck_allgatherv, execute,
-    recursive_doubling_allgatherv, ring_allgatherv, Schedule,
+    hierarchical_allgatherv, recursive_doubling_allgatherv, ring_allgatherv, LeaderAlgo,
+    Schedule,
 };
-use agv_bench::comm::{run_allgatherv, Library};
+use agv_bench::comm::select::AlgoSelector;
+use agv_bench::comm::{run_allgatherv, Library, Params};
 use agv_bench::prop_assert;
 use agv_bench::sim::Sim;
 use agv_bench::tensor::partition::{profile_nnz_share, profile_rows};
 use agv_bench::tensor::ModeProfile;
-use agv_bench::topology::systems::SystemKind;
-use agv_bench::util::prop::check;
+use agv_bench::topology::systems::{node_groups, SystemKind};
+use agv_bench::util::prop::{check, counts};
 
 #[test]
 fn prop_any_algorithm_delivers_everything() {
@@ -30,6 +32,71 @@ fn prop_any_algorithm_delivers_everything() {
         let p_eff = if pick == 2 { p.next_power_of_two() } else { p };
         let refs: Vec<&Schedule> = schedules.iter().collect();
         prop_assert!(all_delivered(&execute(p_eff, &refs)), "p={p} pick={pick}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hierarchical_delivers_on_node_groupings() {
+    // any system's node grouping, any slice size, both leader
+    // algorithms: the two-level schedule is a correct Allgatherv
+    check("hier-node-groupings", 48, |rng| {
+        let sys = SystemKind::all()[rng.gen_range(3) as usize];
+        let topo = sys.build();
+        let p = 1 + rng.gen_range(topo.num_gpus() as u64) as usize;
+        let groups = node_groups(&topo, p);
+        let inter = if rng.gen_range(2) == 0 { LeaderAlgo::Ring } else { LeaderAlgo::Bruck };
+        let s = hierarchical_allgatherv(p, &groups, inter);
+        prop_assert!(
+            all_delivered(&execute(p, &[&s])),
+            "{} p={p} {inter:?}",
+            sys.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_library_models_accept_irregular_counts() {
+    // the shared §IV-style irregularity generators drive every library
+    // model (zeros included) to a finite, deterministic result
+    check("irregular-counts-libs", 12, |rng| {
+        let sys = SystemKind::all()[rng.gen_range(3) as usize];
+        let topo = sys.build();
+        let p = 2 + rng.gen_range(6) as usize;
+        let cv = counts::irregular(rng, p, 64 << 20);
+        for lib in Library::all() {
+            let a = run_allgatherv(lib, &topo, &cv);
+            prop_assert!(
+                a.time.is_finite() && a.time >= 0.0,
+                "{} {}: {cv:?} -> {}",
+                sys.name(), lib.name(), a.time
+            );
+            let b = run_allgatherv(lib, &topo, &cv);
+            prop_assert!(a.time.to_bits() == b.time.to_bits(), "{} nondeterministic", lib.name());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_selector_never_loses_to_fixed_libraries() {
+    // the auto candidate set contains each library's default choice,
+    // so the argmin can only match or beat every fixed library
+    check("selector-dominates", 8, |rng| {
+        let sys = SystemKind::all()[rng.gen_range(3) as usize];
+        let topo = sys.build();
+        let p = 2 + rng.gen_range(6) as usize;
+        let cv = counts::irregular(rng, p, 32 << 20);
+        let sel = AlgoSelector::new(Params::default()).select_fresh(&topo, &cv);
+        for lib in Library::all() {
+            let fixed = run_allgatherv(lib, &topo, &cv).time;
+            prop_assert!(
+                sel.time <= fixed,
+                "{}: auto {} ({}) slower than {} {}",
+                sys.name(), sel.time, sel.candidate.label(), lib.name(), fixed
+            );
+        }
         Ok(())
     });
 }

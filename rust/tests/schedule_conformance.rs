@@ -1,0 +1,400 @@
+//! Schedule-conformance property harness (DESIGN.md §7): every
+//! Allgatherv schedule in the crate — the flat ring / Bruck / recursive
+//! doubling / bcast-series AND the hierarchical two-level ones — must,
+//! for random P ∈ 2..=32, random ring orders, roots and groupings:
+//!
+//! 1. deliver every block to every rank (`execute` + `all_delivered`);
+//! 2. never ship a block the sender does not yet hold at that step
+//!    (`execute` asserts this internally on the pre-step snapshot);
+//! 3. match the closed-form transfer count: every Allgatherv schedule
+//!    here is *delivery-minimal* — each block moves exactly P-1 times,
+//!    P·(P-1) total — and broadcasts move the root block P-1 times;
+//! 4. carry byte volumes consistent with irregular (skewed, zero-heavy,
+//!    single-hot-rank) count vectors: schedule bytes = (P-1)·Σcounts.
+//!
+//! The `AlgoSelector` is locked down the same way: on small exhaustive
+//! grids its choice must achieve the minimum simulated time over all
+//! candidates, and the hierarchical schedules on `multi_dgx(n)` must
+//! stay within a stated tolerance of the best flat schedule while
+//! moving strictly fewer bytes over the inter-node links.
+
+use agv_bench::comm::algorithms::{
+    all_delivered, bcast_series_allgatherv, binomial_bcast, bruck_allgatherv, execute,
+    hierarchical_allgatherv, recursive_doubling_allgatherv, ring_allgatherv, ring_bcast,
+    LeaderAlgo, Schedule,
+};
+use agv_bench::comm::select::{candidates, simulate, Algo, AlgoSelector, Candidate};
+use agv_bench::comm::{Library, Params};
+use agv_bench::prop_assert;
+use agv_bench::topology::systems::{multi_dgx, node_groups, SystemKind};
+use agv_bench::topology::Topology;
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts};
+
+// ---------------------------------------------------------------------------
+// Harness helpers
+// ---------------------------------------------------------------------------
+
+/// How many times each block travels across all sends of all schedules.
+fn block_transfers(p: usize, schedules: &[&Schedule]) -> Vec<usize> {
+    let mut h = vec![0usize; p];
+    for s in schedules {
+        for op in s.steps.iter().flatten() {
+            for &b in &op.blocks {
+                h[b] += 1;
+            }
+        }
+    }
+    h
+}
+
+/// Total bytes a schedule ships under a count vector.
+fn schedule_bytes(schedules: &[&Schedule], counts: &[u64]) -> u64 {
+    schedules
+        .iter()
+        .flat_map(|s| s.steps.iter().flatten())
+        .map(|op| op.bytes(counts))
+        .sum()
+}
+
+/// Full Allgatherv conformance: delivery (running `execute`, which
+/// panics if any rank sends an unheld block), the per-block P-1 closed
+/// form, and the P·(P-1) total.
+fn assert_allgatherv_conformance(
+    p: usize,
+    schedules: &[&Schedule],
+    label: &str,
+) -> Result<(), String> {
+    let held = execute(p, schedules);
+    prop_assert!(all_delivered(&held), "{label}: not all blocks delivered");
+    for (b, &n) in block_transfers(p, schedules).iter().enumerate() {
+        prop_assert!(
+            n == p - 1,
+            "{label}: block {b} moved {n} times, closed form says {}",
+            p - 1
+        );
+    }
+    let total: usize = schedules.iter().map(|s| s.total_block_transfers()).sum();
+    prop_assert!(total == p * (p - 1), "{label}: total {total} != p(p-1)");
+    Ok(())
+}
+
+/// Random grouping of `0..p` into 1..=p groups with shuffled membership
+/// (leaders are arbitrary ranks, groups need not be contiguous).
+fn random_groups(rng: &mut Rng, p: usize) -> Vec<Vec<usize>> {
+    let g = 1 + rng.gen_range(p as u64) as usize;
+    let mut perm: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut perm);
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); g];
+    for (i, &r) in perm.iter().enumerate() {
+        groups[i % g].push(r);
+    }
+    groups
+}
+
+// ---------------------------------------------------------------------------
+// Flat schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conformance_ring_random_orders() {
+    check("conformance-ring", 64, |rng| {
+        let p = 2 + rng.gen_range(31) as usize; // 2..=32
+        let mut order: Vec<usize> = (0..p).collect();
+        rng.shuffle(&mut order);
+        let s = ring_allgatherv(p, Some(&order));
+        assert_allgatherv_conformance(p, &[&s], &format!("ring p={p}"))
+    });
+}
+
+#[test]
+fn conformance_bruck_every_p() {
+    for p in 2..=32 {
+        let s = bruck_allgatherv(p);
+        assert_allgatherv_conformance(p, &[&s], &format!("bruck p={p}")).unwrap();
+    }
+}
+
+#[test]
+fn conformance_recursive_doubling_powers_of_two() {
+    for p in [2usize, 4, 8, 16, 32] {
+        let s = recursive_doubling_allgatherv(p);
+        assert_allgatherv_conformance(p, &[&s], &format!("rec-dbl p={p}")).unwrap();
+    }
+}
+
+#[test]
+fn conformance_bcast_series_random_orders() {
+    check("conformance-bcast-series", 48, |rng| {
+        let p = 2 + rng.gen_range(31) as usize;
+        let mut order: Vec<usize> = (0..p).collect();
+        rng.shuffle(&mut order);
+        let series = bcast_series_allgatherv(p, Some(&order));
+        let refs: Vec<&Schedule> = series.iter().collect();
+        assert_allgatherv_conformance(p, &refs, &format!("bcast-series p={p}"))
+    });
+}
+
+#[test]
+fn conformance_broadcasts_random_roots() {
+    // broadcasts (the building blocks): the root block reaches every
+    // rank in exactly p-1 transfers
+    check("conformance-bcasts", 48, |rng| {
+        let p = 2 + rng.gen_range(31) as usize;
+        let root = rng.gen_range(p as u64) as usize;
+        let mut order: Vec<usize> = (0..p).collect();
+        rng.shuffle(&mut order);
+        for (s, label) in [
+            (binomial_bcast(p, root), "binomial"),
+            (ring_bcast(p, root, Some(&order)), "ring-bcast"),
+        ] {
+            let held = execute(p, &[&s]);
+            for (r, h) in held.iter().enumerate() {
+                prop_assert!(h[root], "{label} p={p} root={root}: rank {r} missing root");
+            }
+            prop_assert!(
+                s.total_block_transfers() == p - 1,
+                "{label} p={p}: {} transfers != p-1",
+                s.total_block_transfers()
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Hierarchical schedules
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conformance_hierarchical_random_groupings() {
+    check("conformance-hier", 96, |rng| {
+        let p = 2 + rng.gen_range(31) as usize;
+        let groups = random_groups(rng, p);
+        let inter = if rng.gen_range(2) == 0 { LeaderAlgo::Ring } else { LeaderAlgo::Bruck };
+        let s = hierarchical_allgatherv(p, &groups, inter);
+        assert_allgatherv_conformance(
+            p,
+            &[&s],
+            &format!("hier-{inter:?} p={p} groups={groups:?}"),
+        )
+    });
+}
+
+#[test]
+fn conformance_hierarchical_on_system_groupings() {
+    // the groupings the selector actually uses: node_groups of every
+    // system (including degenerate single-node and one-GPU-per-node
+    // shapes) and of multi-DGX at every slice size
+    let mut topos: Vec<Topology> = SystemKind::all().iter().map(|k| k.build()).collect();
+    topos.push(multi_dgx(2));
+    topos.push(multi_dgx(4));
+    for topo in &topos {
+        for p in 2..=topo.num_gpus() {
+            let groups = node_groups(topo, p);
+            for inter in [LeaderAlgo::Ring, LeaderAlgo::Bruck] {
+                let s = hierarchical_allgatherv(p, &groups, inter);
+                assert_allgatherv_conformance(
+                    p,
+                    &[&s],
+                    &format!("{} hier-{inter:?} p={p}", topo.name),
+                )
+                .unwrap();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Irregular count vectors (shared generators from util::prop::counts)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn conformance_byte_volume_under_irregular_counts() {
+    // delivery-minimality makes byte volume exact: every block ships
+    // p-1 times, so schedule bytes = (p-1)·Σcounts — including when
+    // counts contain zeros (SendOp::bytes must handle zero blocks)
+    check("conformance-bytes", 96, |rng| {
+        let p = 2 + rng.gen_range(31) as usize;
+        let cv = counts::irregular(rng, p, 1 << 28);
+        let expected = (p as u64 - 1) * cv.iter().sum::<u64>();
+        let schedules: Vec<Schedule> = match rng.gen_range(4) {
+            0 => vec![ring_allgatherv(p, None)],
+            1 => vec![bruck_allgatherv(p)],
+            2 => {
+                let groups = random_groups(rng, p);
+                vec![hierarchical_allgatherv(p, &groups, LeaderAlgo::Ring)]
+            }
+            _ => bcast_series_allgatherv(p, None),
+        };
+        let refs: Vec<&Schedule> = schedules.iter().collect();
+        let vol = schedule_bytes(&refs, &cv);
+        prop_assert!(vol == expected, "p={p}: bytes {vol} != (p-1)·Σ = {expected}");
+        Ok(())
+    });
+}
+
+#[test]
+fn libraries_survive_zero_heavy_and_hot_counts() {
+    // the full library models (and the selector) must accept the
+    // irregular vectors without panics, returning finite times
+    check("conformance-zero-heavy-libs", 8, |rng| {
+        let topo = SystemKind::Dgx1.build();
+        let p = 2 + rng.gen_range(7) as usize;
+        for cv in [
+            counts::zero_heavy(rng, p, 4 << 20),
+            counts::single_hot(rng, p, 64 << 20),
+            vec![0; p],
+        ] {
+            for lib in Library::all() {
+                let t = agv_bench::comm::run_allgatherv(lib, &topo, &cv).time;
+                prop_assert!(t.is_finite() && t >= 0.0, "{} {cv:?}: t={t}", lib.name());
+            }
+            let sel = AlgoSelector::new(Params::default()).select_fresh(&topo, &cv);
+            prop_assert!(sel.time.is_finite(), "auto on {cv:?}");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Differential tests: hierarchical vs flat, and the selector argmin
+// ---------------------------------------------------------------------------
+
+/// Bytes a schedule moves across node boundaries under a count vector.
+fn inter_node_bytes(topo: &Topology, sched: &Schedule, counts: &[u64]) -> u64 {
+    sched
+        .steps
+        .iter()
+        .flatten()
+        .filter(|op| !topo.same_node(op.from, op.to))
+        .map(|op| op.bytes(counts))
+        .sum()
+}
+
+/// Stated tolerance of the hierarchical-vs-flat differential test: the
+/// two-level schedule trades a serial intra-node epilogue for strictly
+/// less inter-node traffic, so in the bandwidth regime it may trail the
+/// best flat schedule by a bounded factor while it wins the latency
+/// regime outright.
+const HIER_VS_FLAT_TOLERANCE: f64 = 2.0;
+
+#[test]
+fn hierarchical_within_tolerance_of_best_flat_on_multi_dgx() {
+    let params = Params::default();
+    for nodes in [2usize, 3] {
+        let topo = multi_dgx(nodes);
+        let p = 8 * nodes;
+        for per_rank in [64u64 << 10, 1 << 20, 4 << 20] {
+            let cv = counts::regular(p, per_rank);
+            let mut flat = Vec::new();
+            for algo in [Algo::Ring, Algo::RingTopo, Algo::Bruck, Algo::RecursiveDoubling] {
+                for lib in [Library::Mpi, Library::MpiCuda] {
+                    if let Some(r) = simulate(&topo, params, Candidate { lib, algo }, &cv) {
+                        flat.push(r.time);
+                    }
+                }
+            }
+            let mut hier = Vec::new();
+            for algo in [Algo::HierarchicalRing, Algo::HierarchicalBruck] {
+                let cand = Candidate { lib: Library::MpiCuda, algo };
+                if let Some(r) = simulate(&topo, params, cand, &cv) {
+                    hier.push(r.time);
+                }
+            }
+            assert!(!flat.is_empty() && !hier.is_empty());
+            let best_flat = flat.iter().cloned().fold(f64::INFINITY, f64::min);
+            let best_hier = hier.iter().cloned().fold(f64::INFINITY, f64::min);
+            assert!(
+                best_hier <= best_flat * HIER_VS_FLAT_TOLERANCE,
+                "multi_dgx({nodes}) @ {per_rank}B/rank: hier {best_hier} vs flat {best_flat}"
+            );
+        }
+    }
+}
+
+#[test]
+fn hierarchical_moves_less_inter_node_traffic_than_flat_ring() {
+    // deterministic structural win: the ring-of-leaders crosses each
+    // node boundary once per byte, the flat ring roughly G times
+    for nodes in [2usize, 3, 4] {
+        let topo = multi_dgx(nodes);
+        let p = 8 * nodes;
+        let cv = counts::regular(p, 1 << 20);
+        let groups = node_groups(&topo, p);
+        for inter in [LeaderAlgo::Ring, LeaderAlgo::Bruck] {
+            let hier = hierarchical_allgatherv(p, &groups, inter);
+            let flat = ring_allgatherv(p, None);
+            let hb = inter_node_bytes(&topo, &hier, &cv);
+            let fb = inter_node_bytes(&topo, &flat, &cv);
+            assert!(
+                hb < fb,
+                "multi_dgx({nodes}) {inter:?}: hier IB bytes {hb} !< flat ring {fb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn selector_argmin_exhaustive_on_small_grids() {
+    // on every (system, gpus, count-shape) cell of a small exhaustive
+    // grid, the selector's choice must achieve the minimum simulated
+    // time over all candidates — bit-exact, since it simulates the
+    // same candidates deterministically
+    let params = Params::default();
+    let sel = AlgoSelector::new(params);
+    let mut topos: Vec<Topology> = SystemKind::all().iter().map(|k| k.build()).collect();
+    topos.push(multi_dgx(2));
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut cells = 0usize;
+    for topo in &topos {
+        for p in [2usize, 4, 8, 16] {
+            if p > topo.num_gpus() {
+                continue;
+            }
+            let shapes = [
+                counts::regular(p, 64 << 10),
+                counts::regular(p, 8 << 20),
+                counts::skewed(&mut rng, p, 16 << 20),
+                counts::zero_heavy(&mut rng, p, 8 << 20),
+                counts::single_hot(&mut rng, p, 64 << 20),
+            ];
+            for cv in &shapes {
+                let evals = sel.evaluate(topo, cv);
+                assert_eq!(evals.len(), candidates(topo, p).len(), "{} p={p}", topo.name);
+                let min = evals.iter().map(|(_, r)| r.time).fold(f64::INFINITY, f64::min);
+                let s = sel.select_fresh(topo, cv);
+                assert_eq!(
+                    s.time.to_bits(),
+                    min.to_bits(),
+                    "{} p={p} {cv:?}: selector {} vs min {min}",
+                    topo.name, s.time
+                );
+                cells += 1;
+            }
+        }
+    }
+    assert!(cells >= 50, "grid unexpectedly small: {cells}");
+}
+
+#[test]
+fn selector_beats_or_matches_every_fixed_library_on_multi_dgx() {
+    let topo = multi_dgx(2);
+    let sel = AlgoSelector::new(Params::default());
+    let mut rng = Rng::new(7);
+    for cv in [
+        counts::regular(16, 1 << 20),
+        counts::skewed(&mut rng, 16, 32 << 20),
+        counts::single_hot(&mut rng, 16, 128 << 20),
+    ] {
+        let s = sel.select_fresh(&topo, &cv);
+        for lib in Library::all() {
+            let fixed = agv_bench::comm::run_allgatherv(lib, &topo, &cv).time;
+            assert!(
+                s.time <= fixed,
+                "auto {} ({}) slower than fixed {} {}",
+                s.time, s.candidate.label(), lib.name(), fixed
+            );
+        }
+    }
+}

@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance verify bench bench-smoke artifacts fmt clippy
+.PHONY: build test test-conformance test-workload verify bench bench-smoke bench-workload artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -13,14 +13,26 @@ test:
 test-conformance:
 	cargo test --test schedule_conformance
 
+# The workload engine's differential / property / determinism suites on
+# their own (CI runs this as a dedicated step; also part of `make test`).
+test-workload:
+	cargo test --test workload_differential --test workload_properties --test workload_determinism
+
 verify: build test
 
-# Full measurement run; bench_engine writes BENCH_engine.json and
-# bench_hierarchy writes BENCH_hierarchy.json at the repo root.
+# Full measurement run; bench_engine writes BENCH_engine.json,
+# bench_hierarchy writes BENCH_hierarchy.json and bench_workload writes
+# BENCH_workload.json at the repo root.
 bench:
 	cargo bench --bench bench_engine -- --json
 	cargo bench --bench bench_hierarchy -- --json
+	cargo bench --bench bench_workload -- --json
 	cargo bench --bench bench_ablations
+
+# The workload grid alone (BENCH_workload.json is byte-reproducible
+# from its seed; AGV_BENCH_QUICK=1 redirects to the .quick.json name).
+bench-workload:
+	cargo bench --bench bench_workload -- --json
 
 # CI smoke: every bench target builds and runs with slashed iteration
 # counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick
@@ -29,6 +41,7 @@ bench:
 bench-smoke:
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_engine -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_hierarchy -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_workload -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_ablations
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_osu_fig2
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_refacto_fig3

@@ -1,4 +1,4 @@
-//! Ablations of the design choices DESIGN.md §9 calls out:
+//! Ablations of the design choices DESIGN.md §10 calls out:
 //!  - allgatherv algorithm (ring vs Bruck vs recursive doubling) across
 //!    message regimes;
 //!  - NCCL's bcast-series Allgatherv (paper Listing 1) vs a hypothetical

@@ -1,0 +1,48 @@
+//! Multi-tenant workload engine benchmark: wall-clock cost of the
+//! shared-sim admission loop per system, plus the deterministic
+//! simulated-metric payload.
+//!
+//! `cargo bench --bench bench_workload [-- --json]`
+//!
+//! With `--json` (what `make bench-workload` passes) the simulated
+//! metrics are written to `BENCH_workload.json` at the repo root.
+//! Deliberately, the artifact holds **no wall-clock numbers** — only
+//! simulation outputs — so the same seed reproduces it byte-for-byte
+//! (tests/workload_determinism.rs pins the in-process equivalent).
+//! Wall-clock timing of the same cases is printed below instead.
+//! `AGV_BENCH_QUICK=1` slashes iteration counts and redirects the
+//! artifact to `BENCH_workload.quick.json` (scratch), as in the other
+//! bench targets.
+
+use agv_bench::comm::Params;
+use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
+use agv_bench::workload::bench::{bench_cases, bench_doc};
+use agv_bench::workload::run_workload;
+
+/// Seed of the canonical BENCH_workload.json grid.
+const SEED: u64 = 42;
+
+fn main() {
+    let json_out = std::env::args().any(|a| a == "--json");
+
+    // wall-clock: how fast does the engine admit + simulate each case?
+    for (label, topo, spec) in bench_cases(SEED) {
+        let ops: usize = spec.tenants.iter().map(|t| t.ops).sum();
+        let name = format!("workload/{label}");
+        let r = bench(&name, warmup(1), iters(8), || {
+            black_box(run_workload(&topo, &spec, Params::default()).unwrap());
+        });
+        println!("{}   ({:.0} ops/s)", r.report_line(), ops as f64 / r.mean_s);
+    }
+
+    if json_out {
+        let doc = bench_doc(SEED);
+        let path = if quick_mode() {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_workload.quick.json")
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_workload.json")
+        };
+        std::fs::write(path, doc.render() + "\n").expect("write BENCH_workload json");
+        println!("\nwrote {path}");
+    }
+}

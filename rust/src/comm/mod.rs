@@ -17,6 +17,15 @@
 //!   the argmin, and caches decisions per irregularity bucket;
 //! - [`params`]: protocol constants and tunables, including the
 //!   `MV2_GPUDIRECT_LIMIT` knob the paper sweeps in §V-C.
+//!
+//! Every library exposes its collective in two forms: a one-shot
+//! [`CommLibrary::allgatherv`] that runs in a `Sim` of its own, and a
+//! *compose* entry point (`Mpi::compose_with`, `MpiCuda::compose_with`,
+//! `Nccl::compose`, or [`compose_allgatherv`] / [`select::compose`] over
+//! all of them) that builds the identical subgraph into a **shared**
+//! `Sim` behind an optional gate task — what the multi-tenant
+//! [`crate::workload`] engine batches concurrent jobs through
+//! (DESIGN.md §9).
 
 pub mod algorithms;
 pub mod mpi;
@@ -117,6 +126,34 @@ impl Library {
 /// ```
 pub fn run_allgatherv(lib: Library, topo: &Topology, counts: &[u64]) -> CommResult {
     lib.build(Params::default()).allgatherv(topo, counts)
+}
+
+/// Compose one library's Allgatherv into a **shared** simulation,
+/// starting only after `gate` completes (`None` = immediately at t=0).
+/// Exactly the subgraph [`run_allgatherv`] builds — same MVAPICH
+/// mean-size algorithm selection, same transports — so a gate-less
+/// composition in a fresh `Sim` reproduces `run_allgatherv` bit-for-bit
+/// (the workload differential tests pin this). Returns the op's
+/// completion task; the caller owns running the `Sim` and reading the
+/// finish time.
+pub fn compose_allgatherv(
+    sim: &mut crate::sim::Sim,
+    lib: Library,
+    params: Params,
+    counts: &[u64],
+    gate: Option<crate::sim::TaskId>,
+) -> crate::sim::TaskId {
+    match lib {
+        Library::Mpi => {
+            let sched = mpi::select_algorithm(&params, counts);
+            mpi::Mpi::new(params).compose_with(sim, counts, &sched, gate)
+        }
+        Library::MpiCuda => {
+            let sched = mpi::select_algorithm(&params, counts);
+            mpi_cuda::MpiCuda::new(params).compose_with(sim, counts, &sched, gate)
+        }
+        Library::Nccl => nccl::Nccl::new(params).compose(sim, counts, gate),
+    }
 }
 
 #[cfg(test)]

@@ -10,11 +10,11 @@
 //! workloads (§V-C), where the mean says "small" while the heavy tail is
 //! hundreds of MB.
 
-use crate::sim::Sim;
+use crate::sim::{Sim, TaskId};
 use crate::topology::Topology;
 
 use super::algorithms::{bruck_allgatherv, ring_allgatherv, Schedule};
-use super::transport::{dtoh, host_to_host, htod, run_schedule};
+use super::transport::{dtoh, host_to_host, htod, op_completion, run_schedule};
 use super::{CommLibrary, CommResult, Params};
 
 /// Traditional MPI model: explicit staging + host-to-host collective.
@@ -28,23 +28,32 @@ impl Mpi {
         Mpi { params }
     }
 
-    /// Run the staged host collective with an explicit schedule. The
-    /// auto-selection engine (`comm::select`) simulates candidate
-    /// algorithms through this entry point; [`CommLibrary::allgatherv`]
-    /// composes it with the MVAPICH mean-size selection.
-    pub fn allgatherv_with(&self, topo: &Topology, counts: &[u64], sched: &Schedule) -> CommResult {
+    /// Compose the staged host collective into a shared simulation,
+    /// starting only after `gate` completes (`None` = immediately at
+    /// t=0). Returns the task that finishes when every rank holds the
+    /// gathered buffer on device. This is the schedule-reuse entry the
+    /// workload engine batches tenants through; [`Mpi::allgatherv_with`]
+    /// is the same subgraph run in a Sim of its own.
+    pub fn compose_with(
+        &self,
+        sim: &mut Sim,
+        counts: &[u64],
+        sched: &Schedule,
+        gate: Option<TaskId>,
+    ) -> TaskId {
+        let topo = sim.topology();
         let p = counts.len();
         assert!(p >= 1 && p <= topo.num_gpus());
         let total: u64 = counts.iter().sum();
-        let mut sim = Sim::new(topo);
+        let gate_deps: Vec<TaskId> = gate.into_iter().collect();
 
         // Explicit D2H of each rank's own contribution.
-        let entry: Vec<Option<crate::sim::TaskId>> = (0..p)
-            .map(|r| Some(dtoh(&mut sim, topo, r, counts[r] as f64, &[])))
+        let entry: Vec<Option<TaskId>> = (0..p)
+            .map(|r| Some(dtoh(sim, topo, r, counts[r] as f64, &gate_deps)))
             .collect();
 
         let params = self.params;
-        let finals = run_schedule(&mut sim, p, sched, &entry, |sim, op, deps| {
+        let finals = run_schedule(sim, p, sched, &entry, |sim, op, deps| {
             let bytes = op.bytes(counts);
             let ready = sim.delay(pt2pt_overhead(&params, bytes), deps);
             host_to_host(sim, topo, &params, op.from, op.to, bytes as f64, &[ready])
@@ -54,11 +63,21 @@ impl Mpi {
         let mut tails = Vec::new();
         for (r, f) in finals.iter().enumerate() {
             let deps: Vec<_> = f.or(entry[r]).into_iter().collect();
-            tails.push(htod(&mut sim, topo, r, total as f64, &deps));
+            tails.push(htod(sim, topo, r, total as f64, &deps));
         }
-        let _ = tails;
+        op_completion(sim, &tails, gate)
+    }
+
+    /// Run the staged host collective with an explicit schedule in a
+    /// fresh simulation. The auto-selection engine (`comm::select`)
+    /// simulates candidate algorithms through this entry point;
+    /// [`CommLibrary::allgatherv`] composes it with the MVAPICH
+    /// mean-size selection.
+    pub fn allgatherv_with(&self, topo: &Topology, counts: &[u64], sched: &Schedule) -> CommResult {
+        let mut sim = Sim::new(topo);
+        let done = self.compose_with(&mut sim, counts, sched, None);
         let res = sim.run();
-        CommResult { time: res.makespan, flows: res.flows }
+        CommResult { time: res.finish(done), flows: res.flows }
     }
 }
 

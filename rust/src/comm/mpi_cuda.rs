@@ -19,7 +19,9 @@ use crate::sim::Sim;
 use crate::topology::Topology;
 
 use super::mpi::{pt2pt_overhead, select_algorithm};
-use super::transport::{direct_flow, gdr_send, run_schedule, staged_pipeline, staged_serial};
+use super::transport::{
+    direct_flow, gdr_send, op_completion, run_schedule, staged_pipeline, staged_serial,
+};
 use super::{CommLibrary, CommResult, Params};
 
 /// CUDA-aware MVAPICH model: GPUDirect P2P/RDMA with staged fallbacks.
@@ -33,26 +35,43 @@ impl MpiCuda {
         MpiCuda { params }
     }
 
-    /// Run the CUDA-aware collective with an explicit schedule (the
-    /// auto-selection engine simulates candidate algorithms — including
-    /// the hierarchical two-level ones — through this entry point);
-    /// [`CommLibrary::allgatherv`] composes it with the MVAPICH
-    /// mean-size selection.
+    /// Compose the CUDA-aware collective into a shared simulation,
+    /// starting only after `gate` completes (`None` = immediately at
+    /// t=0). Returns the task finishing when every rank has received
+    /// every block — the workload engine's schedule-reuse entry point.
+    pub fn compose_with(
+        &self,
+        sim: &mut Sim,
+        counts: &[u64],
+        sched: &super::algorithms::Schedule,
+        gate: Option<crate::sim::TaskId>,
+    ) -> crate::sim::TaskId {
+        let topo = sim.topology();
+        let p = counts.len();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let entry = vec![gate; p];
+        let finals = run_schedule(sim, p, sched, &entry, |sim, op, deps| {
+            self.send(sim, topo, op.from, op.to, op.bytes(counts), deps)
+        });
+        let tails: Vec<crate::sim::TaskId> = finals.iter().filter_map(|&f| f).collect();
+        op_completion(sim, &tails, gate)
+    }
+
+    /// Run the CUDA-aware collective with an explicit schedule in a
+    /// fresh simulation (the auto-selection engine simulates candidate
+    /// algorithms — including the hierarchical two-level ones — through
+    /// this entry point); [`CommLibrary::allgatherv`] composes it with
+    /// the MVAPICH mean-size selection.
     pub fn allgatherv_with(
         &self,
         topo: &Topology,
         counts: &[u64],
         sched: &super::algorithms::Schedule,
     ) -> CommResult {
-        let p = counts.len();
-        assert!(p >= 1 && p <= topo.num_gpus());
         let mut sim = Sim::new(topo);
-        let entry = vec![None; p];
-        let _ = run_schedule(&mut sim, p, sched, &entry, |sim, op, deps| {
-            self.send(sim, topo, op.from, op.to, op.bytes(counts), deps)
-        });
+        let done = self.compose_with(&mut sim, counts, sched, None);
         let res = sim.run();
-        CommResult { time: res.makespan, flows: res.flows }
+        CommResult { time: res.finish(done), flows: res.flows }
     }
 
     /// Emit one CUDA-aware send; returns its completion task.

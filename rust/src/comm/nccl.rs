@@ -201,6 +201,28 @@ impl Nccl {
     }
 }
 
+impl Nccl {
+    /// Compose the Listing-1 bcast-series Allgatherv into a shared
+    /// simulation, starting only after `gate` completes (`None` =
+    /// immediately at t=0). Returns the task finishing the last
+    /// broadcast (the bcasts serialize on one stream, so it is the
+    /// op's completion) — the workload engine's schedule-reuse entry.
+    pub fn compose(&self, sim: &mut Sim, counts: &[u64], gate: Option<TaskId>) -> TaskId {
+        let topo = sim.topology();
+        let p = counts.len();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let ring = detect_ring(topo, p);
+        let mut tail: Option<TaskId> = gate;
+        for root in 0..p {
+            let deps: Vec<TaskId> = tail.into_iter().collect();
+            let launch = sim.delay(self.params.nccl_launch_overhead, &deps);
+            let done = self.ring_bcast(sim, topo, &ring, root, counts[root], launch);
+            tail = Some(done);
+        }
+        tail.expect("p >= 1, so at least one bcast launch exists")
+    }
+}
+
 impl CommLibrary for Nccl {
     fn name(&self) -> &'static str {
         "NCCL"
@@ -211,19 +233,10 @@ impl CommLibrary for Nccl {
     /// overhead; rdispls/recvcounts place each block, so irregular counts
     /// are natural.
     fn allgatherv(&self, topo: &Topology, counts: &[u64]) -> CommResult {
-        let p = counts.len();
-        assert!(p >= 1 && p <= topo.num_gpus());
-        let ring = detect_ring(topo, p);
         let mut sim = Sim::new(topo);
-        let mut tail: Option<TaskId> = None;
-        for root in 0..p {
-            let deps: Vec<TaskId> = tail.into_iter().collect();
-            let launch = sim.delay(self.params.nccl_launch_overhead, &deps);
-            let done = self.ring_bcast(&mut sim, topo, &ring, root, counts[root], launch);
-            tail = Some(done);
-        }
+        let done = self.compose(&mut sim, counts, None);
         let res = sim.run();
-        CommResult { time: res.makespan, flows: res.flows }
+        CommResult { time: res.finish(done), flows: res.flows }
     }
 }
 

@@ -234,6 +234,37 @@ pub fn simulate(
     }
 }
 
+/// Compose one candidate's collective into a **shared** simulation
+/// behind an optional gate task — the workload engine's auto-tenant
+/// path. Builds the identical subgraph [`simulate`] runs in isolation
+/// (same schedule construction, same transports), so a gate-less
+/// composition reproduces the [`simulate`] time bit-for-bit. `None` if
+/// the pair is inapplicable, exactly as for [`simulate`].
+pub fn compose(
+    sim: &mut crate::sim::Sim,
+    params: Params,
+    cand: Candidate,
+    counts: &[u64],
+    gate: Option<crate::sim::TaskId>,
+) -> Option<crate::sim::TaskId> {
+    let topo = sim.topology();
+    let p = counts.len();
+    match (cand.lib, cand.algo) {
+        (Library::Nccl, Algo::BcastSeries) => {
+            Some(nccl::Nccl::new(params).compose(sim, counts, gate))
+        }
+        (Library::Nccl, _) | (_, Algo::BcastSeries) => None,
+        (Library::Mpi, algo) => {
+            let sched = algo.schedule(topo, p)?;
+            Some(mpi::Mpi::new(params).compose_with(sim, counts, &sched, gate))
+        }
+        (Library::MpiCuda, algo) => {
+            let sched = algo.schedule(topo, p)?;
+            Some(mpi_cuda::MpiCuda::new(params).compose_with(sim, counts, &sched, gate))
+        }
+    }
+}
+
 /// Decision-table bucket of a count vector: 4 mean-size classes × 4
 /// irregularity (coefficient-of-variation) classes. Two vectors in the
 /// same bucket on the same (system, gpus) share a cached decision.

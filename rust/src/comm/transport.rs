@@ -173,6 +173,21 @@ pub fn gdr_send(
     }
 }
 
+/// Fold a composed op's per-rank tail tasks into a single completion
+/// task — the handle a dependent iteration (or a workload arrival gate)
+/// waits on. A single tail is returned as-is; several are joined; an
+/// empty tail set (a 1-rank schedule moves no data) degrades to the
+/// gate itself or, lacking one, a zero-delay root task. Because every
+/// task a composition emits is an ancestor of one of its tails, the
+/// completion task finishes exactly when the op's subgraph does.
+pub fn op_completion(sim: &mut Sim, tails: &[TaskId], gate: Option<TaskId>) -> TaskId {
+    match tails {
+        [] => gate.unwrap_or_else(|| sim.join(&[])),
+        [one] => *one,
+        many => sim.join(many),
+    }
+}
+
 /// Run a [`Schedule`] with per-rank step barriers: a rank's step-s+1
 /// operations wait on everything it sent or received in step s (blocking
 /// MPI collective semantics — the reason a dominant block serializes a

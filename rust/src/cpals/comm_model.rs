@@ -113,6 +113,129 @@ pub fn refacto_comm_auto(
     }
 }
 
+/// The multi-tenant verdict on ReFacTo's communication: the refacto
+/// op stream run as one tenant among synthetic background tenants on
+/// a shared fabric (DESIGN.md §9).
+#[derive(Clone, Debug)]
+pub struct ContendedRefacto {
+    /// Data-set name (Table I).
+    pub dataset: &'static str,
+    /// Simulated GPU (rank) count.
+    pub gpus: usize,
+    /// Synthetic background tenants sharing the fabric.
+    pub background: usize,
+    /// CP-ALS iterations (3 Allgatherv ops each).
+    pub iters: usize,
+    /// Completion of the refacto tenant alone on the fabric (seconds).
+    pub isolated: f64,
+    /// Completion of the refacto tenant among the background tenants.
+    pub contended: f64,
+    /// contended / isolated.
+    pub slowdown: f64,
+    /// p99 of the refacto tenant's contended per-op latencies.
+    pub p99_latency: f64,
+}
+
+/// Knobs of the contended-refacto study (grouped so the hook's
+/// signature stays small).
+#[derive(Clone, Copy, Debug)]
+pub struct ContentionCfg {
+    /// Simulated GPU (rank) count.
+    pub gpus: usize,
+    /// CP-ALS iterations the refacto tenant replays (3 ops each).
+    pub iters: usize,
+    /// Synthetic background tenants sharing the fabric.
+    pub background: usize,
+    /// Workload seed (arrival jitter, distribution draws).
+    pub seed: u64,
+}
+
+/// Build the refacto-vs-background workload spec: tenant 0 replays the
+/// data set's per-mode Allgatherv trace back-to-back (`3 x iters`
+/// ops); each background tenant draws OSU-distribution vectors of the
+/// foreground's mean op volume with staggered, jittered arrivals.
+pub fn refacto_workload_spec(
+    spec: &TensorSpec,
+    lib: crate::workload::TenantLib,
+    cfg: &ContentionCfg,
+) -> crate::workload::WorkloadSpec {
+    use crate::osu::distributions::Distribution;
+    use crate::workload::spec::{SYNTHETIC_GAP, SYNTHETIC_JITTER, SYNTHETIC_STAGGER};
+    use crate::workload::{OpStream, TenantSpec, WorkloadSpec};
+
+    let counts = mode_counts(spec, cfg.gpus);
+    let volume_per_op: u64 =
+        counts.iter().map(|c| c.iter().sum::<u64>()).sum::<u64>() / 3;
+    let mut tenants = vec![TenantSpec::immediate(
+        "refacto",
+        0,
+        lib.clone(),
+        OpStream::TensorModes { spec: spec.clone(), gpus: cfg.gpus },
+        3 * cfg.iters,
+    )];
+    let dists = Distribution::all();
+    for i in 0..cfg.background {
+        tenants.push(TenantSpec {
+            name: format!("bg-{i}"),
+            seed: 1 + i as u64,
+            lib: lib.clone(),
+            stream: OpStream::Distribution {
+                dist: dists[i % dists.len()],
+                gpus: cfg.gpus,
+                total: volume_per_op.max(1),
+            },
+            ops: 3 * cfg.iters,
+            start_offset: (i + 1) as f64 * SYNTHETIC_STAGGER,
+            gap: SYNTHETIC_GAP,
+            jitter: SYNTHETIC_JITTER,
+        });
+    }
+    WorkloadSpec {
+        name: format!("refacto-{}+{}bg", spec.name, cfg.background),
+        seed: cfg.seed,
+        tenants,
+    }
+}
+
+/// Run the refacto communication pattern as one tenant among
+/// `cfg.background` synthetic tenants; reports idle-vs-contended
+/// tenant completion through the shared-fabric workload engine.
+pub fn refacto_comm_contended(
+    topo: &Topology,
+    lib: crate::workload::TenantLib,
+    params: Params,
+    spec: &TensorSpec,
+    cfg: &ContentionCfg,
+) -> ContendedRefacto {
+    assert!(cfg.gpus >= 1 && cfg.gpus <= topo.num_gpus());
+    assert!(cfg.iters >= 1);
+    let full = refacto_workload_spec(spec, lib, cfg);
+    let alone = crate::workload::WorkloadSpec {
+        name: full.name.clone(),
+        seed: full.seed,
+        tenants: vec![full.tenants[0].clone()],
+    };
+    // plan once; the foreground tenant's plan is removal-invariant, so
+    // the isolated replay reuses it instead of re-running an auto
+    // tenant's selector simulations
+    let plans = crate::workload::engine::plan(topo, &full, params)
+        .expect("refacto workload spec is valid by construction");
+    let contended = crate::workload::engine::run_planned(topo, &full, params, &plans);
+    let alone_plans = vec![plans[0].clone()];
+    let isolated = crate::workload::engine::run_planned(topo, &alone, params, &alone_plans);
+    let (c, i) = (&contended.tenants[0], &isolated.tenants[0]);
+    ContendedRefacto {
+        dataset: spec.name,
+        gpus: cfg.gpus,
+        background: cfg.background,
+        iters: cfg.iters,
+        isolated: i.completion,
+        contended: c.completion,
+        slowdown: c.completion / i.completion,
+        p99_latency: c.latency_percentile(99.0),
+    }
+}
+
 /// Sweep `MV2_GPUDIRECT_LIMIT` for one configuration (paper §V-C): the
 /// MPI-CUDA library is rebuilt per value; returns (limit, total time).
 ///
@@ -245,6 +368,30 @@ mod tests {
             one.per_mode.map(|s| s.candidate),
             ten.per_mode.map(|s| s.candidate)
         );
+    }
+
+    #[test]
+    fn contended_refacto_slows_down_but_not_alone() {
+        let topo = dgx1();
+        let d = datasets::netflix();
+        let lib = crate::workload::TenantLib::Fixed(Library::Nccl);
+        let cfg = |background| ContentionCfg { gpus: 8, iters: 1, background, seed: 5 };
+        let alone = refacto_comm_contended(&topo, lib.clone(), Params::default(), &d, &cfg(0));
+        assert_eq!(alone.background, 0);
+        assert!(
+            (alone.slowdown - 1.0).abs() < 1e-9,
+            "no background, yet slowdown {}", alone.slowdown
+        );
+        // the isolated tenant completion is exactly the back-to-back
+        // sum of the three per-mode isolated Allgatherv times
+        let fixed = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 8, 1);
+        assert!(
+            (alone.isolated - fixed.total_time).abs() / fixed.total_time < 1e-9,
+            "workload replay {} vs refacto_comm {}", alone.isolated, fixed.total_time
+        );
+        let busy = refacto_comm_contended(&topo, lib, Params::default(), &d, &cfg(3));
+        assert!(busy.slowdown > 1.02, "3 tenants left no trace: {}", busy.slowdown);
+        assert!(busy.p99_latency > 0.0);
     }
 
     #[test]

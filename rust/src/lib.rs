@@ -12,6 +12,8 @@
 //!   factorization driver over the PJRT runtime;
 //! - [`runtime`]: AOT HLO-text loading + execution (xla/PJRT);
 //! - [`report`]: renderers regenerating every paper table and figure;
+//! - [`workload`]: multi-tenant engine — N concurrent Allgatherv jobs
+//!   composed into one shared simulation (contended latency study);
 //! - [`util`]: self-contained PRNG / stats / bench / prop-test / CLI.
 #![warn(missing_docs)]
 
@@ -24,3 +26,4 @@ pub mod sim;
 pub mod tensor;
 pub mod topology;
 pub mod util;
+pub mod workload;

@@ -4,15 +4,23 @@
 
 use std::path::PathBuf;
 
+use agv_bench::anyhow;
 use agv_bench::comm::{Library, Params};
-use agv_bench::cpals::comm_model::{gdr_limit_sweep, refacto_comm, refacto_comm_auto, DEFAULT_ITERS};
+use agv_bench::cpals::comm_model::{
+    gdr_limit_sweep, refacto_comm, refacto_comm_auto, refacto_comm_contended, ContentionCfg,
+    DEFAULT_ITERS,
+};
 use agv_bench::cpals::driver::Driver;
-use agv_bench::report::{auto as report_auto, fig2, fig3, findings, table1, write_csv};
+use agv_bench::osu::distributions::Distribution;
+use agv_bench::report::{
+    auto as report_auto, fig2, fig3, findings, table1, workload as report_workload, write_csv,
+};
 use agv_bench::runtime::{default_artifacts_dir, Runtime};
 use agv_bench::tensor::{datasets, synth};
 use agv_bench::topology::systems::SystemKind;
 use agv_bench::util::cli::{parse_bytes, Args};
 use agv_bench::util::{fmt_bytes, fmt_time};
+use agv_bench::workload::{parse_trace, OpStream, TenantLib, WorkloadSpec};
 
 const HELP: &str = "\
 agv — reproduction of 'An Empirical Evaluation of Allgatherv on Multi-GPU Systems' (CCGRID'18)
@@ -34,6 +42,11 @@ COMMANDS
                                one ReFacTo communication simulation (--lib auto picks per mode)
   sweep-gdr [--dataset D] [--gpus N] [--limits CSV]
                                MV2_GPUDIRECT_LIMIT sweep (paper §V-C)
+  workload [--system S|all] [--tenants K] [--ops N] [--lib L|auto] [--gpus N]
+           [--total BYTES] [--dist D] [--trace FILE] [--seed N] [--csv-dir DIR]
+           [--refacto DATASET [--iters N]]
+                               multi-tenant contended Allgatherv study: K concurrent
+                               tenants share one fabric; idle-vs-contended latency
   e2e [--config small|e2e] [--system S] [--gpus N] [--iters N] [--seed N]
       [--artifacts DIR]        end-to-end factorization (real compute via PJRT)
   artifacts [--artifacts DIR]  list AOT artifacts and their shapes
@@ -53,6 +66,12 @@ fn main() {
         "osu" => cmd_osu(&args),
         "refacto" => cmd_refacto(&args),
         "sweep-gdr" => cmd_sweep_gdr(&args),
+        "workload" => {
+            if let Err(e) = cmd_workload(&args) {
+                eprintln!("workload failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         "e2e" => cmd_e2e(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => print!("{HELP}"),
@@ -290,6 +309,121 @@ fn cmd_sweep_gdr(args: &Args) {
             if *limit == best { "   <-- best" } else { "" }
         );
     }
+}
+
+fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
+    let tenants = args.get_usize("tenants", 4);
+    let ops = args.get_usize("ops", 4);
+    let seed = args.get_u64("seed", 42);
+    let lib = {
+        let s = args.get_or("lib", "nccl");
+        TenantLib::parse(s)
+            .ok_or_else(|| anyhow!("unknown library `{s}` (mpi|mpi-cuda|nccl|auto)"))?
+    };
+    let total = match args.get("total") {
+        Some(s) => parse_bytes(s).ok_or_else(|| anyhow!("--total: bad size `{s}`"))?,
+        None => 16 << 20,
+    };
+    let dist = args
+        .get("dist")
+        .map(|s| {
+            Distribution::parse(s).ok_or_else(|| {
+                anyhow!("unknown distribution `{s}` (uniform|linear|geometric|spike|random-zipf)")
+            })
+        })
+        .transpose()?;
+    let trace_ops = args
+        .get("trace")
+        .map(|f| -> agv_bench::util::error::Result<Vec<Vec<u64>>> {
+            use agv_bench::util::error::Context;
+            let text =
+                std::fs::read_to_string(f).with_context(|| format!("reading trace `{f}`"))?;
+            parse_trace(&text).with_context(|| format!("parsing trace `{f}`"))
+        })
+        .transpose()?;
+    let gpus_flag = args.get("gpus").map(|_| args.get_usize("gpus", 8));
+    let systems: Vec<SystemKind> = match args.get_or("system", "all") {
+        "all" => SystemKind::all().to_vec(),
+        s => vec![SystemKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown system `{s}` (cluster|dgx1|cs-storm|all)"))?],
+    };
+
+    // --refacto: the cpals hook — the data set's comm pattern as one
+    // tenant among synthetic background tenants.
+    if let Some(dname) = args.get("refacto") {
+        for flag in ["trace", "dist", "total", "ops"] {
+            if args.get(flag).is_some() {
+                return Err(anyhow!(
+                    "--{flag} does not apply to --refacto (its tenant replays the data set's \
+                     mode trace; use --tenants/--iters/--gpus/--lib/--seed)"
+                ));
+            }
+        }
+        let spec = datasets::by_name(dname).ok_or_else(|| anyhow!("unknown dataset `{dname}`"))?;
+        let iters = args.get_usize("iters", 2);
+        if iters == 0 {
+            return Err(anyhow!("--iters must be at least 1"));
+        }
+        let background = tenants.saturating_sub(1);
+        println!(
+            "CONTENDED REFACTO — {} as one tenant among {background} synthetic tenants \
+             ({iters} iterations, lib {})",
+            spec.name,
+            lib.label()
+        );
+        for &kind in &systems {
+            let topo = kind.build();
+            let gpus = gpus_flag.unwrap_or(topo.num_gpus().min(8));
+            if gpus == 0 || gpus > topo.num_gpus() {
+                return Err(anyhow!(
+                    "--gpus {gpus} out of range for `{}` (1..={})",
+                    topo.name,
+                    topo.num_gpus()
+                ));
+            }
+            let cfg = ContentionCfg { gpus, iters, background, seed };
+            let r = refacto_comm_contended(&topo, lib.clone(), Params::default(), &spec, &cfg);
+            println!(
+                "  {:<10} @ {gpus} GPUs: idle {:>12}  contended {:>12}  slowdown {:>5.2}x  p99/op {:>12}",
+                kind.name(),
+                fmt_time(r.isolated),
+                fmt_time(r.contended),
+                r.slowdown,
+                fmt_time(r.p99_latency),
+            );
+        }
+        return Ok(());
+    }
+
+    let mk_spec = |max_gpus: usize| -> WorkloadSpec {
+        let gpus = gpus_flag.unwrap_or(max_gpus.min(8));
+        let mut spec = WorkloadSpec::synthetic(tenants, ops, gpus, lib.clone(), total, seed);
+        if let Some(d) = dist {
+            for t in &mut spec.tenants {
+                if let OpStream::Distribution { dist, .. } = &mut t.stream {
+                    *dist = d;
+                }
+            }
+        }
+        if let Some(tr) = &trace_ops {
+            if let Some(t0) = spec.tenants.first_mut() {
+                t0.name = "trace".to_string();
+                // without an explicit --ops, replay the whole trace once
+                if args.get("ops").is_none() {
+                    t0.ops = tr.len();
+                }
+                t0.stream = OpStream::Trace { ops: tr.clone() };
+            }
+        }
+        spec
+    };
+    let sections = report_workload::study(&systems, Params::default(), mk_spec)?;
+    print!("{}", report_workload::render(&sections));
+    if let Some(dir) = csv_dir(args) {
+        let p = write_csv(&dir, "workload.csv", &report_workload::csv(&sections))?;
+        eprintln!("wrote {}", p.display());
+    }
+    Ok(())
 }
 
 fn cmd_e2e(args: &Args) {

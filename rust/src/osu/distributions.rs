@@ -41,6 +41,19 @@ impl Distribution {
         }
     }
 
+    /// Parse a distribution name as printed by [`Distribution::name`]
+    /// (the `agv workload --dist` flag).
+    pub fn parse(s: &str) -> Option<Distribution> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(Distribution::Uniform),
+            "linear" => Some(Distribution::Linear),
+            "geometric" => Some(Distribution::Geometric),
+            "spike" => Some(Distribution::Spike),
+            "random-zipf" | "randomzipf" | "zipf" => Some(Distribution::RandomZipf),
+            _ => None,
+        }
+    }
+
     /// All distributions, mildest first.
     pub fn all() -> [Distribution; 5] {
         [
@@ -177,6 +190,15 @@ mod tests {
             ratio(Distribution::Spike),
             ratio(Distribution::Uniform)
         );
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in Distribution::all() {
+            assert_eq!(Distribution::parse(d.name()), Some(d));
+        }
+        assert_eq!(Distribution::parse("zipf"), Some(Distribution::RandomZipf));
+        assert_eq!(Distribution::parse("nope"), None);
     }
 
     #[test]

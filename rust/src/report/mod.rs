@@ -11,6 +11,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod findings;
 pub mod table1;
+pub mod workload;
 
 use std::io::Write;
 use std::path::Path;

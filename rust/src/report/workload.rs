@@ -1,0 +1,250 @@
+//! Contended-latency study: each paper system serving N tenants at
+//! once, idle-vs-contended per tenant (DESIGN.md §9). Rendered by
+//! `agv workload`.
+
+use crate::comm::Params;
+use crate::topology::systems::SystemKind;
+use crate::topology::Topology;
+use crate::util::error::Result;
+use crate::util::{fmt_time, stats};
+use crate::workload::{run_workload_with_baseline, WorkloadSpec};
+
+/// One tenant's idle-vs-contended summary on one system.
+#[derive(Clone, Debug)]
+pub struct TenantRow {
+    /// Tenant name from the spec.
+    pub tenant: String,
+    /// Library (or per-op candidate) labels the tenant ran — unique,
+    /// first-use order, '+'-joined (one CSV column regardless of how
+    /// many candidates an auto tenant flipped through).
+    pub labels: String,
+    /// Ops the tenant completed.
+    pub ops: usize,
+    /// Contended per-op latency percentiles (seconds).
+    pub p50: f64,
+    /// 95th percentile contended latency.
+    pub p95: f64,
+    /// 99th percentile contended latency.
+    pub p99: f64,
+    /// Idle-fabric per-op latency p50 (isolated composition).
+    pub idle_p50: f64,
+    /// Contended completion of the tenant's last op.
+    pub completion: f64,
+    /// Geomean of per-op contended/isolated latency ratios.
+    pub slowdown: f64,
+}
+
+/// One system's section of the study.
+#[derive(Clone, Debug)]
+pub struct SystemSection {
+    /// System name.
+    pub system: String,
+    /// Ranks each op spans.
+    pub gpus: usize,
+    /// Per-tenant rows, spec order.
+    pub rows: Vec<TenantRow>,
+    /// Shared-run makespan (seconds).
+    pub makespan: f64,
+    /// Achieved aggregate fabric utilization over the makespan.
+    pub utilization: f64,
+    /// Utilization of the hottest (link, direction).
+    pub peak_utilization: f64,
+    /// Total flows simulated.
+    pub flows: usize,
+}
+
+/// Run one spec on one topology and fold the idle-vs-contended section.
+pub fn section(topo: &Topology, spec: &WorkloadSpec, params: Params) -> Result<SystemSection> {
+    // one planning pass feeds both the contended run and the baseline —
+    // auto tenants pay the selector's candidate sims once, not twice
+    let (contended, idle) = run_workload_with_baseline(topo, spec, params)?;
+    let gpus = spec.tenants.iter().map(|t| t.stream.gpus()).max().unwrap_or(0);
+    let rows = contended
+        .tenants
+        .iter()
+        .zip(&idle)
+        .map(|(t, iso)| {
+            let lats = t.latencies();
+            let ratios: Vec<f64> = lats
+                .iter()
+                .zip(iso)
+                .map(|(&c, &i)| if i > 0.0 { c / i } else { 1.0 })
+                .collect();
+            // order-preserving global dedup; joined with '+' so the
+            // field stays a single CSV column
+            let mut labels: Vec<&str> = Vec::new();
+            for op in &t.ops {
+                if !labels.contains(&op.label.as_str()) {
+                    labels.push(op.label.as_str());
+                }
+            }
+            TenantRow {
+                tenant: t.name.clone(),
+                labels: labels.join("+"),
+                ops: t.ops.len(),
+                p50: stats::percentile(&lats, 50.0),
+                p95: stats::percentile(&lats, 95.0),
+                p99: stats::percentile(&lats, 99.0),
+                idle_p50: stats::percentile(iso, 50.0),
+                completion: t.completion,
+                slowdown: stats::geomean(&ratios),
+            }
+        })
+        .collect();
+    Ok(SystemSection {
+        system: topo.name.clone(),
+        gpus,
+        rows,
+        makespan: contended.makespan,
+        utilization: contended.utilization,
+        peak_utilization: contended.peak_utilization,
+        flows: contended.flows,
+    })
+}
+
+/// The default study: the same spec shape on each paper system
+/// (sections fan out over the bounded worker pool, results in system
+/// order). `mk_spec` receives the system's GPU budget so specs can
+/// adapt rank counts.
+pub fn study(
+    systems: &[SystemKind],
+    params: Params,
+    mk_spec: impl Fn(usize) -> WorkloadSpec + Sync,
+) -> Result<Vec<SystemSection>> {
+    let jobs: Vec<_> = systems
+        .iter()
+        .map(|&kind| {
+            let mk = &mk_spec;
+            move || {
+                let topo = kind.build();
+                let spec = mk(topo.num_gpus());
+                section(&topo, &spec, params)
+            }
+        })
+        .collect();
+    crate::util::pool::parallel_map(jobs).into_iter().collect()
+}
+
+/// Render the study as text tables, one section per system.
+pub fn render(sections: &[SystemSection]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "WORKLOAD — concurrent Allgatherv tenants on a shared fabric (idle vs contended)\n",
+    );
+    for s in sections {
+        out.push_str(&format!(
+            "\n== {} @ {} GPUs/op — makespan {}, utilization {:.1}% (peak linkdir {:.1}%), {} flows ==\n",
+            s.system,
+            s.gpus,
+            fmt_time(s.makespan),
+            100.0 * s.utilization,
+            100.0 * s.peak_utilization,
+            s.flows
+        ));
+        out.push_str(&format!(
+            "{:<10} {:<22} {:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>9}\n",
+            "tenant", "lib", "ops", "idle p50", "p50", "p95", "p99", "done", "slowdown"
+        ));
+        for r in &s.rows {
+            out.push_str(&format!(
+                "{:<10} {:<22} {:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8.2}x\n",
+                r.tenant,
+                r.labels,
+                r.ops,
+                fmt_time(r.idle_p50),
+                fmt_time(r.p50),
+                fmt_time(r.p95),
+                fmt_time(r.p99),
+                fmt_time(r.completion),
+                r.slowdown,
+            ));
+        }
+    }
+    if !sections.is_empty() {
+        let all: Vec<f64> =
+            sections.iter().flat_map(|s| s.rows.iter().map(|r| r.slowdown)).collect();
+        out.push_str(&format!(
+            "\ncontention verdict: geomean tenant slowdown {:.2}x across {} tenant-system cells\n",
+            stats::geomean(&all),
+            all.len()
+        ));
+    }
+    out
+}
+
+/// CSV form of the study (one row per tenant-system cell).
+pub fn csv(sections: &[SystemSection]) -> String {
+    let mut out = String::from(
+        "system,gpus,tenant,lib,ops,idle_p50_s,p50_s,p95_s,p99_s,completion_s,slowdown,\
+         makespan_s,utilization\n",
+    );
+    for s in sections {
+        for r in &s.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.9},{:.9},{:.9},{:.9},{:.9},{:.6},{:.9},{:.6}\n",
+                s.system,
+                s.gpus,
+                r.tenant,
+                r.labels,
+                r.ops,
+                r.idle_p50,
+                r.p50,
+                r.p95,
+                r.p99,
+                r.completion,
+                r.slowdown,
+                s.makespan,
+                s.utilization,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Library;
+    use crate::workload::TenantLib;
+
+    fn small_spec(gpus: usize) -> WorkloadSpec {
+        WorkloadSpec::synthetic(
+            2,
+            2,
+            gpus.min(4),
+            TenantLib::Fixed(Library::Nccl),
+            4 << 20,
+            13,
+        )
+    }
+
+    #[test]
+    fn study_renders_all_systems_with_contention() {
+        let secs = study(&SystemKind::all(), Params::default(), small_spec).unwrap();
+        assert_eq!(secs.len(), 3);
+        let text = render(&secs);
+        for k in SystemKind::all() {
+            assert!(text.contains(k.name()), "{k:?} missing:\n{text}");
+        }
+        assert!(text.contains("WORKLOAD"));
+        assert!(text.contains("slowdown"));
+        for s in &secs {
+            for r in &s.rows {
+                assert!(r.p50 > 0.0 && r.p99 >= r.p50);
+                assert!(r.slowdown >= 1.0 - 1e-6, "{}: free lunch {}", s.system, r.slowdown);
+            }
+        }
+        let c = csv(&secs);
+        assert_eq!(c.lines().count(), 1 + 3 * 2);
+        assert!(c.starts_with("system,"));
+    }
+
+    #[test]
+    fn section_is_deterministic() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = small_spec(8);
+        let a = section(&topo, &spec, Params::default()).unwrap();
+        let b = section(&topo, &spec, Params::default()).unwrap();
+        assert_eq!(render(&[a]), render(&[b]));
+    }
+}

@@ -250,9 +250,29 @@ impl<'t> Sim<'t> {
         Sim { topo, tasks: Vec::new(), roots: Vec::new() }
     }
 
-    /// The topology this simulation runs over.
-    pub fn topology(&self) -> &Topology {
+    /// The topology this simulation runs over. The returned reference
+    /// carries the topology's own lifetime (not the borrow of `self`),
+    /// so composition helpers can hold it across `&mut Sim` calls.
+    pub fn topology(&self) -> &'t Topology {
         self.topo
+    }
+
+    /// Number of tasks defined so far — a *mark* for range accounting.
+    /// `comm` composition entry points snapshot this before building an
+    /// op's subgraph so the workload engine can attribute flows per op.
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Number of flow tasks with a positive byte count defined at or
+    /// after `mark` (a value previously returned by [`Sim::task_count`]).
+    /// Matches [`SimResult::flows`] accounting: zero-byte flows complete
+    /// instantly and are not counted as simulated flows by either engine.
+    pub fn flow_tasks_since(&self, mark: usize) -> usize {
+        self.tasks[mark..]
+            .iter()
+            .filter(|t| matches!(t.spec, TaskSpec::Flow { bytes, .. } if bytes > 0.0))
+            .count()
     }
 
     fn push(&mut self, spec: TaskSpec, deps: &[TaskId]) -> TaskId {

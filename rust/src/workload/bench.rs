@@ -1,0 +1,106 @@
+//! The `bench_workload` measurement grid and its deterministic
+//! `BENCH_workload.json` payload.
+//!
+//! The JSON artifact contains **simulated** metrics only (makespan,
+//! latency percentiles, utilization, flow counts) — no wall-clock
+//! fields — so a fixed seed reproduces the file byte-for-byte run
+//! over run (`tests/workload_determinism.rs` pins this, guarding the
+//! PRNG-offset and pool fan-out paths). Wall-clock timing of the same
+//! cases is printed by the bench binary but never written to the
+//! artifact.
+
+use crate::comm::{Library, Params};
+use crate::topology::systems::SystemKind;
+use crate::topology::Topology;
+use crate::util::json::{obj, Json};
+use crate::util::stats::percentile;
+
+use super::engine::run_workload;
+use super::spec::{TenantLib, WorkloadSpec};
+
+/// The bench grid: per paper system a 4-tenant NCCL contention case,
+/// plus one auto-selection case on the DGX-1 (the selector under
+/// contention). Deterministic in `seed`.
+pub fn bench_cases(seed: u64) -> Vec<(String, Topology, WorkloadSpec)> {
+    let mut out = Vec::new();
+    for kind in SystemKind::all() {
+        let topo = kind.build();
+        let gpus = topo.num_gpus().min(8);
+        let spec = WorkloadSpec::synthetic(
+            4,
+            4,
+            gpus,
+            TenantLib::Fixed(Library::Nccl),
+            16 << 20,
+            seed,
+        );
+        out.push((format!("{}/4x4/nccl", kind.name()), topo, spec));
+    }
+    let topo = SystemKind::Dgx1.build();
+    let spec = WorkloadSpec::synthetic(2, 2, 8, TenantLib::Auto, 8 << 20, seed);
+    out.push(("dgx1/2x2/auto".to_string(), topo, spec));
+    out
+}
+
+/// Simulated metrics of one bench case as a JSON object.
+fn case_doc(label: &str, topo: &Topology, spec: &WorkloadSpec) -> Json {
+    let res = run_workload(topo, spec, Params::default()).expect("bench spec must validate");
+    let lats: Vec<f64> = res.all_ops().map(|o| o.latency()).collect();
+    obj(vec![
+        ("case", Json::Str(label.to_string())),
+        ("tenants", Json::Num(spec.tenants.len() as f64)),
+        ("ops", Json::Num(lats.len() as f64)),
+        ("makespan_s", Json::Num(res.makespan)),
+        ("p50_latency_s", Json::Num(percentile(&lats, 50.0))),
+        ("p99_latency_s", Json::Num(percentile(&lats, 99.0))),
+        ("utilization", Json::Num(res.utilization)),
+        ("peak_utilization", Json::Num(res.peak_utilization)),
+        ("flows", Json::Num(res.flows as f64)),
+        ("total_bytes", Json::Num(res.total_bytes)),
+    ])
+}
+
+/// The full deterministic `BENCH_workload.json` document. Cases fan
+/// out over the bounded worker pool ([`crate::util::pool`]); results
+/// come back in case order, so the render is byte-stable.
+pub fn bench_doc(seed: u64) -> Json {
+    let cases = bench_cases(seed);
+    let jobs: Vec<_> = cases
+        .iter()
+        .map(|(label, topo, spec)| move || case_doc(label, topo, spec))
+        .collect();
+    let docs = crate::util::pool::parallel_map(jobs);
+    obj(vec![
+        ("bench", Json::Str("bench_workload".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("cases", Json::Arr(docs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_cover_all_systems_plus_auto() {
+        let cases = bench_cases(42);
+        assert_eq!(cases.len(), 4);
+        for kind in SystemKind::all() {
+            assert!(cases.iter().any(|(l, ..)| l.starts_with(kind.name())));
+        }
+        assert!(cases.iter().any(|(l, ..)| l.ends_with("auto")));
+    }
+
+    #[test]
+    fn doc_has_simulated_metrics_and_no_wall_clock() {
+        let doc = bench_doc(7);
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 4);
+        for c in cases {
+            assert!(c.get("makespan_s").unwrap().as_f64().unwrap() > 0.0);
+            assert!(c.get("mean_s").is_none(), "wall-clock field leaked into the artifact");
+            let u = c.get("utilization").unwrap().as_f64().unwrap();
+            assert!(u > 0.0 && u <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,417 @@
+//! The admission loop: compose every tenant's op stream into one
+//! shared simulation and run it once (DESIGN.md §9).
+//!
+//! Gating DAG shape, per tenant:
+//!
+//! ```text
+//! [delay start+jitter] -> op 0 -> [delay gap+jitter] -> op 1 -> ...
+//! ```
+//!
+//! Each op subgraph is built by the communication libraries' *compose*
+//! entry points — the exact schedule logic `run_allgatherv` uses, not
+//! a re-derivation — behind the arrival-delay gate. A zero-delay first
+//! op gets **no** gate task at all, so a 1-tenant 1-op workload is the
+//! task-for-task identical DAG to the isolated run (the differential
+//! tests compare the two bit-for-bit on both engines). All tenants'
+//! chains live in one [`Sim`], so their flows share link capacity
+//! under the same max-min contention model the paper's §V-B
+//! measurements validate.
+
+use crate::comm::select::{compose as compose_candidate, AlgoSelector, Candidate};
+use crate::comm::{compose_allgatherv, Library, Params};
+use crate::sim::{Sim, TaskId};
+use crate::topology::Topology;
+use crate::util::error::Result;
+use crate::util::stats::percentile;
+
+use super::spec::{TenantLib, TenantSpec, WorkloadSpec};
+
+/// One tenant op as planned for composition: the resolved count vector
+/// plus how it will be built into the shared sim. Crate-visible so the
+/// cpals contended-refacto hook can reuse a tenant's plan across its
+/// full and isolated runs (plans are removal-invariant).
+#[derive(Clone, Debug)]
+pub(crate) struct PlannedOp {
+    counts: Vec<u64>,
+    plan: OpPlan,
+    label: String,
+}
+
+#[derive(Clone, Debug)]
+enum OpPlan {
+    /// Fixed library with its own MVAPICH-style algorithm selection.
+    Lib(Library),
+    /// Auto-selected (library, algorithm) pair, frozen at plan time.
+    Cand(Candidate),
+}
+
+/// Resolve every tenant's op counts and (library, algorithm) choices.
+/// Auto tenants run the [`AlgoSelector`] here, on isolated candidate
+/// sims — so contended and isolated executions of the same spec use
+/// identical plans, and `--lib auto` exercises the selector (and its
+/// decision table) per op exactly as `run_osu_auto` does.
+pub(crate) fn plan(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+) -> Result<Vec<Vec<PlannedOp>>> {
+    spec.validate(topo)?;
+    let mut plans = Vec::with_capacity(spec.tenants.len());
+    for ten in &spec.tenants {
+        let mut ops = Vec::with_capacity(ten.ops);
+        let mut selector = AlgoSelector::new(params);
+        for k in 0..ten.ops {
+            let counts = ten.stream.counts(k, spec.op_seed(ten, k));
+            let (plan, label) = match &ten.lib {
+                TenantLib::Fixed(lib) => (OpPlan::Lib(*lib), lib.name().to_string()),
+                TenantLib::Auto => {
+                    let sel = selector.select(topo, &counts);
+                    (OpPlan::Cand(sel.candidate), sel.candidate.label())
+                }
+            };
+            ops.push(PlannedOp { counts, plan, label });
+        }
+        plans.push(ops);
+    }
+    Ok(plans)
+}
+
+/// Compose one planned op into the shared sim behind `gate`.
+fn compose_planned(sim: &mut Sim, params: Params, op: &PlannedOp, gate: Option<TaskId>) -> TaskId {
+    match op.plan {
+        OpPlan::Lib(lib) => compose_allgatherv(sim, lib, params, &op.counts, gate),
+        OpPlan::Cand(cand) => compose_candidate(sim, params, cand, &op.counts, gate)
+            .expect("a selected candidate always composes on its own topology"),
+    }
+}
+
+/// One completed collective of one tenant.
+#[derive(Clone, Debug)]
+pub struct OpRecord {
+    /// Index of the owning tenant in the spec.
+    pub tenant: usize,
+    /// Op index within the tenant's stream.
+    pub index: usize,
+    /// Library (or "LIB/algo" candidate) label that ran the op.
+    pub label: String,
+    /// Sum of the op's per-rank counts (bytes contributed once).
+    pub bytes: u64,
+    /// Virtual time the op became eligible (its gate completed).
+    pub arrival: f64,
+    /// Virtual time every rank finished the collective.
+    pub finish: f64,
+    /// Point-to-point flows the op's subgraph contains.
+    pub flows: usize,
+}
+
+impl OpRecord {
+    /// Completion latency the tenant observed (finish - arrival).
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+}
+
+/// All completions of one tenant, in op order.
+#[derive(Clone, Debug)]
+pub struct TenantResult {
+    /// Tenant name from the spec.
+    pub name: String,
+    /// Per-op completion records.
+    pub ops: Vec<OpRecord>,
+    /// Virtual time the tenant's last op finished.
+    pub completion: f64,
+}
+
+impl TenantResult {
+    /// Observed per-op latencies, in op order.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.ops.iter().map(|o| o.latency()).collect()
+    }
+
+    /// q-th percentile (0..=100) of the tenant's op latencies.
+    pub fn latency_percentile(&self, q: f64) -> f64 {
+        percentile(&self.latencies(), q)
+    }
+}
+
+/// Outcome of one shared multi-tenant run.
+#[derive(Clone, Debug)]
+pub struct WorkloadResult {
+    /// Per-tenant completions, in spec order.
+    pub tenants: Vec<TenantResult>,
+    /// Virtual time the last task of the shared DAG finished.
+    pub makespan: f64,
+    /// Total point-to-point flows simulated.
+    pub flows: usize,
+    /// Total bytes carried summed over every (link, direction) — each
+    /// byte counted once per hop (the conservation property compares
+    /// this against the sum of isolated per-op volumes).
+    pub total_bytes: f64,
+    /// Achieved fabric utilization: carried bytes over the aggregate
+    /// capacity-time `sum(linkdir bandwidth) x makespan`.
+    pub utilization: f64,
+    /// Utilization of the hottest (link, direction) over the makespan.
+    pub peak_utilization: f64,
+}
+
+impl WorkloadResult {
+    /// Every op of every tenant, flattened in (tenant, op) order.
+    pub fn all_ops(&self) -> impl Iterator<Item = &OpRecord> {
+        self.tenants.iter().flat_map(|t| t.ops.iter())
+    }
+}
+
+/// Run a workload spec on a topology: plan, compose everything into
+/// one shared [`Sim`], execute, aggregate per tenant.
+pub fn run_workload(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+) -> Result<WorkloadResult> {
+    let plans = plan(topo, spec, params)?;
+    Ok(run_planned(topo, spec, params, &plans))
+}
+
+/// [`run_workload`] plus the idle baseline of [`isolated_times`], from
+/// a **single** planning pass — auto tenants run the selector's
+/// candidate simulations once instead of twice (what `agv workload`'s
+/// idle-vs-contended sections use).
+pub fn run_workload_with_baseline(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+) -> Result<(WorkloadResult, Vec<Vec<f64>>)> {
+    let plans = plan(topo, spec, params)?;
+    let contended = run_planned(topo, spec, params, &plans);
+    Ok((contended, isolated_planned(topo, params, &plans)))
+}
+
+/// Compose and execute the planned ops in one shared sim.
+pub(crate) fn run_planned(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+    plans: &[Vec<PlannedOp>],
+) -> WorkloadResult {
+    struct PendingOp {
+        tenant: usize,
+        index: usize,
+        label: String,
+        bytes: u64,
+        gate: Option<TaskId>,
+        done: TaskId,
+        flows: usize,
+    }
+    let mut sim = Sim::new(topo);
+    let mut pending: Vec<PendingOp> = Vec::new();
+    for (t, (ten, tplan)) in spec.tenants.iter().zip(plans).enumerate() {
+        let mut rng = ten.arrival_rng(spec.seed);
+        let mut prev: Option<TaskId> = None;
+        for (k, op) in tplan.iter().enumerate() {
+            let delay = ten.arrival_delay(k, &mut rng);
+            // Zero extra delay needs no gate task: op 0 starts as a DAG
+            // root (the differential-identity case), later ops gate
+            // directly on their predecessor.
+            let gate = if delay == 0.0 {
+                prev
+            } else {
+                let deps: Vec<TaskId> = prev.into_iter().collect();
+                Some(sim.delay(delay, &deps))
+            };
+            let mark = sim.task_count();
+            let done = compose_planned(&mut sim, params, op, gate);
+            pending.push(PendingOp {
+                tenant: t,
+                index: k,
+                label: op.label.clone(),
+                bytes: op.counts.iter().sum(),
+                gate,
+                done,
+                flows: sim.flow_tasks_since(mark),
+            });
+            prev = Some(done);
+        }
+    }
+
+    let res = sim.run();
+
+    let mut tenants: Vec<TenantResult> = spec
+        .tenants
+        .iter()
+        .map(|t| TenantResult { name: t.name.clone(), ops: Vec::new(), completion: 0.0 })
+        .collect();
+    for p in pending {
+        let rec = OpRecord {
+            tenant: p.tenant,
+            index: p.index,
+            label: p.label,
+            bytes: p.bytes,
+            arrival: p.gate.map(|g| res.finish(g)).unwrap_or(0.0),
+            finish: res.finish(p.done),
+            flows: p.flows,
+        };
+        let t = &mut tenants[p.tenant];
+        t.completion = t.completion.max(rec.finish);
+        t.ops.push(rec);
+    }
+
+    let total_bytes: f64 = res.linkdir_bytes.iter().sum();
+    let cap_total: f64 = topo.links.iter().map(|l| 2.0 * l.class.bandwidth()).sum();
+    let (utilization, peak_utilization) = if res.makespan > 0.0 && cap_total > 0.0 {
+        let peak = res
+            .linkdir_bytes
+            .iter()
+            .enumerate()
+            .map(|(ld, &b)| b / topo.links[ld / 2].class.bandwidth())
+            .fold(0.0, f64::max);
+        (total_bytes / (cap_total * res.makespan), peak / res.makespan)
+    } else {
+        (0.0, 0.0)
+    };
+    WorkloadResult {
+        tenants,
+        makespan: res.makespan,
+        flows: res.flows,
+        total_bytes,
+        utilization,
+        peak_utilization,
+    }
+}
+
+/// Per-tenant per-op *isolated* completion times: every planned op
+/// composed alone in a fresh sim with no gate — exactly the time
+/// `run_allgatherv` (or the selector) would report for that op on an
+/// idle fabric. The baseline the slowdown columns and the no-free-
+/// lunch property compare against.
+pub fn isolated_times(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+) -> Result<Vec<Vec<f64>>> {
+    let plans = plan(topo, spec, params)?;
+    Ok(isolated_planned(topo, params, &plans))
+}
+
+fn isolated_planned(topo: &Topology, params: Params, plans: &[Vec<PlannedOp>]) -> Vec<Vec<f64>> {
+    plans
+        .iter()
+        .map(|tplan| {
+            tplan
+                .iter()
+                .map(|op| {
+                    let mut sim = Sim::new(topo);
+                    let done = compose_planned(&mut sim, params, op, None);
+                    sim.run().finish(done)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_allgatherv;
+    use crate::topology::systems::SystemKind;
+    use crate::workload::spec::OpStream;
+
+    #[test]
+    fn single_op_matches_isolated_library_run() {
+        // the unit-level version of tests/workload_differential.rs
+        let topo = SystemKind::Dgx1.build();
+        let counts = vec![64u64 << 10, 3 << 20, 0, 777];
+        for lib in Library::all() {
+            let spec = WorkloadSpec::single_op(TenantLib::Fixed(lib), counts.clone(), 1);
+            let w = run_workload(&topo, &spec, Params::default()).unwrap();
+            let solo = run_allgatherv(lib, &topo, &counts);
+            let op = &w.tenants[0].ops[0];
+            assert_eq!(op.finish.to_bits(), solo.time.to_bits(), "{}", lib.name());
+            assert_eq!(op.arrival, 0.0);
+            assert_eq!(op.flows, solo.flows, "{}", lib.name());
+            assert_eq!(w.flows, solo.flows, "{}", lib.name());
+        }
+    }
+
+    #[test]
+    fn two_tenants_contend_and_iterations_chain() {
+        let topo = SystemKind::CsStorm.build();
+        let mk = |seed: u64, offset: f64| TenantSpec {
+            name: format!("t{seed}"),
+            seed,
+            lib: TenantLib::Fixed(Library::MpiCuda),
+            stream: OpStream::Fixed { counts: vec![4 << 20; 8] },
+            ops: 2,
+            start_offset: offset,
+            gap: 0.0,
+            jitter: 0.0,
+        };
+        let spec = WorkloadSpec {
+            name: "pair".into(),
+            seed: 3,
+            tenants: vec![mk(0, 0.0), mk(1, 50.0e-6)],
+        };
+        let w = run_workload(&topo, &spec, Params::default()).unwrap();
+        let iso = isolated_times(&topo, &spec, Params::default()).unwrap();
+        for (t, tr) in w.tenants.iter().enumerate() {
+            assert_eq!(tr.ops.len(), 2);
+            // op 1 gates on op 0: arrivals are ordered
+            assert!(tr.ops[1].arrival >= tr.ops[0].finish - 1e-15);
+            for (k, op) in tr.ops.iter().enumerate() {
+                assert!(
+                    op.latency() >= iso[t][k] * (1.0 - 1e-9),
+                    "tenant {t} op {k}: contended {} < isolated {}",
+                    op.latency(), iso[t][k]
+                );
+            }
+        }
+        // identical tenants on a shared fabric must actually contend
+        let slow = w.tenants[0].ops[0].latency() / iso[0][0];
+        assert!(slow > 1.05, "no contention visible: slowdown {slow}");
+        assert_eq!(w.flows, w.all_ops().map(|o| o.flows).sum::<usize>());
+        assert!(w.utilization > 0.0 && w.utilization <= 1.0 + 1e-9);
+        assert!(w.peak_utilization >= w.utilization - 1e-12);
+        assert!(w.peak_utilization <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn auto_tenant_plans_compose_and_run() {
+        let topo = SystemKind::Cluster.build();
+        let spec = WorkloadSpec::synthetic(2, 2, 4, TenantLib::Auto, 8 << 20, 11);
+        let w = run_workload(&topo, &spec, Params::default()).unwrap();
+        for op in w.all_ops() {
+            assert!(op.label.contains('/'), "auto label missing algo: {}", op.label);
+            assert!(op.finish > op.arrival);
+        }
+    }
+
+    #[test]
+    fn makespan_covers_every_tenant() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = WorkloadSpec::synthetic(3, 2, 8, TenantLib::Fixed(Library::Nccl), 1 << 22, 5);
+        let w = run_workload(&topo, &spec, Params::default()).unwrap();
+        let last = w.tenants.iter().map(|t| t.completion).fold(0.0, f64::max);
+        assert_eq!(w.makespan.to_bits(), last.to_bits());
+    }
+
+    #[test]
+    fn with_baseline_matches_the_two_pass_path() {
+        // single planning pass == separate run_workload + isolated_times
+        let topo = SystemKind::Cluster.build();
+        let spec = WorkloadSpec::synthetic(2, 2, 4, TenantLib::Auto, 4 << 20, 17);
+        let (w, idle) = run_workload_with_baseline(&topo, &spec, Params::default()).unwrap();
+        let w2 = run_workload(&topo, &spec, Params::default()).unwrap();
+        let idle2 = isolated_times(&topo, &spec, Params::default()).unwrap();
+        assert_eq!(w.makespan.to_bits(), w2.makespan.to_bits());
+        for (a, b) in idle.iter().flatten().zip(idle2.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn invalid_spec_is_a_clean_error() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = WorkloadSpec::single_op(TenantLib::Auto, vec![1 << 20; 16], 0);
+        let err = run_workload(&topo, &spec, Params::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("8 GPUs"), "{err:#}");
+    }
+}

@@ -1,0 +1,45 @@
+//! Multi-tenant workload engine: N concurrent Allgatherv jobs sharing
+//! one fabric (DESIGN.md §9).
+//!
+//! The paper measures every collective on an otherwise idle machine,
+//! but its own fidelity argument — concurrent flows crossing shared
+//! PCIe switches and IB uplinks slow each other down (§V-B) — is
+//! exactly what a production cluster serving many jobs looks like.
+//! This module closes that gap without duplicating any schedule logic:
+//!
+//! - [`spec`]: a [`WorkloadSpec`] names tenants, each with an op
+//!   stream ([`OpStream`]: fixed vectors, explicit traces, OSU
+//!   message-size distributions, or tensor-dataset mode traces), a
+//!   library choice ([`TenantLib`]: one of the paper's three, or the
+//!   simulation-driven `auto` selector), and a deterministic-PRNG
+//!   arrival model (start offset + inter-op gap + seeded jitter);
+//! - [`engine`]: the admission loop composes every op's schedule into
+//!   a **single shared [`crate::sim::Sim`]** through the libraries'
+//!   compose entry points (`Mpi/MpiCuda::compose_with`,
+//!   `Nccl::compose`, `select::compose`), gating op k+1 of a tenant on
+//!   its op k plus an arrival-delay task, then runs the whole DAG once
+//!   — tenants contend for links exactly as the paper's §V-B flows do;
+//! - [`trace`]: parses explicit trace files for the `agv workload
+//!   --trace` path (clean [`crate::util::error`] rejection, no panic);
+//! - [`bench`]: the deterministic measurement grid behind
+//!   `bench_workload` / `BENCH_workload.json` (simulated metrics only,
+//!   so the artifact is byte-reproducible from its seed).
+//!
+//! The anchor contract, pinned by `tests/workload_differential.rs`: a
+//! 1-tenant, 1-op workload with zero arrival offset builds the *task-
+//! for-task identical* DAG as [`crate::comm::run_allgatherv`] and
+//! therefore reproduces its `CommResult` bit-for-bit on both engines —
+//! contention results extrapolate from the single-op models the paper
+//! experiments validated, not from a second implementation.
+
+pub mod bench;
+pub mod engine;
+pub mod spec;
+pub mod trace;
+
+pub use engine::{
+    isolated_times, run_workload, run_workload_with_baseline, OpRecord, TenantResult,
+    WorkloadResult,
+};
+pub use spec::{OpStream, TenantLib, TenantSpec, WorkloadSpec};
+pub use trace::parse_trace;

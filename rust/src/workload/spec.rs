@@ -1,0 +1,391 @@
+//! Workload specifications: which tenants run, what each one sends,
+//! and when (DESIGN.md §9).
+//!
+//! Everything here is deterministic in the spec's seed: op count
+//! vectors and arrival jitter derive from [`crate::util::prng::Rng`]
+//! streams keyed by `(workload seed, tenant seed, op index)`, so a
+//! spec replays bit-identically, and removing one tenant leaves every
+//! other tenant's ops and arrivals untouched (the monotonicity
+//! property tests depend on that removal invariance).
+
+use crate::anyhow;
+use crate::comm::Library;
+use crate::osu::distributions::Distribution;
+use crate::tensor::messages::mode_counts;
+use crate::tensor::TensorSpec;
+use crate::topology::Topology;
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+
+/// Which library a tenant runs its collectives through.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TenantLib {
+    /// One of the paper's three libraries, with its own MVAPICH-style
+    /// algorithm selection.
+    Fixed(Library),
+    /// Per-op simulation-driven (library, algorithm) selection via
+    /// [`crate::comm::select::AlgoSelector`] — the decision table warms
+    /// across the tenant's stream exactly as in `run_osu_auto`.
+    Auto,
+}
+
+impl TenantLib {
+    /// Parse a `--lib` value: the three library names or `auto`.
+    pub fn parse(s: &str) -> Option<TenantLib> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(TenantLib::Auto);
+        }
+        Library::parse(s).map(TenantLib::Fixed)
+    }
+
+    /// Report label ("MPI-CUDA", "auto").
+    pub fn label(&self) -> &'static str {
+        match self {
+            TenantLib::Fixed(l) => l.name(),
+            TenantLib::Auto => "auto",
+        }
+    }
+}
+
+/// How a tenant's per-op count vectors are generated.
+#[derive(Clone, Debug)]
+pub enum OpStream {
+    /// The same explicit vector every op (the OSU fixed-size shape,
+    /// or any hand-rolled irregular vector).
+    Fixed {
+        /// Per-rank byte counts of every op.
+        counts: Vec<u64>,
+    },
+    /// An explicit trace of count vectors, cycled if the tenant issues
+    /// more ops than the trace holds (see [`crate::workload::trace`]).
+    Trace {
+        /// Per-op per-rank byte counts.
+        ops: Vec<Vec<u64>>,
+    },
+    /// Per-op draws from one of the OSU message-size distributions
+    /// (§VI future-work benchmark): fixed total volume, shape from the
+    /// distribution, deterministic per-op seed.
+    Distribution {
+        /// Which distribution shapes each op's counts.
+        dist: Distribution,
+        /// Ranks participating in each op.
+        gpus: usize,
+        /// Total bytes per op, split across ranks by `dist`.
+        total: u64,
+    },
+    /// The tensor-dataset message trace: op k uses mode k%3's DFacTo
+    /// partition counts — one CP-ALS iteration every three ops, the
+    /// ReFacTo communication pattern as a tenant.
+    TensorModes {
+        /// Which Table I data set generates the mode counts.
+        spec: TensorSpec,
+        /// Ranks (partition parts) of the factorization.
+        gpus: usize,
+    },
+}
+
+impl OpStream {
+    /// Rank count every op of this stream spans.
+    pub fn gpus(&self) -> usize {
+        match self {
+            OpStream::Fixed { counts } => counts.len(),
+            OpStream::Trace { ops } => ops.first().map(|c| c.len()).unwrap_or(0),
+            OpStream::Distribution { gpus, .. } => *gpus,
+            OpStream::TensorModes { gpus, .. } => *gpus,
+        }
+    }
+
+    /// Count vector of op `k` (deterministic in `seed`).
+    pub fn counts(&self, k: usize, seed: u64) -> Vec<u64> {
+        match self {
+            OpStream::Fixed { counts } => counts.clone(),
+            OpStream::Trace { ops } => ops[k % ops.len()].clone(),
+            OpStream::Distribution { dist, gpus, total } => dist.counts(*gpus, *total, seed),
+            OpStream::TensorModes { spec, gpus } => mode_counts(spec, *gpus)[k % 3].clone(),
+        }
+    }
+}
+
+/// One tenant: a stream of `ops` gated collectives on one library.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Report name ("tenant-0", "refacto", ...).
+    pub name: String,
+    /// Identity salt for this tenant's PRNG streams. Must be unique
+    /// within a workload; kept explicit (not the vector index) so that
+    /// removing a tenant does not reseed the survivors.
+    pub seed: u64,
+    /// Library (or auto selection) running the tenant's collectives.
+    pub lib: TenantLib,
+    /// Per-op count-vector generator.
+    pub stream: OpStream,
+    /// Number of collectives the tenant issues (>= 1).
+    pub ops: usize,
+    /// Virtual seconds before the tenant's first op may start.
+    pub start_offset: f64,
+    /// Think time between an op's completion and the next op's
+    /// earliest start (iteration k+1 gates on iteration k).
+    pub gap: f64,
+    /// Uniform-[0, jitter) seconds added to every pre-op delay, drawn
+    /// from the tenant's deterministic arrival PRNG.
+    pub jitter: f64,
+}
+
+impl TenantSpec {
+    /// A tenant with immediate, jitter-free arrivals (op k+1 starts
+    /// the instant op k completes; op 0 starts at t=0).
+    pub fn immediate(name: &str, seed: u64, lib: TenantLib, stream: OpStream, ops: usize) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            seed,
+            lib,
+            stream,
+            ops,
+            start_offset: 0.0,
+            gap: 0.0,
+            jitter: 0.0,
+        }
+    }
+
+    /// The tenant's arrival PRNG (deterministic, removal-invariant).
+    pub fn arrival_rng(&self, workload_seed: u64) -> Rng {
+        Rng::new(workload_seed ^ self.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Delay between op `k`'s gate dependencies completing and the op
+    /// becoming eligible. Draws from `rng` in op order, so callers
+    /// must iterate k = 0, 1, 2, ...
+    pub fn arrival_delay(&self, k: usize, rng: &mut Rng) -> f64 {
+        let base = if k == 0 { self.start_offset } else { self.gap };
+        let jit = if self.jitter > 0.0 { rng.gen_f64(0.0, self.jitter) } else { 0.0 };
+        base + jit
+    }
+}
+
+/// A complete multi-tenant workload over one topology.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Report name.
+    pub name: String,
+    /// Master seed every per-tenant PRNG stream derives from.
+    pub seed: u64,
+    /// The tenants sharing the fabric.
+    pub tenants: Vec<TenantSpec>,
+}
+
+/// Default stagger between consecutive tenants' first ops (seconds) in
+/// [`WorkloadSpec::synthetic`] — a fraction of a typical MB-scale
+/// collective, so the streams genuinely overlap.
+pub const SYNTHETIC_STAGGER: f64 = 200.0e-6;
+/// Default inter-op think time of a synthetic tenant (seconds).
+pub const SYNTHETIC_GAP: f64 = 1.0e-3;
+/// Default arrival-jitter bound of a synthetic tenant (seconds).
+pub const SYNTHETIC_JITTER: f64 = 500.0e-6;
+
+impl WorkloadSpec {
+    /// One tenant, one op, zero offsets: the configuration the
+    /// differential tests pin against [`crate::comm::run_allgatherv`].
+    pub fn single_op(lib: TenantLib, counts: Vec<u64>, seed: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            name: "single-op".to_string(),
+            seed,
+            tenants: vec![TenantSpec::immediate(
+                "tenant-0",
+                0,
+                lib,
+                OpStream::Fixed { counts },
+                1,
+            )],
+        }
+    }
+
+    /// A synthetic contended workload: `tenants` streams of `ops`
+    /// collectives each, cycling through the OSU message-size
+    /// distributions (tenant i draws from distribution i mod 5), with
+    /// staggered starts and seeded jitter so arrivals interleave.
+    pub fn synthetic(
+        tenants: usize,
+        ops: usize,
+        gpus: usize,
+        lib: TenantLib,
+        total: u64,
+        seed: u64,
+    ) -> WorkloadSpec {
+        let dists = Distribution::all();
+        WorkloadSpec {
+            name: format!("synthetic-{tenants}x{ops}"),
+            seed,
+            tenants: (0..tenants)
+                .map(|i| TenantSpec {
+                    name: format!("tenant-{i}"),
+                    seed: i as u64,
+                    lib: lib.clone(),
+                    stream: OpStream::Distribution {
+                        dist: dists[i % dists.len()],
+                        gpus,
+                        total,
+                    },
+                    ops,
+                    start_offset: i as f64 * SYNTHETIC_STAGGER,
+                    gap: SYNTHETIC_GAP,
+                    jitter: SYNTHETIC_JITTER,
+                })
+                .collect(),
+        }
+    }
+
+    /// Deterministic per-op seed for a tenant's stream draws.
+    pub fn op_seed(&self, tenant: &TenantSpec, k: usize) -> u64 {
+        self.seed
+            ^ tenant.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (k as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+    }
+
+    /// Check the spec can run on `topo`; every violation is a clean
+    /// [`crate::util::error::Error`] naming the offending tenant (the
+    /// CLI surfaces these instead of panicking).
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(anyhow!("workload `{}` has no tenants", self.name));
+        }
+        let mut seeds = std::collections::BTreeSet::new();
+        for t in &self.tenants {
+            if !seeds.insert(t.seed) {
+                return Err(anyhow!(
+                    "tenant `{}`: duplicate tenant seed {} (seeds key the PRNG streams)",
+                    t.name, t.seed
+                ));
+            }
+            if t.ops == 0 {
+                return Err(anyhow!("tenant `{}`: needs at least one op", t.name));
+            }
+            let gpus = t.stream.gpus();
+            if gpus == 0 {
+                return Err(anyhow!("tenant `{}`: empty count vector", t.name));
+            }
+            if gpus > topo.num_gpus() {
+                return Err(anyhow!(
+                    "tenant `{}`: spans {gpus} ranks but `{}` has {} GPUs",
+                    t.name, topo.name, topo.num_gpus()
+                ));
+            }
+            if let OpStream::Trace { ops } = &t.stream {
+                for (k, op) in ops.iter().enumerate() {
+                    if op.len() != gpus {
+                        return Err(anyhow!(
+                            "tenant `{}`: trace op {k} has {} counts, expected {gpus}",
+                            t.name, op.len()
+                        ));
+                    }
+                }
+            }
+            for (what, v) in [
+                ("start-offset", t.start_offset),
+                ("gap", t.gap),
+                ("jitter", t.jitter),
+            ] {
+                if !v.is_finite() || v < 0.0 {
+                    return Err(anyhow!(
+                        "tenant `{}`: {what} must be finite and non-negative, got {v}",
+                        t.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::datasets;
+    use crate::topology::systems::SystemKind;
+
+    #[test]
+    fn tenant_lib_parse() {
+        assert_eq!(TenantLib::parse("auto"), Some(TenantLib::Auto));
+        assert_eq!(TenantLib::parse("nccl"), Some(TenantLib::Fixed(Library::Nccl)));
+        assert_eq!(TenantLib::parse("mvapich"), Some(TenantLib::Fixed(Library::MpiCuda)));
+        assert_eq!(TenantLib::parse("nope"), None);
+        assert_eq!(TenantLib::Auto.label(), "auto");
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_shaped() {
+        let d = OpStream::Distribution {
+            dist: Distribution::RandomZipf,
+            gpus: 8,
+            total: 1 << 24,
+        };
+        assert_eq!(d.gpus(), 8);
+        assert_eq!(d.counts(0, 7), d.counts(0, 7));
+        assert_ne!(d.counts(0, 7), d.counts(0, 8), "seed must matter");
+        let t = OpStream::TensorModes { spec: datasets::netflix(), gpus: 4 };
+        assert_eq!(t.counts(0, 0), t.counts(3, 1), "mode cycle has period 3");
+        assert_ne!(t.counts(0, 0), t.counts(1, 0));
+        let tr = OpStream::Trace { ops: vec![vec![1, 2], vec![3, 4]] };
+        assert_eq!(tr.counts(2, 0), vec![1, 2], "trace cycles");
+    }
+
+    #[test]
+    fn synthetic_spec_validates_everywhere() {
+        for k in SystemKind::all() {
+            let topo = k.build();
+            let s = WorkloadSpec::synthetic(4, 3, 2, TenantLib::Fixed(Library::Nccl), 1 << 20, 1);
+            s.validate(&topo).unwrap();
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let topo = SystemKind::Dgx1.build();
+        let empty = WorkloadSpec { name: "x".into(), seed: 0, tenants: vec![] };
+        assert!(empty.validate(&topo).is_err());
+        let mut wide = WorkloadSpec::single_op(TenantLib::Auto, vec![1; 9], 0);
+        assert!(wide.validate(&topo).is_err(), "9 ranks on an 8-GPU system");
+        wide.tenants[0].stream = OpStream::Fixed { counts: vec![1; 8] };
+        wide.tenants[0].ops = 0;
+        assert!(wide.validate(&topo).is_err(), "zero ops");
+        let ragged = WorkloadSpec {
+            name: "r".into(),
+            seed: 0,
+            tenants: vec![TenantSpec::immediate(
+                "t",
+                0,
+                TenantLib::Auto,
+                OpStream::Trace { ops: vec![vec![1, 2], vec![3]] },
+                2,
+            )],
+        };
+        assert!(ragged.validate(&topo).is_err(), "ragged trace");
+        let mut dup = WorkloadSpec::synthetic(2, 1, 2, TenantLib::Auto, 1 << 20, 0);
+        dup.tenants[1].seed = dup.tenants[0].seed;
+        assert!(dup.validate(&topo).is_err(), "duplicate tenant seeds");
+        let mut neg = WorkloadSpec::synthetic(1, 1, 2, TenantLib::Auto, 1 << 20, 0);
+        neg.tenants[0].gap = -1.0;
+        assert!(neg.validate(&topo).is_err(), "negative gap");
+    }
+
+    #[test]
+    fn arrival_streams_are_removal_invariant() {
+        let spec = WorkloadSpec::synthetic(3, 4, 2, TenantLib::Auto, 1 << 20, 9);
+        let draws = |t: &TenantSpec| {
+            let mut rng = t.arrival_rng(spec.seed);
+            (0..4).map(|k| t.arrival_delay(k, &mut rng)).collect::<Vec<_>>()
+        };
+        let full: Vec<_> = spec.tenants.iter().map(draws).collect();
+        // drop tenant 1: tenants 0 and 2 keep their exact arrival draws
+        let survivors = [&spec.tenants[0], &spec.tenants[2]];
+        for (orig, t) in [0usize, 2].into_iter().zip(survivors) {
+            assert_eq!(full[orig], draws(t));
+        }
+        // jitter draws are non-trivial and within bounds
+        for (t, ds) in spec.tenants.iter().zip(&full) {
+            for (k, &d) in ds.iter().enumerate() {
+                let base = if k == 0 { t.start_offset } else { t.gap };
+                assert!(d >= base && d < base + t.jitter);
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Explicit workload traces: one op per line, comma-separated per-rank
+//! byte counts (`agv workload --trace FILE`).
+//!
+//! ```text
+//! # tenant-0: three irregular ops on 4 ranks
+//! 4KB, 16MB, 0, 1MB
+//! 512KB, 512KB, 512KB, 512KB
+//! 0, 0, 700MB, 61MB
+//! ```
+//!
+//! Sizes accept the `agv` CLI's byte suffixes ([`parse_bytes`]); `#`
+//! starts a comment. Malformed input is rejected with a clean
+//! [`crate::util::error::Error`] naming the offending line — never a
+//! panic (pinned by `tests/cli_smoke.rs`).
+
+use crate::anyhow;
+use crate::util::cli::parse_bytes;
+use crate::util::error::Result;
+
+/// Parse a trace document into per-op count vectors. Every op must
+/// span the same number of ranks; at least one op is required.
+pub fn parse_trace(text: &str) -> Result<Vec<Vec<u64>>> {
+    let mut ops: Vec<Vec<u64>> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut counts = Vec::new();
+        for tok in line.split(',') {
+            let tok = tok.trim();
+            let c = tok.parse::<u64>().ok().or_else(|| parse_bytes(tok)).ok_or_else(|| {
+                anyhow!(
+                    "trace line {}: bad count `{tok}` (expected a byte size like 16MB)",
+                    idx + 1
+                )
+            })?;
+            counts.push(c);
+        }
+        if let Some(first) = ops.first() {
+            if counts.len() != first.len() {
+                return Err(anyhow!(
+                    "trace line {}: {} counts, but the first op has {} — every op must span \
+                     the same ranks",
+                    idx + 1,
+                    counts.len(),
+                    first.len()
+                ));
+            }
+        }
+        ops.push(counts);
+    }
+    if ops.is_empty() {
+        return Err(anyhow!("trace holds no ops (only blank lines/comments)"));
+    }
+    Ok(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sizes_comments_and_blanks() {
+        let ops = parse_trace(
+            "# a comment\n4KB, 16MB, 0, 1MB\n\n512, 512, 512, 512 # trailing comment\n",
+        )
+        .unwrap();
+        assert_eq!(ops, vec![vec![4096, 16 << 20, 0, 1 << 20], vec![512; 4]]);
+    }
+
+    #[test]
+    fn rejects_bad_count_with_line_number() {
+        let err = parse_trace("1KB, 2KB\n1KB, junk\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("junk"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_ragged_ops() {
+        let err = parse_trace("1, 2, 3\n4, 5\n").unwrap_err();
+        assert!(format!("{err:#}").contains("same ranks"));
+    }
+
+    #[test]
+    fn rejects_empty_trace() {
+        assert!(parse_trace("# nothing\n\n").is_err());
+        assert!(parse_trace("").is_err());
+    }
+}

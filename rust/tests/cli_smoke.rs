@@ -23,7 +23,7 @@ fn stderr(o: &Output) -> String {
 /// Every subcommand in HELP. Kept in sync by `help_lists_every_subcommand`.
 const COMMANDS: &[&str] = &[
     "topo", "fig2", "table1", "fig3", "findings", "auto", "osu", "refacto",
-    "sweep-gdr", "e2e", "artifacts", "help",
+    "sweep-gdr", "workload", "e2e", "artifacts", "help",
 ];
 
 #[test]
@@ -148,6 +148,81 @@ fn sweep_gdr_runs() {
     let out = agv(&["sweep-gdr", "--dataset", "netflix", "--gpus", "2", "--limits", "16,1MB"]);
     assert!(out.status.success(), "{}", stderr(&out));
     assert!(stdout(&out).contains("<-- best"));
+}
+
+#[test]
+fn workload_smoke_on_each_system() {
+    for system in ["cluster", "dgx1", "cs-storm"] {
+        let out = agv(&[
+            "workload", "--system", system, "--tenants", "2", "--ops", "2",
+            "--gpus", "2", "--total", "1MB", "--seed", "1",
+        ]);
+        assert!(out.status.success(), "{system}: {}", stderr(&out));
+        let text = stdout(&out);
+        assert!(text.contains("WORKLOAD"), "{system}:\n{text}");
+        assert!(text.contains("slowdown"), "{system}:\n{text}");
+        assert!(text.contains("tenant-0") && text.contains("tenant-1"), "{system}:\n{text}");
+    }
+}
+
+#[test]
+fn workload_auto_lib_runs() {
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--lib", "auto",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // auto tenants report (library, algorithm) candidate labels
+    assert!(stdout(&out).contains('/'), "{}", stdout(&out));
+}
+
+#[test]
+fn workload_refacto_hook_runs() {
+    let out = agv(&[
+        "workload", "--refacto", "netflix", "--system", "dgx1", "--tenants", "2",
+        "--iters", "1", "--gpus", "2",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("CONTENDED REFACTO"), "{text}");
+    assert!(text.contains("slowdown"), "{text}");
+    // flags that cannot apply to the refacto tenant are rejected, not
+    // silently ignored
+    let out = agv(&["workload", "--refacto", "netflix", "--total", "1MB"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("--total"), "{}", stderr(&out));
+}
+
+#[test]
+fn workload_rejects_malformed_trace_cleanly() {
+    let dir = std::env::temp_dir().join("agv_workload_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.trace");
+    std::fs::write(&path, "1KB, 2KB\n1KB, junk\n").unwrap();
+    let out = agv(&["workload", "--system", "dgx1", "--trace", path.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1), "malformed trace must exit 1");
+    let err = stderr(&out);
+    assert!(err.contains("workload failed"), "{err}");
+    assert!(err.contains("line 2") && err.contains("junk"), "no line context:\n{err}");
+    assert!(!err.contains("panicked"), "panicked instead of clean error:\n{err}");
+    // a missing trace file is the same class of clean failure
+    let out = agv(&["workload", "--trace", "/definitely/not/here.trace"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(!stderr(&out).contains("panicked"), "{}", stderr(&out));
+}
+
+#[test]
+fn workload_valid_trace_runs() {
+    let dir = std::env::temp_dir().join("agv_workload_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("good.trace");
+    std::fs::write(&path, "# two ops on two ranks\n1MB, 64KB\n0, 2MB\n").unwrap();
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "2",
+        "--gpus", "2", "--trace", path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("trace"), "{}", stdout(&out));
 }
 
 #[test]

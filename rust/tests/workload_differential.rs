@@ -1,0 +1,147 @@
+//! Differential lockdown of the workload engine against the single-op
+//! path: a 1-tenant, 1-op workload with zero arrival offset must build
+//! the task-for-task identical DAG as `comm::run_allgatherv` and
+//! therefore reproduce its `CommResult` **bit-exactly** — per library,
+//! per system, per irregular count vector, on both the event-driven
+//! and reference engines. This is what licenses every contended result
+//! the engine reports: the units under contention are exactly the
+//! models the paper experiments validated.
+
+use agv_bench::comm::select::auto_allgatherv;
+use agv_bench::comm::{run_allgatherv, Library, Params};
+use agv_bench::sim::with_reference_engine;
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::topology::Topology;
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts};
+use agv_bench::workload::{run_workload, TenantLib, WorkloadSpec};
+
+/// Per-seed irregular vectors spanning the §IV regimes.
+fn vectors(rng: &mut Rng, p: usize) -> Vec<Vec<u64>> {
+    vec![
+        counts::regular(p, 1 + rng.gen_range(32 << 20)),
+        counts::skewed(rng, p, 48 << 20),
+        counts::zero_heavy(rng, p, 32 << 20),
+        counts::single_hot(rng, p, 256 << 20),
+    ]
+}
+
+fn assert_single_op_matches(topo: &Topology, lib: Library, cv: &[u64], engine: &str) {
+    let spec = WorkloadSpec::single_op(TenantLib::Fixed(lib), cv.to_vec(), 7);
+    let w = run_workload(topo, &spec, Params::default()).expect("spec valid");
+    let solo = run_allgatherv(lib, topo, cv);
+    let op = &w.tenants[0].ops[0];
+    assert_eq!(
+        op.finish.to_bits(),
+        solo.time.to_bits(),
+        "{engine}/{}/{}: workload {} != isolated {} (counts {cv:?})",
+        topo.name,
+        lib.name(),
+        op.finish,
+        solo.time
+    );
+    assert_eq!(op.arrival.to_bits(), 0f64.to_bits());
+    assert_eq!(
+        op.flows, solo.flows,
+        "{engine}/{}/{}: flow counts diverged",
+        topo.name,
+        lib.name()
+    );
+    assert_eq!(w.flows, solo.flows);
+}
+
+#[test]
+fn one_tenant_one_op_is_bit_exact_event_engine() {
+    check("workload-differential-event", 12, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, 4, kind.max_gpus().min(8)][rng.gen_range(3) as usize];
+            for cv in vectors(rng, p) {
+                for lib in Library::all() {
+                    assert_single_op_matches(&topo, lib, &cv, "event");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn one_tenant_one_op_is_bit_exact_reference_engine() {
+    // fewer cases: the reference core is O(F^2) by design
+    check("workload-differential-reference", 4, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, kind.max_gpus().min(8)][rng.gen_range(2) as usize];
+            for cv in vectors(rng, p) {
+                for lib in Library::all() {
+                    with_reference_engine(|| {
+                        assert_single_op_matches(&topo, lib, &cv, "reference")
+                    });
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn one_tenant_one_op_auto_matches_selector() {
+    // the auto tenant path freezes the selector's candidate at plan
+    // time and composes it gate-less: same DAG, same argmin time
+    check("workload-differential-auto", 6, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let cv = counts::irregular(rng, 4, 16 << 20);
+            let spec = WorkloadSpec::single_op(TenantLib::Auto, cv.clone(), 7);
+            let w = run_workload(&topo, &spec, Params::default()).expect("spec valid");
+            let sel = auto_allgatherv(&topo, &cv);
+            let op = &w.tenants[0].ops[0];
+            assert_eq!(
+                op.finish.to_bits(),
+                sel.time.to_bits(),
+                "{}: workload-auto {} != selector {} ({})",
+                topo.name,
+                op.finish,
+                sel.time,
+                sel.candidate.label()
+            );
+            assert_eq!(op.label, sel.candidate.label());
+            assert_eq!(op.flows, sel.flows);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engines_agree_on_a_contended_workload() {
+    // same multi-tenant spec through both cores: agreement to the
+    // engines' documented ~1e-9 relative contract (not bit-exact:
+    // settlement order differs)
+    let topo = SystemKind::CsStorm.build();
+    let spec = WorkloadSpec::synthetic(
+        3,
+        2,
+        8,
+        TenantLib::Fixed(Library::MpiCuda),
+        8 << 20,
+        21,
+    );
+    let event = run_workload(&topo, &spec, Params::default()).unwrap();
+    let refr =
+        with_reference_engine(|| run_workload(&topo, &spec, Params::default()).unwrap());
+    assert_eq!(event.flows, refr.flows);
+    let rel = (event.makespan - refr.makespan).abs() / refr.makespan;
+    assert!(rel < 1e-9, "makespans diverged: {} vs {}", event.makespan, refr.makespan);
+    for (a, b) in event.tenants.iter().zip(&refr.tenants) {
+        for (x, y) in a.ops.iter().zip(&b.ops) {
+            assert!(
+                (x.finish - y.finish).abs() < 1e-11 + 1e-9 * y.finish.abs(),
+                "tenant {} op {}: {} vs {}",
+                x.tenant, x.index, x.finish, y.finish
+            );
+        }
+    }
+    let drel = (event.total_bytes - refr.total_bytes).abs() / refr.total_bytes;
+    assert!(drel < 1e-6, "bytes diverged: {} vs {}", event.total_bytes, refr.total_bytes);
+}

@@ -1,0 +1,185 @@
+//! K-tenant contention properties of the workload engine, over
+//! randomized systems / tenant counts / libraries / irregular traces:
+//!
+//! 1. **conservation** — the shared run moves exactly the bytes the
+//!    tenants move in isolation (contention reshapes *when* bytes
+//!    move, never *how many*);
+//! 2. **no free lunch** — no op completes faster on a contended
+//!    fabric than on an idle one;
+//! 3. **monotonicity** — removing a tenant never *materially* slows
+//!    the survivors, and helps in aggregate.
+//!
+//! Tolerance calibration (documented because the bounds are load-
+//! bearing): max-min fluid sharing with multi-hop flows admits
+//! Graham-style scheduling anomalies — removing a tenant shifts when
+//! the survivors' flows overlap *each other*, and a rephased overlap
+//! can finish later. Sweeping this exact generator (same seeds, same
+//! draw order) through a port of the reference engine measured worst
+//! anomalies of -4.4% for tenant-removal completion and only
+//! FP-noise-level (~1e-13) violations for conservation and
+//! no-free-lunch. Hence: conservation and no-free-lunch are asserted
+//! tight (1e-9), monotonicity with a 10% anomaly allowance plus an
+//! aggregate-direction check.
+
+use agv_bench::comm::{Library, Params};
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::topology::Topology;
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts};
+use agv_bench::util::stats::geomean;
+use agv_bench::workload::{
+    isolated_times, run_workload, OpStream, TenantLib, TenantSpec, WorkloadSpec,
+};
+
+/// Largest single-rank contribution the random traces draw.
+const MAX_BYTES: u64 = 16 << 20;
+/// Anomaly allowance for tenant-removal monotonicity (see module docs).
+const MONO_SLACK: f64 = 0.10;
+
+fn random_system(rng: &mut Rng) -> Topology {
+    match rng.gen_range(3) {
+        0 => SystemKind::Cluster.build(),
+        1 => SystemKind::Dgx1.build(),
+        _ => SystemKind::CsStorm.build(),
+    }
+}
+
+/// Random K-tenant spec: mixed libraries, random irregular traces,
+/// jittered arrivals. Draw order is part of the test's identity — the
+/// calibration sweep replays it seed-for-seed.
+fn random_spec(rng: &mut Rng, max_gpus: usize) -> WorkloadSpec {
+    let k = 2 + rng.gen_range(3) as usize;
+    let ops = 1 + rng.gen_range(2) as usize;
+    let tenants = (0..k)
+        .map(|i| {
+            let p = 2 + rng.gen_range(max_gpus as u64 - 1) as usize;
+            let lib = match rng.gen_range(3) {
+                0 => Library::Mpi,
+                1 => Library::MpiCuda,
+                _ => Library::Nccl,
+            };
+            let trace: Vec<Vec<u64>> =
+                (0..ops).map(|_| counts::irregular(rng, p, MAX_BYTES)).collect();
+            TenantSpec {
+                name: format!("t{i}"),
+                seed: i as u64,
+                lib: TenantLib::Fixed(lib),
+                stream: OpStream::Trace { ops: trace },
+                ops,
+                start_offset: rng.gen_f64(0.0, 2.0e-3),
+                gap: rng.gen_f64(0.0, 1.0e-3),
+                jitter: rng.gen_f64(0.0, 0.5e-3),
+            }
+        })
+        .collect();
+    WorkloadSpec { name: "prop".into(), seed: rng.next_u64(), tenants }
+}
+
+fn sub_spec(spec: &WorkloadSpec, keep: &[usize]) -> WorkloadSpec {
+    WorkloadSpec {
+        name: spec.name.clone(),
+        seed: spec.seed,
+        tenants: keep.iter().map(|&i| spec.tenants[i].clone()).collect(),
+    }
+}
+
+#[test]
+fn prop_byte_conservation_under_contention() {
+    check("workload-conservation", 16, |rng| {
+        let topo = random_system(rng);
+        let spec = random_spec(rng, topo.num_gpus().min(8));
+        let shared = run_workload(&topo, &spec, Params::default()).expect("valid spec");
+        let mut isolated_total = 0.0;
+        for i in 0..spec.tenants.len() {
+            let solo = run_workload(&topo, &sub_spec(&spec, &[i]), Params::default())
+                .expect("valid sub-spec");
+            isolated_total += solo.total_bytes;
+        }
+        let rel = (shared.total_bytes - isolated_total).abs() / isolated_total.max(1.0);
+        agv_bench::prop_assert!(
+            rel < 1e-9,
+            "bytes not conserved on {}: shared {} vs isolated sum {} (rel {rel})",
+            topo.name, shared.total_bytes, isolated_total
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_no_free_lunch_vs_idle_fabric() {
+    check("workload-no-free-lunch", 24, |rng| {
+        let topo = random_system(rng);
+        let spec = random_spec(rng, topo.num_gpus().min(8));
+        let shared = run_workload(&topo, &spec, Params::default()).expect("valid spec");
+        let idle = isolated_times(&topo, &spec, Params::default()).expect("valid spec");
+        for (t, tr) in shared.tenants.iter().enumerate() {
+            for op in &tr.ops {
+                let iso = idle[t][op.index];
+                agv_bench::prop_assert!(
+                    op.latency() >= iso * (1.0 - 1e-9) - 1e-12,
+                    "free lunch on {}: tenant {t} op {} contended {} < isolated {iso}",
+                    topo.name, op.index, op.latency()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_removing_a_tenant_helps_the_others() {
+    // per-survivor: within the anomaly allowance; in aggregate across
+    // the whole suite: removal must genuinely speed survivors up
+    let mut ratios: Vec<f64> = Vec::new();
+    check("workload-monotonicity", 24, |rng| {
+        let topo = random_system(rng);
+        let spec = random_spec(rng, topo.num_gpus().min(8));
+        let k = spec.tenants.len();
+        let drop = rng.gen_range(k as u64) as usize;
+        let shared = run_workload(&topo, &spec, Params::default()).expect("valid spec");
+        let keep: Vec<usize> = (0..k).filter(|&i| i != drop).collect();
+        let without = run_workload(&topo, &sub_spec(&spec, &keep), Params::default())
+            .expect("valid sub-spec");
+        for (j, &i) in keep.iter().enumerate() {
+            let with_t = shared.tenants[i].completion;
+            let without_t = without.tenants[j].completion;
+            agv_bench::prop_assert!(
+                without_t <= with_t * (1.0 + MONO_SLACK),
+                "removal slowed tenant {i} on {} beyond the anomaly bound: \
+                 {without_t} vs {with_t} with the dropped tenant present",
+                topo.name
+            );
+            ratios.push(with_t / without_t);
+        }
+        Ok(())
+    });
+    // calibration sweep measured geomean ~1.11 on these exact seeds;
+    // anything near 1.0 would mean the suite generates no contention
+    let g = geomean(&ratios);
+    assert!(g > 1.02, "tenant removal barely helps (geomean {g:.4}) — no real contention?");
+}
+
+#[test]
+fn contended_tenants_preserve_per_tenant_op_order() {
+    // iteration k+1 gates on iteration k for every tenant, with or
+    // without contention; arrivals and finishes are strictly ordered
+    check("workload-op-order", 8, |rng| {
+        let topo = random_system(rng);
+        let spec = random_spec(rng, topo.num_gpus().min(8));
+        let shared = run_workload(&topo, &spec, Params::default()).expect("valid spec");
+        for tr in &shared.tenants {
+            for w in tr.ops.windows(2) {
+                agv_bench::prop_assert!(
+                    w[1].arrival >= w[0].finish - 1e-15,
+                    "op {} arrived before op {} finished ({} < {})",
+                    w[1].index, w[0].index, w[1].arrival, w[0].finish
+                );
+                agv_bench::prop_assert!(w[1].finish > w[0].finish);
+            }
+            agv_bench::prop_assert!(
+                (tr.completion - tr.ops.last().unwrap().finish).abs() == 0.0
+            );
+        }
+        Ok(())
+    });
+}

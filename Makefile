@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance test-workload verify bench bench-smoke bench-workload artifacts fmt clippy
+.PHONY: build test test-conformance test-workload test-faults verify bench bench-smoke bench-workload bench-faults artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -18,21 +18,33 @@ test-conformance:
 test-workload:
 	cargo test --test workload_differential --test workload_properties --test workload_determinism
 
+# The fault subsystem's differential oracle + property suites on their
+# own (CI runs this as a dedicated step; also part of `make test`).
+test-faults:
+	cargo test --test faults_differential --test faults_properties
+
 verify: build test
 
 # Full measurement run; bench_engine writes BENCH_engine.json,
-# bench_hierarchy writes BENCH_hierarchy.json and bench_workload writes
-# BENCH_workload.json at the repo root.
+# bench_hierarchy writes BENCH_hierarchy.json, bench_workload writes
+# BENCH_workload.json and bench_faults writes BENCH_faults.json at the
+# repo root.
 bench:
 	cargo bench --bench bench_engine -- --json
 	cargo bench --bench bench_hierarchy -- --json
 	cargo bench --bench bench_workload -- --json
+	cargo bench --bench bench_faults -- --json
 	cargo bench --bench bench_ablations
 
 # The workload grid alone (BENCH_workload.json is byte-reproducible
 # from its seed; AGV_BENCH_QUICK=1 redirects to the .quick.json name).
 bench-workload:
 	cargo bench --bench bench_workload -- --json
+
+# The fault grid alone (BENCH_faults.json is byte-reproducible from its
+# seed; AGV_BENCH_QUICK=1 redirects to the .quick.json name).
+bench-faults:
+	cargo bench --bench bench_faults -- --json
 
 # CI smoke: every bench target builds and runs with slashed iteration
 # counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick
@@ -42,6 +54,7 @@ bench-smoke:
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_engine -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_hierarchy -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_workload -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_faults -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_ablations
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_osu_fig2
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_refacto_fig3

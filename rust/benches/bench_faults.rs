@@ -1,0 +1,64 @@
+//! Fault subsystem benchmark: wall-clock cost of degraded-fabric
+//! simulation and of robust selection (the one-build-many-sims
+//! scenario fan-out), plus the deterministic simulated-metric payload.
+//!
+//! `cargo bench --bench bench_faults [-- --json]`
+//!
+//! With `--json` (what `make bench-faults` passes) the simulated
+//! metrics are written to `BENCH_faults.json` at the repo root.
+//! Deliberately, the artifact holds **no wall-clock numbers** — only
+//! simulation outputs — so the same seed reproduces it byte-for-byte
+//! (`tests/workload_determinism.rs` pins the in-process equivalent).
+//! `AGV_BENCH_QUICK=1` slashes iteration counts and redirects the
+//! artifact to `BENCH_faults.quick.json` (scratch), as in the other
+//! bench targets.
+
+use agv_bench::comm::select::{AlgoSelector, RobustObjective};
+use agv_bench::comm::Params;
+use agv_bench::perturb::bench::{bench_cases, bench_doc};
+use agv_bench::perturb::{ensemble, perturbed_allgatherv, EnsembleCfg};
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
+
+/// Seed of the canonical BENCH_faults.json grid.
+const SEED: u64 = 42;
+
+fn main() {
+    let json_out = std::env::args().any(|a| a == "--json");
+
+    // wall-clock: degraded single-collective simulation per system
+    for (label, topo, counts, perts) in bench_cases(SEED) {
+        let name = format!("faults/{label}");
+        let r = bench(&name, warmup(1), iters(16), || {
+            for lib in agv_bench::comm::Library::all() {
+                black_box(perturbed_allgatherv(&topo, lib, Params::default(), &counts, &perts));
+            }
+        });
+        println!("{}", r.report_line());
+    }
+
+    // wall-clock: robust selection over an ensemble (schedule built
+    // once, every candidate simulated on every scenario)
+    let topo = SystemKind::Dgx1.build();
+    let counts = vec![4u64 << 20; 8];
+    let ens = ensemble(&topo, &EnsembleCfg::quick(SEED));
+    let sims_per_select =
+        AlgoSelector::new(Params::default()).evaluate_robust(&topo, &counts, &ens).len()
+            * ens.len();
+    let r = bench("faults/robust-select/dgx1", warmup(1), iters(8), || {
+        let sel = AlgoSelector::new(Params::default());
+        black_box(sel.select_robust(&topo, &counts, &ens, RobustObjective::P95));
+    });
+    println!("{}   ({:.0} scenario-sims/s)", r.report_line(), sims_per_select as f64 / r.mean_s);
+
+    if json_out {
+        let doc = bench_doc(SEED);
+        let path = if quick_mode() {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_faults.quick.json")
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_faults.json")
+        };
+        std::fs::write(path, doc.render() + "\n").expect("write BENCH_faults json");
+        println!("\nwrote {path}");
+    }
+}

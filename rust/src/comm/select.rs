@@ -422,6 +422,169 @@ impl AlgoSelector {
     }
 }
 
+/// Aggregation objective of the robust selector: what "fastest over the
+/// ensemble" means (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RobustObjective {
+    /// Argmin of the mean makespan over the scenarios.
+    Mean,
+    /// Argmin of the 95th-percentile makespan — the tail-averse choice.
+    P95,
+}
+
+impl RobustObjective {
+    /// CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            RobustObjective::Mean => "mean",
+            RobustObjective::P95 => "p95",
+        }
+    }
+
+    /// Parse a `--robust` value.
+    pub fn parse(s: &str) -> Option<RobustObjective> {
+        match s.to_ascii_lowercase().as_str() {
+            "mean" => Some(RobustObjective::Mean),
+            "p95" => Some(RobustObjective::P95),
+            _ => None,
+        }
+    }
+
+    /// Aggregate per-scenario times under this objective. Panics on an
+    /// empty slice (as [`crate::util::stats::percentile`] does) — a
+    /// silent 0.0 mean would win every argmin with no data behind it.
+    pub fn aggregate(self, times: &[f64]) -> f64 {
+        assert!(!times.is_empty(), "cannot aggregate zero scenarios");
+        match self {
+            RobustObjective::Mean => times.iter().sum::<f64>() / times.len() as f64,
+            RobustObjective::P95 => crate::util::stats::percentile(times, 95.0),
+        }
+    }
+}
+
+/// The robust selector's verdict for one call over one ensemble.
+#[derive(Clone, Copy, Debug)]
+pub struct RobustSelection {
+    /// Winning (library, algorithm) pair under the objective.
+    pub candidate: Candidate,
+    /// The winner's aggregated (objective) makespan over the ensemble.
+    pub objective: f64,
+    /// The winner's mean makespan over the ensemble.
+    pub mean: f64,
+    /// The winner's p95 makespan over the ensemble.
+    pub p95: f64,
+    /// The winner's time on the *healthy* (unperturbed) fabric.
+    pub healthy: f64,
+    /// Scenarios evaluated.
+    pub scenarios: usize,
+}
+
+impl AlgoSelector {
+    /// Simulate every applicable candidate under **every scenario** of a
+    /// perturbation ensemble, in [`candidates`] order. Each algorithm's
+    /// schedule is built once and shared across both MPI transports and
+    /// all scenarios (one-build-many-sims — the scenario loop only pays
+    /// compose + run). Returns per-candidate per-scenario makespans.
+    pub fn evaluate_robust(
+        &self,
+        topo: &Topology,
+        counts: &[u64],
+        ensemble: &[Vec<crate::perturb::Perturbation>],
+    ) -> Vec<(Candidate, Vec<f64>)> {
+        assert!(!ensemble.is_empty(), "robust evaluation needs at least one scenario");
+        let p = counts.len();
+        let run_sched = |lib: Library, sched: &Schedule| -> Vec<f64> {
+            ensemble
+                .iter()
+                .map(|perts| {
+                    let mut sim = crate::sim::Sim::new(topo);
+                    let done = match lib {
+                        Library::Mpi => {
+                            mpi::Mpi::new(self.params).compose_with(&mut sim, counts, sched, None)
+                        }
+                        _ => mpi_cuda::MpiCuda::new(self.params)
+                            .compose_with(&mut sim, counts, sched, None),
+                    };
+                    crate::perturb::apply(&mut sim, perts);
+                    sim.run().finish(done)
+                })
+                .collect()
+        };
+        let mut out = Vec::new();
+        for algo in Algo::scheduled() {
+            if let Some(sched) = algo.schedule(topo, p) {
+                for lib in [Library::Mpi, Library::MpiCuda] {
+                    out.push((Candidate { lib, algo }, run_sched(lib, &sched)));
+                }
+            }
+        }
+        let nccl_times: Vec<f64> = ensemble
+            .iter()
+            .map(|perts| {
+                let mut sim = crate::sim::Sim::new(topo);
+                let done = nccl::Nccl::new(self.params).compose(&mut sim, counts, None);
+                crate::perturb::apply(&mut sim, perts);
+                sim.run().finish(done)
+            })
+            .collect();
+        out.push((Candidate { lib: Library::Nccl, algo: Algo::BcastSeries }, nccl_times));
+        out
+    }
+
+    /// Robust selection: argmin of the aggregated (mean or p95) makespan
+    /// over a perturbation ensemble — "which library wins on the machine
+    /// *as it is today*". The candidate set contains every fixed
+    /// library's default choice, and every candidate is scored on the
+    /// **same scenarios**, so the verdict can never lose to a fixed
+    /// library on its own ensemble, by construction
+    /// (`tests/faults_properties.rs`). Ties break toward the earlier
+    /// candidate, as in [`AlgoSelector::select_fresh`].
+    pub fn select_robust(
+        &self,
+        topo: &Topology,
+        counts: &[u64],
+        ensemble: &[Vec<crate::perturb::Perturbation>],
+        objective: RobustObjective,
+    ) -> RobustSelection {
+        let evals = self.evaluate_robust(topo, counts, ensemble);
+        let (candidate, agg, times) = robust_argmin(&evals, objective);
+        let healthy = simulate(topo, self.params, candidate, counts)
+            .expect("the winner simulates on its own topology")
+            .time;
+        RobustSelection {
+            candidate,
+            objective: agg,
+            mean: RobustObjective::Mean.aggregate(times),
+            p95: RobustObjective::P95.aggregate(times),
+            healthy,
+            scenarios: ensemble.len(),
+        }
+    }
+}
+
+/// Argmin of the aggregated makespan over the result of
+/// [`AlgoSelector::evaluate_robust`]; ties break toward the earlier
+/// candidate, exactly as in [`AlgoSelector::select_fresh`]. Shared by
+/// [`AlgoSelector::select_robust`] and the `agv faults` report so the
+/// two can never diverge on aggregation or tie-breaking. Returns the
+/// winner, its aggregated makespan, and its per-scenario times.
+pub fn robust_argmin(
+    evals: &[(Candidate, Vec<f64>)],
+    objective: RobustObjective,
+) -> (Candidate, f64, &[f64]) {
+    let mut best: Option<(Candidate, f64, &Vec<f64>)> = None;
+    for (c, times) in evals {
+        let agg = objective.aggregate(times);
+        match best {
+            Some((_, ba, _)) if ba <= agg => {}
+            _ => best = Some((*c, agg, times)),
+        }
+    }
+    let (candidate, agg, times) =
+        best.expect("the NCCL bcast-series candidate always applies");
+    (candidate, agg, times)
+}
+
 /// One-shot exhaustive auto-selection with default parameters (the
 /// `auto` counterpart of [`crate::comm::run_allgatherv`]).
 pub fn auto_allgatherv(topo: &Topology, counts: &[u64]) -> Selection {
@@ -567,5 +730,68 @@ mod tests {
         let s = auto_allgatherv(&topo, &[4 << 20; 16]);
         assert!(s.time > 0.0 && s.time.is_finite());
         assert!(s.candidate.label().contains('/'));
+    }
+
+    #[test]
+    fn robust_objective_parse_and_aggregate() {
+        for o in [RobustObjective::Mean, RobustObjective::P95] {
+            assert_eq!(RobustObjective::parse(o.name()), Some(o));
+        }
+        assert_eq!(RobustObjective::parse("median"), None);
+        let times = [1.0, 2.0, 3.0, 10.0];
+        assert!((RobustObjective::Mean.aggregate(&times) - 4.0).abs() < 1e-12);
+        assert!(RobustObjective::P95.aggregate(&times) > 3.0);
+    }
+
+    #[test]
+    fn robust_with_one_healthy_scenario_matches_fresh() {
+        // an ensemble of one empty scenario is just the healthy fabric:
+        // same candidate order, same sims, so the robust verdict must
+        // equal select_fresh bit-for-bit
+        let sel = AlgoSelector::new(Params::default());
+        let topo = SystemKind::Dgx1.build();
+        let counts: Vec<u64> = (0..8).map(|r| ((r % 4) as u64 + 1) << 19).collect();
+        let fresh = sel.select_fresh(&topo, &counts);
+        let robust =
+            sel.select_robust(&topo, &counts, &[vec![]], RobustObjective::Mean);
+        assert_eq!(robust.candidate, fresh.candidate);
+        assert_eq!(robust.objective.to_bits(), fresh.time.to_bits());
+        assert_eq!(robust.healthy.to_bits(), fresh.time.to_bits());
+        assert_eq!(robust.scenarios, 1);
+    }
+
+    #[test]
+    fn robust_never_loses_to_fixed_defaults_on_its_ensemble() {
+        let params = Params::default();
+        let sel = AlgoSelector::new(params);
+        let topo = SystemKind::CsStorm.build();
+        let counts = vec![2u64 << 20; 8];
+        let ens = crate::perturb::ensemble(
+            &topo,
+            &crate::perturb::EnsembleCfg::quick(11).with_scenarios(4),
+        );
+        for objective in [RobustObjective::Mean, RobustObjective::P95] {
+            let robust = sel.select_robust(&topo, &counts, &ens, objective);
+            assert!(robust.objective.is_finite() && robust.objective > 0.0);
+            for cand in default_candidates(&params, &counts) {
+                let times: Vec<f64> = ens
+                    .iter()
+                    .map(|perts| {
+                        crate::perturb::perturbed_candidate(&topo, params, cand, &counts, perts)
+                            .expect("defaults always apply")
+                            .time
+                    })
+                    .collect();
+                let fixed = objective.aggregate(&times);
+                assert!(
+                    robust.objective <= fixed,
+                    "{}: robust {} loses to {} {}",
+                    objective.name(),
+                    robust.objective,
+                    cand.label(),
+                    fixed
+                );
+            }
+        }
     }
 }

@@ -194,6 +194,7 @@ pub fn refacto_workload_spec(
         name: format!("refacto-{}+{}bg", spec.name, cfg.background),
         seed: cfg.seed,
         tenants,
+        faults: Vec::new(),
     }
 }
 
@@ -214,6 +215,7 @@ pub fn refacto_comm_contended(
         name: full.name.clone(),
         seed: full.seed,
         tenants: vec![full.tenants[0].clone()],
+        faults: full.faults.clone(),
     };
     // plan once; the foreground tenant's plan is removal-invariant, so
     // the isolated replay reuses it instead of re-running an auto
@@ -233,6 +235,70 @@ pub fn refacto_comm_contended(
         contended: c.completion,
         slowdown: c.completion / i.completion,
         p99_latency: c.latency_percentile(99.0),
+    }
+}
+
+/// The degraded-fabric verdict on ReFacTo's communication: every mode's
+/// Allgatherv simulated healthy and under a fault set (DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct DegradedRefacto {
+    /// Data-set name (Table I).
+    pub dataset: &'static str,
+    /// Library that ran the collectives.
+    pub library: Library,
+    /// Simulated GPU (rank) count.
+    pub gpus: usize,
+    /// CP-ALS iterations the totals cover.
+    pub iters: usize,
+    /// Total communication time on the healthy fabric (seconds).
+    pub healthy_total: f64,
+    /// Total communication time on the degraded fabric (seconds).
+    pub degraded_total: f64,
+    /// degraded / healthy.
+    pub slowdown: f64,
+    /// Per-mode single-iteration times, healthy fabric.
+    pub per_mode_healthy: [f64; 3],
+    /// Per-mode single-iteration times, degraded fabric.
+    pub per_mode_degraded: [f64; 3],
+}
+
+/// Simulate ReFacTo's communication on a **degraded** fabric: each
+/// mode's Allgatherv runs once healthy (exactly [`refacto_comm`]) and
+/// once with the perturbation set's capacity steps applied
+/// ([`crate::perturb::perturbed_allgatherv`] — the same compose path,
+/// so an empty set reproduces the healthy numbers bit-for-bit). This is
+/// what `agv refacto --perturb` and the `agv faults` tables surface.
+pub fn refacto_comm_degraded(
+    topo: &Topology,
+    lib: Library,
+    params: Params,
+    spec: &TensorSpec,
+    gpus: usize,
+    iters: usize,
+    perts: &[crate::perturb::Perturbation],
+) -> DegradedRefacto {
+    assert!(gpus >= 1 && gpus <= topo.num_gpus());
+    let counts = mode_counts(spec, gpus);
+    let library = lib.build(params);
+    let mut per_mode_healthy = [0.0f64; 3];
+    let mut per_mode_degraded = [0.0f64; 3];
+    for (m, c) in counts.iter().enumerate() {
+        per_mode_healthy[m] = library.allgatherv(topo, c).time;
+        per_mode_degraded[m] =
+            crate::perturb::perturbed_allgatherv(topo, lib, params, c, perts).time;
+    }
+    let healthy_total: f64 = per_mode_healthy.iter().sum::<f64>() * iters as f64;
+    let degraded_total: f64 = per_mode_degraded.iter().sum::<f64>() * iters as f64;
+    DegradedRefacto {
+        dataset: spec.name,
+        library: lib,
+        gpus,
+        iters,
+        healthy_total,
+        degraded_total,
+        slowdown: degraded_total / healthy_total,
+        per_mode_healthy,
+        per_mode_degraded,
     }
 }
 
@@ -392,6 +458,30 @@ mod tests {
         let busy = refacto_comm_contended(&topo, lib, Params::default(), &d, &cfg(3));
         assert!(busy.slowdown > 1.02, "3 tenants left no trace: {}", busy.slowdown);
         assert!(busy.p99_latency > 0.0);
+    }
+
+    #[test]
+    fn degraded_refacto_is_healthy_with_no_faults_and_slower_with() {
+        let topo = dgx1();
+        let d = datasets::netflix();
+        let none =
+            refacto_comm_degraded(&topo, Library::Nccl, Params::default(), &d, 8, 2, &[]);
+        let fixed = refacto_comm(&topo, Library::Nccl, Params::default(), &d, 8, 2);
+        assert_eq!(
+            none.degraded_total.to_bits(),
+            fixed.total_time.to_bits(),
+            "empty fault set must reproduce refacto_comm bit-for-bit"
+        );
+        assert_eq!(none.healthy_total.to_bits(), fixed.total_time.to_bits());
+        assert!((none.slowdown - 1.0).abs() < 1e-12);
+        let straggler = [crate::perturb::Perturbation::straggler(0, 0.4)];
+        let bad = refacto_comm_degraded(
+            &topo, Library::Nccl, Params::default(), &d, 8, 2, &straggler,
+        );
+        assert!(bad.slowdown > 1.1, "straggler left no trace: {}", bad.slowdown);
+        for m in 0..3 {
+            assert!(bad.per_mode_degraded[m] >= bad.per_mode_healthy[m] * (1.0 - 1e-9));
+        }
     }
 
     #[test]

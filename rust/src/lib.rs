@@ -14,12 +14,16 @@
 //! - [`report`]: renderers regenerating every paper table and figure;
 //! - [`workload`]: multi-tenant engine — N concurrent Allgatherv jobs
 //!   composed into one shared simulation (contended latency study);
+//! - [`perturb`]: fault & variability subsystem — degraded links,
+//!   straggler GPUs, time-varying bandwidth, Monte-Carlo ensembles
+//!   (the `agv faults` study and the robust selector);
 //! - [`util`]: self-contained PRNG / stats / bench / prop-test / CLI.
 #![warn(missing_docs)]
 
 pub mod comm;
 pub mod cpals;
 pub mod osu;
+pub mod perturb;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -5,17 +5,21 @@
 use std::path::PathBuf;
 
 use agv_bench::anyhow;
+use agv_bench::comm::select::{AlgoSelector, RobustObjective};
 use agv_bench::comm::{Library, Params};
 use agv_bench::cpals::comm_model::{
-    gdr_limit_sweep, refacto_comm, refacto_comm_auto, refacto_comm_contended, ContentionCfg,
-    DEFAULT_ITERS,
+    gdr_limit_sweep, refacto_comm, refacto_comm_auto, refacto_comm_contended,
+    refacto_comm_degraded, ContentionCfg, DEFAULT_ITERS,
 };
 use agv_bench::cpals::driver::Driver;
 use agv_bench::osu::distributions::Distribution;
+use agv_bench::perturb::{self, EnsembleCfg, Perturbation};
 use agv_bench::report::{
-    auto as report_auto, fig2, fig3, findings, table1, workload as report_workload, write_csv,
+    auto as report_auto, faults as report_faults, fig2, fig3, findings, table1,
+    workload as report_workload, write_csv,
 };
 use agv_bench::runtime::{default_artifacts_dir, Runtime};
+use agv_bench::tensor::messages::mode_counts;
 use agv_bench::tensor::{datasets, synth};
 use agv_bench::topology::systems::SystemKind;
 use agv_bench::util::cli::{parse_bytes, Args};
@@ -34,19 +38,32 @@ COMMANDS
   fig3 [--iters N] [--csv-dir DIR]
                                Fig. 3: ReFacTo communication time grid
   findings                     §VI headline ratios, ours vs paper
-  auto [--dataset D] [--gpus N] [--csv-dir DIR]
+  auto [--dataset D] [--gpus N] [--csv-dir DIR] [--perturb SPEC] [--robust [mean|p95]]
                                auto-selected (library, algorithm) vs each fixed library
-  osu --system S --gpus N [--lib L]
-                               one OSU sweep (S: cluster|dgx1|cs-storm; L: mpi|mpi-cuda|nccl|auto)
-  refacto --dataset D --system S --gpus N [--lib L] [--iters N]
-                               one ReFacTo communication simulation (--lib auto picks per mode)
+                               (--perturb: argmin on the degraded fabric; --robust:
+                               argmin of mean/p95 over a seeded fault ensemble)
+  osu --system S --gpus N [--lib L] [--perturb SPEC]
+                               one OSU sweep (S: cluster|dgx1|cs-storm; L: mpi|mpi-cuda|nccl|auto;
+                               --perturb runs the sweep on a degraded fabric)
+  refacto --dataset D --system S --gpus N [--lib L] [--iters N] [--perturb SPEC]
+                               one ReFacTo communication simulation (--lib auto picks per mode;
+                               --perturb reports healthy vs degraded totals)
   sweep-gdr [--dataset D] [--gpus N] [--limits CSV]
                                MV2_GPUDIRECT_LIMIT sweep (paper §V-C)
+  faults [--seed N] [--csv-dir DIR] | faults --list-links --system S
+                               fault & variability study: healthy-vs-degraded per system,
+                               flat-vs-hierarchical fragility ranking, robust-vs-fresh
+                               selector verdicts (--list-links prints --perturb link ids)
   workload [--system S|all] [--tenants K] [--ops N] [--lib L|auto] [--gpus N]
            [--total BYTES] [--dist D] [--trace FILE] [--seed N] [--csv-dir DIR]
-           [--refacto DATASET [--iters N]]
+           [--refacto DATASET [--iters N]] [--perturb SPEC]
                                multi-tenant contended Allgatherv study: K concurrent
                                tenants share one fabric; idle-vs-contended latency
+                               (--perturb degrades the shared fabric mid-flight)
+
+  --perturb SPEC               comma-separated faults: link:<id>:<factor>[:<start>[:<dur>]]
+                               | floor:<id>:<bytes/s>[:<start>[:<dur>]]
+                               | straggler:<rank>:<factor>[:<start>[:<dur>]]
   e2e [--config small|e2e] [--system S] [--gpus N] [--iters N] [--seed N]
       [--artifacts DIR]        end-to-end factorization (real compute via PJRT)
   artifacts [--artifacts DIR]  list AOT artifacts and their shapes
@@ -66,6 +83,7 @@ fn main() {
         "osu" => cmd_osu(&args),
         "refacto" => cmd_refacto(&args),
         "sweep-gdr" => cmd_sweep_gdr(&args),
+        "faults" => cmd_faults(&args),
         "workload" => {
             if let Err(e) = cmd_workload(&args) {
                 eprintln!("workload failed: {e:#}");
@@ -99,6 +117,39 @@ fn library_arg(args: &Args) -> Option<Library> {
     args.get("lib").map(|s| {
         Library::parse(s).unwrap_or_else(|| {
             eprintln!("unknown library `{s}` (mpi|mpi-cuda|nccl)");
+            std::process::exit(2);
+        })
+    })
+}
+
+/// Parse `--perturb SPEC` (None when absent; exits 2 on a bad spec —
+/// target ranges are validated later against the concrete topology).
+fn perturb_arg(args: &Args) -> Option<Vec<Perturbation>> {
+    args.get("perturb").map(|s| {
+        perturb::parse_list(s).unwrap_or_else(|e| {
+            eprintln!("--perturb: {e:#}");
+            std::process::exit(2);
+        })
+    })
+}
+
+/// Exit 2 with a clean message if the fault set does not fit the
+/// topology (bad link id / GPU rank / magnitude).
+fn check_perturbations(topo: &agv_bench::topology::Topology, perts: &[Perturbation]) {
+    if let Err(e) = perturb::validate(topo, perts) {
+        eprintln!("--perturb: {e:#}");
+        std::process::exit(2);
+    }
+}
+
+/// Parse `--robust [mean|p95]` (bare flag defaults to mean).
+fn robust_arg(args: &Args) -> Option<RobustObjective> {
+    if args.flag("robust") {
+        return Some(RobustObjective::Mean);
+    }
+    args.get("robust").map(|s| {
+        RobustObjective::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown robust objective `{s}` (mean|p95)");
             std::process::exit(2);
         })
     })
@@ -190,10 +241,91 @@ fn cmd_auto(args: &Args) {
         None => datasets::all(),
     };
     let gpus_filter = args.get("gpus").map(|_| args.get_usize("gpus", 8));
+    let perts = perturb_arg(args);
+    let objective = robust_arg(args);
+    if perts.is_some() || objective.is_some() {
+        // degraded-fabric selection: argmin of the aggregated makespan
+        // over the fault scenarios (an explicit --perturb set is a
+        // one-scenario ensemble; otherwise a seeded Monte-Carlo one)
+        let objective = objective.unwrap_or(RobustObjective::Mean);
+        let seed = args.get_u64("seed", 42);
+        let gpus = gpus_filter.unwrap_or(8);
+        if csv_dir(args).is_some() {
+            eprintln!("--csv-dir is not supported with --perturb/--robust (console output only)");
+        }
+        println!(
+            "AUTO on the degraded fabric — objective {} ({})",
+            objective.name(),
+            match &perts {
+                Some(ps) =>
+                    ps.iter().map(|p| p.label()).collect::<Vec<_>>().join(", "),
+                None => format!("seeded ensemble, seed {seed}"),
+            }
+        );
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            if gpus > topo.num_gpus() {
+                continue;
+            }
+            let ens = match &perts {
+                Some(ps) => {
+                    // a hand-written set may name links/ranks only some
+                    // systems have: skip those systems instead of dying
+                    // mid-report (agv auto has no --system flag)
+                    if let Err(e) = perturb::validate(&topo, ps) {
+                        println!("== {} @ {gpus} GPUs — skipped ({e:#}) ==", kind.name());
+                        continue;
+                    }
+                    vec![ps.clone()]
+                }
+                None => perturb::ensemble(&topo, &EnsembleCfg::quick(seed)),
+            };
+            let sel = AlgoSelector::new(Params::default());
+            println!("== {} @ {gpus} GPUs ==", kind.name());
+            for spec in &specs {
+                let counts = mode_counts(spec, gpus);
+                for (m, cv) in counts.iter().enumerate() {
+                    let fresh = sel.select_fresh(&topo, cv);
+                    let rob = sel.select_robust(&topo, cv, &ens, objective);
+                    println!(
+                        "  {:<10} mode {m}: healthy {} {:>12} | degraded {} {:>12}{}",
+                        spec.name,
+                        fresh.candidate.label(),
+                        fmt_time(fresh.time),
+                        rob.candidate.label(),
+                        fmt_time(rob.objective),
+                        if fresh.candidate == rob.candidate { "" } else { "   <-- flips" }
+                    );
+                }
+            }
+        }
+        return;
+    }
     let rows = report_auto::grid(&specs, gpus_filter);
     print!("{}", report_auto::render(&rows));
     if let Some(dir) = csv_dir(args) {
         let p = write_csv(&dir, "auto.csv", &report_auto::csv(&rows)).unwrap();
+        eprintln!("wrote {}", p.display());
+    }
+}
+
+fn cmd_faults(args: &Args) {
+    if args.flag("list-links") || args.get("list-links").is_some() {
+        let kind = match args.get("list-links") {
+            Some(s) => SystemKind::parse(s).unwrap_or_else(|| {
+                eprintln!("unknown system `{s}` (cluster|dgx1|cs-storm)");
+                std::process::exit(2);
+            }),
+            None => system_arg(args),
+        };
+        print!("{}", report_faults::links_table(&kind.build()));
+        return;
+    }
+    let seed = args.get_u64("seed", 42);
+    let report = report_faults::study(Params::default(), seed);
+    print!("{}", report_faults::render(&report));
+    if let Some(dir) = csv_dir(args) {
+        let p = write_csv(&dir, "faults.csv", &report_faults::csv(&report)).unwrap();
         eprintln!("wrote {}", p.display());
     }
 }
@@ -203,6 +335,60 @@ fn cmd_osu(args: &Args) {
     let gpus = args.get_usize("gpus", 2);
     let cfg = agv_bench::osu::OsuConfig::default();
     let topo = system.build();
+    if let Some(perts) = perturb_arg(args) {
+        check_perturbations(&topo, &perts);
+        let labels: Vec<String> = perts.iter().map(|p| p.label()).collect();
+        if auto_lib(args) {
+            // per size: argmin on the degraded fabric (one-scenario
+            // robust selection)
+            println!(
+                "OSU Allgatherv — {} @ {gpus} GPUs, degraded [{}] (auto on the degraded fabric)",
+                system.name(),
+                labels.join(", ")
+            );
+            println!("{:>10} {:>14}  choice", "size", "degraded");
+            let sel = AlgoSelector::new(cfg.params);
+            for m in agv_bench::osu::sweep_sizes(&cfg, gpus) {
+                let counts = vec![m; gpus];
+                let r = sel.select_robust(
+                    &topo,
+                    &counts,
+                    std::slice::from_ref(&perts),
+                    RobustObjective::Mean,
+                );
+                println!(
+                    "{:>10} {:>14}  {}",
+                    fmt_bytes(m),
+                    fmt_time(r.objective),
+                    r.candidate.label()
+                );
+            }
+            return;
+        }
+        let libs = library_arg(args)
+            .map(|l| vec![l])
+            .unwrap_or_else(|| Library::all().to_vec());
+        println!(
+            "OSU Allgatherv — {} @ {gpus} GPUs, degraded [{}]",
+            system.name(),
+            labels.join(", ")
+        );
+        println!(
+            "{:>10} {}",
+            "size",
+            libs.iter().map(|l| format!("{:>14}", l.name())).collect::<String>()
+        );
+        for m in agv_bench::osu::sweep_sizes(&cfg, gpus) {
+            let counts = vec![m; gpus];
+            let mut line = format!("{:>10}", fmt_bytes(m));
+            for &l in &libs {
+                let r = perturb::perturbed_allgatherv(&topo, l, cfg.params, &counts, &perts);
+                line.push_str(&format!("{:>14}", fmt_time(r.time)));
+            }
+            println!("{line}");
+        }
+        return;
+    }
     if auto_lib(args) {
         println!("OSU Allgatherv — {} @ {gpus} GPUs (auto selection)", system.name());
         println!("{:>10} {:>14}  choice", "size", "auto");
@@ -248,6 +434,38 @@ fn cmd_refacto(args: &Args) {
         std::process::exit(2);
     });
     let topo = system.build();
+    if let Some(perts) = perturb_arg(args) {
+        check_perturbations(&topo, &perts);
+        if auto_lib(args) {
+            eprintln!(
+                "--lib auto with --perturb is served by `agv auto --perturb` \
+                 (degraded-fabric selection)"
+            );
+            std::process::exit(2);
+        }
+        let labels: Vec<String> = perts.iter().map(|p| p.label()).collect();
+        let libs = library_arg(args)
+            .map(|l| vec![l])
+            .unwrap_or_else(|| Library::all().to_vec());
+        println!(
+            "ReFacTo communication — {} on {} @ {gpus} GPUs, {iters} iterations, degraded [{}]",
+            spec.name,
+            system.name(),
+            labels.join(", ")
+        );
+        for lib in libs {
+            let r =
+                refacto_comm_degraded(&topo, lib, Params::default(), &spec, gpus, iters, &perts);
+            println!(
+                "  {:<9} healthy {:>12}  degraded {:>12}  slowdown {:>5.2}x",
+                lib.name(),
+                fmt_time(r.healthy_total),
+                fmt_time(r.degraded_total),
+                r.slowdown,
+            );
+        }
+        return;
+    }
     if auto_lib(args) {
         let r = refacto_comm_auto(&topo, Params::default(), &spec, gpus, iters);
         println!(
@@ -342,16 +560,36 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
         })
         .transpose()?;
     let gpus_flag = args.get("gpus").map(|_| args.get_usize("gpus", 8));
-    let systems: Vec<SystemKind> = match args.get_or("system", "all") {
+    let mut systems: Vec<SystemKind> = match args.get_or("system", "all") {
         "all" => SystemKind::all().to_vec(),
         s => vec![SystemKind::parse(s)
             .ok_or_else(|| anyhow!("unknown system `{s}` (cluster|dgx1|cs-storm|all)"))?],
     };
 
+    let perts = perturb_arg(args);
+    if let Some(ps) = &perts {
+        // a hand-written fault set may name links/ranks only some
+        // systems have: skip those systems instead of aborting the
+        // whole multi-system study (mirrors `agv auto --perturb`)
+        systems.retain(|&kind| {
+            let topo = kind.build();
+            match perturb::validate(&topo, ps) {
+                Ok(()) => true,
+                Err(e) => {
+                    eprintln!("skipping {}: --perturb {e:#}", kind.name());
+                    false
+                }
+            }
+        });
+        if systems.is_empty() {
+            return Err(anyhow!("--perturb fits none of the selected systems"));
+        }
+    }
+
     // --refacto: the cpals hook — the data set's comm pattern as one
     // tenant among synthetic background tenants.
     if let Some(dname) = args.get("refacto") {
-        for flag in ["trace", "dist", "total", "ops"] {
+        for flag in ["trace", "dist", "total", "ops", "perturb"] {
             if args.get(flag).is_some() {
                 return Err(anyhow!(
                     "--{flag} does not apply to --refacto (its tenant replays the data set's \
@@ -398,6 +636,10 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
     let mk_spec = |max_gpus: usize| -> WorkloadSpec {
         let gpus = gpus_flag.unwrap_or(max_gpus.min(8));
         let mut spec = WorkloadSpec::synthetic(tenants, ops, gpus, lib.clone(), total, seed);
+        if let Some(ps) = &perts {
+            // validated per system by spec.validate inside the study
+            spec = spec.with_faults(ps.clone());
+        }
         if let Some(d) = dist {
             for t in &mut spec.tenants {
                 if let OpStream::Distribution { dist, .. } = &mut t.stream {

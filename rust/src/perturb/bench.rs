@@ -1,0 +1,138 @@
+//! The `bench_faults` measurement grid and its deterministic
+//! `BENCH_faults.json` payload.
+//!
+//! As with `BENCH_workload.json`, the artifact holds **simulated**
+//! metrics only (healthy/degraded times, slowdowns, robust-selector
+//! verdicts) — no wall-clock fields — so a fixed seed reproduces the
+//! file byte-for-byte run over run (`tests/workload_determinism.rs`
+//! pins this). Wall-clock timing of the scenario fan-out is printed by
+//! the bench binary but never written to the artifact.
+
+use crate::comm::select::{AlgoSelector, RobustObjective};
+use crate::comm::{run_allgatherv, Library, Params};
+use crate::topology::systems::SystemKind;
+use crate::topology::Topology;
+use crate::util::json::{obj, Json};
+
+use super::{ensemble, perturbed_allgatherv, EnsembleCfg, Perturbation};
+
+/// The bench grid: per paper system the canonical straggler scenario
+/// (GPU 0 at half speed) on a regular 4 MB vector. Deterministic in
+/// `seed` (which keys the robust-selection ensembles only — the
+/// scenarios themselves are fixed).
+pub fn bench_cases(seed: u64) -> Vec<(String, Topology, Vec<u64>, Vec<Perturbation>)> {
+    let _ = seed;
+    let mut out = Vec::new();
+    for kind in SystemKind::all() {
+        let topo = kind.build();
+        let gpus = topo.num_gpus().min(8);
+        let counts = vec![4u64 << 20; gpus];
+        let perts = vec![Perturbation::straggler(0, 0.5)];
+        out.push((format!("{}/straggler0x0.50", kind.name()), topo, counts, perts));
+    }
+    out
+}
+
+/// Simulated metrics of one bench case as a JSON object: per-library
+/// healthy vs degraded times plus the p95-robust selector verdict on a
+/// seeded ensemble.
+fn case_doc(
+    label: &str,
+    topo: &Topology,
+    counts: &[u64],
+    perts: &[Perturbation],
+    seed: u64,
+) -> Json {
+    let params = Params::default();
+    let libs: Vec<Json> = Library::all()
+        .into_iter()
+        .map(|lib| {
+            let healthy = run_allgatherv(lib, topo, counts);
+            let degraded = perturbed_allgatherv(topo, lib, params, counts, perts);
+            obj(vec![
+                ("lib", Json::Str(lib.name().to_string())),
+                ("healthy_s", Json::Num(healthy.time)),
+                ("degraded_s", Json::Num(degraded.time)),
+                ("slowdown", Json::Num(degraded.time / healthy.time)),
+            ])
+        })
+        .collect();
+    let ens = ensemble(topo, &EnsembleCfg::quick(seed));
+    let sel = AlgoSelector::new(params);
+    let robust = sel.select_robust(topo, counts, &ens, RobustObjective::P95);
+    obj(vec![
+        ("case", Json::Str(label.to_string())),
+        ("gpus", Json::Num(counts.len() as f64)),
+        ("libs", Json::Arr(libs)),
+        (
+            "robust",
+            obj(vec![
+                ("objective", Json::Str(RobustObjective::P95.name().to_string())),
+                ("winner", Json::Str(robust.candidate.label())),
+                ("objective_s", Json::Num(robust.objective)),
+                ("mean_s", Json::Num(robust.mean)),
+                ("p95_s", Json::Num(robust.p95)),
+                ("healthy_s", Json::Num(robust.healthy)),
+                ("scenarios", Json::Num(robust.scenarios as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// The full deterministic `BENCH_faults.json` document. Cases fan out
+/// over the bounded worker pool ([`crate::util::pool`]); results come
+/// back in case order, so the render is byte-stable.
+pub fn bench_doc(seed: u64) -> Json {
+    let cases = bench_cases(seed);
+    let jobs: Vec<_> = cases
+        .iter()
+        .map(|(label, topo, counts, perts)| {
+            move || case_doc(label, topo, counts, perts, seed)
+        })
+        .collect();
+    let docs = crate::util::pool::parallel_map(jobs);
+    obj(vec![
+        ("bench", Json::Str("bench_faults".to_string())),
+        ("seed", Json::Num(seed as f64)),
+        ("cases", Json::Arr(docs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_cover_all_systems() {
+        let cases = bench_cases(42);
+        assert_eq!(cases.len(), 3);
+        for kind in SystemKind::all() {
+            assert!(cases.iter().any(|(l, ..)| l.starts_with(kind.name())));
+        }
+    }
+
+    #[test]
+    fn doc_reports_degradation_and_robust_verdicts() {
+        let doc = bench_doc(7);
+        let cases = doc.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 3);
+        for c in cases {
+            let libs = c.get("libs").unwrap().as_arr().unwrap();
+            assert_eq!(libs.len(), 3);
+            for l in libs {
+                let slow = l.get("slowdown").unwrap().as_f64().unwrap();
+                assert!(
+                    slow >= 1.0 - 1e-9,
+                    "straggler sped {} up: {slow}",
+                    l.get("lib").unwrap().as_str().unwrap()
+                );
+            }
+            let robust = c.get("robust").unwrap();
+            assert!(robust.get("winner").unwrap().as_str().unwrap().contains('/'));
+            let p95 = robust.get("p95_s").unwrap().as_f64().unwrap();
+            let mean = robust.get("mean_s").unwrap().as_f64().unwrap();
+            assert!(p95 >= mean - 1e-12, "p95 {p95} below mean {mean}");
+            assert!(c.get("mean_s").is_none(), "wall-clock field leaked into the artifact");
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Seeded Monte-Carlo perturbation ensembles (DESIGN.md §12).
+//!
+//! A robust selection or fragility study needs a *distribution* over
+//! fault scenarios, not one hand-picked case. [`ensemble`] draws
+//! `scenarios` independent perturbation sets from an [`EnsembleCfg`]:
+//! per scenario, `degraded_links` distinct links scaled by a severity
+//! factor drawn uniformly from `severity`, plus (with probability
+//! `straggler_prob`) one straggler GPU. Windows are static
+//! (`[0, INFINITY)`) unless `window > 0`, in which case starts are
+//! uniform in `[0, window)` and lengths uniform in `duration` — the
+//! time-varying-bandwidth regime for workload runs.
+//!
+//! Everything derives from the seed through per-scenario
+//! [`crate::util::prng::Rng`] forks keyed by the scenario index, so an
+//! ensemble replays bit-identically (`tests/faults_properties.rs` pins
+//! this) and scenario k does not depend on how many scenarios follow it.
+
+use crate::topology::Topology;
+use crate::util::prng::Rng;
+
+use super::Perturbation;
+
+/// Parameters of a Monte-Carlo perturbation ensemble.
+#[derive(Clone, Copy, Debug)]
+pub struct EnsembleCfg {
+    /// Number of independent scenarios to draw.
+    pub scenarios: usize,
+    /// Master seed; every draw derives from it deterministically.
+    pub seed: u64,
+    /// Distinct degraded links per scenario.
+    pub degraded_links: usize,
+    /// Probability a scenario also has one straggler GPU.
+    pub straggler_prob: f64,
+    /// Severity range: capacity scale factors drawn uniformly from
+    /// `[severity.0, severity.1)` (lower = more severe).
+    pub severity: (f64, f64),
+    /// Start-time window: 0.0 = static faults from t=0; > 0 draws each
+    /// fault's start uniformly from `[0, window)`.
+    pub window: f64,
+    /// Fault length range (seconds), used only when `window > 0`.
+    pub duration: (f64, f64),
+}
+
+impl EnsembleCfg {
+    /// A small static-fault ensemble: 8 scenarios, one degraded link
+    /// each (severity 0.25..0.9), straggler in half of them — the
+    /// default behind `--robust` and the `agv faults` fragility study.
+    pub fn quick(seed: u64) -> EnsembleCfg {
+        EnsembleCfg {
+            scenarios: 8,
+            seed,
+            degraded_links: 1,
+            straggler_prob: 0.5,
+            severity: (0.25, 0.9),
+            window: 0.0,
+            duration: (0.0, 0.0),
+        }
+    }
+
+    /// `quick` with an explicit scenario count.
+    pub fn with_scenarios(mut self, scenarios: usize) -> EnsembleCfg {
+        self.scenarios = scenarios;
+        self
+    }
+}
+
+/// Draw the ensemble over a topology. Scenario `k` is a function of
+/// `(cfg.seed, k)` alone — deterministic and index-stable.
+pub fn ensemble(topo: &Topology, cfg: &EnsembleCfg) -> Vec<Vec<Perturbation>> {
+    assert!(cfg.scenarios >= 1, "ensemble needs at least one scenario");
+    assert!(
+        cfg.severity.0 > 0.0 && cfg.severity.1 >= cfg.severity.0,
+        "severity range must be positive and ordered, got {:?}",
+        cfg.severity
+    );
+    let links = topo.links.len() as u64;
+    let gpus = topo.num_gpus() as u64;
+    (0..cfg.scenarios)
+        .map(|k| {
+            // keyed directly by (seed, index): independent of scenario count
+            let mut rng = Rng::new(
+                cfg.seed ^ (k as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+            );
+            let mut perts = Vec::new();
+            let mut window = |rng: &mut Rng| -> (f64, f64) {
+                if cfg.window > 0.0 {
+                    let start = rng.gen_f64(0.0, cfg.window);
+                    let dur = if cfg.duration.1 > cfg.duration.0 {
+                        rng.gen_f64(cfg.duration.0, cfg.duration.1)
+                    } else {
+                        cfg.duration.0.max(0.0)
+                    };
+                    (start, dur)
+                } else {
+                    (0.0, f64::INFINITY)
+                }
+            };
+            let n_links = (cfg.degraded_links as u64).min(links) as usize;
+            let mut chosen: Vec<u64> = Vec::with_capacity(n_links);
+            while chosen.len() < n_links {
+                let l = rng.gen_range(links);
+                if !chosen.contains(&l) {
+                    chosen.push(l);
+                }
+            }
+            for l in chosen {
+                let factor = severity(&mut rng, cfg);
+                let (start, duration) = window(&mut rng);
+                perts.push(Perturbation::LinkScale { link: l as usize, factor, start, duration });
+            }
+            if cfg.straggler_prob > 0.0 && rng.next_f64() < cfg.straggler_prob {
+                let rank = rng.gen_range(gpus) as usize;
+                let factor = severity(&mut rng, cfg);
+                let (start, duration) = window(&mut rng);
+                perts.push(Perturbation::Straggler { rank, factor, start, duration });
+            }
+            perts
+        })
+        .collect()
+}
+
+fn severity(rng: &mut Rng, cfg: &EnsembleCfg) -> f64 {
+    if cfg.severity.1 > cfg.severity.0 {
+        rng.gen_f64(cfg.severity.0, cfg.severity.1)
+    } else {
+        cfg.severity.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perturb::validate;
+    use crate::topology::systems::SystemKind;
+
+    #[test]
+    fn ensembles_are_deterministic_and_valid() {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let cfg = EnsembleCfg::quick(17);
+            let a = ensemble(&topo, &cfg);
+            let b = ensemble(&topo, &cfg);
+            assert_eq!(a, b, "{}: same seed diverged", topo.name);
+            assert_eq!(a.len(), 8);
+            for scenario in &a {
+                assert!(!scenario.is_empty());
+                validate(&topo, scenario).unwrap();
+            }
+            let c = ensemble(&topo, &EnsembleCfg::quick(18));
+            assert_ne!(a, c, "{}: seed does not matter", topo.name);
+        }
+    }
+
+    #[test]
+    fn scenario_k_is_stable_under_count_changes() {
+        let topo = SystemKind::Dgx1.build();
+        let small = ensemble(&topo, &EnsembleCfg::quick(7).with_scenarios(3));
+        let large = ensemble(&topo, &EnsembleCfg::quick(7).with_scenarios(9));
+        assert_eq!(small[..], large[..3], "prefix changed with scenario count");
+    }
+
+    #[test]
+    fn time_varying_windows_land_in_range() {
+        let topo = SystemKind::Cluster.build();
+        let cfg = EnsembleCfg {
+            scenarios: 16,
+            seed: 5,
+            degraded_links: 2,
+            straggler_prob: 1.0,
+            severity: (0.3, 0.6),
+            window: 0.01,
+            duration: (0.001, 0.004),
+        };
+        let e = ensemble(&topo, &cfg);
+        let mut saw_straggler = false;
+        for scenario in &e {
+            assert_eq!(scenario.len(), 3, "2 links + 1 straggler");
+            for p in scenario {
+                let (start, dur) = p.window();
+                assert!((0.0..0.01).contains(&start));
+                assert!((0.001..0.004).contains(&dur));
+                if matches!(p, Perturbation::Straggler { .. }) {
+                    saw_straggler = true;
+                }
+            }
+        }
+        assert!(saw_straggler);
+    }
+}

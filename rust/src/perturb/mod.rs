@@ -1,0 +1,577 @@
+//! Fault & variability subsystem (DESIGN.md §12): degraded links,
+//! straggler GPUs, and time-varying bandwidth over the paper's systems.
+//!
+//! The paper benchmarks every collective on a pristine, idle machine;
+//! production fabrics are not pristine — NVLink/PCIe lanes degrade,
+//! GPUs straggle (clock throttling, ECC retirement), and InfiniBand
+//! bandwidth varies with cluster-wide load ("Monitoring Collective
+//! Communication Among GPUs", PAPERS.md). This module models those
+//! effects as **piecewise-constant capacity profiles** compiled onto
+//! the simulator's capacity-step substrate
+//! ([`crate::sim::Sim::capacity_event`]):
+//!
+//! - [`Perturbation`]: scale a link, drop a link to an absolute
+//!   bandwidth floor, or slow a whole GPU (every incident link), each
+//!   over an optional `[start, start+duration)` window;
+//! - [`apply`]: compose a perturbation set into per-link capacity
+//!   steps — overlapping scales multiply, floors clamp — and emit them
+//!   into a `Sim`;
+//! - [`ensemble`]: seeded Monte-Carlo scenario sets over severity /
+//!   duration / placement distributions, for robust selection
+//!   ([`crate::comm::select::AlgoSelector::select_robust`]) and the
+//!   `agv faults` fragility study;
+//! - [`perturbed_allgatherv`] / [`perturbed_candidate`]: one collective
+//!   on a degraded fabric, through the same *compose* entry points the
+//!   workload engine uses.
+//!
+//! The anchor contract, pinned by `tests/faults_differential.rs`: an
+//! **empty** perturbation set and a **zero-magnitude** one (scale 1.0,
+//! floor at/above base bandwidth, zero-length window) both produce
+//! results bit-identical to the unperturbed simulation, on both engine
+//! cores — capacity steps that would not change a link's capacity
+//! bit-for-bit are filtered before the run and never reach either
+//! engine. Every degraded number extrapolates from the exact models the
+//! paper experiments validated, not from a second implementation.
+
+pub mod bench;
+pub mod ensemble;
+
+pub use ensemble::{ensemble, EnsembleCfg};
+
+use std::collections::BTreeMap;
+
+use crate::anyhow;
+use crate::comm::{compose_allgatherv, CommResult, Library, Params};
+use crate::sim::Sim;
+use crate::topology::{LinkId, Topology};
+use crate::util::error::Result;
+
+/// One fault or variability effect on the fabric, active over
+/// `[start, start + duration)` (duration may be `f64::INFINITY` for a
+/// static degradation).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Perturbation {
+    /// Multiply one link's capacity (both directions) by `factor` —
+    /// a contended or degraded lane. `factor` must be positive and
+    /// finite; values above 1.0 model recovering/overprovisioned links.
+    LinkScale {
+        /// Target link.
+        link: LinkId,
+        /// Capacity multiplier (1.0 = no effect).
+        factor: f64,
+        /// Window start (virtual seconds).
+        start: f64,
+        /// Window length (virtual seconds; `INFINITY` = forever).
+        duration: f64,
+    },
+    /// Clamp one link's capacity to an absolute bandwidth floor in
+    /// bytes/s — e.g. an FDR lane renegotiated down, or a QoS cap. A
+    /// floor at or above the link's base bandwidth is a no-op.
+    LinkFloor {
+        /// Target link.
+        link: LinkId,
+        /// Absolute capacity ceiling the link is dropped to (bytes/s).
+        floor_bw: f64,
+        /// Window start (virtual seconds).
+        start: f64,
+        /// Window length (virtual seconds; `INFINITY` = forever).
+        duration: f64,
+    },
+    /// Straggler GPU: scale **every link incident to the GPU** by
+    /// `factor` — a throttled or oversubscribed device slows all its
+    /// lanes at once ([`Topology::gpu_links`]).
+    Straggler {
+        /// GPU rank (rank, not device id).
+        rank: usize,
+        /// Capacity multiplier on every incident link.
+        factor: f64,
+        /// Window start (virtual seconds).
+        start: f64,
+        /// Window length (virtual seconds; `INFINITY` = forever).
+        duration: f64,
+    },
+}
+
+impl Perturbation {
+    /// Static link scaling, active from t=0 forever.
+    pub fn scale(link: LinkId, factor: f64) -> Perturbation {
+        Perturbation::LinkScale { link, factor, start: 0.0, duration: f64::INFINITY }
+    }
+
+    /// Static link floor, active from t=0 forever.
+    pub fn floor(link: LinkId, floor_bw: f64) -> Perturbation {
+        Perturbation::LinkFloor { link, floor_bw, start: 0.0, duration: f64::INFINITY }
+    }
+
+    /// Static straggler GPU, active from t=0 forever.
+    pub fn straggler(rank: usize, factor: f64) -> Perturbation {
+        Perturbation::Straggler { rank, factor, start: 0.0, duration: f64::INFINITY }
+    }
+
+    /// The same perturbation restricted to `[start, start+duration)`.
+    pub fn during(mut self, new_start: f64, new_duration: f64) -> Perturbation {
+        match &mut self {
+            Perturbation::LinkScale { start, duration, .. }
+            | Perturbation::LinkFloor { start, duration, .. }
+            | Perturbation::Straggler { start, duration, .. } => {
+                *start = new_start;
+                *duration = new_duration;
+            }
+        }
+        self
+    }
+
+    /// (start, duration) window of this perturbation.
+    pub fn window(&self) -> (f64, f64) {
+        match *self {
+            Perturbation::LinkScale { start, duration, .. }
+            | Perturbation::LinkFloor { start, duration, .. }
+            | Perturbation::Straggler { start, duration, .. } => (start, duration),
+        }
+    }
+
+    /// Short report label ("link3 x0.50", "gpu2 straggler x0.25", ...).
+    pub fn label(&self) -> String {
+        match *self {
+            Perturbation::LinkScale { link, factor, .. } => format!("link{link} x{factor:.2}"),
+            Perturbation::LinkFloor { link, floor_bw, .. } => {
+                format!("link{link} floor {:.1}GB/s", floor_bw / 1e9)
+            }
+            Perturbation::Straggler { rank, factor, .. } => {
+                format!("gpu{rank} straggler x{factor:.2}")
+            }
+        }
+    }
+}
+
+/// Check a perturbation set against a topology; every violation is a
+/// clean [`crate::util::error::Error`] (the CLI and workload specs
+/// surface these instead of panicking).
+pub fn validate(topo: &Topology, perts: &[Perturbation]) -> Result<()> {
+    for (i, p) in perts.iter().enumerate() {
+        let (start, duration) = p.window();
+        if !start.is_finite() || start < 0.0 {
+            return Err(anyhow!("perturbation {i}: start must be finite and >= 0, got {start}"));
+        }
+        if duration.is_nan() || duration < 0.0 {
+            return Err(anyhow!("perturbation {i}: duration must be >= 0, got {duration}"));
+        }
+        match *p {
+            Perturbation::LinkScale { link, factor, .. } => {
+                if link >= topo.links.len() {
+                    return Err(anyhow!(
+                        "perturbation {i}: link {link} out of range (`{}` has {} links)",
+                        topo.name,
+                        topo.links.len()
+                    ));
+                }
+                check_factor(i, "scale factor", factor)?;
+            }
+            Perturbation::LinkFloor { link, floor_bw, .. } => {
+                if link >= topo.links.len() {
+                    return Err(anyhow!(
+                        "perturbation {i}: link {link} out of range (`{}` has {} links)",
+                        topo.name,
+                        topo.links.len()
+                    ));
+                }
+                if !floor_bw.is_finite() || floor_bw <= 0.0 {
+                    return Err(anyhow!(
+                        "perturbation {i}: floor bandwidth must be finite and > 0, got {floor_bw}"
+                    ));
+                }
+            }
+            Perturbation::Straggler { rank, factor, .. } => {
+                if rank >= topo.num_gpus() {
+                    return Err(anyhow!(
+                        "perturbation {i}: GPU rank {rank} out of range (`{}` has {} GPUs)",
+                        topo.name,
+                        topo.num_gpus()
+                    ));
+                }
+                check_factor(i, "straggler factor", factor)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Scale factors outside `[1e-6, 1e6]` are rejected up front: they
+/// model nothing physical, and extreme stacked products could push the
+/// composed capacity outside f64's positive range (the defensive clamp
+/// in [`apply`] is the backstop, this is the clean error).
+fn check_factor(i: usize, what: &str, factor: f64) -> Result<()> {
+    if !factor.is_finite() || !(1e-6..=1e6).contains(&factor) {
+        return Err(anyhow!(
+            "perturbation {i}: {what} must be within [1e-6, 1e6], got {factor}"
+        ));
+    }
+    Ok(())
+}
+
+/// A link-local effect over a window (straggler expanded to its links).
+#[derive(Clone, Copy, Debug)]
+enum Effect {
+    Scale(f64),
+    Floor(f64),
+}
+
+/// Compile a perturbation set into per-link **capacity steps** and emit
+/// them into `sim`. Overlapping effects on one link compose at every
+/// breakpoint: the effective capacity is `base x prod(active scales)`,
+/// clamped by `min` with every active floor — scales all apply before
+/// any floor, so the result does not depend on how scales and floors
+/// interleave in the listing (scales multiply in listing order, which
+/// pins the fp rounding deterministically). A step that would leave the
+/// capacity bit-identical is filtered by the engine's timeline builder,
+/// so zero-magnitude perturbations emit nothing — the
+/// differential-oracle contract (module docs).
+///
+/// Panics on an invalid set; run [`validate`] first for a clean error.
+pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
+    let topo = sim.topology();
+    // per-link list of (start, end, effect), in perturbation order
+    let mut by_link: BTreeMap<LinkId, Vec<(f64, f64, Effect)>> = BTreeMap::new();
+    for p in perts {
+        let (start, duration) = p.window();
+        if duration <= 0.0 {
+            continue; // empty window: no effect at any instant
+        }
+        let end = start + duration;
+        match *p {
+            Perturbation::LinkScale { link, factor, .. } => {
+                by_link.entry(link).or_default().push((start, end, Effect::Scale(factor)));
+            }
+            Perturbation::LinkFloor { link, floor_bw, .. } => {
+                by_link.entry(link).or_default().push((start, end, Effect::Floor(floor_bw)));
+            }
+            Perturbation::Straggler { rank, factor, .. } => {
+                for link in topo.gpu_links(rank) {
+                    by_link
+                        .entry(link)
+                        .or_default()
+                        .push((start, end, Effect::Scale(factor)));
+                }
+            }
+        }
+    }
+    for (link, effects) in by_link {
+        let base = topo.links[link].class.bandwidth();
+        // breakpoints: every window start and every finite window end
+        let mut ts: Vec<f64> = effects
+            .iter()
+            .flat_map(|&(s, e, _)| [s, e])
+            .filter(|t| t.is_finite())
+            .collect();
+        ts.sort_by(f64::total_cmp);
+        ts.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        for t in ts {
+            // two passes — all active scales multiply first, then all
+            // active floors clamp — so the effective capacity is
+            // independent of the order perturbations were listed in
+            let mut cap = base;
+            for &(s, e, eff) in &effects {
+                if s <= t && t < e {
+                    if let Effect::Scale(f) = eff {
+                        cap *= f;
+                    }
+                }
+            }
+            for &(s, e, eff) in &effects {
+                if s <= t && t < e {
+                    if let Effect::Floor(bw) = eff {
+                        cap = cap.min(bw);
+                    }
+                }
+            }
+            // backstop for pathological stacked products that escape
+            // the validate() factor bounds: keep the step inside f64's
+            // positive range instead of tripping the engine's assert
+            // (identity for every physically meaningful capacity)
+            sim.capacity_event(link, t, cap.clamp(f64::MIN_POSITIVE, f64::MAX));
+        }
+    }
+}
+
+/// Run one library's Allgatherv on a **perturbed** fabric in a fresh
+/// simulation: the identical compose path `run_allgatherv` uses (same
+/// schedule selection, same transports), plus the perturbation set's
+/// capacity steps. With an empty or zero-magnitude set this reproduces
+/// [`crate::comm::run_allgatherv`] bit-for-bit
+/// (`tests/faults_differential.rs`).
+pub fn perturbed_allgatherv(
+    topo: &Topology,
+    lib: Library,
+    params: Params,
+    counts: &[u64],
+    perts: &[Perturbation],
+) -> CommResult {
+    let mut sim = Sim::new(topo);
+    let done = compose_allgatherv(&mut sim, lib, params, counts, None);
+    apply(&mut sim, perts);
+    let res = sim.run();
+    CommResult { time: res.finish(done), flows: res.flows }
+}
+
+/// [`perturbed_allgatherv`] for a specific (library, algorithm)
+/// candidate — the robust selector's scenario evaluator. `None` iff the
+/// candidate is inapplicable, exactly as for
+/// [`crate::comm::select::simulate`] (which this reproduces bit-for-bit
+/// when `perts` is empty).
+pub fn perturbed_candidate(
+    topo: &Topology,
+    params: Params,
+    cand: crate::comm::select::Candidate,
+    counts: &[u64],
+    perts: &[Perturbation],
+) -> Option<CommResult> {
+    let mut sim = Sim::new(topo);
+    let done = crate::comm::select::compose(&mut sim, params, cand, counts, None)?;
+    apply(&mut sim, perts);
+    let res = sim.run();
+    Some(CommResult { time: res.finish(done), flows: res.flows })
+}
+
+/// Parse a comma-separated `--perturb` specification. Grammar, one
+/// perturbation per item (start/duration in seconds, default `0` /
+/// forever; bandwidths accept `K`/`M`/`G` suffixes via
+/// [`crate::util::cli::parse_bytes`]):
+///
+/// ```text
+/// link:<id>:<factor>[:<start>[:<duration>]]
+/// floor:<id>:<bytes-per-sec>[:<start>[:<duration>]]
+/// straggler:<rank>:<factor>[:<start>[:<duration>]]
+/// ```
+///
+/// e.g. `--perturb straggler:0:0.5,floor:2:1GB:0.001:0.01`. Link ids
+/// are per-topology; `agv faults --system S --list-links` prints them.
+pub fn parse_list(spec: &str) -> Result<Vec<Perturbation>> {
+    let mut out = Vec::new();
+    for item in spec.split(',').filter(|s| !s.is_empty()) {
+        let parts: Vec<&str> = item.split(':').collect();
+        if parts.len() < 3 || parts.len() > 5 {
+            return Err(anyhow!(
+                "perturbation `{item}`: expected kind:target:magnitude[:start[:duration]]"
+            ));
+        }
+        let target: usize = parts[1]
+            .parse()
+            .map_err(|_| anyhow!("perturbation `{item}`: bad target `{}`", parts[1]))?;
+        let start: f64 = match parts.get(3) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("perturbation `{item}`: bad start `{s}`"))?,
+            None => 0.0,
+        };
+        let duration: f64 = match parts.get(4) {
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("perturbation `{item}`: bad duration `{s}`"))?,
+            None => f64::INFINITY,
+        };
+        let pert = match parts[0] {
+            "link" => {
+                let factor: f64 = parts[2]
+                    .parse()
+                    .map_err(|_| anyhow!("perturbation `{item}`: bad factor `{}`", parts[2]))?;
+                Perturbation::LinkScale { link: target, factor, start, duration }
+            }
+            "floor" => {
+                let floor_bw = crate::util::cli::parse_bytes(parts[2])
+                    .ok_or_else(|| anyhow!("perturbation `{item}`: bad bandwidth `{}`", parts[2]))?
+                    as f64;
+                Perturbation::LinkFloor { link: target, floor_bw, start, duration }
+            }
+            "straggler" => {
+                let factor: f64 = parts[2]
+                    .parse()
+                    .map_err(|_| anyhow!("perturbation `{item}`: bad factor `{}`", parts[2]))?;
+                Perturbation::Straggler { rank: target, factor, start, duration }
+            }
+            other => {
+                return Err(anyhow!(
+                    "perturbation `{item}`: unknown kind `{other}` (link|floor|straggler)"
+                ))
+            }
+        };
+        out.push(pert);
+    }
+    if out.is_empty() {
+        return Err(anyhow!("--perturb: empty specification"));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_allgatherv;
+    use crate::topology::systems::SystemKind;
+    use crate::topology::LinkClass;
+
+    #[test]
+    fn constructors_and_windows() {
+        let p = Perturbation::scale(3, 0.5);
+        assert_eq!(p.window(), (0.0, f64::INFINITY));
+        let q = p.during(1.0, 2.0);
+        assert_eq!(q.window(), (1.0, 2.0));
+        assert!(Perturbation::straggler(0, 0.25).label().contains("straggler"));
+        assert!(Perturbation::floor(2, 1.0e9).label().contains("floor"));
+    }
+
+    #[test]
+    fn validate_rejects_bad_sets() {
+        let t = SystemKind::Dgx1.build();
+        assert!(validate(&t, &[Perturbation::scale(0, 0.5)]).is_ok());
+        assert!(validate(&t, &[Perturbation::scale(999, 0.5)]).is_err(), "link range");
+        assert!(validate(&t, &[Perturbation::scale(0, 0.0)]).is_err(), "zero factor");
+        assert!(validate(&t, &[Perturbation::scale(0, f64::NAN)]).is_err(), "nan factor");
+        assert!(validate(&t, &[Perturbation::straggler(99, 0.5)]).is_err(), "rank range");
+        assert!(validate(&t, &[Perturbation::floor(0, -1.0)]).is_err(), "negative floor");
+        assert!(
+            validate(&t, &[Perturbation::scale(0, 0.5).during(-1.0, 1.0)]).is_err(),
+            "negative start"
+        );
+        assert!(
+            validate(&t, &[Perturbation::scale(0, 0.5).during(0.0, f64::NAN)]).is_err(),
+            "nan duration"
+        );
+    }
+
+    #[test]
+    fn overlapping_scales_multiply_and_floors_clamp() {
+        // two overlapping windows on one NVLink: [0,2) x0.5 and [1,3) x0.5,
+        // plus a floor at 2 GB/s over [1.5, 2.5)
+        let t = SystemKind::Dgx1.build();
+        let link = t.gpu_links(0)[0];
+        let base = t.links[link].class.bandwidth();
+        let perts = [
+            Perturbation::scale(link, 0.5).during(0.0, 2.0),
+            Perturbation::scale(link, 0.5).during(1.0, 2.0),
+            Perturbation::floor(link, 2.0e9).during(1.5, 1.0),
+        ];
+        let mut sim = Sim::new(&t);
+        apply(&mut sim, &perts);
+        // breakpoints 0, 1, 1.5, 2, 2.5, 3 -> capacities
+        // .5B, .25B, min(.25B, 2e9), min(.5B, 2e9), .5B, B
+        let expect = [
+            (0.0, 0.5 * base),
+            (1.0, 0.25 * base),
+            (1.5, (0.25 * base).min(2.0e9)),
+            (2.0, (0.5 * base).min(2.0e9)),
+            (2.5, 0.5 * base),
+            (3.0, base),
+        ];
+        assert_eq!(sim.cap_events.len(), expect.len());
+        for (ev, (t_e, cap_e)) in sim.cap_events.iter().zip(expect) {
+            assert_eq!(ev.link, link);
+            assert_eq!(ev.time.to_bits(), t_e.to_bits());
+            assert_eq!(ev.capacity.to_bits(), cap_e.to_bits());
+        }
+        // composition is listing-order independent: scales apply before
+        // floors regardless of how the set was written (floor-first
+        // would otherwise scale the floored value)
+        let mut reordered = Sim::new(&t);
+        apply(&mut reordered, &[perts[2], perts[1], perts[0]]);
+        assert_eq!(sim.cap_events, reordered.cap_events);
+    }
+
+    #[test]
+    fn straggler_touches_every_incident_link() {
+        let t = SystemKind::CsStorm.build();
+        let mut sim = Sim::new(&t);
+        apply(&mut sim, &[Perturbation::straggler(3, 0.5)]);
+        let links: Vec<_> = sim.cap_events.iter().map(|e| e.link).collect();
+        assert_eq!(links, t.gpu_links(3));
+    }
+
+    #[test]
+    fn empty_window_emits_nothing() {
+        let t = SystemKind::Dgx1.build();
+        let mut sim = Sim::new(&t);
+        apply(&mut sim, &[Perturbation::scale(0, 0.25).during(1.0, 0.0)]);
+        assert!(sim.cap_events.is_empty());
+    }
+
+    #[test]
+    fn perturbed_allgatherv_with_empty_set_is_bit_exact() {
+        // the unit-level anchor of tests/faults_differential.rs
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![3u64 << 20, 64 << 10, 0, 9 << 20];
+        for lib in Library::all() {
+            let base = run_allgatherv(lib, &t, &counts);
+            let none = perturbed_allgatherv(&t, lib, Params::default(), &counts, &[]);
+            assert_eq!(base.time.to_bits(), none.time.to_bits(), "{}", lib.name());
+            assert_eq!(base.flows, none.flows);
+        }
+    }
+
+    #[test]
+    fn degrading_the_nccl_ring_slows_nccl() {
+        // halve every NVLink on the DGX-1: NCCL's all-NVLink ring must
+        // slow down materially (roughly 2x at bandwidth-bound sizes)
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![16u64 << 20; 8];
+        let perts: Vec<Perturbation> = (0..t.links.len())
+            .filter(|&l| t.links[l].class.is_nvlink())
+            .map(|l| Perturbation::scale(l, 0.5))
+            .collect();
+        let healthy = run_allgatherv(Library::Nccl, &t, &counts);
+        let degraded =
+            perturbed_allgatherv(&t, Library::Nccl, Params::default(), &counts, &perts);
+        let slow = degraded.time / healthy.time;
+        assert!(slow > 1.5, "halving NVLink left NCCL at {slow}x");
+        assert_eq!(degraded.flows, healthy.flows, "perturbation must not change the DAG");
+    }
+
+    #[test]
+    fn parse_list_roundtrip_and_rejections() {
+        let ps = parse_list("link:3:0.5,straggler:0:0.25:0.001,floor:2:1GB:0:0.01").unwrap();
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps[0], Perturbation::scale(3, 0.5));
+        assert_eq!(
+            ps[1],
+            Perturbation::Straggler { rank: 0, factor: 0.25, start: 0.001, duration: f64::INFINITY }
+        );
+        match ps[2] {
+            Perturbation::LinkFloor { link, floor_bw, start, duration } => {
+                assert_eq!(link, 2);
+                assert_eq!(floor_bw, (1u64 << 30) as f64);
+                assert_eq!(start, 0.0);
+                assert_eq!(duration, 0.01);
+            }
+            _ => panic!("wrong kind"),
+        }
+        for bad in ["", "link:3", "warp:3:0.5", "link:x:0.5", "link:3:abc", "link:3:0.5:z"] {
+            assert!(parse_list(bad).is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn floor_on_ib_uplink_is_the_cluster_bottleneck() {
+        // drop one node's IB leaf link to 1 GB/s: every library's 8-rank
+        // collective slows (all schedules move bytes through that node)
+        let t = SystemKind::Cluster.build();
+        let ib = (0..t.links.len())
+            .find(|&l| t.links[l].class == LinkClass::InfinibandFdr)
+            .expect("cluster has IB links");
+        let counts = vec![4u64 << 20; 8];
+        for lib in Library::all() {
+            let healthy = run_allgatherv(lib, &t, &counts);
+            let degraded = perturbed_allgatherv(
+                &t,
+                lib,
+                Params::default(),
+                &counts,
+                &[Perturbation::floor(ib, 1.0e9)],
+            );
+            assert!(
+                degraded.time > healthy.time,
+                "{}: degraded {} !> healthy {}",
+                lib.name(),
+                degraded.time,
+                healthy.time
+            );
+        }
+    }
+}

@@ -1,0 +1,453 @@
+//! Fault & variability study: each paper system healthy vs degraded,
+//! schedule fragility ranking, and robust-vs-fresh selector verdicts
+//! (DESIGN.md §12). Rendered by `agv faults`.
+
+use crate::comm::select::{robust_argmin, Algo, AlgoSelector, RobustObjective};
+use crate::comm::{CommLibrary, Library, Params};
+use crate::perturb::{ensemble, perturbed_allgatherv, EnsembleCfg, Perturbation};
+use crate::topology::systems::{multi_dgx, SystemKind};
+use crate::topology::{LinkClass, Topology};
+use crate::util::fmt_time;
+use crate::util::prng::Rng;
+use crate::util::prop::counts as prop_counts;
+
+/// One (scenario, library) cell of the healthy-vs-degraded table.
+#[derive(Clone, Debug)]
+pub struct DegradedRow {
+    /// Scenario label ("straggler gpu0 x0.50", ...).
+    pub scenario: String,
+    /// Library measured.
+    pub lib: Library,
+    /// Collective time on the pristine fabric (seconds).
+    pub healthy: f64,
+    /// Collective time under the scenario (seconds).
+    pub degraded: f64,
+}
+
+impl DegradedRow {
+    /// degraded / healthy.
+    pub fn slowdown(&self) -> f64 {
+        self.degraded / self.healthy
+    }
+}
+
+/// One system's healthy-vs-degraded section.
+#[derive(Clone, Debug)]
+pub struct SystemFaults {
+    /// System name.
+    pub system: String,
+    /// Ranks of the measured collective.
+    pub gpus: usize,
+    /// Scenario × library rows, scenario-major.
+    pub rows: Vec<DegradedRow>,
+}
+
+/// One candidate's fragility under the inter-node degradation ensemble.
+#[derive(Clone, Debug)]
+pub struct FragilityRow {
+    /// Candidate label ("MPI-CUDA/hier-ring", ...).
+    pub label: String,
+    /// Is this one of the two-level schedules?
+    pub hierarchical: bool,
+    /// Healthy time (seconds).
+    pub healthy: f64,
+    /// Mean makespan over the degradation scenarios (seconds).
+    pub mean_degraded: f64,
+    /// Worst-scenario makespan (seconds).
+    pub worst_degraded: f64,
+}
+
+impl FragilityRow {
+    /// mean degraded / healthy — the ranking key (higher = more
+    /// fragile: the schedule loses more of its healthy performance).
+    pub fn fragility(&self) -> f64 {
+        self.mean_degraded / self.healthy
+    }
+}
+
+/// Robust-vs-fresh verdict on one system.
+#[derive(Clone, Debug)]
+pub struct RobustRow {
+    /// System name.
+    pub system: String,
+    /// Fresh (healthy-fabric) winner label.
+    pub fresh: String,
+    /// Fresh winner's healthy time (seconds).
+    pub fresh_time: f64,
+    /// Mean-objective robust winner label.
+    pub robust_mean: String,
+    /// Mean-objective winner's ensemble mean (seconds).
+    pub mean: f64,
+    /// P95-objective robust winner label.
+    pub robust_p95: String,
+    /// P95-objective winner's ensemble p95 (seconds).
+    pub p95: f64,
+}
+
+/// The full study.
+#[derive(Clone, Debug)]
+pub struct FaultsReport {
+    /// Healthy-vs-degraded sections, one per paper system.
+    pub sections: Vec<SystemFaults>,
+    /// Fragility ranking on the multi-node topology, most fragile
+    /// first.
+    pub fragility: Vec<FragilityRow>,
+    /// Single-lane scenarios behind the fragility ranking.
+    pub fragility_scenarios: usize,
+    /// Robust-vs-fresh verdicts, one per paper system.
+    pub robust: Vec<RobustRow>,
+    /// Monte-Carlo scenarios behind each robust verdict.
+    pub robust_scenarios: usize,
+    /// Seed behind the ensembles and count vectors.
+    pub seed: u64,
+}
+
+/// The canonical degradation scenarios of a system: a straggler GPU, a
+/// degraded PCIe lane under GPU 0, and (where the fabric has one) an
+/// InfiniBand leaf floored at 1 GB/s.
+pub fn canonical_scenarios(topo: &Topology) -> Vec<(String, Vec<Perturbation>)> {
+    let mut out = vec![(
+        "straggler gpu0 x0.50".to_string(),
+        vec![Perturbation::straggler(0, 0.5)],
+    )];
+    if let Some(&pcie) = topo
+        .gpu_links(0)
+        .iter()
+        .find(|&&l| topo.links[l].class == LinkClass::PcieGen3x16)
+    {
+        out.push((
+            format!("pcie link{pcie} x0.50"),
+            vec![Perturbation::scale(pcie, 0.5)],
+        ));
+    }
+    if let Some(ib) = (0..topo.links.len())
+        .find(|&l| topo.links[l].class == LinkClass::InfinibandFdr)
+    {
+        out.push((
+            format!("ib link{ib} floor 1GB/s"),
+            vec![Perturbation::floor(ib, 1.0e9)],
+        ));
+    }
+    out
+}
+
+fn system_section(kind: SystemKind, params: Params) -> SystemFaults {
+    let topo = kind.build();
+    let gpus = topo.num_gpus().min(8);
+    let cv = vec![4u64 << 20; gpus];
+    // one healthy baseline per library, shared across every scenario —
+    // under the SAME params as the degraded runs, so the slowdown
+    // column never mixes two protocol models
+    let healthy: Vec<f64> = Library::all()
+        .into_iter()
+        .map(|lib| lib.build(params).allgatherv(&topo, &cv).time)
+        .collect();
+    let mut rows = Vec::new();
+    for (scenario, perts) in canonical_scenarios(&topo) {
+        for (li, lib) in Library::all().into_iter().enumerate() {
+            let degraded = perturbed_allgatherv(&topo, lib, params, &cv, &perts).time;
+            rows.push(DegradedRow {
+                scenario: scenario.clone(),
+                lib,
+                healthy: healthy[li],
+                degraded,
+            });
+        }
+    }
+    SystemFaults { system: topo.name.clone(), gpus, rows }
+}
+
+/// The fragility ensemble on the multi-node topology: every InfiniBand
+/// leaf and the first four NVLinks, each scaled to 0.4 in its own
+/// scenario — the single-degraded-lane regime the flat and hierarchical
+/// schedules weight differently.
+fn fragility_scenarios(topo: &Topology) -> Vec<Vec<Perturbation>> {
+    let ib: Vec<usize> = (0..topo.links.len())
+        .filter(|&l| topo.links[l].class == LinkClass::InfinibandFdr)
+        .collect();
+    let nv: Vec<usize> = (0..topo.links.len())
+        .filter(|&l| topo.links[l].class == LinkClass::NvLink)
+        .take(4)
+        .collect();
+    ib.into_iter()
+        .chain(nv)
+        .map(|l| vec![Perturbation::scale(l, 0.4)])
+        .collect()
+}
+
+fn fragility_ranking(params: Params) -> Vec<FragilityRow> {
+    let topo = multi_dgx(2);
+    let p = 16usize;
+    let cv = vec![2u64 << 20; p];
+    let scenarios = fragility_scenarios(&topo);
+    let sel = AlgoSelector::new(params);
+    let evals = sel.evaluate_robust(&topo, &cv, &scenarios);
+    // the healthy baseline comes from each eval's OWN candidate — no
+    // positional pairing against a separately-enumerated list
+    let mut rows: Vec<FragilityRow> = evals
+        .iter()
+        .map(|(cand, times)| FragilityRow {
+            label: cand.label(),
+            hierarchical: matches!(
+                cand.algo,
+                Algo::HierarchicalRing | Algo::HierarchicalBruck
+            ),
+            healthy: crate::comm::select::simulate(&topo, params, *cand, &cv)
+                .expect("an evaluated candidate applies on its own topology")
+                .time,
+            mean_degraded: RobustObjective::Mean.aggregate(times),
+            worst_degraded: times.iter().cloned().fold(0.0, f64::max),
+        })
+        .collect();
+    rows.sort_by(|a, b| b.fragility().total_cmp(&a.fragility()));
+    rows
+}
+
+fn robust_rows(params: Params, seed: u64) -> Vec<RobustRow> {
+    let jobs: Vec<_> = SystemKind::all()
+        .into_iter()
+        .map(|kind| move || {
+            let topo = kind.build();
+            let p = topo.num_gpus().min(8);
+            // a skewed irregular vector, deterministic in the seed
+            let mut rng = Rng::new(seed ^ 0xFA01);
+            let cv = prop_counts::skewed(&mut rng, p, 16 << 20);
+            let ens = ensemble(&topo, &EnsembleCfg::quick(seed));
+            let sel = AlgoSelector::new(params);
+            let fresh = sel.select_fresh(&topo, &cv);
+            // one candidate x scenario grid, aggregated under both
+            // objectives through the selector's own argmin
+            let evals = sel.evaluate_robust(&topo, &cv, &ens);
+            let (mc, mean, _) = robust_argmin(&evals, RobustObjective::Mean);
+            let (pc, p95, _) = robust_argmin(&evals, RobustObjective::P95);
+            let (robust_mean, robust_p95) = (mc.label(), pc.label());
+            RobustRow {
+                system: topo.name.clone(),
+                fresh: fresh.candidate.label(),
+                fresh_time: fresh.time,
+                robust_mean,
+                mean,
+                robust_p95,
+                p95,
+            }
+        })
+        .collect();
+    crate::util::pool::parallel_map(jobs)
+}
+
+/// Run the full study. The per-system sections and robust verdicts fan
+/// out over the bounded worker pool; results come back in
+/// deterministic order (the fragility ranking is one indivisible
+/// candidate-grid evaluation and runs on the caller).
+pub fn study(params: Params, seed: u64) -> FaultsReport {
+    let section_jobs: Vec<_> = SystemKind::all()
+        .into_iter()
+        .map(|kind| move || system_section(kind, params))
+        .collect();
+    let sections = crate::util::pool::parallel_map(section_jobs);
+    let robust = robust_rows(params, seed);
+    FaultsReport {
+        sections,
+        fragility: fragility_ranking(params),
+        fragility_scenarios: fragility_scenarios(&multi_dgx(2)).len(),
+        robust,
+        robust_scenarios: EnsembleCfg::quick(seed).scenarios,
+        seed,
+    }
+}
+
+/// Render the study as text tables.
+pub fn render(r: &FaultsReport) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "FAULTS — degraded links, stragglers, and robust selection (healthy vs degraded)\n",
+    );
+    for s in &r.sections {
+        out.push_str(&format!(
+            "\n== {} @ {} GPUs, 4MB/rank ==\n{:<22} {:<10} {:>12} {:>12} {:>9}\n",
+            s.system, s.gpus, "scenario", "lib", "healthy", "degraded", "slowdown"
+        ));
+        for row in &s.rows {
+            out.push_str(&format!(
+                "{:<22} {:<10} {:>12} {:>12} {:>8.2}x\n",
+                row.scenario,
+                row.lib.name(),
+                fmt_time(row.healthy),
+                fmt_time(row.degraded),
+                row.slowdown(),
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\n== fragility ranking — multi-dgx-2 @ 16 GPUs, 2MB/rank, {} single-lane scenarios ==\n\
+         {:<24} {:>6} {:>12} {:>12} {:>12} {:>10}\n",
+        r.fragility_scenarios,
+        "candidate",
+        "level",
+        "healthy",
+        "mean-deg",
+        "worst-deg",
+        "fragility"
+    ));
+    for f in &r.fragility {
+        out.push_str(&format!(
+            "{:<24} {:>6} {:>12} {:>12} {:>12} {:>9.2}x\n",
+            f.label,
+            if f.hierarchical { "hier" } else { "flat" },
+            fmt_time(f.healthy),
+            fmt_time(f.mean_degraded),
+            fmt_time(f.worst_degraded),
+            f.fragility(),
+        ));
+    }
+    out.push_str(&format!(
+        "\n== robust vs fresh selection (ensemble seed {}, {} scenarios) ==\n\
+         {:<12} {:<22} {:<22} {:<22}\n",
+        r.seed, r.robust_scenarios, "system", "fresh (healthy)", "robust mean", "robust p95"
+    ));
+    for row in &r.robust {
+        out.push_str(&format!(
+            "{:<12} {:<22} {:<22} {:<22}\n",
+            row.system,
+            format!("{} {}", row.fresh, fmt_time(row.fresh_time)),
+            format!("{} {}", row.robust_mean, fmt_time(row.mean)),
+            format!("{} {}", row.robust_p95, fmt_time(row.p95)),
+        ));
+    }
+    let flips = r
+        .robust
+        .iter()
+        .filter(|row| row.fresh != row.robust_mean || row.fresh != row.robust_p95)
+        .count();
+    out.push_str(&format!(
+        "\nfaults verdict: robust selection flips the healthy-fabric winner on {flips}/{} systems\n",
+        r.robust.len()
+    ));
+    out
+}
+
+/// CSV form of the healthy-vs-degraded table (one row per scenario ×
+/// library × system cell).
+pub fn csv(r: &FaultsReport) -> String {
+    let mut out = String::from("system,gpus,scenario,lib,healthy_s,degraded_s,slowdown\n");
+    for s in &r.sections {
+        for row in &s.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{:.9},{:.9},{:.6}\n",
+                s.system,
+                s.gpus,
+                row.scenario,
+                row.lib.name(),
+                row.healthy,
+                row.degraded,
+                row.slowdown(),
+            ));
+        }
+    }
+    out
+}
+
+/// Link table of a system (`agv faults --list-links`): the id column is
+/// what `--perturb link:<id>:...` and the fault timelines refer to.
+pub fn links_table(topo: &Topology) -> String {
+    let mut out = format!(
+        "links of {} ({} links; ids are the --perturb targets)\n{:>4} {:<18} {:<18} {:<14} {:>9}\n",
+        topo.name,
+        topo.links.len(),
+        "id",
+        "a",
+        "b",
+        "class",
+        "GB/s"
+    );
+    for (id, link) in topo.links.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>4} {:<18} {:<18} {:<14} {:>9.1}\n",
+            id,
+            topo.devices[link.a].name,
+            topo.devices[link.b].name,
+            format!("{:?}", link.class),
+            link.class.bandwidth() / 1e9,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn study_covers_systems_fragility_and_robust() {
+        let r = study(Params::default(), 42);
+        assert_eq!(r.sections.len(), 3);
+        // cluster has the IB scenario, single-node systems do not
+        let cluster = &r.sections[0];
+        assert!(cluster.rows.iter().any(|row| row.scenario.contains("ib ")));
+        assert!(r.sections[1..]
+            .iter()
+            .all(|s| s.rows.iter().all(|row| !row.scenario.contains("ib "))));
+        for s in &r.sections {
+            assert!(!s.rows.is_empty());
+            for row in &s.rows {
+                // link-weakening monotonicity: degradation never speeds
+                // a fixed schedule up (calibrated in faults_properties)
+                assert!(
+                    row.slowdown() >= 1.0 - 1e-9,
+                    "{}/{}/{}: slowdown {}",
+                    s.system,
+                    row.scenario,
+                    row.lib.name(),
+                    row.slowdown()
+                );
+            }
+        }
+        // the 1 GB/s IB floor throttles every library hard (Python
+        // calibration: 3.5x-4.1x)
+        for row in cluster.rows.iter().filter(|r| r.scenario.contains("ib ")) {
+            assert!(
+                row.slowdown() > 2.0,
+                "{}: IB floor only {}x",
+                row.lib.name(),
+                row.slowdown()
+            );
+        }
+        // fragility covers flat AND hierarchical candidates, ranked
+        assert!(r.fragility.iter().any(|f| f.hierarchical));
+        assert!(r.fragility.iter().any(|f| !f.hierarchical));
+        for w in r.fragility.windows(2) {
+            assert!(w[0].fragility() >= w[1].fragility(), "ranking not sorted");
+        }
+        for f in &r.fragility {
+            assert!(f.worst_degraded >= f.mean_degraded - 1e-12);
+            assert!(f.fragility() >= 1.0 - 1e-9, "{}: {}", f.label, f.fragility());
+        }
+        assert_eq!(r.robust.len(), 3);
+        let text = render(&r);
+        for kind in SystemKind::all() {
+            assert!(text.contains(kind.name()), "{} missing:\n{text}", kind.name());
+        }
+        assert!(text.contains("fragility ranking"));
+        assert!(text.contains("robust vs fresh"));
+        let c = csv(&r);
+        assert!(c.starts_with("system,"));
+        assert_eq!(c.lines().count(), 1 + r.sections.iter().map(|s| s.rows.len()).sum::<usize>());
+    }
+
+    #[test]
+    fn study_is_deterministic() {
+        let a = study(Params::default(), 7);
+        let b = study(Params::default(), 7);
+        assert_eq!(render(&a), render(&b));
+        assert_eq!(csv(&a), csv(&b));
+    }
+
+    #[test]
+    fn links_table_lists_every_link() {
+        let topo = SystemKind::Dgx1.build();
+        let t = links_table(&topo);
+        assert_eq!(t.lines().count(), 2 + topo.links.len());
+        assert!(t.contains("NvLink"));
+        assert!(t.contains("--perturb"));
+    }
+}

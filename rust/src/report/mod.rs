@@ -7,6 +7,7 @@
 //! independent pure simulation.
 
 pub mod auto;
+pub mod faults;
 pub mod fig2;
 pub mod fig3;
 pub mod findings;

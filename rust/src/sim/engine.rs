@@ -26,6 +26,16 @@
 //!    linkdirs it occupies alone takes the spare capacity without
 //!    disturbing anyone. Serialized chains — the common shape of
 //!    staged/pipelined transports — never trigger a full refill.
+//!
+//! Link capacities are **piecewise-constant in time** (DESIGN.md §12):
+//! [`Sim::capacity_event`] schedules steps that rewrite a link's
+//! per-direction capacity at an instant. A step on a *loaded* linkdir
+//! triggers the same incremental refill a flow start/finish does (lazy
+//! settlement at the change keeps byte conservation exact across
+//! steps); a step on an idle linkdir just updates `caps`/`spare` and
+//! costs zero refills. Steps that would not change the capacity
+//! bit-for-bit are filtered out before the run ([`capacity_timeline`]),
+//! which is what makes zero-magnitude perturbations bit-exact no-ops.
 
 use std::cell::Cell;
 use std::cmp::Ordering;
@@ -179,6 +189,9 @@ pub struct SimStats {
     pub settlements: u64,
     /// Completion predictions pushed onto the heap.
     pub heap_pushes: u64,
+    /// Capacity-change events applied (no-op changes are filtered out
+    /// before the run and never reach this counter — nor the engine).
+    pub cap_events: u64,
 }
 
 /// Simulation outcome.
@@ -237,17 +250,61 @@ pub fn with_reference_engine<T>(f: impl FnOnce() -> T) -> T {
     f()
 }
 
+/// A scheduled capacity step: at `time`, both directions of `link`
+/// switch to `capacity` bytes/s (piecewise-constant between steps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct CapEvent {
+    pub(crate) time: f64,
+    pub(crate) link: LinkId,
+    pub(crate) capacity: f64,
+}
+
+/// Resolve raw capacity events into a per-*linkdir* timeline, sorted by
+/// time (insertion order breaks ties — later events override earlier
+/// ones at the same instant) with **no-op steps filtered out**: a step
+/// whose capacity is bit-identical to the linkdir's value at that point
+/// never reaches either engine. This is what makes an empty or
+/// zero-magnitude perturbation set *bit-exact* to the unperturbed
+/// simulation on both cores (`tests/faults_differential.rs`): no extra
+/// event instants, no extra settlements, no reordered arithmetic.
+pub(crate) fn capacity_timeline(
+    topo: &Topology,
+    cap_events: &[CapEvent],
+) -> Vec<(f64, LinkDir, f64)> {
+    if cap_events.is_empty() {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..cap_events.len()).collect();
+    // stable: same-time events keep insertion order
+    order.sort_by(|&a, &b| cap_events[a].time.total_cmp(&cap_events[b].time));
+    let mut cur: Vec<f64> = (0..topo.links.len() * 2)
+        .map(|ld| topo.links[ld / 2].class.bandwidth())
+        .collect();
+    let mut out = Vec::new();
+    for i in order {
+        let e = &cap_events[i];
+        for ld in [2 * e.link, 2 * e.link + 1] {
+            if e.capacity.to_bits() != cur[ld].to_bits() {
+                cur[ld] = e.capacity;
+                out.push((e.time, ld, e.capacity));
+            }
+        }
+    }
+    out
+}
+
 /// Simulator for one collective (or one batched schedule of them).
 pub struct Sim<'t> {
     pub(crate) topo: &'t Topology,
     pub(crate) tasks: Vec<Task>,
     pub(crate) roots: Vec<TaskId>,
+    pub(crate) cap_events: Vec<CapEvent>,
 }
 
 impl<'t> Sim<'t> {
     /// Start building a simulation over a topology.
     pub fn new(topo: &'t Topology) -> Sim<'t> {
-        Sim { topo, tasks: Vec::new(), roots: Vec::new() }
+        Sim { topo, tasks: Vec::new(), roots: Vec::new(), cap_events: Vec::new() }
     }
 
     /// The topology this simulation runs over. The returned reference
@@ -320,6 +377,29 @@ impl<'t> Sim<'t> {
         self.push(TaskSpec::Delay { secs }, deps)
     }
 
+    /// Schedule a **capacity step**: from virtual time `time` onward,
+    /// both directions of `link` run at `capacity` bytes/s instead of
+    /// the link class's base bandwidth (piecewise-constant between
+    /// steps; a later step on the same link overrides). Flows in flight
+    /// re-share the new capacity at the step instant via the incremental
+    /// max-min refill; lazy byte settlement at the rate change keeps
+    /// conservation exact across steps. A step whose capacity equals the
+    /// link's value at that instant bit-for-bit is filtered out before
+    /// the run and perturbs nothing — the zero-perturbation differential
+    /// contract ([`crate::perturb`]).
+    pub fn capacity_event(&mut self, link: LinkId, time: f64, capacity: f64) {
+        assert!(link < self.topo.links.len(), "capacity_event: no link {link}");
+        assert!(
+            time.is_finite() && time >= 0.0,
+            "capacity_event: time must be finite and non-negative, got {time}"
+        );
+        assert!(
+            capacity.is_finite() && capacity > 0.0,
+            "capacity_event: capacity must be finite and positive, got {capacity}"
+        );
+        self.cap_events.push(CapEvent { time, link, capacity });
+    }
+
     /// A zero-cost join point over several dependencies (barrier).
     pub fn join(&mut self, deps: &[TaskId]) -> TaskId {
         self.push(TaskSpec::Delay { secs: 0.0 }, deps)
@@ -338,11 +418,14 @@ impl<'t> Sim<'t> {
     }
 
     fn run_event_driven(self) -> SimResult {
-        let Sim { topo, mut tasks, roots } = self;
+        let Sim { topo, mut tasks, roots, cap_events } = self;
         let n_linkdirs = topo.links.len() * 2;
-        let caps: Vec<f64> = (0..n_linkdirs)
+        let mut caps: Vec<f64> = (0..n_linkdirs)
             .map(|ld| topo.links[ld / 2].class.bandwidth())
             .collect();
+        // No-op-filtered capacity steps, consumed in time order.
+        let cap_timeline = capacity_timeline(topo, &cap_events);
+        let mut cap_idx = 0usize;
         let mut linkdir_bytes = vec![0.0; n_linkdirs];
         let mut stats = SimStats::default();
 
@@ -551,15 +634,17 @@ impl<'t> Sim<'t> {
                 predictions.pop();
             }
             let next_event_t = events.peek().map(|e| e.time);
-            let t_star = match (next_event_t, next_completion) {
-                (Some(te), Some(tf)) => te.min(tf),
-                (Some(te), None) => te,
-                (None, Some(tf)) => tf,
-                (None, None) => panic!(
+            let next_cap_t = cap_timeline.get(cap_idx).map(|e| e.0);
+            let t_star = [next_event_t, next_completion, next_cap_t]
+                .into_iter()
+                .flatten()
+                .fold(f64::INFINITY, f64::min);
+            if !t_star.is_finite() {
+                panic!(
                     "simulation deadlock: {completed}/{total} tasks done, no runnable events \
                      (cyclic or unsatisfiable dependencies?)"
-                ),
-            };
+                );
+            }
             assert!(
                 t_star >= now - 1e-12,
                 "time went backwards: {t_star} < {now}"
@@ -631,6 +716,28 @@ impl<'t> Sim<'t> {
                 finish_task!(task_id, now);
                 any_finished = true;
                 stats.completions += 1;
+            }
+
+            // Apply capacity steps due now: the new capacity governs all
+            // rates from this instant on (completions above were exact
+            // under the old rates). An unloaded linkdir just takes the
+            // new value — no refill, no settlement, nothing else moves
+            // (the zero-refill guarantee `tests/engine_scaling.rs`
+            // pins). A loaded linkdir forces a full refill, which
+            // settles exactly the flows whose rate actually changes.
+            let mut cap_changed = false;
+            while let Some(&(t, ld, cap)) = cap_timeline.get(cap_idx) {
+                if t > now {
+                    break;
+                }
+                cap_idx += 1;
+                caps[ld] = cap;
+                stats.cap_events += 1;
+                if members[ld].is_empty() {
+                    spare[ld] = cap; // idle: exact restore, invariant kept
+                } else {
+                    cap_changed = true;
+                }
             }
 
             // Fire discrete events at t_star.
@@ -713,9 +820,11 @@ impl<'t> Sim<'t> {
             // idle links) without disturbing any existing allocation. Any
             // sharing — including two simultaneous starters on one link —
             // falls back to the full refill, as does any departure that
-            // left co-members on a saturated linkdir.
-            if !started.is_empty() || any_finished {
+            // left co-members on a saturated linkdir and any capacity
+            // step that landed on a loaded linkdir.
+            if !started.is_empty() || any_finished || cap_changed {
                 let fast_start_ok = !needs_refill
+                    && !cap_changed
                     && started.iter().all(|&s| {
                         flows[s as usize].linkdirs.iter().all(|&ld| members[ld].len() == 1)
                     });

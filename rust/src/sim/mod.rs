@@ -15,7 +15,9 @@
 //!   complete (per-hop wire latency + any protocol overhead the comm
 //!   model adds);
 //! - rates are recomputed with progressive filling whenever a flow starts
-//!   or finishes — piecewise-constant max-min rates between events.
+//!   or finishes **or a scheduled capacity step fires**
+//!   ([`Sim::capacity_event`], the fault/variability substrate of
+//!   DESIGN.md §12) — piecewise-constant max-min rates between events.
 //!
 //! Two interchangeable cores execute the DAG:
 //! - [`engine`] — the event-driven engine (completion-prediction heap,
@@ -221,6 +223,162 @@ mod tests {
         let via_event = run_once();
         assert!(via_event.stats.heap_pushes > 0, "override leaked out of scope");
         assert!((via_ref.makespan - via_event.makespan).abs() / via_event.makespan < 1e-9);
+    }
+
+    /// One flow over one link crossing a capacity step: the finish time
+    /// is the exact two-segment integral, on both engines.
+    #[test]
+    fn capacity_step_single_flow_two_segments() {
+        let t = line_topo();
+        let bw = LinkClass::NvLink.bandwidth();
+        let bytes = 1.0e9;
+        let t1 = 0.02;
+        let new_bw = 0.5 * bw;
+        let expect = t1 + (bytes - bw * t1) / new_bw;
+        for reference in [false, true] {
+            let mut sim = Sim::new(&t);
+            let path = t.route_gpus(0, 1).unwrap();
+            let id = sim.flow(path.clone(), bytes, 0.0, &[]);
+            sim.capacity_event(path.links[0], t1, new_bw);
+            let res = if reference { sim.run_reference() } else { sim.run() };
+            assert!(
+                (res.finish(id) - expect).abs() / expect < 1e-9,
+                "ref={reference}: {} vs {expect}",
+                res.finish(id)
+            );
+            // conservation: the link carried exactly the flow's bytes
+            let carried = res.link_bytes(path.links[0]);
+            assert!((carried - bytes).abs() / bytes < 1e-9, "carried {carried}");
+        }
+    }
+
+    /// Degrade-then-restore window: three exact rate segments.
+    #[test]
+    fn capacity_window_restores() {
+        let t = line_topo();
+        let bw = LinkClass::NvLink.bandwidth();
+        let bytes = 2.0e9;
+        let (t1, t2) = (0.01, 0.03);
+        let low = 0.25 * bw;
+        let mut sim = Sim::new(&t);
+        let path = t.route_gpus(0, 1).unwrap();
+        let id = sim.flow(path.clone(), bytes, 0.0, &[]);
+        sim.capacity_event(path.links[0], t1, low);
+        sim.capacity_event(path.links[0], t2, bw);
+        let res = sim.run();
+        let moved = bw * t1 + low * (t2 - t1);
+        let expect = t2 + (bytes - moved) / bw;
+        assert!(
+            (res.finish(id) - expect).abs() / expect < 1e-9,
+            "{} vs {expect}",
+            res.finish(id)
+        );
+        assert_eq!(res.stats.cap_events, 4, "2 steps x 2 directions");
+    }
+
+    /// A capacity step whose value equals the link's current capacity
+    /// bit-for-bit is filtered before the run: results AND work counters
+    /// are bitwise identical to a run with no events at all — the
+    /// zero-perturbation differential contract.
+    #[test]
+    fn zero_magnitude_capacity_event_is_bitwise_noop() {
+        let t = crate::topology::systems::dgx1();
+        let build = |events: bool| {
+            let mut sim = Sim::new(&t);
+            let mut last = None;
+            for a in 0..8usize {
+                let b = (a + 3) % 8;
+                let p = t.route_gpus(a, b).unwrap();
+                let lat = t.path_latency(&p);
+                let deps: Vec<TaskId> =
+                    if a % 2 == 0 { last.into_iter().collect() } else { vec![] };
+                last = Some(sim.flow(p, (a + 1) as f64 * 3.0e7, lat, &deps));
+            }
+            if events {
+                for l in 0..t.links.len() {
+                    let base = t.links[l].class.bandwidth();
+                    sim.capacity_event(l, 1.0e-6, 1.0 * base); // scale 1.0
+                    sim.capacity_event(l, 2.0e-6, base.min(f64::MAX)); // floor above base
+                }
+            }
+            sim
+        };
+        let plain = build(false).run();
+        let noop = build(true).run();
+        assert_eq!(plain.stats, noop.stats, "no-op events leaked work into the engine");
+        assert_eq!(plain.makespan.to_bits(), noop.makespan.to_bits());
+        for (a, b) in plain.finish_times().iter().zip(noop.finish_times()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in plain.linkdir_bytes.iter().zip(&noop.linkdir_bytes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and the reference core likewise
+        let rp = build(false).run_reference();
+        let rn = build(true).run_reference();
+        assert_eq!(rp.makespan.to_bits(), rn.makespan.to_bits());
+    }
+
+    /// Both engines under genuine capacity steps on a contended DAG:
+    /// agreement to the documented ~1e-9 relative contract.
+    #[test]
+    fn engines_agree_under_capacity_steps() {
+        let t = crate::topology::systems::dgx1();
+        let build = |t: &crate::topology::Topology| {
+            let mut sim = Sim::new(t);
+            let mut last = None;
+            for a in 0..8usize {
+                for b in 0..8usize {
+                    if a != b {
+                        let p = t.route_gpus(a, b).unwrap();
+                        let lat = t.path_latency(&p);
+                        let deps: Vec<TaskId> = if (a + b) % 3 == 0 {
+                            last.into_iter().collect()
+                        } else {
+                            vec![]
+                        };
+                        last = Some(sim.flow(p, (a * 131 + b) as f64 * 1e6 + 1.0, lat, &deps));
+                    }
+                }
+            }
+            for l in 0..t.links.len() {
+                if l % 3 == 0 {
+                    let base = t.links[l].class.bandwidth();
+                    sim.capacity_event(l, 1.0e-4 * (l + 1) as f64, 0.4 * base);
+                    sim.capacity_event(l, 3.0e-3, base);
+                }
+            }
+            sim
+        };
+        let new = build(&t).run();
+        let old = build(&t).run_reference();
+        assert_eq!(new.flows, old.flows);
+        assert!(new.stats.cap_events > 0, "steps did not fire");
+        let rel = (new.makespan - old.makespan).abs() / old.makespan;
+        assert!(rel < 1e-9, "makespan diverged: {} vs {}", new.makespan, old.makespan);
+        for (i, (a, b)) in new.finish_times().iter().zip(old.finish_times()).enumerate() {
+            assert!((a - b).abs() < 1e-11 + 1e-9 * b.abs(), "task {i}: {a} vs {b}");
+        }
+        for (ld, (a, b)) in new.linkdir_bytes.iter().zip(&old.linkdir_bytes).enumerate() {
+            let denom = b.abs().max(1.0);
+            assert!((a - b).abs() / denom < 1e-6, "linkdir {ld}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be finite and positive")]
+    fn capacity_event_rejects_zero_capacity() {
+        let t = line_topo();
+        let mut sim = Sim::new(&t);
+        sim.capacity_event(0, 0.0, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "time must be finite and non-negative")]
+    fn capacity_event_rejects_negative_time() {
+        let t = line_topo();
+        let mut sim = Sim::new(&t);
+        sim.capacity_event(0, -1.0, 1.0e9);
     }
 
     #[test]

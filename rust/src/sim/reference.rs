@@ -23,10 +23,24 @@
 //! f64 addition is not associative, so results agree to ~1e-9 relative
 //! tolerance, not bit-for-bit; each engine is individually bit-exact
 //! deterministic across runs.
+//!
+//! Capacity steps (DESIGN.md §12) are supported here symmetrically to
+//! the event engine — a due step rewrites `caps` and forces a
+//! from-scratch recompute — so this core stays the differential oracle
+//! for the fault subsystem too. The no-op filtering in
+//! [`capacity_timeline`] is shared: an empty or zero-magnitude
+//! perturbation set introduces no event instants on either core, so
+//! both remain bit-exact to their unperturbed runs. (The only textual
+//! change to the seed arithmetic: `recompute` became a `fn` taking
+//! `caps` as a parameter instead of a closure capturing it, so the main
+//! loop can mutate capacities; the progressive-filling arithmetic is
+//! untouched.)
 
 use std::collections::BinaryHeap;
 
-use super::engine::{Event, HeapEntry, LinkDir, Sim, SimResult, SimStats, TaskSpec};
+use super::engine::{
+    capacity_timeline, Event, HeapEntry, LinkDir, Sim, SimResult, SimStats, TaskSpec,
+};
 
 /// An active flow being rate-controlled. `linkdirs` is moved out of the
 /// task spec at activation so the hot loops (rate recomputation, byte
@@ -45,11 +59,16 @@ impl<'t> Sim<'t> {
     /// builder. Produces a [`SimResult`] with all-zero
     /// [`SimStats`] (this engine predates the counters).
     pub fn run_reference(self) -> SimResult {
-        let Sim { topo, mut tasks, roots } = self;
+        let Sim { topo, mut tasks, roots, cap_events } = self;
         let n_linkdirs = topo.links.len() * 2;
-        let caps: Vec<f64> = (0..n_linkdirs)
+        let mut caps: Vec<f64> = (0..n_linkdirs)
             .map(|ld| topo.links[ld / 2].class.bandwidth())
             .collect();
+        // Capacity steps (no-op-filtered, shared with the event engine:
+        // an empty/zero-magnitude perturbation set introduces no event
+        // instants and stays bit-exact on this core too).
+        let cap_timeline = capacity_timeline(topo, &cap_events);
+        let mut cap_idx = 0usize;
         let mut linkdir_bytes = vec![0.0; n_linkdirs];
 
         let mut heap: BinaryHeap<HeapEntry> = BinaryHeap::new();
@@ -86,17 +105,26 @@ impl<'t> Sim<'t> {
         }
 
         // Recompute max-min fair rates via progressive filling. Scratch
-        // buffers are hoisted out of the closure and reused across calls
-        // (§Perf: allocation in this loop dominated grid regeneration).
+        // buffers are hoisted out and reused across calls (§Perf:
+        // allocation in this loop dominated grid regeneration). A plain
+        // fn rather than a closure so `caps` stays mutable in the main
+        // loop for capacity steps — arithmetic is unchanged from the
+        // seed engine.
         let mut scratch_cap: Vec<f64> = caps.clone();
         let mut scratch_cnt: Vec<u32> = vec![0; n_linkdirs];
         let mut scratch_unfrozen: Vec<usize> = Vec::new();
-        let mut recompute = |active: &mut [ActiveFlow]| {
+        fn recompute(
+            active: &mut [ActiveFlow],
+            caps: &[f64],
+            scratch_cap: &mut [f64],
+            scratch_cnt: &mut [u32],
+            scratch_unfrozen: &mut Vec<usize>,
+        ) {
             if active.is_empty() {
                 return;
             }
-            scratch_cap.copy_from_slice(&caps);
-            let remaining_cap = &mut scratch_cap;
+            scratch_cap.copy_from_slice(caps);
+            let remaining_cap = scratch_cap;
             // compact list of still-unfrozen flow indices: each round
             // touches only the flows whose rate is still rising, so the
             // total refill cost is ~ sum over rounds of survivors rather
@@ -152,10 +180,21 @@ impl<'t> Sim<'t> {
                     unfrozen_idx.clear();
                 }
             }
-        };
+        }
+        macro_rules! recompute_rates {
+            () => {
+                recompute(
+                    &mut active,
+                    &caps,
+                    &mut scratch_cap,
+                    &mut scratch_cnt,
+                    &mut scratch_unfrozen,
+                )
+            };
+        }
 
         drain_ready!();
-        recompute(&mut active);
+        recompute_rates!();
 
         while completed < total {
             // Next discrete event vs next flow completion.
@@ -173,15 +212,17 @@ impl<'t> Sim<'t> {
                     next_flow = Some((fi, t));
                 }
             }
-            let t_star = match (next_event_t, next_flow) {
-                (Some(te), Some((_, tf))) => te.min(tf),
-                (Some(te), None) => te,
-                (None, Some((_, tf))) => tf,
-                (None, None) => panic!(
+            let next_cap_t = cap_timeline.get(cap_idx).map(|e| e.0);
+            let t_star = [next_event_t, next_flow.map(|(_, tf)| tf), next_cap_t]
+                .into_iter()
+                .flatten()
+                .fold(f64::INFINITY, f64::min);
+            if !t_star.is_finite() {
+                panic!(
                     "simulation deadlock: {completed}/{total} tasks done, no runnable events \
                      (cyclic or unsatisfiable dependencies?)"
-                ),
-            };
+                );
+            }
             assert!(
                 t_star >= now - 1e-12,
                 "time went backwards: {t_star} < {now}"
@@ -219,6 +260,18 @@ impl<'t> Sim<'t> {
                 } else {
                     fi += 1;
                 }
+            }
+
+            // Apply capacity steps due now (flows were advanced to
+            // t_star under the old rates above; the new capacity governs
+            // everything from this instant on).
+            while let Some(&(t, ld, cap)) = cap_timeline.get(cap_idx) {
+                if t > now {
+                    break;
+                }
+                cap_idx += 1;
+                caps[ld] = cap;
+                topology_changed = true;
             }
 
             // Fire discrete events at t_star.
@@ -274,10 +327,11 @@ impl<'t> Sim<'t> {
             }
 
             drain_ready!();
-            // Rates only change when the active-flow set changes; skip the
-            // O(flows x links) refill otherwise (§Perf).
+            // Rates only change when the active-flow set (or a link's
+            // capacity) changes; skip the O(flows x links) refill
+            // otherwise (§Perf).
             if topology_changed {
-                recompute(&mut active);
+                recompute_rates!();
             }
         }
 

@@ -173,6 +173,16 @@ impl Topology {
         &self.adj[d]
     }
 
+    /// Links incident to the GPU with the given rank, in link-id order —
+    /// the target set of a *straggler* perturbation (a slow GPU throttles
+    /// every lane in and out of it, DESIGN.md §12).
+    pub fn gpu_links(&self, rank: usize) -> Vec<LinkId> {
+        let mut out: Vec<LinkId> =
+            self.adj[self.gpu(rank)].iter().map(|&(l, _)| l).collect();
+        out.sort_unstable();
+        out
+    }
+
     /// The CPU socket that owns a device's PCIe hierarchy (walks up
     /// through PCIe switches). Used for host-staging endpoints.
     pub fn host_cpu(&self, d: DeviceId) -> DeviceId {
@@ -354,6 +364,23 @@ mod tests {
         let t = two_gpu_nvlink();
         let cpu = t.host_cpu(t.gpu(0));
         assert!(matches!(t.devices[cpu].kind, DeviceKind::Cpu { .. }));
+    }
+
+    #[test]
+    fn gpu_links_are_incident_and_sorted() {
+        let t = two_gpu_nvlink();
+        // gpu0: PCIe link 0 + NVLink link 2
+        let ls = t.gpu_links(0);
+        assert_eq!(ls, vec![0, 2]);
+        for l in ls {
+            let link = &t.links[l];
+            assert!(link.a == t.gpu(0) || link.b == t.gpu(0));
+        }
+        // DGX-1: 4 NVLinks + 1 PCIe per GPU
+        let d = crate::topology::systems::dgx1();
+        for r in 0..8 {
+            assert_eq!(d.gpu_links(r).len(), 5, "gpu {r}");
+        }
     }
 
     #[test]

@@ -233,6 +233,11 @@ pub(crate) fn run_planned(
         }
     }
 
+    // Fault timeline: the shared fabric degrades at the spec's scheduled
+    // windows (DESIGN.md §12). An empty set emits no capacity steps, so
+    // the pristine path stays bit-exact to the pre-fault engine.
+    crate::perturb::apply(&mut sim, &spec.faults);
+
     let res = sim.run();
 
     let mut tenants: Vec<TenantResult> = spec
@@ -349,6 +354,7 @@ mod tests {
             name: "pair".into(),
             seed: 3,
             tenants: vec![mk(0, 0.0), mk(1, 50.0e-6)],
+            faults: vec![],
         };
         let w = run_workload(&topo, &spec, Params::default()).unwrap();
         let iso = isolated_times(&topo, &spec, Params::default()).unwrap();
@@ -405,6 +411,30 @@ mod tests {
         for (a, b) in idle.iter().flatten().zip(idle2.iter().flatten()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn mid_flight_fault_degrades_the_workload() {
+        let topo = SystemKind::Dgx1.build();
+        let base = WorkloadSpec::synthetic(2, 2, 8, TenantLib::Fixed(Library::Nccl), 8 << 20, 4);
+        let healthy = run_workload(&topo, &base, Params::default()).unwrap();
+        // a straggler GPU appears a quarter of the way in and stays
+        let fault = crate::perturb::Perturbation::straggler(0, 0.3)
+            .during(healthy.makespan * 0.25, f64::INFINITY);
+        let degraded =
+            run_workload(&topo, &base.clone().with_faults(vec![fault]), Params::default())
+                .unwrap();
+        assert!(
+            degraded.makespan > healthy.makespan,
+            "mid-flight straggler left no trace: {} vs {}",
+            degraded.makespan,
+            healthy.makespan
+        );
+        // the DAG and its delivered bytes are fault-invariant
+        assert_eq!(degraded.flows, healthy.flows);
+        let drel =
+            (degraded.total_bytes - healthy.total_bytes).abs() / healthy.total_bytes;
+        assert!(drel < 1e-9, "bytes not conserved across capacity steps: {drel}");
     }
 
     #[test]

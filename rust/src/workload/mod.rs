@@ -21,6 +21,10 @@
 //!   — tenants contend for links exactly as the paper's §V-B flows do;
 //! - [`trace`]: parses explicit trace files for the `agv workload
 //!   --trace` path (clean [`crate::util::error`] rejection, no panic);
+//! - fault timelines: a [`WorkloadSpec::faults`] set compiles into
+//!   capacity steps on the shared sim ([`crate::perturb`]), so
+//!   multi-tenant runs degrade mid-flight; an empty set is bit-exact to
+//!   the pristine engine (DESIGN.md §12);
 //! - [`bench`]: the deterministic measurement grid behind
 //!   `bench_workload` / `BENCH_workload.json` (simulated metrics only,
 //!   so the artifact is byte-reproducible from its seed).

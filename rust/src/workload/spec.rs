@@ -171,6 +171,13 @@ pub struct WorkloadSpec {
     pub seed: u64,
     /// The tenants sharing the fabric.
     pub tenants: Vec<TenantSpec>,
+    /// Fault timeline applied to the shared fabric (DESIGN.md §12):
+    /// links degrade / stragglers appear mid-flight at their scheduled
+    /// windows. Empty = pristine fabric, bit-exact to the pre-fault
+    /// engine (`tests/faults_differential.rs`). The idle baseline
+    /// ([`crate::workload::isolated_times`]) stays *healthy*, so
+    /// slowdown columns report contention + degradation together.
+    pub faults: Vec<crate::perturb::Perturbation>,
 }
 
 /// Default stagger between consecutive tenants' first ops (seconds) in
@@ -196,7 +203,15 @@ impl WorkloadSpec {
                 OpStream::Fixed { counts },
                 1,
             )],
+            faults: Vec::new(),
         }
+    }
+
+    /// The same workload on a degraded fabric (replaces the fault
+    /// timeline).
+    pub fn with_faults(mut self, faults: Vec<crate::perturb::Perturbation>) -> WorkloadSpec {
+        self.faults = faults;
+        self
     }
 
     /// A synthetic contended workload: `tenants` streams of `ops`
@@ -231,6 +246,7 @@ impl WorkloadSpec {
                     jitter: SYNTHETIC_JITTER,
                 })
                 .collect(),
+            faults: Vec::new(),
         }
     }
 
@@ -248,6 +264,7 @@ impl WorkloadSpec {
         if self.tenants.is_empty() {
             return Err(anyhow!("workload `{}` has no tenants", self.name));
         }
+        crate::perturb::validate(topo, &self.faults)?;
         let mut seeds = std::collections::BTreeSet::new();
         for t in &self.tenants {
             if !seeds.insert(t.seed) {
@@ -340,7 +357,8 @@ mod tests {
     #[test]
     fn validation_rejects_bad_specs() {
         let topo = SystemKind::Dgx1.build();
-        let empty = WorkloadSpec { name: "x".into(), seed: 0, tenants: vec![] };
+        let empty =
+            WorkloadSpec { name: "x".into(), seed: 0, tenants: vec![], faults: vec![] };
         assert!(empty.validate(&topo).is_err());
         let mut wide = WorkloadSpec::single_op(TenantLib::Auto, vec![1; 9], 0);
         assert!(wide.validate(&topo).is_err(), "9 ranks on an 8-GPU system");
@@ -357,8 +375,12 @@ mod tests {
                 OpStream::Trace { ops: vec![vec![1, 2], vec![3]] },
                 2,
             )],
+            faults: vec![],
         };
         assert!(ragged.validate(&topo).is_err(), "ragged trace");
+        let faulty = WorkloadSpec::single_op(TenantLib::Auto, vec![1; 4], 0)
+            .with_faults(vec![crate::perturb::Perturbation::scale(999, 0.5)]);
+        assert!(faulty.validate(&topo).is_err(), "out-of-range fault link");
         let mut dup = WorkloadSpec::synthetic(2, 1, 2, TenantLib::Auto, 1 << 20, 0);
         dup.tenants[1].seed = dup.tenants[0].seed;
         assert!(dup.validate(&topo).is_err(), "duplicate tenant seeds");

@@ -23,7 +23,7 @@ fn stderr(o: &Output) -> String {
 /// Every subcommand in HELP. Kept in sync by `help_lists_every_subcommand`.
 const COMMANDS: &[&str] = &[
     "topo", "fig2", "table1", "fig3", "findings", "auto", "osu", "refacto",
-    "sweep-gdr", "workload", "e2e", "artifacts", "help",
+    "sweep-gdr", "faults", "workload", "e2e", "artifacts", "help",
 ];
 
 #[test]
@@ -148,6 +148,69 @@ fn sweep_gdr_runs() {
     let out = agv(&["sweep-gdr", "--dataset", "netflix", "--gpus", "2", "--limits", "16,1MB"]);
     assert!(out.status.success(), "{}", stderr(&out));
     assert!(stdout(&out).contains("<-- best"));
+}
+
+#[test]
+fn faults_list_links_runs() {
+    let out = agv(&["faults", "--list-links", "--system", "dgx1"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("links of dgx1"), "{text}");
+    assert!(text.contains("NvLink") && text.contains("PcieGen3x16"), "{text}");
+    // the full `agv faults` study is smoked in release mode by CI
+}
+
+#[test]
+fn osu_perturbed_sweep_runs() {
+    let out = agv(&[
+        "osu", "--system", "dgx1", "--gpus", "2", "--lib", "nccl",
+        "--perturb", "straggler:0:0.5",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("degraded [gpu0 straggler x0.50]"), "{text}");
+    // a malformed spec and an out-of-range target both exit 2 cleanly
+    let out = agv(&["osu", "--system", "dgx1", "--gpus", "2", "--perturb", "warp:0:0.5"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("unknown kind"), "{}", stderr(&out));
+    let out = agv(&["osu", "--system", "dgx1", "--gpus", "2", "--perturb", "link:999:0.5"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr(&out).contains("out of range"), "{}", stderr(&out));
+}
+
+#[test]
+fn refacto_perturbed_runs() {
+    let out = agv(&[
+        "refacto", "--dataset", "netflix", "--system", "dgx1", "--gpus", "2",
+        "--lib", "nccl", "--iters", "1", "--perturb", "straggler:0:0.5",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("degraded"), "{text}");
+    assert!(text.contains("slowdown"), "{text}");
+}
+
+#[test]
+fn workload_perturbed_runs() {
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--perturb", "straggler:0:0.5",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("WORKLOAD"), "{}", stdout(&out));
+    // an out-of-range fault is a clean workload error, not a panic
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--perturb", "link:999:0.5",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "{}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("out of range"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+    // ... and --perturb does not apply to the --refacto hook
+    let out = agv(&["workload", "--refacto", "netflix", "--perturb", "straggler:0:0.5"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("--perturb"), "{}", stderr(&out));
 }
 
 #[test]

@@ -1,0 +1,211 @@
+//! Zero-perturbation differential oracle for the fault subsystem: an
+//! **empty** perturbation set and a **zero-magnitude** one (scale 1.0,
+//! floor at/above base bandwidth, zero-length window) must both
+//! reproduce the unperturbed results **bit-exactly** — per library, per
+//! system, per irregular count vector, on BOTH the event-driven and
+//! reference engines (mirrors `workload_differential.rs`). The
+//! mechanism under test: capacity steps that would not change a link's
+//! capacity bit-for-bit are filtered before the run and never reach
+//! either core, so zero perturbation means zero extra event instants,
+//! zero extra settlements, zero reordered arithmetic. This is what
+//! licenses every degraded number the subsystem reports: the fault
+//! path IS the validated path plus real capacity steps, not a second
+//! implementation.
+
+use agv_bench::comm::select::{candidates, simulate};
+use agv_bench::comm::{run_allgatherv, Library, Params};
+use agv_bench::perturb::{perturbed_allgatherv, perturbed_candidate, Perturbation};
+use agv_bench::sim::with_reference_engine;
+use agv_bench::topology::systems::{multi_dgx, SystemKind};
+use agv_bench::topology::{LinkClass, Topology};
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts};
+use agv_bench::workload::{run_workload, TenantLib, WorkloadSpec};
+
+/// Per-seed irregular vectors spanning the §IV regimes.
+fn vectors(rng: &mut Rng, p: usize) -> Vec<Vec<u64>> {
+    vec![
+        counts::regular(p, 1 + rng.gen_range(32 << 20)),
+        counts::skewed(rng, p, 48 << 20),
+        counts::zero_heavy(rng, p, 32 << 20),
+        counts::single_hot(rng, p, 256 << 20),
+    ]
+}
+
+/// A perturbation set whose every member is a no-op: identity scales,
+/// floors at or above base bandwidth, and a real degradation over an
+/// empty window. Drawn per seed so placement varies.
+fn zero_magnitude_set(rng: &mut Rng, topo: &Topology) -> Vec<Perturbation> {
+    let link = rng.gen_range(topo.links.len() as u64) as usize;
+    let rank = rng.gen_range(topo.num_gpus() as u64) as usize;
+    let base = topo.links[link].class.bandwidth();
+    vec![
+        Perturbation::scale(link, 1.0),
+        Perturbation::floor(link, base * (1.0 + rng.next_f64())),
+        Perturbation::straggler(rank, 1.0),
+        // severe, but over a zero-length window: never active
+        Perturbation::scale(link, 0.01).during(rng.next_f64() * 1e-3, 0.0),
+    ]
+}
+
+fn assert_bit_exact(
+    topo: &Topology,
+    lib: Library,
+    cv: &[u64],
+    perts: &[Perturbation],
+    what: &str,
+) {
+    let base = run_allgatherv(lib, topo, cv);
+    let pert = perturbed_allgatherv(topo, lib, Params::default(), cv, perts);
+    assert_eq!(
+        pert.time.to_bits(),
+        base.time.to_bits(),
+        "{what}/{}/{}: perturbed {} != unperturbed {} (counts {cv:?})",
+        topo.name,
+        lib.name(),
+        pert.time,
+        base.time
+    );
+    assert_eq!(pert.flows, base.flows, "{what}/{}/{}", topo.name, lib.name());
+}
+
+#[test]
+fn empty_set_is_bit_exact_event_engine() {
+    check("faults-differential-empty-event", 10, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, 4, kind.max_gpus().min(8)][rng.gen_range(3) as usize];
+            for cv in vectors(rng, p) {
+                for lib in Library::all() {
+                    assert_bit_exact(&topo, lib, &cv, &[], "empty/event");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zero_magnitude_set_is_bit_exact_event_engine() {
+    check("faults-differential-zeromag-event", 10, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, 4, kind.max_gpus().min(8)][rng.gen_range(3) as usize];
+            let perts = zero_magnitude_set(rng, &topo);
+            for cv in vectors(rng, p) {
+                for lib in Library::all() {
+                    assert_bit_exact(&topo, lib, &cv, &perts, "zeromag/event");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_zero_magnitude_sets_are_bit_exact_reference_engine() {
+    // fewer cases: the reference core is O(F^2) by design
+    check("faults-differential-reference", 3, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, kind.max_gpus().min(8)][rng.gen_range(2) as usize];
+            let perts = zero_magnitude_set(rng, &topo);
+            for cv in vectors(rng, p) {
+                for lib in Library::all() {
+                    with_reference_engine(|| {
+                        assert_bit_exact(&topo, lib, &cv, &[], "empty/reference");
+                        assert_bit_exact(&topo, lib, &cv, &perts, "zeromag/reference");
+                    });
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn every_candidate_is_bit_exact_under_zero_perturbation() {
+    // the selector's compose path, including the hierarchical schedules
+    // on the multi-node topology, through perturbed_candidate
+    let topo = multi_dgx(2);
+    let cv: Vec<u64> = (0..16).map(|r| ((r % 5) as u64 + 1) << 18).collect();
+    let params = Params::default();
+    let mut rng = Rng::new(7);
+    let perts = zero_magnitude_set(&mut rng, &topo);
+    for cand in candidates(&topo, 16) {
+        let base = simulate(&topo, params, cand, &cv).expect("candidate applies");
+        for (what, set) in [("empty", &vec![]), ("zeromag", &perts)] {
+            let pert = perturbed_candidate(&topo, params, cand, &cv, set)
+                .expect("candidate applies");
+            assert_eq!(
+                pert.time.to_bits(),
+                base.time.to_bits(),
+                "{what}/{}: {} != {}",
+                cand.label(),
+                pert.time,
+                base.time
+            );
+            assert_eq!(pert.flows, base.flows, "{what}/{}", cand.label());
+        }
+    }
+}
+
+#[test]
+fn workload_with_zero_magnitude_faults_is_bit_exact() {
+    // the fault timeline rides the multi-tenant engine too: a
+    // zero-magnitude timeline must not move a single finish time
+    check("faults-differential-workload", 4, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let spec = WorkloadSpec::synthetic(
+                3,
+                2,
+                kind.max_gpus().min(8),
+                TenantLib::Fixed(Library::Nccl),
+                4 << 20,
+                rng.next_u64(),
+            );
+            let plain = run_workload(&topo, &spec, Params::default()).unwrap();
+            let faulted = spec.clone().with_faults(zero_magnitude_set(rng, &topo));
+            let noop = run_workload(&topo, &faulted, Params::default()).unwrap();
+            assert_eq!(plain.makespan.to_bits(), noop.makespan.to_bits(), "{}", topo.name);
+            assert_eq!(plain.total_bytes.to_bits(), noop.total_bytes.to_bits());
+            assert_eq!(plain.flows, noop.flows);
+            for (a, b) in plain.tenants.iter().zip(&noop.tenants) {
+                for (x, y) in a.ops.iter().zip(&b.ops) {
+                    assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+                    assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engines_agree_on_a_genuinely_degraded_run() {
+    // not a zero-magnitude case: real capacity steps through both
+    // cores, agreement to the documented ~1e-9 relative contract
+    let topo = SystemKind::CsStorm.build();
+    let cv = vec![6u64 << 20; 8];
+    let perts = [
+        Perturbation::straggler(0, 0.4),
+        Perturbation::scale(1, 0.6).during(1.0e-4, 2.0e-3),
+        Perturbation::floor(2, LinkClass::PcieGen3x16.bandwidth() * 0.3),
+    ];
+    for lib in Library::all() {
+        let event = perturbed_allgatherv(&topo, lib, Params::default(), &cv, &perts);
+        let refr = with_reference_engine(|| {
+            perturbed_allgatherv(&topo, lib, Params::default(), &cv, &perts)
+        });
+        assert_eq!(event.flows, refr.flows, "{}", lib.name());
+        let rel = (event.time - refr.time).abs() / refr.time;
+        assert!(
+            rel < 1e-9,
+            "{}: degraded engines diverged: {} vs {}",
+            lib.name(),
+            event.time,
+            refr.time
+        );
+    }
+}

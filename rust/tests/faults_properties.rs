@@ -1,0 +1,284 @@
+//! Property suite for the fault & variability subsystem (DESIGN.md
+//! §12). Thresholds were calibrated with a Python port of the
+//! reference engine + library models swept over these exact scenario
+//! shapes (the same methodology as `workload_properties.rs`):
+//!
+//! - **byte conservation** across capacity steps: lazy settlement at
+//!   every rate change plus exact leftover charging at completion keep
+//!   per-link byte totals invariant under any perturbation (measured
+//!   violations ~1e-13; asserted at 1e-9);
+//! - **monotonicity**: weakening any single link never *decreases* the
+//!   makespan of a fixed schedule — unlike tenant-removal (which has
+//!   Graham-style anomalies, see `workload_properties.rs`), link
+//!   weakening measured monotone to 1 ulp across every (system,
+//!   library, vector, link, factor, window) combination swept
+//!   (min ratio 0.99999999999999989); asserted at 1e-9;
+//! - **straggler bound**: slowing every link of one GPU by `factor`
+//!   stretches the makespan by at most `1/factor` (delays and
+//!   latencies do not stretch; measured worst 0.965 of the bound);
+//! - **ensemble determinism**: Monte-Carlo scenario sets replay
+//!   bit-identically from the seed, and so do robust verdicts;
+//! - **robust dominance**: the robust selector never loses to a fixed
+//!   library on its own ensemble, by construction.
+
+use agv_bench::comm::select::{AlgoSelector, RobustObjective};
+use agv_bench::comm::{run_allgatherv, CommResult, Library, Params};
+use agv_bench::perturb::{
+    ensemble, perturbed_allgatherv, perturbed_candidate, EnsembleCfg, Perturbation,
+};
+use agv_bench::sim::Sim;
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::topology::Topology;
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts};
+
+fn random_system(rng: &mut Rng) -> Topology {
+    match rng.gen_range(3) {
+        0 => SystemKind::Cluster.build(),
+        1 => SystemKind::Dgx1.build(),
+        _ => SystemKind::CsStorm.build(),
+    }
+}
+
+fn random_lib(rng: &mut Rng) -> Library {
+    match rng.gen_range(3) {
+        0 => Library::Mpi,
+        1 => Library::MpiCuda,
+        _ => Library::Nccl,
+    }
+}
+
+/// Total delivered hop-bytes of one perturbed run (sum of per-linkdir
+/// byte counters) — the conservation quantity.
+fn hop_bytes(topo: &Topology, lib: Library, cv: &[u64], perts: &[Perturbation]) -> (f64, f64) {
+    let mut sim = Sim::new(topo);
+    let done = agv_bench::comm::compose_allgatherv(&mut sim, lib, Params::default(), cv, None);
+    agv_bench::perturb::apply(&mut sim, perts);
+    let res = sim.run();
+    (res.finish(done), res.linkdir_bytes.iter().sum())
+}
+
+#[test]
+fn prop_byte_conservation_across_capacity_steps() {
+    // the DAG is fault-invariant, so every flow still delivers every
+    // byte: per-run hop-byte totals match the healthy run at 1e-9
+    check("faults-conservation", 12, |rng| {
+        let topo = random_system(rng);
+        let lib = random_lib(rng);
+        let p = 2 + rng.gen_range(7) as usize;
+        let cv = counts::irregular(rng, p, 24 << 20);
+        let (healthy_t, healthy_b) = hop_bytes(&topo, lib, &cv, &[]);
+        // a messy timeline: static link scale + windowed straggler +
+        // windowed floor, windows sized to the healthy makespan
+        let link = rng.gen_range(topo.links.len() as u64) as usize;
+        let rank = rng.gen_range(p as u64) as usize;
+        let perts = vec![
+            Perturbation::scale(link, 0.2 + 0.7 * rng.next_f64()),
+            Perturbation::straggler(rank, 0.3 + 0.5 * rng.next_f64())
+                .during(healthy_t * rng.next_f64(), healthy_t * rng.next_f64()),
+            Perturbation::floor(link, 1.0e9).during(healthy_t * 0.5, healthy_t),
+        ];
+        let (_, degraded_b) = hop_bytes(&topo, lib, &cv, &perts);
+        let rel = (degraded_b - healthy_b).abs() / healthy_b.max(1.0);
+        if rel > 1e-9 {
+            return Err(format!(
+                "{}/{}: hop bytes drifted {rel} ({} vs {})",
+                topo.name,
+                lib.name(),
+                degraded_b,
+                healthy_b
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weakening_a_link_never_decreases_makespan() {
+    // fixed schedule + max-min sharing: reducing one link's capacity
+    // (statically or over a window) can only slow the collective.
+    // Calibration swept all links per system x 3 libraries x 3 vector
+    // shapes x factors {0.05, 0.3, 0.5, 0.7} x 3 window shapes: min
+    // ratio 0.99999999999999989 (1 ulp). Asserted at 1e-9.
+    check("faults-monotone-link", 10, |rng| {
+        let topo = random_system(rng);
+        let lib = random_lib(rng);
+        let p = 2 + rng.gen_range(7) as usize;
+        let cv = counts::irregular(rng, p, 24 << 20);
+        let healthy = run_allgatherv(lib, &topo, &cv);
+        let link = rng.gen_range(topo.links.len() as u64) as usize;
+        let factor = 0.05 + 0.85 * rng.next_f64();
+        let windows = [
+            (0.0, f64::INFINITY),
+            (healthy.time * 0.2, healthy.time * 0.3),
+            (healthy.time * 0.5, f64::INFINITY),
+        ];
+        let (start, dur) = windows[rng.gen_range(3) as usize];
+        let pert = Perturbation::scale(link, factor).during(start, dur);
+        let degraded =
+            perturbed_allgatherv(&topo, lib, Params::default(), &cv, &[pert]);
+        if degraded.time < healthy.time * (1.0 - 1e-9) {
+            return Err(format!(
+                "{}/{} link {link} x{factor:.3} window ({start},{dur}): \
+                 weakening SPED UP the collective: {} < {}",
+                topo.name,
+                lib.name(),
+                degraded.time,
+                healthy.time
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_straggler_slowdown_bounded_by_link_scale() {
+    // slowing all of one GPU's links by `factor` stretches only the
+    // wire segments, never the latencies/delays: the makespan grows by
+    // at most 1/factor (measured worst case 0.965 of the bound), and
+    // by monotonicity it cannot shrink
+    check("faults-straggler-bound", 10, |rng| {
+        let topo = random_system(rng);
+        let lib = random_lib(rng);
+        let p = 2 + rng.gen_range(7) as usize;
+        let cv = counts::irregular(rng, p, 24 << 20);
+        let rank = rng.gen_range(p as u64) as usize;
+        let factor = 0.25 + 0.65 * rng.next_f64();
+        let healthy = run_allgatherv(lib, &topo, &cv);
+        let degraded = perturbed_allgatherv(
+            &topo,
+            lib,
+            Params::default(),
+            &cv,
+            &[Perturbation::straggler(rank, factor)],
+        );
+        let bound = healthy.time / factor;
+        if degraded.time > bound * (1.0 + 1e-6) {
+            return Err(format!(
+                "{}/{} straggler {rank} x{factor:.3}: {} exceeds bound {bound}",
+                topo.name,
+                lib.name(),
+                degraded.time
+            ));
+        }
+        if degraded.time < healthy.time * (1.0 - 1e-9) {
+            return Err(format!(
+                "{}/{} straggler {rank} x{factor:.3}: sped up: {} < {}",
+                topo.name,
+                lib.name(),
+                degraded.time,
+                healthy.time
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ensembles_and_robust_verdicts_are_deterministic() {
+    let topo = SystemKind::CsStorm.build();
+    let cfg = EnsembleCfg::quick(23).with_scenarios(5);
+    let a = ensemble(&topo, &cfg);
+    let b = ensemble(&topo, &cfg);
+    assert_eq!(a, b, "ensemble not reproducible from its seed");
+    assert_ne!(a, ensemble(&topo, &EnsembleCfg::quick(24).with_scenarios(5)));
+    let counts = vec![2u64 << 20; 8];
+    let sel = AlgoSelector::new(Params::default());
+    for obj in [RobustObjective::Mean, RobustObjective::P95] {
+        let x = sel.select_robust(&topo, &counts, &a, obj);
+        let y = sel.select_robust(&topo, &counts, &b, obj);
+        assert_eq!(x.candidate, y.candidate, "{}", obj.name());
+        assert_eq!(x.objective.to_bits(), y.objective.to_bits());
+        assert_eq!(x.mean.to_bits(), y.mean.to_bits());
+        assert_eq!(x.p95.to_bits(), y.p95.to_bits());
+    }
+}
+
+#[test]
+fn prop_robust_selector_never_loses_to_fixed_libraries() {
+    // by construction: the robust candidate set contains every fixed
+    // library's default choice, scored on the same scenarios
+    check("faults-robust-dominance", 5, |rng| {
+        let topo = random_system(rng);
+        let p = 4 + rng.gen_range(5) as usize;
+        let cv = counts::irregular(rng, p, 8 << 20);
+        let params = Params::default();
+        let ens = ensemble(&topo, &EnsembleCfg::quick(rng.next_u64()).with_scenarios(3));
+        let sel = AlgoSelector::new(params);
+        let obj = if rng.gen_range(2) == 0 { RobustObjective::Mean } else { RobustObjective::P95 };
+        let robust = sel.select_robust(&topo, &cv, &ens, obj);
+        for cand in agv_bench::comm::select::default_candidates(&params, &cv) {
+            let times: Vec<f64> = ens
+                .iter()
+                .map(|perts| {
+                    perturbed_candidate(&topo, params, cand, &cv, perts)
+                        .expect("defaults always apply")
+                        .time
+                })
+                .collect();
+            let fixed = obj.aggregate(&times);
+            if robust.objective > fixed {
+                return Err(format!(
+                    "{}/{}: robust {} loses to {} {}",
+                    topo.name,
+                    obj.name(),
+                    robust.objective,
+                    cand.label(),
+                    fixed
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mid_flow_bandwidth_drop_is_reflected_in_finish_time() {
+    // the latent-assumption regression (ISSUE 5 satellite): both
+    // engines used to snapshot link capacities once at run start; a
+    // capacity cached at flow start would make this two-segment
+    // integral come out as bytes/base_bw instead
+    let topo = SystemKind::Dgx1.build();
+    let path = topo.route_gpus(0, 1).unwrap();
+    let link = path.links[0];
+    let base = topo.links[link].class.bandwidth();
+    let bytes = 2.0e9;
+    let t1 = 0.04;
+    let low = 0.25 * base;
+    for reference in [false, true] {
+        let mut sim = Sim::new(&topo);
+        let id = sim.flow(path.clone(), bytes, 0.0, &[]);
+        agv_bench::perturb::apply(
+            &mut sim,
+            &[Perturbation::scale(link, 0.25).during(t1, f64::INFINITY)],
+        );
+        let res = if reference { sim.run_reference() } else { sim.run() };
+        let expect = t1 + (bytes - base * t1) / low;
+        let stale = bytes / base;
+        assert!(
+            (res.finish(id) - expect).abs() / expect < 1e-9,
+            "ref={reference}: finish {} != two-segment {expect} \
+             (a stale cached capacity would give {stale})",
+            res.finish(id)
+        );
+    }
+}
+
+#[test]
+fn degradation_does_not_change_the_dag() {
+    // flows/size accounting is perturbation-invariant — only timing
+    // moves (the CommResult contract of perturbed_allgatherv)
+    let topo = SystemKind::Cluster.build();
+    let cv = vec![3u64 << 20; 8];
+    for lib in Library::all() {
+        let healthy: CommResult = run_allgatherv(lib, &topo, &cv);
+        let degraded = perturbed_allgatherv(
+            &topo,
+            lib,
+            Params::default(),
+            &cv,
+            &[Perturbation::straggler(2, 0.4)],
+        );
+        assert_eq!(healthy.flows, degraded.flows, "{}", lib.name());
+    }
+}

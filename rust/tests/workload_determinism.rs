@@ -22,6 +22,18 @@ fn bench_doc_is_byte_identical_across_runs() {
 }
 
 #[test]
+fn faults_bench_doc_is_byte_identical_across_runs() {
+    // BENCH_faults.json: simulated metrics only, so the same seed must
+    // reproduce the artifact byte-for-byte (including the Monte-Carlo
+    // ensemble draws behind the robust verdicts and the pool fan-out)
+    let a = agv_bench::perturb::bench::bench_doc(42).render();
+    let b = agv_bench::perturb::bench::bench_doc(42).render();
+    assert_eq!(a, b, "BENCH_faults.json payload is not reproducible");
+    let c = agv_bench::perturb::bench::bench_doc(43).render();
+    assert_ne!(a, c, "the ensemble seed is not live in the faults artifact");
+}
+
+#[test]
 fn report_render_is_byte_identical_across_runs() {
     let mk = |gpus: usize| {
         WorkloadSpec::synthetic(3, 3, gpus.min(8), TenantLib::Fixed(Library::Nccl), 8 << 20, 7)

@@ -72,7 +72,7 @@ fn random_spec(rng: &mut Rng, max_gpus: usize) -> WorkloadSpec {
             }
         })
         .collect();
-    WorkloadSpec { name: "prop".into(), seed: rng.next_u64(), tenants }
+    WorkloadSpec { name: "prop".into(), seed: rng.next_u64(), tenants, faults: vec![] }
 }
 
 fn sub_spec(spec: &WorkloadSpec, keep: &[usize]) -> WorkloadSpec {
@@ -80,6 +80,7 @@ fn sub_spec(spec: &WorkloadSpec, keep: &[usize]) -> WorkloadSpec {
         name: spec.name.clone(),
         seed: spec.seed,
         tenants: keep.iter().map(|&i| spec.tenants[i].clone()).collect(),
+        faults: spec.faults.clone(),
     }
 }
 

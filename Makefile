@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance test-workload test-faults verify bench bench-smoke bench-workload bench-faults artifacts fmt clippy
+.PHONY: build test test-conformance test-workload test-faults test-collectives verify bench bench-smoke bench-workload bench-faults bench-collectives artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -23,6 +23,11 @@ test-workload:
 test-faults:
 	cargo test --test faults_differential --test faults_properties
 
+# The collective suite's closed-form + chunking-differential harness on
+# its own (CI runs this as a dedicated step; also part of `make test`).
+test-collectives:
+	cargo test --test collective_conformance
+
 verify: build test
 
 # Full measurement run; bench_engine writes BENCH_engine.json,
@@ -34,6 +39,7 @@ bench:
 	cargo bench --bench bench_hierarchy -- --json
 	cargo bench --bench bench_workload -- --json
 	cargo bench --bench bench_faults -- --json
+	cargo bench --bench bench_collectives -- --json
 	cargo bench --bench bench_ablations
 
 # The workload grid alone (BENCH_workload.json is byte-reproducible
@@ -46,6 +52,10 @@ bench-workload:
 bench-faults:
 	cargo bench --bench bench_faults -- --json
 
+# The collective-suite grid on its own; writes BENCH_collectives.json.
+bench-collectives:
+	cargo bench --bench bench_collectives -- --json
+
 # CI smoke: every bench target builds and runs with slashed iteration
 # counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick
 # mode bench_engine/bench_hierarchy write BENCH_*.quick.json (scratch),
@@ -55,6 +65,7 @@ bench-smoke:
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_hierarchy -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_workload -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_faults -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_collectives -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_ablations
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_osu_fig2
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_refacto_fig3

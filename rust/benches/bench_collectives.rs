@@ -1,0 +1,49 @@
+//! Collective-suite benchmark: wall-clock cost of the op-generic
+//! compose/run path per system × op, plus the deterministic
+//! simulated-metric payload.
+//!
+//! `cargo bench --bench bench_collectives [-- --json]`
+//!
+//! With `--json` (what `make bench-collectives` passes) the simulated
+//! metrics — per-library times, auto verdicts and chunk-pipelining
+//! speedups — are written to `BENCH_collectives.json` at the repo root.
+//! As in every bench target the artifact holds **no wall-clock
+//! numbers**, only simulation outputs, so the same seed reproduces it
+//! byte-for-byte (tests/workload_determinism.rs pins the in-process
+//! equivalent). `AGV_BENCH_QUICK=1` slashes iteration counts and
+//! redirects the artifact to `BENCH_collectives.quick.json` (scratch).
+
+use agv_bench::comm::collective::bench::{bench_cases, bench_doc};
+use agv_bench::comm::collective::run_collective;
+use agv_bench::comm::transport::ChunkCfg;
+use agv_bench::comm::{Library, Params};
+use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
+
+/// Seed of the canonical BENCH_collectives.json grid.
+const SEED: u64 = 42;
+
+fn main() {
+    let json_out = std::env::args().any(|a| a == "--json");
+
+    // wall-clock: how fast does the op-generic path compose + simulate?
+    for (label, topo, spec) in bench_cases(SEED) {
+        let name = format!("collective/{label}");
+        let r = bench(&name, warmup(1), iters(8), || {
+            for lib in Library::all() {
+                black_box(run_collective(&topo, lib, Params::default(), &spec, ChunkCfg::none()));
+            }
+        });
+        println!("{}", r.report_line());
+    }
+
+    if json_out {
+        let doc = bench_doc(SEED);
+        let path = if quick_mode() {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_collectives.quick.json")
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_collectives.json")
+        };
+        std::fs::write(path, doc.render() + "\n").expect("write BENCH_collectives json");
+        println!("\nwrote {path}");
+    }
+}

@@ -15,6 +15,21 @@
 //! - [`binomial_bcast`]: log-tree broadcast (MPI_Bcast);
 //! - [`bcast_series_allgatherv`]: the paper's Listing 1 — Allgatherv as a
 //!   series of P broadcasts (what NCCL must do lacking a native routine).
+//!
+//! The collective suite (DESIGN.md §13) widens the block-index space:
+//! - [`ring_allreduce`] / [`halving_doubling_allreduce`]: two-phase
+//!   [`ReduceSchedule`]s over P vector *segments* (reduce-scatter then
+//!   allgather; recursive halving then doubling);
+//! - [`binomial_bcast_msg`] / [`scatter_allgather_bcast`] /
+//!   [`ring_bcast_msg`]: broadcast of a root *message* split into
+//!   segments (vs [`binomial_bcast`]'s single rank-contribution block);
+//! - [`pairwise_alltoallv`]: P² (src, dst) blocks, one step per offset.
+//!
+//! Delivery oracles: [`execute`] (allgatherv holdings),
+//! [`execute_from`] (arbitrary initial holdings — bcast, alltoallv) and
+//! [`execute_allreduce`] (contribution-coverage bitmasks, which reject
+//! schedules that double-add a contribution or forward a partial sum as
+//! final).
 
 /// One logical point-to-point send: `blocks` identifies which ranks'
 /// contributions travel (byte size resolved against `counts`).
@@ -57,6 +72,26 @@ impl Schedule {
             .iter()
             .flat_map(|s| s.iter().map(|op| op.blocks.len()))
             .sum()
+    }
+
+    /// Total bytes this schedule puts on the wire given per-block sizes
+    /// — what the closed-form conformance oracles compare against.
+    pub fn wire_bytes(&self, counts: &[u64]) -> u64 {
+        self.steps
+            .iter()
+            .flat_map(|s| s.iter().map(|op| op.bytes(counts)))
+            .sum()
+    }
+
+    /// Per-block transfer counts (how many sends ship each block).
+    pub fn block_transfer_counts(&self, blocks: usize) -> Vec<usize> {
+        let mut per = vec![0usize; blocks];
+        for op in self.steps.iter().flatten() {
+            for &b in &op.blocks {
+                per[b] += 1;
+            }
+        }
+        per
     }
 }
 
@@ -351,16 +386,288 @@ pub fn hierarchical_allgatherv(p: usize, groups: &[Vec<usize>], inter: LeaderAlg
 }
 
 // ---------------------------------------------------------------------------
+// Collective suite: allreduce, message broadcast, alltoallv (DESIGN.md §13).
+// ---------------------------------------------------------------------------
+
+/// A two-phase reduction schedule: a reduce phase whose receives *add*
+/// into the destination buffer, then a gather phase whose receives copy
+/// final values. Keeping the phases apart (instead of tagging
+/// [`SendOp`]s) is what lets [`execute_allreduce`] verify reduction
+/// correctness — a send in `reduce` merges contribution coverage, a
+/// send in `gather` must ship an already fully-reduced segment.
+///
+/// Block indices are vector *segments* `0..P` (the reduced vector cut
+/// into P pieces, irregular sizes allowed); `counts[s]` is segment s's
+/// byte size.
+#[derive(Clone, Debug)]
+pub struct ReduceSchedule {
+    /// Reduce-scatter phase: receives accumulate.
+    pub reduce: Schedule,
+    /// Allgather phase: receives copy final segments.
+    pub gather: Schedule,
+}
+
+impl ReduceSchedule {
+    /// Total synchronized rounds across both phases.
+    pub fn rounds(&self) -> usize {
+        self.reduce.steps.len() + self.gather.steps.len()
+    }
+
+    /// The phases in execution order, for the phase-agnostic transports.
+    pub fn phases(&self) -> [&Schedule; 2] {
+        [&self.reduce, &self.gather]
+    }
+
+    /// Total wire bytes across both phases.
+    pub fn wire_bytes(&self, counts: &[u64]) -> u64 {
+        self.reduce.wire_bytes(counts) + self.gather.wire_bytes(counts)
+    }
+}
+
+/// Ring allreduce: reduce-scatter then allgather around one ring, the
+/// bandwidth-optimal 2(P−1)-step schedule NCCL rings implement. During
+/// reduce-scatter step s, ring position i sends segment (i − s) mod P to
+/// position i+1 (receiver adds); after P−1 steps position i owns the
+/// fully reduced segment (i+1) mod P. The allgather phase then rotates
+/// the reduced segments the rest of the way: step s, position i sends
+/// segment (i + 1 − s) mod P. Every segment crosses exactly 2(P−1)
+/// wires, so total wire bytes are 2(P−1)·Σcounts — the closed form the
+/// conformance harness machine-checks. `order` maps ring position →
+/// rank (segment indices are position-based and unaffected).
+pub fn ring_allreduce(p: usize, order: Option<&[usize]>) -> ReduceSchedule {
+    assert!(p >= 1);
+    let identity: Vec<usize> = (0..p).collect();
+    let ring = order.unwrap_or(&identity);
+    assert_eq!(ring.len(), p);
+    let mut reduce = Vec::new();
+    let mut gather = Vec::new();
+    for s in 0..p.saturating_sub(1) {
+        let mut rs_ops = Vec::new();
+        let mut ag_ops = Vec::new();
+        for i in 0..p {
+            let from = ring[i];
+            let to = ring[(i + 1) % p];
+            rs_ops.push(SendOp { from, to, blocks: vec![(i + p - s) % p] });
+            ag_ops.push(SendOp { from, to, blocks: vec![(i + 1 + p - s) % p] });
+        }
+        reduce.push(rs_ops);
+        gather.push(ag_ops);
+    }
+    ReduceSchedule {
+        reduce: Schedule { steps: reduce },
+        gather: Schedule { steps: gather },
+    }
+}
+
+/// Recursive-halving/doubling allreduce (power-of-two P): the
+/// latency-optimal 2·log2 P-round schedule MVAPICH picks for short
+/// vectors. The halving phase bisects each rank's working segment set
+/// by the partner-distance bit (keep the half containing yourself, send
+/// the half containing the partner, receiver adds); after log2 P rounds
+/// rank r owns the fully reduced segment r. The doubling phase is
+/// exactly [`recursive_doubling_allgatherv`] over the segments. Both
+/// phases move every segment P−1 times, so the 2(P−1)·Σcounts wire-byte
+/// closed form is shared with [`ring_allreduce`].
+pub fn halving_doubling_allreduce(p: usize) -> ReduceSchedule {
+    assert!(p.is_power_of_two(), "recursive halving/doubling needs power-of-two P");
+    let mut held: Vec<Vec<usize>> = (0..p).map(|_| (0..p).collect()).collect();
+    let mut steps = Vec::new();
+    let mut dist = p / 2;
+    while dist >= 1 {
+        let mut ops = Vec::new();
+        let mut new_held = held.clone();
+        for r in 0..p {
+            let partner = r ^ dist;
+            let send_blocks: Vec<usize> = held[r]
+                .iter()
+                .copied()
+                .filter(|&s| (s & dist) == (partner & dist))
+                .collect();
+            new_held[r].retain(|&s| (s & dist) == (r & dist));
+            ops.push(SendOp { from: r, to: partner, blocks: send_blocks });
+        }
+        held = new_held;
+        steps.push(ops);
+        dist /= 2;
+    }
+    ReduceSchedule {
+        reduce: Schedule { steps },
+        gather: recursive_doubling_allgatherv(p),
+    }
+}
+
+/// Binomial-tree broadcast of a root *message* split into `segs`
+/// segments: the [`binomial_bcast`] tree, but every edge ships the whole
+/// segment list (block indices 0..segs, sized by the counts vector).
+/// ⌈log2 P⌉ rounds; each segment crosses P−1 wires.
+pub fn binomial_bcast_msg(p: usize, root: usize, segs: usize) -> Schedule {
+    assert!(root < p);
+    let all: Vec<usize> = (0..segs).collect();
+    let mut steps = Vec::new();
+    if p > 1 {
+        let mut dist = p.next_power_of_two() / 2;
+        while dist >= 1 {
+            let mut ops = Vec::new();
+            for rr in (0..p).step_by(2 * dist) {
+                if rr + dist < p {
+                    let from = (rr + root) % p;
+                    let to = (rr + dist + root) % p;
+                    ops.push(SendOp { from, to, blocks: all.clone() });
+                }
+            }
+            steps.push(ops);
+            dist /= 2;
+        }
+    }
+    Schedule { steps }
+}
+
+/// Ring broadcast of a segmented root message (NCCL's pipeline shape):
+/// each ring hop forwards all `segs` segments; with a chunked transport
+/// ([`crate::comm::transport::ChunkCfg`]) the hops overlap into the
+/// classic NCCL pipeline. P−1 rounds.
+pub fn ring_bcast_msg(p: usize, root: usize, segs: usize, order: Option<&[usize]>) -> Schedule {
+    let identity: Vec<usize> = (0..p).collect();
+    let ring = order.unwrap_or(&identity);
+    assert_eq!(ring.len(), p);
+    let root_pos = ring.iter().position(|&r| r == root).expect("root not in ring");
+    let all: Vec<usize> = (0..segs).collect();
+    let mut steps = Vec::new();
+    for s in 0..p.saturating_sub(1) {
+        let from = ring[(root_pos + s) % p];
+        let to = ring[(root_pos + s + 1) % p];
+        steps.push(vec![SendOp { from, to, blocks: all.clone() }]);
+    }
+    Schedule { steps }
+}
+
+/// The two phases of a scatter-allgather broadcast.
+#[derive(Clone, Debug)]
+pub struct BcastSchedule {
+    /// Binomial scatter: each subtree edge ships the subtree's segments.
+    pub scatter: Schedule,
+    /// Ring allgather of the scattered segments.
+    pub gather: Schedule,
+}
+
+impl BcastSchedule {
+    /// Total synchronized rounds: ⌈log2 P⌉ + (P−1).
+    pub fn rounds(&self) -> usize {
+        self.scatter.steps.len() + self.gather.steps.len()
+    }
+
+    /// The phases in execution order.
+    pub fn phases(&self) -> [&Schedule; 2] {
+        [&self.scatter, &self.gather]
+    }
+
+    /// Total wire bytes across both phases.
+    pub fn wire_bytes(&self, counts: &[u64]) -> u64 {
+        self.scatter.wire_bytes(counts) + self.gather.wire_bytes(counts)
+    }
+}
+
+/// Scatter-allgather (van de Geijn) broadcast: the bandwidth-optimal
+/// large-message MPI_Bcast. The root's message is cut into P segments;
+/// a binomial scatter ships each subtree its segment range (segment s
+/// travels popcount(s) hops — its depth in the tree, in relative-rank
+/// space), leaving relative rank x owning segment x; a ring allgather
+/// then moves every segment the remaining P−1 times. Block indices are
+/// segments 0..P in relative-rank space (rel x = (rank − root) mod P).
+pub fn scatter_allgather_bcast(p: usize, root: usize) -> BcastSchedule {
+    assert!(root < p);
+    let abs = |rr: usize| (rr + root) % p;
+    let mut scatter = Vec::new();
+    if p > 1 {
+        let mut dist = p.next_power_of_two() / 2;
+        while dist >= 1 {
+            let mut ops = Vec::new();
+            for rr in (0..p).step_by(2 * dist) {
+                if rr + dist < p {
+                    let hi = (rr + 2 * dist).min(p);
+                    ops.push(SendOp {
+                        from: abs(rr),
+                        to: abs(rr + dist),
+                        blocks: (rr + dist..hi).collect(),
+                    });
+                }
+            }
+            scatter.push(ops);
+            dist /= 2;
+        }
+    }
+    // ring allgather over the scattered segments: rel rank i starts
+    // owning segment i; step s, rel i forwards segment (i − s) mod p
+    let mut gather = Vec::new();
+    for s in 0..p.saturating_sub(1) {
+        let mut ops = Vec::new();
+        for i in 0..p {
+            ops.push(SendOp {
+                from: abs(i),
+                to: abs((i + 1) % p),
+                blocks: vec![(i + p - s) % p],
+            });
+        }
+        gather.push(ops);
+    }
+    BcastSchedule {
+        scatter: Schedule { steps: scatter },
+        gather: Schedule { steps: gather },
+    }
+}
+
+/// Pairwise-exchange alltoallv: P−1 steps; at step s (1-based), rank i
+/// sends its block for rank (i + s) mod P. Block indices are the P²
+/// (src, dst) pairs flattened src-major — block `src·P + dst` holds the
+/// bytes src sends dst (`counts[src * p + dst]`), so irregular count
+/// *matrices* are preserved per pair. Every off-diagonal block crosses
+/// exactly one wire; diagonal blocks never move.
+pub fn pairwise_alltoallv(p: usize) -> Schedule {
+    assert!(p >= 1);
+    let mut steps = Vec::new();
+    for s in 1..p {
+        let mut ops = Vec::new();
+        for i in 0..p {
+            let to = (i + s) % p;
+            ops.push(SendOp { from: i, to, blocks: vec![i * p + to] });
+        }
+        steps.push(ops);
+    }
+    Schedule { steps }
+}
+
+// ---------------------------------------------------------------------------
 // Logical executor: verifies delivery correctness of any schedule.
 // ---------------------------------------------------------------------------
 
 /// Execute a schedule over per-rank block sets; returns the final
 /// holdings. A send is only legal if the sender holds every block it
-/// ships at that step (asserted).
+/// ships at that step (asserted). Initial holdings are the allgatherv
+/// convention — rank r holds block r; use [`execute_from`] for other
+/// collectives.
 pub fn execute(p: usize, schedules: &[&Schedule]) -> Vec<Vec<bool>> {
-    let mut held = vec![vec![false; p]; p];
-    for (r, h) in held.iter_mut().enumerate() {
+    let mut init = vec![vec![false; p]; p];
+    for (r, h) in init.iter_mut().enumerate() {
         h[r] = true;
+    }
+    execute_from(p, p, &init, schedules)
+}
+
+/// Execute schedules over an arbitrary block space with explicit
+/// initial holdings (`init[r][b]`): the general delivery oracle behind
+/// broadcast (root holds every segment) and alltoallv (rank i holds row
+/// i of the count matrix). Same step-snapshot and send-legality rules
+/// as [`execute`].
+pub fn execute_from(
+    p: usize,
+    blocks: usize,
+    init: &[Vec<bool>],
+    schedules: &[&Schedule],
+) -> Vec<Vec<bool>> {
+    assert_eq!(init.len(), p, "one initial holding set per rank");
+    let mut held: Vec<Vec<bool>> = init.to_vec();
+    for h in &held {
+        assert_eq!(h.len(), blocks, "one holding flag per block");
     }
     for sched in schedules {
         for step in &sched.steps {
@@ -384,6 +691,61 @@ pub fn execute(p: usize, schedules: &[&Schedule]) -> Vec<Vec<bool>> {
 /// True iff every rank holds every block.
 pub fn all_delivered(held: &[Vec<bool>]) -> bool {
     held.iter().all(|h| h.iter().all(|&x| x))
+}
+
+/// Verify a [`ReduceSchedule`] computes a correct allreduce over P
+/// segments, P ≤ 64. The reduce phase tracks per-(rank, segment)
+/// contribution *coverage* bitmasks (a receive unions the sender's
+/// pre-step coverage into the receiver's — the algebra of `+=` on
+/// disjoint partial sums); the gather phase then only lets a rank
+/// forward a segment whose coverage is complete (asserted), which is
+/// what rejects schedules that ship partial sums as final or fold the
+/// same contribution in twice. Returns true iff every rank ends holding
+/// the fully reduced value of every segment.
+pub fn execute_allreduce(p: usize, rs: &ReduceSchedule) -> bool {
+    assert!(p <= 64, "coverage masks are u64");
+    let full: u64 = if p == 64 { u64::MAX } else { (1u64 << p) - 1 };
+    // cov[r][s]: which ranks' contributions are folded into r's copy of s
+    let mut cov = vec![vec![0u64; p]; p];
+    for (r, row) in cov.iter_mut().enumerate() {
+        for c in row.iter_mut() {
+            *c = 1 << r;
+        }
+    }
+    for step in &rs.reduce.steps {
+        let snapshot = cov.clone();
+        for op in step {
+            for &s in &op.blocks {
+                // a partial sum overlapping the receiver's coverage
+                // would fold some contribution in twice
+                assert!(
+                    snapshot[op.from][s] & cov[op.to][s] == 0,
+                    "segment {s}: rank {} double-adds contributions at rank {}",
+                    op.from, op.to
+                );
+                cov[op.to][s] |= snapshot[op.from][s];
+            }
+        }
+    }
+    // fin[r][s]: r holds the final (fully reduced) segment s
+    let mut fin: Vec<Vec<bool>> = cov
+        .iter()
+        .map(|row| row.iter().map(|&c| c == full).collect())
+        .collect();
+    for step in &rs.gather.steps {
+        let snapshot = fin.clone();
+        for op in step {
+            for &s in &op.blocks {
+                assert!(
+                    snapshot[op.from][s],
+                    "rank {} forwards segment {} before it is fully reduced",
+                    op.from, s
+                );
+                fin[op.to][s] = true;
+            }
+        }
+    }
+    fin.iter().all(|row| row.iter().all(|&x| x))
 }
 
 #[cfg(test)]
@@ -575,6 +937,145 @@ mod tests {
     #[should_panic(expected = "partition")]
     fn hierarchical_rejects_non_partition() {
         let _ = hierarchical_allgatherv(4, &[vec![0, 1], vec![1, 2, 3]], LeaderAlgo::Ring);
+    }
+
+    #[test]
+    fn ring_allreduce_reduces_and_delivers() {
+        for p in 1..=17 {
+            let rs = ring_allreduce(p, None);
+            assert!(execute_allreduce(p, &rs), "p={p}");
+            assert_eq!(rs.rounds(), 2 * p.saturating_sub(1));
+            // every segment crosses exactly 2(P-1) wires
+            for phase in rs.phases() {
+                let per = phase.block_transfer_counts(p);
+                assert!(per.iter().all(|&n| n == p - 1), "p={p}: {per:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_with_permuted_order() {
+        let order = [3usize, 1, 4, 0, 2];
+        let rs = ring_allreduce(5, Some(&order));
+        assert!(execute_allreduce(5, &rs));
+    }
+
+    #[test]
+    fn halving_doubling_reduces_powers_of_two() {
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            let rs = halving_doubling_allreduce(p);
+            assert!(execute_allreduce(p, &rs), "p={p}");
+            let logp = (p as f64).log2() as usize;
+            assert_eq!(rs.rounds(), 2 * logp);
+            let mut per = vec![0usize; p];
+            for (b, n) in rs.reduce.block_transfer_counts(p).iter().enumerate() {
+                per[b] += n;
+            }
+            for (b, n) in rs.gather.block_transfer_counts(p).iter().enumerate() {
+                per[b] += n;
+            }
+            assert!(per.iter().all(|&n| n == 2 * (p - 1) || p == 1), "p={p}: {per:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn halving_doubling_rejects_non_pow2() {
+        let _ = halving_doubling_allreduce(12);
+    }
+
+    #[test]
+    fn bcast_msg_schedules_deliver_from_root() {
+        for p in 1..=13usize {
+            for root in [0, p / 2, p - 1] {
+                // only the root holds the message segments initially
+                let init: Vec<Vec<bool>> =
+                    (0..p).map(|r| vec![r == root; p]).collect();
+                let b = binomial_bcast_msg(p, root, p);
+                assert!(all_delivered(&execute_from(p, p, &init, &[&b])), "binomial p={p}");
+                let log2p = if p > 1 { (p as f64).log2().ceil() as usize } else { 0 };
+                assert_eq!(b.steps.len(), log2p);
+                let sag = scatter_allgather_bcast(p, root);
+                assert!(
+                    all_delivered(&execute_from(p, p, &init, &[&sag.scatter, &sag.gather])),
+                    "sag p={p} root={root}"
+                );
+                let r = ring_bcast_msg(p, root, p, None);
+                assert!(all_delivered(&execute_from(p, p, &init, &[&r])), "ring p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_allgather_closed_forms() {
+        for p in [2usize, 3, 5, 8, 13, 16] {
+            let sag = scatter_allgather_bcast(p, 0);
+            assert_eq!(sag.rounds(), (p as f64).log2().ceil() as usize + (p - 1));
+            // scatter ships segment s once per binomial-tree ancestor
+            // hop: popcount(s) in relative-rank space
+            let per = sag.scatter.block_transfer_counts(p);
+            for (s, &n) in per.iter().enumerate() {
+                assert_eq!(n, s.count_ones() as usize, "p={p} seg={s}");
+            }
+            // the ring allgather moves every segment the other P-1 times
+            let per = sag.gather.block_transfer_counts(p);
+            assert!(per.iter().all(|&n| n == p - 1), "p={p}: {per:?}");
+        }
+    }
+
+    #[test]
+    fn pairwise_alltoallv_is_exact() {
+        for p in 1..=13usize {
+            let s = pairwise_alltoallv(p);
+            assert_eq!(s.steps.len(), p.saturating_sub(1));
+            // rank i starts holding row i; must end holding column i too
+            let init: Vec<Vec<bool>> = (0..p)
+                .map(|i| (0..p * p).map(|b| b / p == i).collect())
+                .collect();
+            let held = execute_from(p, p * p, &init, &[&s]);
+            for r in 0..p {
+                for src in 0..p {
+                    assert!(held[r][src * p + r], "p={p} rank {r} missing block ({src},{r})");
+                }
+            }
+            // every off-diagonal (src, dst) block crosses exactly one wire
+            let per = s.block_transfer_counts(p * p);
+            for src in 0..p {
+                for dst in 0..p {
+                    let expect = usize::from(src != dst);
+                    assert_eq!(per[src * p + dst], expect, "p={p} ({src},{dst})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "double-adds")]
+    fn allreduce_oracle_rejects_double_add() {
+        // folding the same contribution in twice must be caught
+        let bad = ReduceSchedule {
+            reduce: Schedule {
+                steps: vec![
+                    vec![SendOp { from: 0, to: 1, blocks: vec![0] }],
+                    vec![SendOp { from: 0, to: 1, blocks: vec![0] }],
+                ],
+            },
+            gather: Schedule::default(),
+        };
+        let _ = execute_allreduce(2, &bad);
+    }
+
+    #[test]
+    #[should_panic(expected = "fully reduced")]
+    fn allreduce_oracle_rejects_partial_forward() {
+        // gather phase may only ship fully reduced segments
+        let bad = ReduceSchedule {
+            reduce: Schedule::default(),
+            gather: Schedule {
+                steps: vec![vec![SendOp { from: 0, to: 1, blocks: vec![0] }]],
+            },
+        };
+        let _ = execute_allreduce(2, &bad);
     }
 
     #[test]

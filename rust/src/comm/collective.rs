@@ -1,0 +1,652 @@
+//! The op-generic collective layer (DESIGN.md §13): allreduce,
+//! broadcast and alltoallv next to the paper's Allgatherv, all
+//! dispatched over the **same** per-library compose entry points so the
+//! selector, fault and workload layers accept the new ops without
+//! forked code paths.
+//!
+//! A [`CollectiveSpec`] pairs an op with its count shape (per-rank
+//! contributions, vector segments, a root message, or a src×dst count
+//! matrix); [`compose_collective`] lowers it to the library-agnostic
+//! phase [`Schedule`]s of `comm::algorithms` and hands those to the
+//! library transports:
+//! - **MPI**: explicit D2H staging of what each rank contributes, the
+//!   phases host-to-host with eager/rendezvous overheads per chunk,
+//!   H2D of what each rank must end up holding
+//!   ([`super::mpi::Mpi::compose_phases`]);
+//! - **MPI-CUDA**: every chunk rides the per-send CUDA-aware data-path
+//!   dispatch (P2P / staged / GDR by chunk size);
+//! - **NCCL**: one kernel-launch overhead per collective, then sends on
+//!   the NVLink-preferring hop route; the caller's
+//!   [`ChunkCfg`] over a ring-shaped schedule *is* the NCCL pipeline.
+//!   NCCL Allgatherv keeps delegating to the native Listing-1 bcast
+//!   series ([`super::nccl::Nccl::compose`]), whose adaptive slicing
+//!   already plays the chunking role.
+//!
+//! Modeling choices, shared with the paper's Allgatherv measurements:
+//! reduction arithmetic is free (the paper times data movement; on-GPU
+//! adds overlap the wire at tens of GB/s), and MPI staging accounts
+//! exactly for the device bytes an op touches — an allreduce stages the
+//! whole vector both ways, a bcast stages down only at the root, an
+//! alltoallv never stages its resident diagonal block.
+//!
+//! The lockdown mirrors PRs 4–5: `tests/collective_conformance.rs`
+//! machine-checks the closed forms (2(P−1)·Σcounts allreduce wire
+//! bytes, ⌈log2 P⌉ rounds for halving/doubling and binomial bcast,
+//! exact pairwise delivery) and pins `chunks = 1` **bit-exact** against
+//! the pre-existing unchunked Allgatherv path per library × system ×
+//! irregular vector, on both engine cores.
+
+use crate::sim::{Sim, TaskId};
+use crate::topology::Topology;
+
+use super::algorithms::{
+    binomial_bcast_msg, halving_doubling_allreduce, pairwise_alltoallv, ring_allreduce,
+    ring_bcast_msg, scatter_allgather_bcast, Schedule,
+};
+use super::mpi::{select_algorithm, Mpi};
+use super::mpi_cuda::MpiCuda;
+use super::nccl::{detect_ring, Nccl};
+use super::transport::ChunkCfg;
+use super::{CommResult, Library, Params};
+
+/// The collective operations the simulator models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveOp {
+    /// Irregular all-gather (the paper's op).
+    Allgatherv,
+    /// Sum-reduce a vector and leave the result everywhere.
+    Allreduce,
+    /// One root's message to every rank.
+    Bcast,
+    /// Personalized all-to-all with per-(src, dst) counts.
+    Alltoallv,
+}
+
+impl CollectiveOp {
+    /// CLI/report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveOp::Allgatherv => "allgatherv",
+            CollectiveOp::Allreduce => "allreduce",
+            CollectiveOp::Bcast => "bcast",
+            CollectiveOp::Alltoallv => "alltoallv",
+        }
+    }
+
+    /// Parse an op name as accepted by `agv collective --op`.
+    pub fn parse(s: &str) -> Option<CollectiveOp> {
+        match s.to_ascii_lowercase().as_str() {
+            "allgatherv" | "allgather" => Some(CollectiveOp::Allgatherv),
+            "allreduce" => Some(CollectiveOp::Allreduce),
+            "bcast" | "broadcast" => Some(CollectiveOp::Bcast),
+            "alltoallv" | "alltoall" => Some(CollectiveOp::Alltoallv),
+            _ => None,
+        }
+    }
+
+    /// All ops, Allgatherv first.
+    pub fn all() -> [CollectiveOp; 4] {
+        [
+            CollectiveOp::Allgatherv,
+            CollectiveOp::Allreduce,
+            CollectiveOp::Bcast,
+            CollectiveOp::Alltoallv,
+        ]
+    }
+}
+
+/// One collective call: the op plus its count shape. Counts are bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CollectiveSpec {
+    /// Rank r contributes `counts[r]`; everyone ends with all of it.
+    Allgatherv {
+        /// Per-rank contribution bytes.
+        counts: Vec<u64>,
+    },
+    /// The reduced vector cut into P segments of `segs[s]` bytes each
+    /// (irregular splits model ragged reduction layouts).
+    Allreduce {
+        /// Per-segment bytes; `segs.len()` is the rank count.
+        segs: Vec<u64>,
+    },
+    /// `root`'s message, cut into P segments of `segs[s]` bytes.
+    Bcast {
+        /// Per-segment bytes; `segs.len()` is the rank count.
+        segs: Vec<u64>,
+        /// Broadcasting rank.
+        root: usize,
+    },
+    /// Src-major flattened count matrix: `counts[src * p + dst]` bytes
+    /// from src to dst.
+    Alltoallv {
+        /// Flattened p×p matrix.
+        counts: Vec<u64>,
+        /// Rank count.
+        p: usize,
+    },
+}
+
+impl CollectiveSpec {
+    /// Which op this spec is.
+    pub fn op(&self) -> CollectiveOp {
+        match self {
+            CollectiveSpec::Allgatherv { .. } => CollectiveOp::Allgatherv,
+            CollectiveSpec::Allreduce { .. } => CollectiveOp::Allreduce,
+            CollectiveSpec::Bcast { .. } => CollectiveOp::Bcast,
+            CollectiveSpec::Alltoallv { .. } => CollectiveOp::Alltoallv,
+        }
+    }
+
+    /// Number of participating ranks.
+    pub fn ranks(&self) -> usize {
+        match self {
+            CollectiveSpec::Allgatherv { counts } => counts.len(),
+            CollectiveSpec::Allreduce { segs } => segs.len(),
+            CollectiveSpec::Bcast { segs, .. } => segs.len(),
+            CollectiveSpec::Alltoallv { p, .. } => *p,
+        }
+    }
+
+    /// Total payload bytes of the op (gathered buffer, reduced vector,
+    /// root message, or whole count matrix respectively).
+    pub fn total_bytes(&self) -> u64 {
+        match self {
+            CollectiveSpec::Allgatherv { counts } => counts.iter().sum(),
+            CollectiveSpec::Allreduce { segs } => segs.iter().sum(),
+            CollectiveSpec::Bcast { segs, .. } => segs.iter().sum(),
+            CollectiveSpec::Alltoallv { counts, .. } => counts.iter().sum(),
+        }
+    }
+
+    /// Check shape invariants, panicking with a precise message.
+    fn assert_valid(&self) {
+        match self {
+            CollectiveSpec::Allgatherv { counts } => {
+                assert!(!counts.is_empty(), "allgatherv needs at least one rank")
+            }
+            CollectiveSpec::Allreduce { segs } => {
+                assert!(!segs.is_empty(), "allreduce needs at least one rank")
+            }
+            CollectiveSpec::Bcast { segs, root } => {
+                assert!(*root < segs.len(), "bcast root {root} out of range");
+            }
+            CollectiveSpec::Alltoallv { counts, p } => {
+                assert_eq!(counts.len(), p * p, "alltoallv needs a p*p count matrix");
+                assert!(*p >= 1, "alltoallv needs at least one rank");
+            }
+        }
+    }
+
+    /// Build a spec for `op` from a per-rank count vector — the mapping
+    /// the workload engine's tenant streams use. Allgatherv and
+    /// allreduce take the vector as contributions / segment sizes;
+    /// bcast roots at rank 0 with the vector as segment sizes;
+    /// alltoallv becomes the row-uniform matrix where rank src sends
+    /// `counts[src]` bytes to each peer (zero diagonal).
+    pub fn from_vector(op: CollectiveOp, counts: &[u64]) -> CollectiveSpec {
+        let p = counts.len();
+        match op {
+            CollectiveOp::Allgatherv => CollectiveSpec::Allgatherv { counts: counts.to_vec() },
+            CollectiveOp::Allreduce => CollectiveSpec::Allreduce { segs: counts.to_vec() },
+            CollectiveOp::Bcast => CollectiveSpec::Bcast { segs: counts.to_vec(), root: 0 },
+            CollectiveOp::Alltoallv => {
+                let mut m = vec![0u64; p * p];
+                for src in 0..p {
+                    for dst in 0..p {
+                        if src != dst {
+                            m[src * p + dst] = counts[src];
+                        }
+                    }
+                }
+                CollectiveSpec::Alltoallv { counts: m, p }
+            }
+        }
+    }
+
+    /// The library-agnostic phase schedules and their block-size vector
+    /// for `lib` on `topo`: MPI and MPI-CUDA follow the MVAPICH-style
+    /// mean-size algorithm switches, NCCL runs ring-family schedules
+    /// over its detected ring. (NCCL Allgatherv never reaches this —
+    /// [`compose_collective`] delegates it to the native bcast series.)
+    pub fn phases_for(
+        &self,
+        topo: &Topology,
+        lib: Library,
+        params: &Params,
+    ) -> (Vec<Schedule>, Vec<u64>) {
+        self.assert_valid();
+        let p = self.ranks();
+        match self {
+            CollectiveSpec::Allgatherv { counts } => {
+                (vec![select_algorithm(params, counts)], counts.clone())
+            }
+            CollectiveSpec::Allreduce { segs } => {
+                let phases = match lib {
+                    Library::Nccl => {
+                        let ring = detect_ring(topo, p);
+                        let rs = ring_allreduce(p, Some(&ring));
+                        vec![rs.reduce, rs.gather]
+                    }
+                    _ => match select_allreduce(params, segs) {
+                        ReduceAlgo::HalvingDoubling => {
+                            let rs = halving_doubling_allreduce(p);
+                            vec![rs.reduce, rs.gather]
+                        }
+                        ReduceAlgo::Ring => {
+                            let rs = ring_allreduce(p, None);
+                            vec![rs.reduce, rs.gather]
+                        }
+                    },
+                };
+                (phases, segs.clone())
+            }
+            CollectiveSpec::Bcast { segs, root } => {
+                let phases = match lib {
+                    Library::Nccl => {
+                        let ring = detect_ring(topo, p);
+                        vec![ring_bcast_msg(p, *root, p, Some(&ring))]
+                    }
+                    _ => match select_bcast(params, segs) {
+                        BcastAlgo::Binomial => vec![binomial_bcast_msg(p, *root, p)],
+                        BcastAlgo::ScatterAllgather => {
+                            let b = scatter_allgather_bcast(p, *root);
+                            vec![b.scatter, b.gather]
+                        }
+                    },
+                };
+                (phases, segs.clone())
+            }
+            CollectiveSpec::Alltoallv { counts, .. } => {
+                (vec![pairwise_alltoallv(p)], counts.clone())
+            }
+        }
+    }
+
+    /// Per-rank explicit-staging byte counts for the plain-MPI
+    /// transport: (D2H before the collective, H2D after it).
+    pub fn mpi_staging(&self) -> (Vec<u64>, Vec<u64>) {
+        let p = self.ranks();
+        match self {
+            CollectiveSpec::Allgatherv { counts } => {
+                let total: u64 = counts.iter().sum();
+                (counts.clone(), vec![total; p])
+            }
+            CollectiveSpec::Allreduce { segs } => {
+                // every rank contributes and receives the whole vector
+                let total: u64 = segs.iter().sum();
+                (vec![total; p], vec![total; p])
+            }
+            CollectiveSpec::Bcast { segs, root } => {
+                let total: u64 = segs.iter().sum();
+                let down = (0..p).map(|r| if r == *root { total } else { 0 }).collect();
+                let up = (0..p).map(|r| if r == *root { 0 } else { total }).collect();
+                (down, up)
+            }
+            CollectiveSpec::Alltoallv { counts, .. } => {
+                // the diagonal block stays resident on its device
+                let down = (0..p)
+                    .map(|src| (0..p).filter(|&d| d != src).map(|d| counts[src * p + d]).sum())
+                    .collect();
+                let up = (0..p)
+                    .map(|dst| (0..p).filter(|&s| s != dst).map(|s| counts[s * p + dst]).sum())
+                    .collect();
+                (down, up)
+            }
+        }
+    }
+}
+
+/// Which allreduce algorithm the MVAPICH-style mean-size rule picks:
+/// latency-optimal recursive halving/doubling for short vectors on
+/// power-of-two rank counts, bandwidth-optimal ring otherwise — the
+/// same mean-count rule whose irregular-vector misselections the paper
+/// documents for Allgatherv (§V-C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceAlgo {
+    /// Reduce-scatter + allgather ring, 2(P−1) rounds.
+    Ring,
+    /// Recursive halving + doubling, 2·log2 P rounds (power-of-two P).
+    HalvingDoubling,
+}
+
+/// MVAPICH-style allreduce algorithm selection on the mean segment size.
+pub fn select_allreduce(params: &Params, segs: &[u64]) -> ReduceAlgo {
+    let p = segs.len();
+    let avg = segs.iter().sum::<u64>() / p.max(1) as u64;
+    if p.is_power_of_two() && avg <= params.allgatherv_algo_switch {
+        ReduceAlgo::HalvingDoubling
+    } else {
+        ReduceAlgo::Ring
+    }
+}
+
+/// Which broadcast algorithm the MPI paths pick.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BcastAlgo {
+    /// Binomial tree, ⌈log2 P⌉ rounds, ships the whole message per hop.
+    Binomial,
+    /// Scatter + ring allgather (van de Geijn), bandwidth-optimal.
+    ScatterAllgather,
+}
+
+/// MVAPICH-style bcast algorithm selection on the mean segment size.
+pub fn select_bcast(params: &Params, segs: &[u64]) -> BcastAlgo {
+    let p = segs.len();
+    let avg = segs.iter().sum::<u64>() / p.max(1) as u64;
+    if avg <= params.allgatherv_algo_switch {
+        BcastAlgo::Binomial
+    } else {
+        BcastAlgo::ScatterAllgather
+    }
+}
+
+/// Compose one collective into a **shared** simulation behind an
+/// optional gate — the same contract as [`super::compose_allgatherv`],
+/// which the fault layer (`perturb::perturbed_collective`) and the
+/// workload engine reuse verbatim. `chunk` segments every logical send
+/// into wire chunks; `ChunkCfg::none()` reproduces the unchunked DAG
+/// task-for-task (for Allgatherv that means **bit-exact** agreement
+/// with [`super::compose_allgatherv`] — the conformance differential).
+pub fn compose_collective(
+    sim: &mut Sim,
+    lib: Library,
+    params: Params,
+    spec: &CollectiveSpec,
+    chunk: ChunkCfg,
+    gate: Option<TaskId>,
+) -> TaskId {
+    spec.assert_valid();
+    if let (Library::Nccl, CollectiveSpec::Allgatherv { counts }) = (lib, spec) {
+        // the native Listing-1 bcast series: its adaptive slicing is
+        // NCCL's own chunking, so `chunk` does not apply here
+        return Nccl::new(params).compose(sim, counts, gate);
+    }
+    let p = spec.ranks();
+    let topo = sim.topology();
+    let (phases, blocks) = spec.phases_for(topo, lib, &params);
+    let refs: Vec<&Schedule> = phases.iter().collect();
+    match lib {
+        Library::Mpi => {
+            let (down, up) = spec.mpi_staging();
+            Mpi::new(params).compose_phases(sim, p, &blocks, &refs, &down, &up, chunk, gate)
+        }
+        Library::MpiCuda => {
+            MpiCuda::new(params).compose_phases(sim, p, &blocks, &refs, chunk, gate)
+        }
+        Library::Nccl => Nccl::new(params).compose_phases(sim, p, &blocks, &refs, chunk, gate),
+    }
+}
+
+/// Run one collective in a fresh simulation (the one-shot form, like
+/// [`super::run_allgatherv`] for the paper's op).
+pub fn run_collective(
+    topo: &Topology,
+    lib: Library,
+    params: Params,
+    spec: &CollectiveSpec,
+    chunk: ChunkCfg,
+) -> CommResult {
+    let mut sim = Sim::new(topo);
+    let done = compose_collective(&mut sim, lib, params, spec, chunk, None);
+    let res = sim.run();
+    CommResult { time: res.finish(done), flows: res.flows }
+}
+
+/// Auto-select the fastest library for one spec by simulating all
+/// three — the selector story for the non-Allgatherv ops (Allgatherv
+/// additionally has the full per-algorithm candidate machinery in
+/// [`super::select`]). Ties break toward the paper's plotting order.
+pub fn auto_collective(
+    topo: &Topology,
+    params: Params,
+    spec: &CollectiveSpec,
+    chunk: ChunkCfg,
+) -> (Library, CommResult) {
+    let mut best: Option<(Library, CommResult)> = None;
+    for lib in Library::all() {
+        let r = run_collective(topo, lib, params, spec, chunk);
+        if best.map(|(_, b)| r.time < b.time).unwrap_or(true) {
+            best = Some((lib, r));
+        }
+    }
+    best.expect("three libraries evaluated")
+}
+
+/// The `bench_collectives` measurement grid and its deterministic
+/// `BENCH_collectives.json` payload: per system × op, the three
+/// library times, the auto verdict, and the 4-way chunk-pipelining
+/// speedup — simulated metrics only, byte-reproducible from the seed
+/// (`tests/workload_determinism.rs` pins this).
+pub mod bench {
+    use super::*;
+    use crate::topology::systems::SystemKind;
+    use crate::util::json::{obj, Json};
+    use crate::util::prng::Rng;
+    use crate::util::prop::counts;
+
+    /// The bench grid: every paper system × every collective op, with
+    /// a seeded irregular count shape per case.
+    pub fn bench_cases(seed: u64) -> Vec<(String, Topology, CollectiveSpec)> {
+        let mut rng = Rng::new(seed ^ 0xC0_11EC_71);
+        let mut out = Vec::new();
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = topo.num_gpus().min(8);
+            for op in CollectiveOp::all() {
+                let spec = match op {
+                    CollectiveOp::Allgatherv => CollectiveSpec::Allgatherv {
+                        counts: counts::irregular(&mut rng, p, 16 << 20),
+                    },
+                    CollectiveOp::Allreduce => CollectiveSpec::Allreduce {
+                        segs: counts::reduce_widths(&mut rng, p, 16 << 20),
+                    },
+                    CollectiveOp::Bcast => CollectiveSpec::Bcast {
+                        segs: counts::reduce_widths(&mut rng, p, 16 << 20),
+                        root: rng.gen_range(p as u64) as usize,
+                    },
+                    CollectiveOp::Alltoallv => CollectiveSpec::Alltoallv {
+                        counts: counts::alltoallv_matrix(&mut rng, p, 4 << 20),
+                        p,
+                    },
+                };
+                out.push((format!("{}/{}", kind.name(), op.name()), kind.build(), spec));
+            }
+        }
+        out
+    }
+
+    /// Simulated metrics of one bench case as a JSON object.
+    fn case_doc(label: &str, topo: &Topology, spec: &CollectiveSpec) -> Json {
+        let params = Params::default();
+        let mut fields = vec![
+            ("case", Json::Str(label.to_string())),
+            ("op", Json::Str(spec.op().name().to_string())),
+            ("gpus", Json::Num(spec.ranks() as f64)),
+            ("total_bytes", Json::Num(spec.total_bytes() as f64)),
+        ];
+        let mut times = Vec::new();
+        for lib in Library::all() {
+            let r = run_collective(topo, lib, params, spec, ChunkCfg::none());
+            times.push((lib, r));
+        }
+        for &(lib, r) in &times {
+            fields.push((
+                match lib {
+                    Library::Mpi => "mpi_s",
+                    Library::MpiCuda => "mpi_cuda_s",
+                    Library::Nccl => "nccl_s",
+                },
+                Json::Num(r.time),
+            ));
+        }
+        let (winner, best) = auto_collective(topo, params, spec, ChunkCfg::none());
+        fields.push(("auto", Json::Str(winner.name().to_string())));
+        fields.push(("auto_s", Json::Num(best.time)));
+        fields.push(("flows", Json::Num(best.flows as f64)));
+        // chunk-pipelining gain on the winner (NCCL Allgatherv is its
+        // own pipeline, so the ratio degrades to 1.0 there)
+        let chunked = run_collective(topo, winner, params, spec, ChunkCfg::pipelined(4));
+        fields.push(("chunked4_s", Json::Num(chunked.time)));
+        fields.push(("chunk_speedup", Json::Num(best.time / chunked.time.max(1e-30))));
+        obj(fields)
+    }
+
+    /// The full deterministic `BENCH_collectives.json` document; cases
+    /// fan out over the bounded worker pool in submission order.
+    pub fn bench_doc(seed: u64) -> Json {
+        let cases = bench_cases(seed);
+        let jobs: Vec<_> = cases
+            .iter()
+            .map(|(label, topo, spec)| move || case_doc(label, topo, spec))
+            .collect();
+        let docs = crate::util::pool::parallel_map(jobs);
+        obj(vec![
+            ("bench", Json::Str("bench_collectives".to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("cases", Json::Arr(docs)),
+        ])
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn cases_cover_every_system_and_op() {
+            let cases = bench_cases(42);
+            assert_eq!(cases.len(), SystemKind::all().len() * CollectiveOp::all().len());
+            for kind in SystemKind::all() {
+                for op in CollectiveOp::all() {
+                    let label = format!("{}/{}", kind.name(), op.name());
+                    assert!(cases.iter().any(|(l, ..)| *l == label), "{label} missing");
+                }
+            }
+        }
+
+        #[test]
+        fn doc_is_simulated_only_and_sane() {
+            let doc = bench_doc(7);
+            let cases = doc.get("cases").unwrap().as_arr().unwrap();
+            assert_eq!(cases.len(), 12);
+            for c in cases {
+                assert!(c.get("auto_s").unwrap().as_f64().unwrap() > 0.0);
+                assert!(c.get("mean_s").is_none(), "wall-clock field leaked into the artifact");
+                let speedup = c.get("chunk_speedup").unwrap().as_f64().unwrap();
+                assert!(speedup.is_finite() && speedup > 0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::systems::SystemKind;
+
+    #[test]
+    fn op_parse_roundtrip() {
+        for op in CollectiveOp::all() {
+            assert_eq!(CollectiveOp::parse(op.name()), Some(op));
+        }
+        assert_eq!(CollectiveOp::parse("broadcast"), Some(CollectiveOp::Bcast));
+        assert_eq!(CollectiveOp::parse("reduce-scatter"), None);
+    }
+
+    #[test]
+    fn every_op_runs_on_every_system_and_library() {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = topo.num_gpus().min(4);
+            let base: Vec<u64> = (0..p as u64).map(|i| (i + 1) << 18).collect();
+            for op in CollectiveOp::all() {
+                let spec = CollectiveSpec::from_vector(op, &base);
+                for lib in Library::all() {
+                    let r = run_collective(&topo, lib, Params::default(), &spec, ChunkCfg::none());
+                    assert!(
+                        r.time > 0.0 && r.time.is_finite(),
+                        "{}/{}/{}: bad time {}",
+                        kind.name(),
+                        op.name(),
+                        lib.name(),
+                        r.time
+                    );
+                    assert!(r.flows > 0 || p == 1, "no flows simulated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_collective_is_argmin_over_libraries() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = CollectiveSpec::from_vector(CollectiveOp::Allreduce, &[4 << 20; 8]);
+        let (winner, best) = auto_collective(&topo, Params::default(), &spec, ChunkCfg::none());
+        for lib in Library::all() {
+            let r = run_collective(&topo, lib, Params::default(), &spec, ChunkCfg::none());
+            assert!(best.time <= r.time, "auto {} lost to {}", winner.name(), lib.name());
+        }
+    }
+
+    #[test]
+    fn allreduce_selection_follows_mean_rule() {
+        let params = Params::default();
+        assert_eq!(select_allreduce(&params, &[1024; 8]), ReduceAlgo::HalvingDoubling);
+        assert_eq!(select_allreduce(&params, &[10 << 20; 8]), ReduceAlgo::Ring);
+        // non-power-of-two P can never pick halving/doubling
+        assert_eq!(select_allreduce(&params, &[1024; 6]), ReduceAlgo::Ring);
+        // irregular: small mean, huge tail — the paper's misselection
+        let mut segs = vec![1024u64; 8];
+        segs[3] = 400 << 10;
+        assert_eq!(select_allreduce(&params, &segs), ReduceAlgo::HalvingDoubling);
+    }
+
+    #[test]
+    fn from_vector_alltoallv_is_row_uniform_zero_diagonal() {
+        let spec = CollectiveSpec::from_vector(CollectiveOp::Alltoallv, &[10, 20, 30]);
+        match &spec {
+            CollectiveSpec::Alltoallv { counts, p } => {
+                assert_eq!(*p, 3);
+                for src in 0..3 {
+                    assert_eq!(counts[src * 3 + src], 0);
+                    for dst in 0..3 {
+                        if src != dst {
+                            assert_eq!(counts[src * 3 + dst], [10, 20, 30][src]);
+                        }
+                    }
+                }
+            }
+            _ => panic!("wrong variant"),
+        }
+        assert_eq!(spec.total_bytes(), 2 * (10 + 20 + 30));
+    }
+
+    #[test]
+    fn mpi_staging_accounts_device_bytes() {
+        let spec = CollectiveSpec::Bcast { segs: vec![4, 6], root: 1 };
+        let (down, up) = spec.mpi_staging();
+        assert_eq!(down, vec![0, 10]);
+        assert_eq!(up, vec![10, 0]);
+
+        let spec = CollectiveSpec::Alltoallv { counts: vec![0, 5, 7, 0], p: 2 };
+        let (down, up) = spec.mpi_staging();
+        assert_eq!(down, vec![5, 7]);
+        assert_eq!(up, vec![7, 5]);
+    }
+
+    #[test]
+    fn chunking_never_changes_delivery_only_timing() {
+        // same spec, chunked vs not: both finite, flows scale with k
+        let topo = SystemKind::Dgx1.build();
+        let spec = CollectiveSpec::from_vector(CollectiveOp::Allreduce, &[8 << 20; 4]);
+        let a = run_collective(&topo, Library::MpiCuda, Params::default(), &spec, ChunkCfg::none());
+        let b = run_collective(
+            &topo,
+            Library::MpiCuda,
+            Params::default(),
+            &spec,
+            ChunkCfg::pipelined(4),
+        );
+        assert!(a.time.is_finite() && b.time.is_finite());
+        assert!(b.flows >= a.flows, "chunking cannot reduce flow count");
+    }
+}

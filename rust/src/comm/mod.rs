@@ -16,7 +16,10 @@
 //!   two-level schedules) on the actual counts and topology, returns
 //!   the argmin, and caches decisions per irregularity bucket;
 //! - [`params`]: protocol constants and tunables, including the
-//!   `MV2_GPUDIRECT_LIMIT` knob the paper sweeps in §V-C.
+//!   `MV2_GPUDIRECT_LIMIT` knob the paper sweeps in §V-C;
+//! - [`collective`]: the op-generic layer (DESIGN.md §13) — allreduce,
+//!   broadcast and alltoallv specs dispatched over the same per-library
+//!   compose entry points, with `transport::ChunkCfg` wire chunking.
 //!
 //! Every library exposes its collective in two forms: a one-shot
 //! [`CommLibrary::allgatherv`] that runs in a `Sim` of its own, and a
@@ -28,6 +31,7 @@
 //! (DESIGN.md §9).
 
 pub mod algorithms;
+pub mod collective;
 pub mod mpi;
 pub mod mpi_cuda;
 pub mod nccl;

@@ -14,7 +14,10 @@ use crate::sim::{Sim, TaskId};
 use crate::topology::Topology;
 
 use super::algorithms::{bruck_allgatherv, ring_allgatherv, Schedule};
-use super::transport::{dtoh, host_to_host, htod, op_completion, run_schedule};
+use super::transport::{
+    chunk_bytes, dtoh, host_to_host, htod, op_completion, run_schedule, run_schedule_chunked,
+    ChunkCfg,
+};
 use super::{CommLibrary, CommResult, Params};
 
 /// Traditional MPI model: explicit staging + host-to-host collective.
@@ -64,6 +67,56 @@ impl Mpi {
         for (r, f) in finals.iter().enumerate() {
             let deps: Vec<_> = f.or(entry[r]).into_iter().collect();
             tails.push(htod(sim, topo, r, total as f64, &deps));
+        }
+        op_completion(sim, &tails, gate)
+    }
+
+    /// Compose an arbitrary multi-phase collective over the staged host
+    /// transport (DESIGN.md §13): explicit D2H of `stage_down[r]` bytes
+    /// per rank, the phase schedules host-to-host with per-chunk
+    /// eager/rendezvous overheads, then H2D of `stage_up[r]` bytes per
+    /// rank. `blocks` sizes the schedules' block-index space (rank
+    /// counts, vector segments, or a flattened count matrix). At
+    /// `chunk.chunks == 1` and an allgatherv phase list this builds the
+    /// task-for-task identical DAG as [`Mpi::compose_with`] — the
+    /// collective layer's chunks=1 differential relies on it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compose_phases(
+        &self,
+        sim: &mut Sim,
+        p: usize,
+        blocks: &[u64],
+        phases: &[&Schedule],
+        stage_down: &[u64],
+        stage_up: &[u64],
+        chunk: ChunkCfg,
+        gate: Option<TaskId>,
+    ) -> TaskId {
+        let topo = sim.topology();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        assert_eq!(stage_down.len(), p);
+        assert_eq!(stage_up.len(), p);
+        let gate_deps: Vec<TaskId> = gate.into_iter().collect();
+
+        // Explicit D2H of what each rank contributes to the wire.
+        let mut markers: Vec<Option<TaskId>> = (0..p)
+            .map(|r| Some(dtoh(sim, topo, r, stage_down[r] as f64, &gate_deps)))
+            .collect();
+
+        let params = self.params;
+        for phase in phases {
+            markers = run_schedule_chunked(sim, p, phase, &markers, chunk, |sim, op, j, k, deps| {
+                let bytes = chunk_bytes(op.bytes(blocks), k, j);
+                let ready = sim.delay(pt2pt_overhead(&params, bytes), deps);
+                host_to_host(sim, topo, &params, op.from, op.to, bytes as f64, &[ready])
+            });
+        }
+
+        // Explicit H2D of what each rank must end up holding on device.
+        let mut tails = Vec::new();
+        for (r, m) in markers.iter().enumerate() {
+            let deps: Vec<TaskId> = m.iter().copied().collect();
+            tails.push(htod(sim, topo, r, stage_up[r] as f64, &deps));
         }
         op_completion(sim, &tails, gate)
     }

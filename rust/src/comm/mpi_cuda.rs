@@ -20,7 +20,8 @@ use crate::topology::Topology;
 
 use super::mpi::{pt2pt_overhead, select_algorithm};
 use super::transport::{
-    direct_flow, gdr_send, op_completion, run_schedule, staged_pipeline, staged_serial,
+    chunk_bytes, direct_flow, gdr_send, op_completion, run_schedule, run_schedule_chunked,
+    staged_pipeline, staged_serial, ChunkCfg,
 };
 use super::{CommLibrary, CommResult, Params};
 
@@ -54,6 +55,34 @@ impl MpiCuda {
             self.send(sim, topo, op.from, op.to, op.bytes(counts), deps)
         });
         let tails: Vec<crate::sim::TaskId> = finals.iter().filter_map(|&f| f).collect();
+        op_completion(sim, &tails, gate)
+    }
+
+    /// Compose an arbitrary multi-phase collective over the CUDA-aware
+    /// transport (DESIGN.md §13): each chunk of each logical send rides
+    /// the same per-send data-path dispatch as
+    /// [`MpiCuda::compose_with`] (P2P / staged / GDR by chunk size). At
+    /// `chunk.chunks == 1` and an allgatherv phase list this builds the
+    /// task-for-task identical DAG as `compose_with` — the collective
+    /// layer's chunks=1 differential relies on it.
+    pub fn compose_phases(
+        &self,
+        sim: &mut Sim,
+        p: usize,
+        blocks: &[u64],
+        phases: &[&super::algorithms::Schedule],
+        chunk: ChunkCfg,
+        gate: Option<crate::sim::TaskId>,
+    ) -> crate::sim::TaskId {
+        let topo = sim.topology();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let mut markers = vec![gate; p];
+        for phase in phases {
+            markers = run_schedule_chunked(sim, p, phase, &markers, chunk, |sim, op, j, k, deps| {
+                self.send(sim, topo, op.from, op.to, chunk_bytes(op.bytes(blocks), k, j), deps)
+            });
+        }
+        let tails: Vec<crate::sim::TaskId> = markers.iter().filter_map(|&f| f).collect();
         op_completion(sim, &tails, gate)
     }
 

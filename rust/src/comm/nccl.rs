@@ -202,6 +202,47 @@ impl Nccl {
 }
 
 impl Nccl {
+    /// Compose an arbitrary multi-phase collective over the NCCL kernel
+    /// transport (DESIGN.md §13): one launch overhead for the whole
+    /// collective, then every logical send rides the NVLink-preferring
+    /// hop route with the single-ring drive penalty and the inter-node
+    /// proxy overhead per chunk. Chunking comes from the caller's
+    /// [`ChunkCfg`] — for ring-shaped phase schedules it *is* NCCL's
+    /// pipelining, made explicit at the schedule layer instead of the
+    /// adaptive slicing [`Nccl::compose`] applies to its native
+    /// bcast series.
+    pub fn compose_phases(
+        &self,
+        sim: &mut Sim,
+        p: usize,
+        blocks: &[u64],
+        phases: &[&super::algorithms::Schedule],
+        chunk: super::transport::ChunkCfg,
+        gate: Option<TaskId>,
+    ) -> TaskId {
+        use super::transport::{chunk_bytes, op_completion, run_schedule_chunked};
+        let topo = sim.topology();
+        assert!(p >= 1 && p <= topo.num_gpus());
+        let gate_deps: Vec<TaskId> = gate.into_iter().collect();
+        let launch = sim.delay(self.params.nccl_launch_overhead, &gate_deps);
+        let mut markers = vec![Some(launch); p];
+        for phase in phases {
+            markers = run_schedule_chunked(sim, p, phase, &markers, chunk, |sim, op, j, k, deps| {
+                let bytes = chunk_bytes(op.bytes(blocks), k, j) as f64;
+                let hop = self.hop(topo, op.from, op.to);
+                let lat = hop.latency + hop.chunk_overhead;
+                let flow = sim.flow(hop.path, bytes, lat, deps);
+                if hop.penalty_per_byte > 0.0 {
+                    sim.delay(bytes * hop.penalty_per_byte, &[flow])
+                } else {
+                    flow
+                }
+            });
+        }
+        let tails: Vec<TaskId> = markers.iter().filter_map(|&f| f).collect();
+        op_completion(sim, &tails, Some(launch))
+    }
+
     /// Compose the Listing-1 bcast-series Allgatherv into a shared
     /// simulation, starting only after `gate` completes (`None` =
     /// immediately at t=0). Returns the task finishing the last

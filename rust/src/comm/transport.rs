@@ -87,6 +87,11 @@ pub fn staged_pipeline(
     bytes: f64,
     deps: &[TaskId],
 ) -> TaskId {
+    if bytes <= 0.0 {
+        // zero-byte block (zero-heavy §IV vectors): nothing to stage —
+        // no 3-leg chunk, no per-chunk handshake, just the dependency
+        return sim.delay(0.0, deps);
+    }
     let chunk = params.pipeline_chunk as f64;
     let n_chunks = ((bytes / chunk).ceil() as usize).max(1);
     let per = bytes / n_chunks as f64;
@@ -134,6 +139,10 @@ pub fn staged_serial(
     bytes: f64,
     deps: &[TaskId],
 ) -> TaskId {
+    if bytes <= 0.0 {
+        // zero-byte block: no bounce, no stream sync (see staged_pipeline)
+        return sim.delay(0.0, deps);
+    }
     let chunk = params.ipc_fallback_chunk as f64;
     let n_chunks = ((bytes / chunk).ceil() as usize).max(1);
     let per = bytes / n_chunks as f64;
@@ -246,6 +255,139 @@ where
     marker
 }
 
+/// How a logical send is segmented into wire flows (DESIGN.md §13).
+///
+/// `chunks = 1` reproduces the unchunked schedule **task-for-task**:
+/// [`run_schedule_chunked`] then builds the identical DAG as
+/// [`run_schedule`], which the chunking differential oracle in
+/// `tests/collective_conformance.rs` locks down bit-exactly. `chunks =
+/// k > 1` splits every logical send into k wire flows; chunk j of step
+/// s depends on chunk j of step s−1 at the endpoints (the NCCL-style
+/// ring pipeline), so a chunk can race ahead down the ring while the
+/// tail of the previous step is still on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkCfg {
+    /// Wire chunks per logical send (>= 1).
+    pub chunks: usize,
+}
+
+impl ChunkCfg {
+    /// One flow per logical send — the unchunked baseline.
+    pub fn none() -> ChunkCfg {
+        ChunkCfg { chunks: 1 }
+    }
+
+    /// Pipeline each logical send as `k` wire chunks (clamped to >= 1).
+    pub fn pipelined(k: usize) -> ChunkCfg {
+        ChunkCfg { chunks: k.max(1) }
+    }
+}
+
+/// Size of chunk `j` when `bytes` is split into `k` integer chunks:
+/// the remainder spreads one byte at a time over the leading chunks, so
+/// the k sizes always sum to `bytes` exactly and `k = 1` returns
+/// `bytes` unchanged.
+pub fn chunk_bytes(bytes: u64, k: usize, j: usize) -> u64 {
+    debug_assert!(j < k);
+    let (k, j) = (k as u64, j as u64);
+    bytes / k + u64::from(j < bytes % k)
+}
+
+/// Run a [`Schedule`] with per-(rank, chunk) step barriers: each of the
+/// `cfg.chunks` chunk lanes is an independent copy of the
+/// [`run_schedule`] dependency structure — chunk j of a step-s+1 op
+/// waits on chunk j of what its endpoints did in step s — while the
+/// chunks of one logical op serialize on its wire (`prev`). The lanes
+/// only meet in the final per-rank fold, which joins a rank's chunk
+/// markers into the one completion marker callers already expect.
+///
+/// `send` emits the transport tasks for chunk `j` of `k` of one logical
+/// op; at `k = 1` the emitted DAG is task-for-task identical to
+/// [`run_schedule`]'s (same task creation order, same dependency lists,
+/// same joins) — the invariant the `chunks=1` differential relies on.
+pub fn run_schedule_chunked<F>(
+    sim: &mut Sim,
+    p: usize,
+    schedule: &Schedule,
+    entry: &[Option<TaskId>],
+    cfg: ChunkCfg,
+    mut send: F,
+) -> Vec<Option<TaskId>>
+where
+    F: FnMut(&mut Sim, &SendOp, usize, usize, &[TaskId]) -> TaskId,
+{
+    let k = cfg.chunks.max(1);
+    // marker[r][j]: task after which chunk lane j of rank r may proceed
+    let mut marker: Vec<Vec<Option<TaskId>>> = vec![vec![None; k]; p];
+    if !entry.is_empty() {
+        assert_eq!(entry.len(), p, "one entry marker per rank");
+        for (r, &e) in entry.iter().enumerate() {
+            for j in 0..k {
+                marker[r][j] = e;
+            }
+        }
+    }
+    for step in &schedule.steps {
+        let mut step_events: Vec<(usize, usize, TaskId)> = Vec::new();
+        for op in step {
+            let mut prev: Option<TaskId> = None;
+            for j in 0..k {
+                let mut deps: Vec<TaskId> = Vec::new();
+                if let Some(t) = marker[op.from][j] {
+                    deps.push(t);
+                }
+                if let Some(t) = marker[op.to][j] {
+                    if Some(t) != marker[op.from][j] {
+                        deps.push(t);
+                    }
+                }
+                if let Some(t) = prev {
+                    if !deps.contains(&t) {
+                        deps.push(t);
+                    }
+                }
+                let done = send(sim, op, j, k, &deps);
+                step_events.push((op.from, j, done));
+                step_events.push((op.to, j, done));
+                prev = Some(done);
+            }
+        }
+        // fold step events into per-(rank, chunk) markers
+        for r in 0..p {
+            for j in 0..k {
+                let mut evs: Vec<TaskId> = step_events
+                    .iter()
+                    .filter(|&&(rr, jj, _)| rr == r && jj == j)
+                    .map(|&(_, _, t)| t)
+                    .collect();
+                if let Some(t) = marker[r][j] {
+                    evs.push(t);
+                }
+                evs.sort_unstable();
+                evs.dedup();
+                marker[r][j] = match evs.len() {
+                    0 => None,
+                    1 => Some(evs[0]),
+                    _ => Some(sim.join(&evs)),
+                };
+            }
+        }
+    }
+    // fold the chunk lanes into one completion marker per rank
+    (0..p)
+        .map(|r| {
+            let mut evs: Vec<TaskId> = marker[r].iter().filter_map(|&t| t).collect();
+            evs.sort_unstable();
+            evs.dedup();
+            match evs.len() {
+                0 => None,
+                1 => Some(evs[0]),
+                _ => Some(sim.join(&evs)),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -313,6 +455,109 @@ mod tests {
         // P-1 steps, each >= bytes/nvlink_bw
         let hop = bytes / 18.0e9;
         assert!(total >= (p - 1) as f64 * hop * 0.99, "total={total}");
+    }
+
+    #[test]
+    fn staged_paths_zero_bytes_are_free() {
+        // regression: a zero-byte block used to emit one full 3-leg
+        // chunk (plus handshake / stream-sync delay) in both staged
+        // paths; it must now cost exactly nothing beyond its deps
+        let t = dgx1();
+        let params = Params::default();
+        for staged in [staged_pipeline, staged_serial] {
+            let mut sim = Sim::new(&t);
+            let gate = sim.delay(3.5e-6, &[]);
+            let before = sim.task_count();
+            let id = staged(&mut sim, &t, &params, 0, 5, 0.0, &[gate]);
+            assert_eq!(sim.task_count() - before, 1, "zero-byte send must be one no-op task");
+            assert_eq!(sim.flow_tasks_since(before), 0);
+            let res = sim.run();
+            assert_eq!(res.finish(id).to_bits(), 3.5e-6f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_runner_at_one_chunk_matches_run_schedule_exactly() {
+        // k=1 must build the task-for-task identical DAG: same task
+        // count, same completion times to the bit, on several schedules
+        let t = dgx1();
+        let params = Params::default();
+        for p in [2usize, 4, 8] {
+            let sched = ring_allgatherv(p, None);
+            let bytes: Vec<u64> = (0..p as u64).map(|b| (b + 1) * 1_000_003).collect();
+            let run = |chunked: bool| {
+                let mut sim = Sim::new(&t);
+                let gate = sim.delay(1.0e-6, &[]);
+                let entry = vec![Some(gate); p];
+                let finals = if chunked {
+                    run_schedule_chunked(
+                        &mut sim,
+                        p,
+                        &sched,
+                        &entry,
+                        ChunkCfg::none(),
+                        |sim, op, j, k, deps| {
+                            let b = chunk_bytes(op.bytes(&bytes), k, j) as f64;
+                            staged_pipeline(sim, &t, &params, op.from, op.to, b, deps)
+                        },
+                    )
+                } else {
+                    run_schedule(&mut sim, p, &sched, &entry, |sim, op, deps| {
+                        staged_pipeline(
+                            sim,
+                            &t,
+                            &params,
+                            op.from,
+                            op.to,
+                            op.bytes(&bytes) as f64,
+                            deps,
+                        )
+                    })
+                };
+                let tasks = sim.task_count();
+                let res = sim.run();
+                let times: Vec<u64> =
+                    finals.iter().map(|&f| res.finish(f.unwrap()).to_bits()).collect();
+                (tasks, times)
+            };
+            assert_eq!(run(true), run(false), "p={p}: chunks=1 DAG diverged");
+        }
+    }
+
+    #[test]
+    fn chunk_bytes_partitions_exactly() {
+        for (bytes, k) in [(10u64, 3usize), (0, 4), (7, 7), (129, 8), (1, 5)] {
+            let total: u64 = (0..k).map(|j| chunk_bytes(bytes, k, j)).sum();
+            assert_eq!(total, bytes, "bytes={bytes} k={k}");
+        }
+        assert_eq!(chunk_bytes(42, 1, 0), 42);
+    }
+
+    #[test]
+    fn chunk_pipelining_overlaps_ring_steps() {
+        // NVLink ring of direct flows, large blocks: 4-way chunking must
+        // beat the step-barriered unchunked schedule (chunk j of step
+        // s+1 starts while chunks j+1.. of step s are still on the wire)
+        let t = dgx1();
+        let p = 4;
+        let sched = ring_allgatherv(p, None);
+        let bytes = vec![32u64 << 20; p];
+        let run = |cfg: ChunkCfg| {
+            let mut sim = Sim::new(&t);
+            let finals =
+                run_schedule_chunked(&mut sim, p, &sched, &[], cfg, |sim, op, j, k, deps| {
+                    let b = chunk_bytes(op.bytes(&bytes), k, j) as f64;
+                    direct_flow(sim, &t, op.from, op.to, b, 0.0, deps)
+                });
+            let res = sim.run();
+            finals.iter().map(|&f| res.finish(f.unwrap())).fold(0.0, f64::max)
+        };
+        let unchunked = run(ChunkCfg::none());
+        let chunked = run(ChunkCfg::pipelined(4));
+        assert!(
+            chunked < 0.999 * unchunked,
+            "chunked={chunked} unchunked={unchunked}"
+        );
     }
 
     #[test]

@@ -179,6 +179,7 @@ pub fn refacto_workload_spec(
             name: format!("bg-{i}"),
             seed: 1 + i as u64,
             lib: lib.clone(),
+            op: crate::comm::collective::CollectiveOp::Allgatherv,
             stream: OpStream::Distribution {
                 dist: dists[i % dists.len()],
                 gpus: cfg.gpus,

@@ -61,6 +61,12 @@ COMMANDS
                                tenants share one fabric; idle-vs-contended latency
                                (--perturb degrades the shared fabric mid-flight)
 
+  collective [--op O] [--system S] [--gpus N] [--total BYTES] [--chunks K]
+             [--root R] [--seed N] [--perturb SPEC]
+                               op-generic collective study (O: allgatherv|allreduce|
+                               bcast|alltoallv): the §IV count shapes per library with
+                               the auto verdict; --chunks K pipelines every logical
+                               send as K wire chunks (NCCL-style ring pipelining)
   --perturb SPEC               comma-separated faults: link:<id>:<factor>[:<start>[:<dur>]]
                                | floor:<id>:<bytes/s>[:<start>[:<dur>]]
                                | straggler:<rank>:<factor>[:<start>[:<dur>]]
@@ -87,6 +93,12 @@ fn main() {
         "workload" => {
             if let Err(e) = cmd_workload(&args) {
                 eprintln!("workload failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        "collective" => {
+            if let Err(e) = cmd_collective(&args) {
+                eprintln!("collective failed: {e:#}");
                 std::process::exit(1);
             }
         }
@@ -527,6 +539,94 @@ fn cmd_sweep_gdr(args: &Args) {
             if *limit == best { "   <-- best" } else { "" }
         );
     }
+}
+
+fn cmd_collective(args: &Args) -> agv_bench::util::error::Result<()> {
+    use agv_bench::comm::collective::{
+        auto_collective, run_collective, CollectiveOp, CollectiveSpec,
+    };
+    use agv_bench::comm::transport::ChunkCfg;
+    use agv_bench::util::prng::Rng;
+    use agv_bench::util::prop::counts;
+
+    let op = {
+        let s = args.get_or("op", "allgatherv");
+        CollectiveOp::parse(s)
+            .ok_or_else(|| anyhow!("unknown op `{s}` (allgatherv|allreduce|bcast|alltoallv)"))?
+    };
+    let kind = {
+        let s = args.get_or("system", "dgx1");
+        SystemKind::parse(s).ok_or_else(|| anyhow!("unknown system `{s}` (cluster|dgx1|cs-storm)"))?
+    };
+    let topo = kind.build();
+    let gpus = args.get_usize("gpus", topo.num_gpus().min(8));
+    if gpus == 0 || gpus > topo.num_gpus() {
+        return Err(anyhow!("--gpus {gpus}: `{}` has {} GPUs", topo.name, topo.num_gpus()));
+    }
+    let total = match args.get("total") {
+        Some(s) => parse_bytes(s).ok_or_else(|| anyhow!("--total: bad size `{s}`"))?,
+        None => 64 << 20,
+    };
+    let root = args.get_usize("root", 0);
+    if root >= gpus {
+        return Err(anyhow!("--root {root}: op spans ranks 0..{gpus}"));
+    }
+    let chunks = args.get_usize("chunks", 1).max(1);
+    let seed = args.get_u64("seed", 42);
+    let perts = perturb_arg(args).unwrap_or_default();
+    perturb::validate(&topo, &perts)?;
+
+    let per_rank = (total / gpus as u64).max(1);
+    let mut rng = Rng::new(seed);
+    let shapes: Vec<(&str, Vec<u64>)> = vec![
+        ("regular", counts::regular(gpus, per_rank)),
+        ("skewed", counts::skewed(&mut rng, gpus, per_rank)),
+        ("zero-heavy", counts::zero_heavy(&mut rng, gpus, per_rank)),
+        ("single-hot", counts::single_hot(&mut rng, gpus, per_rank * gpus as u64)),
+    ];
+
+    let chunk = ChunkCfg::pipelined(chunks);
+    println!(
+        "collective {} on {} ({gpus} GPUs, ~{} total, chunks {chunks}, seed {seed})",
+        op.name(),
+        topo.name,
+        fmt_bytes(total),
+    );
+    println!();
+    let degraded = !perts.is_empty();
+    let head_extra = if degraded { "  degraded" } else { "" };
+    println!("{:<12} {:>12} {:>12} {:>12}   auto{head_extra}", "shape", "MPI", "MPI-CUDA", "NCCL");
+    for (label, cv) in &shapes {
+        let mut spec = CollectiveSpec::from_vector(op, cv);
+        if let CollectiveSpec::Bcast { root: r, .. } = &mut spec {
+            *r = root;
+        }
+        let mut row = format!("{label:<12}");
+        for lib in Library::all() {
+            let r = run_collective(&topo, lib, Params::default(), &spec, chunk);
+            row.push_str(&format!(" {:>12}", fmt_time(r.time)));
+        }
+        let (winner, best) = auto_collective(&topo, Params::default(), &spec, chunk);
+        row.push_str(&format!("   {} {}", winner.name(), fmt_time(best.time)));
+        if degraded {
+            let d = perturb::perturbed_collective(
+                &topo,
+                winner,
+                Params::default(),
+                &spec,
+                chunk,
+                &perts,
+            );
+            row.push_str(&format!("  {}", fmt_time(d.time)));
+        }
+        println!("{row}");
+    }
+    if chunks > 1 {
+        println!();
+        println!("(chunked pipelining: every logical send split into {chunks} wire chunks;");
+        println!(" compare against `--chunks 1` for the unpipelined baseline)");
+    }
+    Ok(())
 }
 
 fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {

@@ -313,6 +313,27 @@ pub fn perturbed_allgatherv(
     CommResult { time: res.finish(done), flows: res.flows }
 }
 
+/// [`perturbed_allgatherv`] for any [`CollectiveSpec`] op — allreduce,
+/// bcast and alltoallv ride the same compose-then-perturb contract as
+/// the paper's Allgatherv (DESIGN.md §13), so the fault model needs no
+/// per-op code. With an empty `perts` this reproduces
+/// [`crate::comm::collective::run_collective`] bit-for-bit.
+pub fn perturbed_collective(
+    topo: &Topology,
+    lib: Library,
+    params: Params,
+    spec: &crate::comm::collective::CollectiveSpec,
+    chunk: crate::comm::transport::ChunkCfg,
+    perts: &[Perturbation],
+) -> CommResult {
+    let mut sim = Sim::new(topo);
+    let done =
+        crate::comm::collective::compose_collective(&mut sim, lib, params, spec, chunk, None);
+    apply(&mut sim, perts);
+    let res = sim.run();
+    CommResult { time: res.finish(done), flows: res.flows }
+}
+
 /// [`perturbed_allgatherv`] for a specific (library, algorithm)
 /// candidate — the robust selector's scenario evaluator. `None` iff the
 /// candidate is inapplicable, exactly as for

@@ -85,6 +85,37 @@ pub mod counts {
             _ => single_hot(rng, p, max),
         }
     }
+
+    /// Reduction segment widths for allreduce/bcast specs: the reduced
+    /// vector cut into P ragged pieces. Draws an irregularity regime
+    /// like [`irregular`] but guarantees at least one non-zero segment
+    /// (a fully empty reduce vector is a different degenerate, covered
+    /// by explicit zero-count tests).
+    pub fn reduce_widths(rng: &mut Rng, p: usize, max: u64) -> Vec<u64> {
+        let mut v = irregular(rng, p, max);
+        if v.iter().all(|&c| c == 0) {
+            v[rng.gen_range(p as u64) as usize] = 1 + rng.gen_range(max);
+        }
+        v
+    }
+
+    /// Src-major flattened p×p alltoallv count matrix with a zero
+    /// diagonal and per-row §IV irregularity regimes (each source rank
+    /// independently regular / skewed / zero-heavy / single-hot toward
+    /// its peers), so rows and columns stay mutually consistent: entry
+    /// `src * p + dst` is what src sends dst.
+    pub fn alltoallv_matrix(rng: &mut Rng, p: usize, max: u64) -> Vec<u64> {
+        let mut m = vec![0u64; p * p];
+        for src in 0..p {
+            let row = irregular(rng, p, max);
+            for dst in 0..p {
+                if dst != src {
+                    m[src * p + dst] = row[dst];
+                }
+            }
+        }
+        m
+    }
 }
 
 /// Assert helper producing `Result` for use inside properties.
@@ -148,6 +179,30 @@ mod tests {
         for _ in 0..32 {
             let v = counts::irregular(&mut rng, p, 1 << 24);
             assert_eq!(v.len(), p);
+        }
+    }
+
+    #[test]
+    fn reduce_widths_never_all_zero() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(7);
+        for _ in 0..256 {
+            let v = counts::reduce_widths(&mut rng, 8, 1 << 20);
+            assert_eq!(v.len(), 8);
+            assert!(v.iter().any(|&c| c > 0), "all-zero reduce vector");
+        }
+    }
+
+    #[test]
+    fn alltoallv_matrix_is_square_with_zero_diagonal() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(11);
+        for p in [1usize, 2, 5, 8, 16] {
+            let m = counts::alltoallv_matrix(&mut rng, p, 1 << 20);
+            assert_eq!(m.len(), p * p);
+            for r in 0..p {
+                assert_eq!(m[r * p + r], 0, "diagonal {r} not resident");
+            }
         }
     }
 

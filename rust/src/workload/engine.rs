@@ -17,8 +17,10 @@
 //! under the same max-min contention model the paper's §V-B
 //! measurements validate.
 
+use crate::comm::collective::{compose_collective, CollectiveOp, CollectiveSpec};
 use crate::comm::select::{compose as compose_candidate, AlgoSelector, Candidate};
-use crate::comm::{compose_allgatherv, Library, Params};
+use crate::comm::transport::ChunkCfg;
+use crate::comm::{Library, Params};
 use crate::sim::{Sim, TaskId};
 use crate::topology::Topology;
 use crate::util::error::Result;
@@ -32,6 +34,7 @@ use super::spec::{TenantLib, TenantSpec, WorkloadSpec};
 /// full and isolated runs (plans are removal-invariant).
 #[derive(Clone, Debug)]
 pub(crate) struct PlannedOp {
+    op: CollectiveOp,
     counts: Vec<u64>,
     plan: OpPlan,
     label: String,
@@ -69,17 +72,25 @@ pub(crate) fn plan(
                     (OpPlan::Cand(sel.candidate), sel.candidate.label())
                 }
             };
-            ops.push(PlannedOp { counts, plan, label });
+            ops.push(PlannedOp { op: ten.op, counts, plan, label });
         }
         plans.push(ops);
     }
     Ok(plans)
 }
 
-/// Compose one planned op into the shared sim behind `gate`.
+/// Compose one planned op into the shared sim behind `gate`. Every
+/// fixed-library op — Allgatherv included — routes through the
+/// op-generic [`compose_collective`] (DESIGN.md §13): at
+/// `ChunkCfg::none()` the Allgatherv spec builds the task-for-task
+/// identical DAG as `compose_allgatherv`, so the pre-existing
+/// differential tests lock the shared dispatch rather than a fork.
 fn compose_planned(sim: &mut Sim, params: Params, op: &PlannedOp, gate: Option<TaskId>) -> TaskId {
     match op.plan {
-        OpPlan::Lib(lib) => compose_allgatherv(sim, lib, params, &op.counts, gate),
+        OpPlan::Lib(lib) => {
+            let spec = CollectiveSpec::from_vector(op.op, &op.counts);
+            compose_collective(sim, lib, params, &spec, ChunkCfg::none(), gate)
+        }
         OpPlan::Cand(cand) => compose_candidate(sim, params, cand, &op.counts, gate)
             .expect("a selected candidate always composes on its own topology"),
     }
@@ -338,12 +349,48 @@ mod tests {
     }
 
     #[test]
+    fn single_collective_op_matches_isolated_run() {
+        // the non-Allgatherv twin of single_op_matches_isolated_library_run:
+        // a 1-tenant 1-op workload is the identical DAG to run_collective
+        let topo = SystemKind::Dgx1.build();
+        let counts = vec![64u64 << 10, 3 << 20, 1 << 16, 777];
+        for op in CollectiveOp::all() {
+            for lib in Library::all() {
+                let spec = crate::workload::spec::WorkloadSpec::single_collective(
+                    TenantLib::Fixed(lib),
+                    op,
+                    counts.clone(),
+                    1,
+                );
+                let w = run_workload(&topo, &spec, Params::default()).unwrap();
+                let solo = crate::comm::collective::run_collective(
+                    &topo,
+                    lib,
+                    Params::default(),
+                    &CollectiveSpec::from_vector(op, &counts),
+                    ChunkCfg::none(),
+                );
+                let rec = &w.tenants[0].ops[0];
+                assert_eq!(
+                    rec.finish.to_bits(),
+                    solo.time.to_bits(),
+                    "{}/{}",
+                    op.name(),
+                    lib.name()
+                );
+                assert_eq!(rec.flows, solo.flows, "{}/{}", op.name(), lib.name());
+            }
+        }
+    }
+
+    #[test]
     fn two_tenants_contend_and_iterations_chain() {
         let topo = SystemKind::CsStorm.build();
         let mk = |seed: u64, offset: f64| TenantSpec {
             name: format!("t{seed}"),
             seed,
             lib: TenantLib::Fixed(Library::MpiCuda),
+            op: CollectiveOp::Allgatherv,
             stream: OpStream::Fixed { counts: vec![4 << 20; 8] },
             ops: 2,
             start_offset: offset,

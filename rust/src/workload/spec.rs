@@ -9,6 +9,7 @@
 //! property tests depend on that removal invariance).
 
 use crate::anyhow;
+use crate::comm::collective::CollectiveOp;
 use crate::comm::Library;
 use crate::osu::distributions::Distribution;
 use crate::tensor::messages::mode_counts;
@@ -117,6 +118,14 @@ pub struct TenantSpec {
     pub seed: u64,
     /// Library (or auto selection) running the tenant's collectives.
     pub lib: TenantLib,
+    /// Which collective the stream issues: each op's count vector maps
+    /// to the op's spec via
+    /// [`crate::comm::collective::CollectiveSpec::from_vector`]
+    /// (allgatherv contributions, allreduce/bcast segment widths, or a
+    /// row-uniform alltoallv matrix). Auto selection requires
+    /// [`CollectiveOp::Allgatherv`] (the candidate machinery is
+    /// Allgatherv-specific); `validate` rejects other combinations.
+    pub op: CollectiveOp,
     /// Per-op count-vector generator.
     pub stream: OpStream,
     /// Number of collectives the tenant issues (>= 1).
@@ -139,12 +148,19 @@ impl TenantSpec {
             name: name.to_string(),
             seed,
             lib,
+            op: CollectiveOp::Allgatherv,
             stream,
             ops,
             start_offset: 0.0,
             gap: 0.0,
             jitter: 0.0,
         }
+    }
+
+    /// The same tenant issuing a different collective op.
+    pub fn with_op(mut self, op: CollectiveOp) -> TenantSpec {
+        self.op = op;
+        self
     }
 
     /// The tenant's arrival PRNG (deterministic, removal-invariant).
@@ -207,6 +223,20 @@ impl WorkloadSpec {
         }
     }
 
+    /// [`WorkloadSpec::single_op`] for an arbitrary collective — the
+    /// differential anchor for the non-Allgatherv ops (pinned against
+    /// [`crate::comm::collective::run_collective`]).
+    pub fn single_collective(
+        lib: TenantLib,
+        op: CollectiveOp,
+        counts: Vec<u64>,
+        seed: u64,
+    ) -> WorkloadSpec {
+        let mut spec = WorkloadSpec::single_op(lib, counts, seed);
+        spec.tenants[0].op = op;
+        spec
+    }
+
     /// The same workload on a degraded fabric (replaces the fault
     /// timeline).
     pub fn with_faults(mut self, faults: Vec<crate::perturb::Perturbation>) -> WorkloadSpec {
@@ -235,6 +265,7 @@ impl WorkloadSpec {
                     name: format!("tenant-{i}"),
                     seed: i as u64,
                     lib: lib.clone(),
+                    op: CollectiveOp::Allgatherv,
                     stream: OpStream::Distribution {
                         dist: dists[i % dists.len()],
                         gpus,
@@ -275,6 +306,13 @@ impl WorkloadSpec {
             }
             if t.ops == 0 {
                 return Err(anyhow!("tenant `{}`: needs at least one op", t.name));
+            }
+            if t.lib == TenantLib::Auto && t.op != CollectiveOp::Allgatherv {
+                return Err(anyhow!(
+                    "tenant `{}`: auto selection supports allgatherv only, not {}",
+                    t.name,
+                    t.op.name()
+                ));
             }
             let gpus = t.stream.gpus();
             if gpus == 0 {
@@ -387,6 +425,22 @@ mod tests {
         let mut neg = WorkloadSpec::synthetic(1, 1, 2, TenantLib::Auto, 1 << 20, 0);
         neg.tenants[0].gap = -1.0;
         assert!(neg.validate(&topo).is_err(), "negative gap");
+        // auto selection is allgatherv-only: other ops are a clean error
+        let auto_reduce = WorkloadSpec::single_collective(
+            TenantLib::Auto,
+            CollectiveOp::Allreduce,
+            vec![1 << 20; 4],
+            0,
+        );
+        let err = auto_reduce.validate(&topo).unwrap_err();
+        assert!(format!("{err:#}").contains("allgatherv only"), "{err:#}");
+        let fixed_reduce = WorkloadSpec::single_collective(
+            TenantLib::Fixed(Library::Nccl),
+            CollectiveOp::Allreduce,
+            vec![1 << 20; 4],
+            0,
+        );
+        fixed_reduce.validate(&topo).unwrap();
     }
 
     #[test]

@@ -23,7 +23,7 @@ fn stderr(o: &Output) -> String {
 /// Every subcommand in HELP. Kept in sync by `help_lists_every_subcommand`.
 const COMMANDS: &[&str] = &[
     "topo", "fig2", "table1", "fig3", "findings", "auto", "osu", "refacto",
-    "sweep-gdr", "faults", "workload", "e2e", "artifacts", "help",
+    "sweep-gdr", "faults", "workload", "collective", "e2e", "artifacts", "help",
 ];
 
 #[test]
@@ -286,6 +286,49 @@ fn workload_valid_trace_runs() {
     ]);
     assert!(out.status.success(), "{}", stderr(&out));
     assert!(stdout(&out).contains("trace"), "{}", stdout(&out));
+}
+
+#[test]
+fn collective_runs_every_op() {
+    for op in ["allgatherv", "allreduce", "bcast", "alltoallv"] {
+        let out = agv(&[
+            "collective", "--op", op, "--system", "dgx1", "--gpus", "2", "--total", "1MB",
+        ]);
+        assert!(out.status.success(), "{op}: {}", stderr(&out));
+        let text = stdout(&out);
+        assert!(text.contains(&format!("collective {op}")), "{op}:\n{text}");
+        // every shape row reports an auto verdict next to the fixed libs
+        assert!(text.contains("auto"), "{op}:\n{text}");
+    }
+}
+
+#[test]
+fn collective_chunked_and_perturbed_run() {
+    let out = agv(&[
+        "collective", "--op", "allreduce", "--system", "dgx1", "--gpus", "2",
+        "--total", "1MB", "--chunks", "4",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("chunks 4"), "{}", stdout(&out));
+    let out = agv(&[
+        "collective", "--op", "bcast", "--system", "dgx1", "--gpus", "2",
+        "--total", "1MB", "--root", "1", "--perturb", "straggler:0:0.5",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("degraded"), "{}", stdout(&out));
+}
+
+#[test]
+fn collective_rejects_unknown_op_cleanly() {
+    let out = agv(&["collective", "--op", "gatherv"]);
+    assert_eq!(out.status.code(), Some(1), "{}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("unknown op"), "{err}");
+    assert!(!err.contains("panicked"), "panicked instead of clean error:\n{err}");
+    // a bcast root outside the communicator is the same class of error
+    let out = agv(&["collective", "--op", "bcast", "--gpus", "2", "--root", "7"]);
+    assert_eq!(out.status.code(), Some(1), "{}", stderr(&out));
+    assert!(!stderr(&out).contains("panicked"), "{}", stderr(&out));
 }
 
 #[test]

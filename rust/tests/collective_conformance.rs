@@ -1,0 +1,485 @@
+//! Conformance lockdown of the collective suite (DESIGN.md §13).
+//!
+//! Three layers of evidence, mirroring the PR 3-5 harness style:
+//!
+//! 1. **Closed forms, machine-checked** over random P, ring orders,
+//!    roots and irregular vectors: ring and halving/doubling allreduce
+//!    move exactly 2(P−1)·Σcounts wire bytes in 2(P−1) resp.
+//!    2·log2 P rounds and pass the coverage-union reduction oracle;
+//!    binomial bcast takes ⌈log2 P⌉ rounds; scatter-allgather bcast
+//!    ships segment s down popcount(s) scatter hops then P−1 ring hops;
+//!    pairwise alltoallv delivers every off-diagonal block exactly once
+//!    and never moves a diagonal block.
+//! 2. **Chunking differential oracle**: `chunks = 1` through the
+//!    op-generic `compose_collective` is **bit-exact** to the
+//!    pre-existing unchunked Allgatherv path per library × system ×
+//!    irregular vector, on both engine cores — and to a from-scratch
+//!    rebuild of the staged-MPI allreduce out of the public transport
+//!    primitives. Chunked (k > 1) runs beat the unchunked makespan on
+//!    pipeline-friendly ring schedules.
+//! 3. **Layer acceptance**: the fault layer's `perturbed_collective`
+//!    with an empty perturbation set reproduces `run_collective`
+//!    bit-for-bit (and a straggler slows every op), and `auto_collective`
+//!    is the argmin over the three libraries.
+
+use agv_bench::comm::algorithms::{
+    all_delivered, binomial_bcast_msg, execute_allreduce, execute_from, halving_doubling_allreduce,
+    pairwise_alltoallv, ring_allreduce, scatter_allgather_bcast,
+};
+use agv_bench::comm::collective::{
+    auto_collective, run_collective, select_allreduce, CollectiveOp, CollectiveSpec, ReduceAlgo,
+};
+use agv_bench::comm::mpi::pt2pt_overhead;
+use agv_bench::comm::transport::{dtoh, host_to_host, htod, op_completion, run_schedule, ChunkCfg};
+use agv_bench::comm::{run_allgatherv, Library, Params};
+use agv_bench::perturb::{perturbed_collective, Perturbation};
+use agv_bench::sim::{with_reference_engine, Sim, TaskId};
+use agv_bench::topology::systems::SystemKind;
+use agv_bench::topology::Topology;
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts};
+
+/// Random rank count in the acceptance range 2..=32.
+fn rand_p(rng: &mut Rng) -> usize {
+    2 + rng.gen_range(31) as usize
+}
+
+/// Random ring order over 0..p.
+fn rand_order(rng: &mut Rng, p: usize) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut order);
+    order
+}
+
+// -------------------------------------------------------------------------
+// 1. Closed forms
+// -------------------------------------------------------------------------
+
+#[test]
+fn ring_allreduce_closed_forms() {
+    check("ring-allreduce-closed-forms", 24, |rng| {
+        let p = rand_p(rng);
+        let order = rand_order(rng, p);
+        let segs = counts::reduce_widths(rng, p, 8 << 20);
+        let total: u64 = segs.iter().sum();
+        let rs = ring_allreduce(p, Some(&order));
+        agv_bench::prop_assert!(rs.rounds() == 2 * (p - 1), "rounds {} != 2(P-1)", rs.rounds());
+        agv_bench::prop_assert!(
+            rs.wire_bytes(&segs) == 2 * (p as u64 - 1) * total,
+            "wire bytes {} != 2(P-1)*total {}",
+            rs.wire_bytes(&segs),
+            2 * (p as u64 - 1) * total
+        );
+        if p <= 64 {
+            agv_bench::prop_assert!(execute_allreduce(p, &rs), "reduction incomplete at P={p}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn halving_doubling_closed_forms() {
+    check("halving-doubling-closed-forms", 24, |rng| {
+        let p = 1 << (1 + rng.gen_range(5)); // 2, 4, ..., 32
+        let segs = counts::reduce_widths(rng, p, 8 << 20);
+        let total: u64 = segs.iter().sum();
+        let rs = halving_doubling_allreduce(p);
+        let log2p = p.trailing_zeros() as usize;
+        agv_bench::prop_assert!(rs.rounds() == 2 * log2p, "rounds {} != 2 log2 P", rs.rounds());
+        agv_bench::prop_assert!(
+            rs.wire_bytes(&segs) == 2 * (p as u64 - 1) * total,
+            "wire bytes off the 2(P-1)*total closed form"
+        );
+        agv_bench::prop_assert!(execute_allreduce(p, &rs), "reduction incomplete at P={p}");
+        Ok(())
+    });
+}
+
+#[test]
+fn bcast_closed_forms() {
+    check("bcast-closed-forms", 24, |rng| {
+        let p = rand_p(rng);
+        let root = rng.gen_range(p as u64) as usize;
+        let segs = counts::reduce_widths(rng, p, 8 << 20);
+        let total: u64 = segs.iter().sum();
+        let log2p = (usize::BITS - (p - 1).leading_zeros()) as usize; // ceil(log2 p)
+
+        // binomial: ceil(log2 P) rounds, the whole message on P-1 edges
+        let bin = binomial_bcast_msg(p, root, p);
+        agv_bench::prop_assert!(bin.steps.len() == log2p, "binomial rounds {}", bin.steps.len());
+        agv_bench::prop_assert!(
+            bin.wire_bytes(&segs) == (p as u64 - 1) * total,
+            "binomial wire bytes {} != (P-1)*total",
+            bin.wire_bytes(&segs)
+        );
+
+        // scatter-allgather: segment s crosses popcount(s) scatter hops
+        // (its binomial-tree depth in relative-rank space) + P-1 ring hops
+        let sag = scatter_allgather_bcast(p, root);
+        agv_bench::prop_assert!(
+            sag.rounds() == log2p + (p - 1),
+            "SAG rounds {} != ceil(log2 P) + P-1",
+            sag.rounds()
+        );
+        let scatter_xfers = sag.scatter.block_transfer_counts(p);
+        for (s, &n) in scatter_xfers.iter().enumerate() {
+            agv_bench::prop_assert!(
+                n == s.count_ones() as usize,
+                "segment {s}: {n} scatter transfers != popcount {}",
+                s.count_ones()
+            );
+        }
+        let gather_xfers = sag.gather.block_transfer_counts(p);
+        agv_bench::prop_assert!(
+            gather_xfers.iter().all(|&n| n == p - 1),
+            "SAG gather is not a full ring allgather"
+        );
+
+        // delivery: root-only initial holdings reach everyone
+        let mut init = vec![vec![false; p]; p];
+        init[root] = vec![true; p];
+        agv_bench::prop_assert!(
+            all_delivered(&execute_from(p, p, &init, &[&bin])),
+            "binomial bcast lost a segment"
+        );
+        agv_bench::prop_assert!(
+            all_delivered(&execute_from(p, p, &init, &sag.phases())),
+            "SAG bcast lost a segment"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn alltoallv_exact_pairwise_delivery() {
+    check("alltoallv-exact-delivery", 24, |rng| {
+        let p = rand_p(rng);
+        let m = counts::alltoallv_matrix(rng, p, 4 << 20);
+        let sched = pairwise_alltoallv(p);
+        agv_bench::prop_assert!(sched.steps.len() == p - 1, "steps {}", sched.steps.len());
+
+        // off-diagonal blocks cross exactly one wire; diagonals never move
+        let xfers = sched.block_transfer_counts(p * p);
+        for src in 0..p {
+            for dst in 0..p {
+                let expect = usize::from(src != dst);
+                agv_bench::prop_assert!(
+                    xfers[src * p + dst] == expect,
+                    "block ({src},{dst}) moved {} times",
+                    xfers[src * p + dst]
+                );
+            }
+        }
+        let off_diag: u64 = (0..p)
+            .flat_map(|s| (0..p).map(move |d| (s, d)))
+            .filter(|&(s, d)| s != d)
+            .map(|(s, d)| m[s * p + d])
+            .sum();
+        agv_bench::prop_assert!(
+            sched.wire_bytes(&m) == off_diag,
+            "wire bytes {} != off-diagonal sum {off_diag}",
+            sched.wire_bytes(&m)
+        );
+
+        // delivery: rank i starts holding row i, must end holding column i
+        let init: Vec<Vec<bool>> = (0..p)
+            .map(|r| (0..p * p).map(|b| b / p == r).collect())
+            .collect();
+        let held = execute_from(p, p * p, &init, &[&sched]);
+        for dst in 0..p {
+            for src in 0..p {
+                agv_bench::prop_assert!(
+                    held[dst][src * p + dst],
+                    "rank {dst} missing its block from {src}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------------------
+// 2. The chunking differential oracle
+// -------------------------------------------------------------------------
+
+/// Per-seed irregular vectors spanning the §IV regimes.
+fn vectors(rng: &mut Rng, p: usize) -> Vec<Vec<u64>> {
+    vec![
+        counts::regular(p, 1 + rng.gen_range(32 << 20)),
+        counts::skewed(rng, p, 48 << 20),
+        counts::zero_heavy(rng, p, 32 << 20),
+        counts::single_hot(rng, p, 256 << 20),
+    ]
+}
+
+fn assert_allgatherv_chunks1_bit_exact(topo: &Topology, lib: Library, cv: &[u64], engine: &str) {
+    let spec = CollectiveSpec::Allgatherv { counts: cv.to_vec() };
+    let via = run_collective(topo, lib, Params::default(), &spec, ChunkCfg::none());
+    let direct = run_allgatherv(lib, topo, cv);
+    assert_eq!(
+        via.time.to_bits(),
+        direct.time.to_bits(),
+        "{engine}/{}/{}: collective layer {} != allgatherv path {} (counts {cv:?})",
+        topo.name,
+        lib.name(),
+        via.time,
+        direct.time
+    );
+    assert_eq!(
+        via.flows, direct.flows,
+        "{engine}/{}/{}: flow counts diverged",
+        topo.name,
+        lib.name()
+    );
+}
+
+#[test]
+fn chunks1_allgatherv_is_bit_exact_event_engine() {
+    check("chunks1-differential-event", 12, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, 4, kind.max_gpus().min(8)][rng.gen_range(3) as usize];
+            for cv in vectors(rng, p) {
+                for lib in Library::all() {
+                    assert_allgatherv_chunks1_bit_exact(&topo, lib, &cv, "event");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunks1_allgatherv_is_bit_exact_reference_engine() {
+    with_reference_engine(|| {
+        check("chunks1-differential-reference", 4, |rng| {
+            for kind in SystemKind::all() {
+                let topo = kind.build();
+                let p = [2, kind.max_gpus().min(8)][rng.gen_range(2) as usize];
+                for cv in vectors(rng, p) {
+                    for lib in Library::all() {
+                        assert_allgatherv_chunks1_bit_exact(&topo, lib, &cv, "reference");
+                    }
+                }
+            }
+            Ok(())
+        });
+    });
+}
+
+/// Rebuild the staged-MPI allreduce out of the *public* transport
+/// primitives — the unchunked reference the op-generic path must equal.
+fn mpi_allreduce_reference(topo: &Topology, segs: &[u64]) -> (f64, usize) {
+    let params = Params::default();
+    let p = segs.len();
+    let total: u64 = segs.iter().sum();
+    let rs = match select_allreduce(&params, segs) {
+        ReduceAlgo::HalvingDoubling => halving_doubling_allreduce(p),
+        ReduceAlgo::Ring => ring_allreduce(p, None),
+    };
+    let mut sim = Sim::new(topo);
+    let mut markers: Vec<Option<TaskId>> =
+        (0..p).map(|r| Some(dtoh(&mut sim, topo, r, total as f64, &[]))).collect();
+    for phase in rs.phases() {
+        markers = run_schedule(&mut sim, p, phase, &markers, |sim, op, deps| {
+            let bytes = op.bytes(segs);
+            let ready = sim.delay(pt2pt_overhead(&params, bytes), deps);
+            host_to_host(sim, topo, &params, op.from, op.to, bytes as f64, &[ready])
+        });
+    }
+    let tails: Vec<TaskId> = markers
+        .iter()
+        .enumerate()
+        .map(|(r, m)| {
+            let deps: Vec<TaskId> = m.iter().copied().collect();
+            htod(&mut sim, topo, r, total as f64, &deps)
+        })
+        .collect();
+    let done = op_completion(&mut sim, &tails, None);
+    let res = sim.run();
+    (res.finish(done), res.flows)
+}
+
+#[test]
+fn chunks1_mpi_allreduce_matches_transport_rebuild() {
+    check("chunks1-mpi-allreduce-rebuild", 8, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = [2, 4, kind.max_gpus().min(8)][rng.gen_range(3) as usize];
+            let segs = counts::reduce_widths(rng, p, 16 << 20);
+            let (t_ref, f_ref) = mpi_allreduce_reference(&topo, &segs);
+            let spec = CollectiveSpec::Allreduce { segs: segs.clone() };
+            let via =
+                run_collective(&topo, Library::Mpi, Params::default(), &spec, ChunkCfg::none());
+            agv_bench::prop_assert!(
+                via.time.to_bits() == t_ref.to_bits(),
+                "{}: op-generic {} != rebuilt {} (segs {segs:?})",
+                topo.name,
+                via.time,
+                t_ref
+            );
+            agv_bench::prop_assert!(via.flows == f_ref, "flow counts diverged on {}", topo.name);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunked_pipelines_beat_unchunked_on_rings() {
+    // pipeline-friendly shape: large regular segments, ring schedules,
+    // chunk sizes that stay inside one protocol class (8 MB / 4 = 2 MB
+    // chunks, above the 1 MB large-message switch and the eager limit)
+    let topo = SystemKind::Dgx1.build();
+    let params = Params::default();
+    for (lib, op) in [
+        (Library::Nccl, CollectiveOp::Allreduce),
+        (Library::MpiCuda, CollectiveOp::Allreduce),
+        (Library::Nccl, CollectiveOp::Bcast),
+    ] {
+        let spec = CollectiveSpec::from_vector(op, &[8 << 20; 4]);
+        let plain = run_collective(&topo, lib, params, &spec, ChunkCfg::none());
+        let piped = run_collective(&topo, lib, params, &spec, ChunkCfg::pipelined(4));
+        assert!(
+            piped.time < 0.999 * plain.time,
+            "{}/{}: chunked {} not faster than unchunked {}",
+            lib.name(),
+            op.name(),
+            piped.time,
+            plain.time
+        );
+        assert!(piped.flows > plain.flows, "chunking emitted no extra wire flows");
+    }
+}
+
+#[test]
+fn chunked_collectives_agree_across_engines() {
+    // contended schedules: the two cores agree to ~1e-9 relative on the
+    // chunked DAGs, same as every pre-existing cross-engine check
+    let topo = SystemKind::Dgx1.build();
+    let params = Params::default();
+    for op in CollectiveOp::all() {
+        let spec = CollectiveSpec::from_vector(op, &[3 << 20, 9 << 20, 1 << 16, 5 << 20]);
+        for lib in Library::all() {
+            let event = run_collective(&topo, lib, params, &spec, ChunkCfg::pipelined(3));
+            let refr = with_reference_engine(|| {
+                run_collective(&topo, lib, params, &spec, ChunkCfg::pipelined(3))
+            });
+            let rel = (event.time - refr.time).abs() / event.time.max(1e-30);
+            assert!(
+                rel < 1e-9,
+                "{}/{}: engines diverged {} vs {} (rel {rel})",
+                op.name(),
+                lib.name(),
+                event.time,
+                refr.time
+            );
+            assert_eq!(event.flows, refr.flows, "{}/{}", op.name(), lib.name());
+        }
+    }
+}
+
+#[test]
+fn zero_heavy_and_all_zero_vectors_stay_finite() {
+    // satellite regression: zero-byte blocks ride the staged paths for
+    // free (no 3-leg latency, no handshake) and nothing divides by zero
+    let params = Params::default();
+    check("zero-count-collectives", 6, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = kind.max_gpus().min(8);
+            let mut zh = counts::zero_heavy(rng, p, 16 << 20);
+            zh[0] = 0; // rank 0 always empty
+            for cv in [zh, vec![0; p]] {
+                for op in CollectiveOp::all() {
+                    let spec = CollectiveSpec::from_vector(op, &cv);
+                    for lib in Library::all() {
+                        let r = run_collective(&topo, lib, params, &spec, ChunkCfg::none());
+                        agv_bench::prop_assert!(
+                            r.time.is_finite() && r.time >= 0.0,
+                            "{}/{}/{}: bad time {}",
+                            kind.name(),
+                            op.name(),
+                            lib.name(),
+                            r.time
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------------------
+// 3. Layer acceptance: faults and auto-selection
+// -------------------------------------------------------------------------
+
+#[test]
+fn perturbed_collective_empty_set_is_bit_exact() {
+    let topo = SystemKind::Dgx1.build();
+    let params = Params::default();
+    for op in CollectiveOp::all() {
+        let spec = CollectiveSpec::from_vector(op, &[2 << 20, 7 << 20, 1 << 12, 4 << 20]);
+        for lib in Library::all() {
+            for chunk in [ChunkCfg::none(), ChunkCfg::pipelined(4)] {
+                let clean = run_collective(&topo, lib, params, &spec, chunk);
+                let pert = perturbed_collective(&topo, lib, params, &spec, chunk, &[]);
+                assert_eq!(
+                    pert.time.to_bits(),
+                    clean.time.to_bits(),
+                    "{}/{}: empty perturbation set changed the result",
+                    op.name(),
+                    lib.name()
+                );
+                assert_eq!(pert.flows, clean.flows);
+            }
+        }
+    }
+}
+
+#[test]
+fn straggler_slows_every_collective() {
+    let topo = SystemKind::Dgx1.build();
+    let params = Params::default();
+    let straggler = [Perturbation::straggler(0, 0.25)];
+    for op in CollectiveOp::all() {
+        let spec = CollectiveSpec::from_vector(op, &[8 << 20; 4]);
+        for lib in Library::all() {
+            let clean = run_collective(&topo, lib, params, &spec, ChunkCfg::none());
+            let slow =
+                perturbed_collective(&topo, lib, params, &spec, ChunkCfg::none(), &straggler);
+            assert!(
+                slow.time > clean.time,
+                "{}/{}: straggler left no trace ({} vs {})",
+                op.name(),
+                lib.name(),
+                slow.time,
+                clean.time
+            );
+        }
+    }
+}
+
+#[test]
+fn auto_collective_argmin_on_every_system() {
+    let params = Params::default();
+    for kind in SystemKind::all() {
+        let topo = kind.build();
+        let p = kind.max_gpus().min(8);
+        for op in CollectiveOp::all() {
+            let spec = CollectiveSpec::from_vector(op, &vec![4 << 20; p]);
+            let (winner, best) = auto_collective(&topo, params, &spec, ChunkCfg::none());
+            for lib in Library::all() {
+                let r = run_collective(&topo, lib, params, &spec, ChunkCfg::none());
+                assert!(
+                    best.time <= r.time,
+                    "{}/{}: auto {} lost to {}",
+                    kind.name(),
+                    op.name(),
+                    winner.name(),
+                    lib.name()
+                );
+            }
+        }
+    }
+}

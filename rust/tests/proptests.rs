@@ -2,9 +2,9 @@
 //! seeds; see util::prop).
 
 use agv_bench::comm::algorithms::{
-    all_delivered, bcast_series_allgatherv, bruck_allgatherv, execute,
-    hierarchical_allgatherv, recursive_doubling_allgatherv, ring_allgatherv, LeaderAlgo,
-    Schedule,
+    all_delivered, bcast_series_allgatherv, bruck_allgatherv, execute, execute_allreduce,
+    execute_from, halving_doubling_allreduce, hierarchical_allgatherv, pairwise_alltoallv,
+    recursive_doubling_allgatherv, ring_allgatherv, ring_allreduce, LeaderAlgo, Schedule,
 };
 use agv_bench::comm::select::AlgoSelector;
 use agv_bench::comm::{run_allgatherv, Library, Params};
@@ -52,6 +52,57 @@ fn prop_hierarchical_delivers_on_node_groupings() {
             "{} p={p} {inter:?}",
             sys.name()
         );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_schedules_fully_reduce_any_widths() {
+    // the reduce-width generator (zeros allowed, never all-zero) drives
+    // both allreduce schedules: the coverage oracle must report a full
+    // reduction everywhere, and the ring's wire total must hit its
+    // closed form — every segment crosses a link 2(P−1) times
+    check("allreduce-delivery", 48, |rng| {
+        let p = 1 + rng.gen_range(16) as usize;
+        let widths = counts::reduce_widths(rng, p, 16 << 20);
+        let total: u64 = widths.iter().sum();
+        let ring = ring_allreduce(p, None);
+        prop_assert!(execute_allreduce(p, &ring), "ring not fully reduced at p={p}");
+        prop_assert!(
+            ring.wire_bytes(&widths) == 2 * (p as u64 - 1) * total,
+            "ring wire bytes off closed form at p={p} widths={widths:?}"
+        );
+        let pp = p.next_power_of_two();
+        let hd = halving_doubling_allreduce(pp);
+        prop_assert!(execute_allreduce(pp, &hd), "halving/doubling not reduced at p={pp}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pairwise_alltoallv_delivers_rows_to_columns() {
+    // the count-matrix generator shapes a random p×p zero-diagonal
+    // matrix (block b = src·p + dst); after the pairwise exchange rank
+    // r must hold exactly its own row plus its column, and the wire
+    // total is exactly the off-diagonal sum — each block moves once
+    check("alltoallv-delivery", 48, |rng| {
+        let p = 1 + rng.gen_range(12) as usize;
+        let m = counts::alltoallv_matrix(rng, p, 8 << 20);
+        let s = pairwise_alltoallv(p);
+        let init: Vec<Vec<bool>> =
+            (0..p).map(|r| (0..p * p).map(|b| b / p == r).collect()).collect();
+        let out = execute_from(p, p * p, &init, &[&s]);
+        for (r, held) in out.iter().enumerate() {
+            for (b, h) in held.iter().enumerate() {
+                let (src, dst) = (b / p, b % p);
+                prop_assert!(
+                    *h == (src == r || dst == r),
+                    "p={p}: rank {r} holding of block {b} (src {src} dst {dst}) wrong"
+                );
+            }
+        }
+        let off: u64 = (0..p * p).filter(|&b| b / p != b % p).map(|b| m[b]).sum();
+        prop_assert!(s.wire_bytes(&m) == off, "p={p}: wire bytes not the off-diagonal sum");
         Ok(())
     });
 }

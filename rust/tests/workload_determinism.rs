@@ -22,6 +22,19 @@ fn bench_doc_is_byte_identical_across_runs() {
 }
 
 #[test]
+fn collectives_bench_doc_is_byte_identical_across_runs() {
+    // BENCH_collectives.json: per-library times, auto verdicts and
+    // chunk-pipelining speedups are all simulated metrics, so the same
+    // seed must reproduce the artifact byte-for-byte across the
+    // worker-pool fan-out
+    let a = agv_bench::comm::collective::bench::bench_doc(42).render();
+    let b = agv_bench::comm::collective::bench::bench_doc(42).render();
+    assert_eq!(a, b, "BENCH_collectives.json payload is not reproducible");
+    let c = agv_bench::comm::collective::bench::bench_doc(43).render();
+    assert_ne!(a, c, "the seed is not live in the collectives artifact");
+}
+
+#[test]
 fn faults_bench_doc_is_byte_identical_across_runs() {
     // BENCH_faults.json: simulated metrics only, so the same seed must
     // reproduce the artifact byte-for-byte (including the Monte-Carlo

@@ -64,6 +64,7 @@ fn random_spec(rng: &mut Rng, max_gpus: usize) -> WorkloadSpec {
                 name: format!("t{i}"),
                 seed: i as u64,
                 lib: TenantLib::Fixed(lib),
+                op: agv_bench::comm::collective::CollectiveOp::Allgatherv,
                 stream: OpStream::Trace { ops: trace },
                 ops,
                 start_offset: rng.gen_f64(0.0, 2.0e-3),

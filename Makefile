@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance test-workload test-faults test-collectives verify bench bench-smoke bench-workload bench-faults bench-collectives artifacts fmt clippy
+.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery verify bench bench-smoke bench-workload bench-faults bench-collectives artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -27,6 +27,18 @@ test-faults:
 # its own (CI runs this as a dedicated step; also part of `make test`).
 test-collectives:
 	cargo test --test collective_conformance
+
+# The hard-fault recovery subsystem on its own: the timeout-retry-
+# reroute-shrink driver units, the supervised-workload SLO runner, the
+# outage differential oracles and the stall-diagnosis agreement tests
+# (CI runs this as a dedicated step; all of it is also part of
+# `make test`).
+test-recovery:
+	cargo test --lib recovery
+	cargo test --lib slo
+	cargo test --test faults_differential outage
+	cargo test --test faults_differential recovery
+	cargo test --test faults_differential stall
 
 verify: build test
 

@@ -430,6 +430,15 @@ pub enum RobustObjective {
     Mean,
     /// Argmin of the 95th-percentile makespan — the tail-averse choice.
     P95,
+    /// Outage-aware argmin (DESIGN.md §14): scenarios are scored by
+    /// their *effective cost* — completion time **plus recovery
+    /// latency** (the recovery-cost term, preferring clean completions
+    /// over recovered ones at equal makespan), `INFINITY` for an
+    /// aborted scenario — and aggregated as the mean over completed
+    /// scenarios **divided by the completion probability** (charging
+    /// the expected re-issues of an unreliable pick). On all-finite
+    /// inputs this degenerates to [`RobustObjective::Mean`].
+    Outage,
 }
 
 impl RobustObjective {
@@ -438,6 +447,7 @@ impl RobustObjective {
         match self {
             RobustObjective::Mean => "mean",
             RobustObjective::P95 => "p95",
+            RobustObjective::Outage => "outage",
         }
     }
 
@@ -446,6 +456,7 @@ impl RobustObjective {
         match s.to_ascii_lowercase().as_str() {
             "mean" => Some(RobustObjective::Mean),
             "p95" => Some(RobustObjective::P95),
+            "outage" => Some(RobustObjective::Outage),
             _ => None,
         }
     }
@@ -453,11 +464,22 @@ impl RobustObjective {
     /// Aggregate per-scenario times under this objective. Panics on an
     /// empty slice (as [`crate::util::stats::percentile`] does) — a
     /// silent 0.0 mean would win every argmin with no data behind it.
+    /// Only [`RobustObjective::Outage`] tolerates non-finite entries
+    /// (`INFINITY` = the scenario aborted); under it a candidate that
+    /// never completes scores `INFINITY` and can only win by default.
     pub fn aggregate(self, times: &[f64]) -> f64 {
         assert!(!times.is_empty(), "cannot aggregate zero scenarios");
         match self {
             RobustObjective::Mean => times.iter().sum::<f64>() / times.len() as f64,
             RobustObjective::P95 => crate::util::stats::percentile(times, 95.0),
+            RobustObjective::Outage => {
+                let done: Vec<f64> = times.iter().copied().filter(|t| t.is_finite()).collect();
+                if done.is_empty() {
+                    return f64::INFINITY;
+                }
+                let q = done.len() as f64 / times.len() as f64;
+                (done.iter().sum::<f64>() / done.len() as f64) / q
+            }
         }
     }
 }
@@ -556,6 +578,122 @@ impl AlgoSelector {
             objective: agg,
             mean: RobustObjective::Mean.aggregate(times),
             p95: RobustObjective::P95.aggregate(times),
+            healthy,
+            scenarios: ensemble.len(),
+        }
+    }
+}
+
+/// The outage-aware selector's verdict over one outage ensemble.
+#[derive(Clone, Copy, Debug)]
+pub struct OutageRobustSelection {
+    /// Winning (library, algorithm) pair under
+    /// [`RobustObjective::Outage`].
+    pub candidate: Candidate,
+    /// The winner's aggregated effective cost (lower is better).
+    pub score: f64,
+    /// Fraction of scenarios the winner completed (full or shrunk
+    /// membership), recovery included.
+    pub completion_prob: f64,
+    /// Mean makespan over the winner's completed scenarios.
+    pub mean_time: f64,
+    /// Mean recovery latency over the winner's completed scenarios
+    /// (0.0 when every completion was clean).
+    pub mean_recovery: f64,
+    /// The winner's time on the healthy (unperturbed) fabric.
+    pub healthy: f64,
+    /// Scenarios evaluated.
+    pub scenarios: usize,
+}
+
+/// Effective per-scenario cost of a recovery outcome, as
+/// [`RobustObjective::Outage`] consumes it: completion time plus
+/// recovery latency when completed, `INFINITY` when aborted.
+pub fn effective_cost(rec: &crate::perturb::Recovered) -> f64 {
+    match rec.time() {
+        Some(t) => t + rec.recovery_latency,
+        None => f64::INFINITY,
+    }
+}
+
+impl AlgoSelector {
+    /// Run every applicable candidate through the recovery driver
+    /// ([`crate::perturb::recovery::recovered_candidate`]) under every
+    /// scenario of an outage ensemble, in [`candidates`] order. Unlike
+    /// [`AlgoSelector::evaluate_robust`], scenarios that stall do not
+    /// panic: they retry, reroute, shrink or abort per `policy`, and
+    /// the full [`crate::perturb::Recovered`] verdicts come back so
+    /// callers can report strategies, not just times.
+    pub fn evaluate_outage(
+        &self,
+        topo: &Topology,
+        counts: &[u64],
+        ensemble: &[Vec<crate::perturb::Perturbation>],
+        policy: &crate::comm::transport::RecoveryPolicy,
+    ) -> Vec<(Candidate, Vec<crate::perturb::Recovered>)> {
+        assert!(!ensemble.is_empty(), "outage evaluation needs at least one scenario");
+        let p = counts.len();
+        let mut out = Vec::new();
+        for cand in candidates(topo, p) {
+            let mut recs = Vec::with_capacity(ensemble.len());
+            let mut applicable = true;
+            for perts in ensemble {
+                match crate::perturb::recovery::recovered_candidate(
+                    topo, self.params, cand, counts, perts, policy,
+                ) {
+                    Some(rec) => recs.push(rec),
+                    None => {
+                        applicable = false;
+                        break;
+                    }
+                }
+            }
+            if applicable {
+                out.push((cand, recs));
+            }
+        }
+        out
+    }
+
+    /// Outage-aware robust selection: argmin of the
+    /// [`RobustObjective::Outage`] effective cost — completion
+    /// probability and recovery cost folded into the score — over an
+    /// outage ensemble, recovery supervised by `policy`. Ties break
+    /// toward the earlier candidate, as everywhere in this module.
+    pub fn select_outage_robust(
+        &self,
+        topo: &Topology,
+        counts: &[u64],
+        ensemble: &[Vec<crate::perturb::Perturbation>],
+        policy: &crate::comm::transport::RecoveryPolicy,
+    ) -> OutageRobustSelection {
+        let evals = self.evaluate_outage(topo, counts, ensemble, policy);
+        let costed: Vec<(Candidate, Vec<f64>)> = evals
+            .iter()
+            .map(|(c, recs)| (*c, recs.iter().map(effective_cost).collect()))
+            .collect();
+        let (candidate, score, _) = robust_argmin(&costed, RobustObjective::Outage);
+        let recs = &evals.iter().find(|(c, _)| *c == candidate).unwrap().1;
+        let done: Vec<&crate::perturb::Recovered> =
+            recs.iter().filter(|r| r.completed()).collect();
+        let healthy = simulate(topo, self.params, candidate, counts)
+            .expect("the winner simulates on its own topology")
+            .time;
+        let (mean_time, mean_recovery) = if done.is_empty() {
+            (f64::INFINITY, 0.0)
+        } else {
+            let n = done.len() as f64;
+            (
+                done.iter().map(|r| r.time().unwrap()).sum::<f64>() / n,
+                done.iter().map(|r| r.recovery_latency).sum::<f64>() / n,
+            )
+        };
+        OutageRobustSelection {
+            candidate,
+            score,
+            completion_prob: done.len() as f64 / recs.len() as f64,
+            mean_time,
+            mean_recovery,
             healthy,
             scenarios: ensemble.len(),
         }
@@ -758,6 +896,52 @@ mod tests {
         assert_eq!(robust.objective.to_bits(), fresh.time.to_bits());
         assert_eq!(robust.healthy.to_bits(), fresh.time.to_bits());
         assert_eq!(robust.scenarios, 1);
+    }
+
+    #[test]
+    fn outage_objective_degenerates_to_mean_on_finite_inputs() {
+        assert_eq!(RobustObjective::parse("outage"), Some(RobustObjective::Outage));
+        let times = [1.0, 2.0, 3.0, 10.0];
+        assert_eq!(
+            RobustObjective::Outage.aggregate(&times).to_bits(),
+            RobustObjective::Mean.aggregate(&times).to_bits()
+        );
+        // one abort out of four: mean of the survivors / (3/4)
+        let mixed = [1.0, 2.0, f64::INFINITY, 3.0];
+        let expect = (6.0 / 3.0) / 0.75;
+        assert!((RobustObjective::Outage.aggregate(&mixed) - expect).abs() < 1e-12);
+        assert_eq!(RobustObjective::Outage.aggregate(&[f64::INFINITY]), f64::INFINITY);
+    }
+
+    #[test]
+    fn outage_selection_completes_under_transient_outages() {
+        let topo = SystemKind::Dgx1.build();
+        let counts = vec![8u64 << 20; 8];
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        // one healthy scenario, one transient outage every candidate
+        // must ride out (or never touch)
+        let ens = vec![
+            vec![],
+            vec![crate::perturb::Perturbation::link_down(link).during(1.0e-3, 2.0e-3)],
+        ];
+        let sel = AlgoSelector::new(Params::default());
+        let policy = crate::comm::transport::RecoveryPolicy::default_policy();
+        let s = sel.select_outage_robust(&topo, &counts, &ens, &policy);
+        assert_eq!(s.scenarios, 2);
+        assert_eq!(s.completion_prob, 1.0, "{}", s.candidate.label());
+        assert!(s.score.is_finite() && s.score > 0.0);
+        assert!(s.mean_time >= s.healthy);
+        assert!(s.mean_recovery >= 0.0);
+        // with recovery disabled the stalled scenario aborts, so the
+        // completion-probability term must reshape the verdict's score
+        let s2 = sel.select_outage_robust(
+            &topo,
+            &counts,
+            &ens,
+            &crate::comm::transport::RecoveryPolicy::disabled(),
+        );
+        assert!(s2.completion_prob <= 1.0);
+        assert!(s2.score >= s2.mean_time || !s2.score.is_finite());
     }
 
     #[test]

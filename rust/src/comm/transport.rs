@@ -255,6 +255,62 @@ where
     marker
 }
 
+/// Hard-fault recovery policy for a collective (DESIGN.md §14): how
+/// long a send may sit without progress before the op is declared
+/// faulted, and how aggressively to retry before repairing the
+/// schedule.
+///
+/// The policy drives the abort-and-restart state machine in
+/// [`crate::perturb::recovery`] (NCCL-style semantics: a faulted
+/// collective is torn down and re-issued, not patched mid-flight):
+/// detection costs `timeout` seconds after the stall instant, then up
+/// to `max_retries` re-issues separated by exponential backoff
+/// (`backoff_base * 2^k`, capped at `backoff_cap`), then schedule
+/// repair — reroute around dead links, or communicator shrink when a
+/// rank is gone. [`RecoveryPolicy::disabled`] — and any policy on a
+/// run that never stalls — leaves results bit-identical to the
+/// recovery-free path (`tests/faults_differential.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Seconds of zero progress before the op is declared faulted.
+    pub timeout: f64,
+    /// Re-issue attempts before falling back to schedule repair.
+    pub max_retries: usize,
+    /// First retry backoff (seconds); doubles per attempt.
+    pub backoff_base: f64,
+    /// Upper bound on a single backoff step (seconds).
+    pub backoff_cap: f64,
+}
+
+impl RecoveryPolicy {
+    /// No recovery: a stall is reported as-is (the pre-PR-7 behavior).
+    pub fn disabled() -> RecoveryPolicy {
+        RecoveryPolicy { timeout: 0.0, max_retries: 0, backoff_base: 0.0, backoff_cap: 0.0 }
+    }
+
+    /// Millisecond-scale defaults sized for the paper's systems: 1 ms
+    /// detection, 3 retries backing off 1 -> 2 -> 4 ms (capped 10 ms).
+    pub fn default_policy() -> RecoveryPolicy {
+        RecoveryPolicy {
+            timeout: 1.0e-3,
+            max_retries: 3,
+            backoff_base: 1.0e-3,
+            backoff_cap: 10.0e-3,
+        }
+    }
+
+    /// Is any recovery mechanism active?
+    pub fn enabled(&self) -> bool {
+        self.max_retries > 0 || self.timeout > 0.0
+    }
+
+    /// Backoff before retry `k` (0-based): `base * 2^k`, capped.
+    pub fn backoff(&self, k: usize) -> f64 {
+        let exp = 2.0_f64.powi(k.min(63) as i32);
+        (self.backoff_base * exp).min(self.backoff_cap)
+    }
+}
+
 /// How a logical send is segmented into wire flows (DESIGN.md §13).
 ///
 /// `chunks = 1` reproduces the unchunked schedule **task-for-task**:
@@ -522,6 +578,18 @@ mod tests {
             };
             assert_eq!(run(true), run(false), "p={p}: chunks=1 DAG diverged");
         }
+    }
+
+    #[test]
+    fn recovery_policy_backoff_is_bounded_exponential() {
+        let p = RecoveryPolicy::default_policy();
+        assert!(p.enabled());
+        assert_eq!(p.backoff(0), 1.0e-3);
+        assert_eq!(p.backoff(1), 2.0e-3);
+        assert_eq!(p.backoff(2), 4.0e-3);
+        assert_eq!(p.backoff(5), 10.0e-3, "capped");
+        assert_eq!(p.backoff(400), 10.0e-3, "huge k must not overflow");
+        assert!(!RecoveryPolicy::disabled().enabled());
     }
 
     #[test]

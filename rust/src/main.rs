@@ -6,6 +6,7 @@ use std::path::PathBuf;
 
 use agv_bench::anyhow;
 use agv_bench::comm::select::{AlgoSelector, RobustObjective};
+use agv_bench::comm::transport::RecoveryPolicy;
 use agv_bench::comm::{Library, Params};
 use agv_bench::cpals::comm_model::{
     gdr_limit_sweep, refacto_comm, refacto_comm_auto, refacto_comm_contended,
@@ -24,7 +25,7 @@ use agv_bench::tensor::{datasets, synth};
 use agv_bench::topology::systems::SystemKind;
 use agv_bench::util::cli::{parse_bytes, Args};
 use agv_bench::util::{fmt_bytes, fmt_time};
-use agv_bench::workload::{parse_trace, OpStream, TenantLib, WorkloadSpec};
+use agv_bench::workload::{parse_trace, run_workload_recovered, OpStream, TenantLib, WorkloadSpec};
 
 const HELP: &str = "\
 agv — reproduction of 'An Empirical Evaluation of Allgatherv on Multi-GPU Systems' (CCGRID'18)
@@ -38,7 +39,7 @@ COMMANDS
   fig3 [--iters N] [--csv-dir DIR]
                                Fig. 3: ReFacTo communication time grid
   findings                     §VI headline ratios, ours vs paper
-  auto [--dataset D] [--gpus N] [--csv-dir DIR] [--perturb SPEC] [--robust [mean|p95]]
+  auto [--dataset D] [--gpus N] [--csv-dir DIR] [--perturb SPEC] [--robust [mean|p95|outage]]
                                auto-selected (library, algorithm) vs each fixed library
                                (--perturb: argmin on the degraded fabric; --robust:
                                argmin of mean/p95 over a seeded fault ensemble)
@@ -54,12 +55,21 @@ COMMANDS
                                fault & variability study: healthy-vs-degraded per system,
                                flat-vs-hierarchical fragility ranking, robust-vs-fresh
                                selector verdicts (--list-links prints --perturb link ids)
+  faults --outage [--seed N] [--csv-dir DIR]
+                               hard-fault study: link/GPU outages per system x library,
+                               timeout-retry-reroute-shrink recovery verdicts, plus
+                               outage-robust selection over a seeded outage ensemble
   workload [--system S|all] [--tenants K] [--ops N] [--lib L|auto] [--gpus N]
-           [--total BYTES] [--dist D] [--trace FILE] [--seed N] [--csv-dir DIR]
-           [--refacto DATASET [--iters N]] [--perturb SPEC]
+           [--total BYTES] [--dist D] [--trace FILE] [--gap SECS] [--seed N]
+           [--csv-dir DIR] [--refacto DATASET [--iters N]] [--perturb SPEC]
+           [--recover [--timeout SECS] [--retries N]]
                                multi-tenant contended Allgatherv study: K concurrent
                                tenants share one fabric; idle-vs-contended latency
-                               (--perturb degrades the shared fabric mid-flight)
+                               (--perturb degrades the shared fabric mid-flight;
+                               --gap overrides every tenant's inter-op gap;
+                               --recover supervises hard outages: stalled jobs are
+                               re-issued via timeout-retry-reroute-shrink and the
+                               run reports goodput + recovery-latency SLOs)
 
   collective [--op O] [--system S] [--gpus N] [--total BYTES] [--chunks K]
              [--root R] [--seed N] [--perturb SPEC]
@@ -70,6 +80,8 @@ COMMANDS
   --perturb SPEC               comma-separated faults: link:<id>:<factor>[:<start>[:<dur>]]
                                | floor:<id>:<bytes/s>[:<start>[:<dur>]]
                                | straggler:<rank>:<factor>[:<start>[:<dur>]]
+                               | down:<id>[:<start>[:<dur>]] | gpudown:<rank>[:<start>[:<dur>]]
+                               (outages are total; omitted duration = forever)
   e2e [--config small|e2e] [--system S] [--gpus N] [--iters N] [--seed N]
       [--artifacts DIR]        end-to-end factorization (real compute via PJRT)
   artifacts [--artifacts DIR]  list AOT artifacts and their shapes
@@ -117,6 +129,15 @@ fn csv_dir(args: &Args) -> Option<PathBuf> {
     args.get("csv-dir").map(PathBuf::from)
 }
 
+/// Unwrap a parsed numeric flag; a malformed value is a usage error
+/// (clean message, exit 2), never a panic.
+fn num_arg<T>(parsed: agv_bench::util::error::Result<T>) -> T {
+    parsed.unwrap_or_else(|e| {
+        eprintln!("{e:#}");
+        std::process::exit(2);
+    })
+}
+
 fn system_arg(args: &Args) -> SystemKind {
     let s = args.get_or("system", "dgx1");
     SystemKind::parse(s).unwrap_or_else(|| {
@@ -154,6 +175,25 @@ fn check_perturbations(topo: &agv_bench::topology::Topology, perts: &[Perturbati
     }
 }
 
+/// Exit 2 if the fault set contains a permanent (infinite-duration)
+/// outage. The fail-fast commands run [`agv_bench::sim::Sim::run`],
+/// which treats a starved DAG as a hard error; permanent hard faults
+/// belong to the recovery-aware surfaces (`hint` names the right one).
+/// Transient outages revive and complete natively, so they pass.
+fn reject_permanent_outages(perts: &[Perturbation], hint: &str) {
+    let fatal = perts.iter().any(|p| {
+        matches!(p, Perturbation::LinkDown { .. } | Perturbation::GpuDown { .. })
+            && p.window().1.is_infinite()
+    });
+    if fatal {
+        eprintln!(
+            "--perturb: a permanent link/GPU outage can starve this fail-fast command \
+             (it would stall, not finish slowly); {hint}"
+        );
+        std::process::exit(2);
+    }
+}
+
 /// Parse `--robust [mean|p95]` (bare flag defaults to mean).
 fn robust_arg(args: &Args) -> Option<RobustObjective> {
     if args.flag("robust") {
@@ -161,7 +201,7 @@ fn robust_arg(args: &Args) -> Option<RobustObjective> {
     }
     args.get("robust").map(|s| {
         RobustObjective::parse(s).unwrap_or_else(|| {
-            eprintln!("unknown robust objective `{s}` (mean|p95)");
+            eprintln!("unknown robust objective `{s}` (mean|p95|outage)");
             std::process::exit(2);
         })
     })
@@ -225,7 +265,7 @@ fn cmd_table1(args: &Args) {
 }
 
 fn cmd_fig3(args: &Args) {
-    let iters = args.get_usize("iters", DEFAULT_ITERS);
+    let iters = num_arg(args.get_usize("iters", DEFAULT_ITERS));
     let panels = fig3::panels(iters);
     print!("{}", fig3::render(&panels));
     if let Some(dir) = csv_dir(args) {
@@ -252,15 +292,18 @@ fn cmd_auto(args: &Args) {
         })],
         None => datasets::all(),
     };
-    let gpus_filter = args.get("gpus").map(|_| args.get_usize("gpus", 8));
+    let gpus_filter = args.get("gpus").map(|_| num_arg(args.get_usize("gpus", 8)));
     let perts = perturb_arg(args);
+    if let Some(ps) = &perts {
+        reject_permanent_outages(ps, "use `agv faults --outage` for hard-fault studies");
+    }
     let objective = robust_arg(args);
     if perts.is_some() || objective.is_some() {
         // degraded-fabric selection: argmin of the aggregated makespan
         // over the fault scenarios (an explicit --perturb set is a
         // one-scenario ensemble; otherwise a seeded Monte-Carlo one)
         let objective = objective.unwrap_or(RobustObjective::Mean);
-        let seed = args.get_u64("seed", 42);
+        let seed = num_arg(args.get_u64("seed", 42));
         let gpus = gpus_filter.unwrap_or(8);
         if csv_dir(args).is_some() {
             eprintln!("--csv-dir is not supported with --perturb/--robust (console output only)");
@@ -333,7 +376,17 @@ fn cmd_faults(args: &Args) {
         print!("{}", report_faults::links_table(&kind.build()));
         return;
     }
-    let seed = args.get_u64("seed", 42);
+    let seed = num_arg(args.get_u64("seed", 42));
+    if args.flag("outage") || args.get("outage").is_some() {
+        let report = report_faults::outage_study(Params::default(), seed);
+        print!("{}", report_faults::render_outage(&report));
+        if let Some(dir) = csv_dir(args) {
+            let p =
+                write_csv(&dir, "faults_outage.csv", &report_faults::csv_outage(&report)).unwrap();
+            eprintln!("wrote {}", p.display());
+        }
+        return;
+    }
     let report = report_faults::study(Params::default(), seed);
     print!("{}", report_faults::render(&report));
     if let Some(dir) = csv_dir(args) {
@@ -344,11 +397,12 @@ fn cmd_faults(args: &Args) {
 
 fn cmd_osu(args: &Args) {
     let system = system_arg(args);
-    let gpus = args.get_usize("gpus", 2);
+    let gpus = num_arg(args.get_usize("gpus", 2));
     let cfg = agv_bench::osu::OsuConfig::default();
     let topo = system.build();
     if let Some(perts) = perturb_arg(args) {
         check_perturbations(&topo, &perts);
+        reject_permanent_outages(&perts, "use `agv faults --outage` for hard-fault studies");
         let labels: Vec<String> = perts.iter().map(|p| p.label()).collect();
         if auto_lib(args) {
             // per size: argmin on the degraded fabric (one-scenario
@@ -438,8 +492,8 @@ fn cmd_osu(args: &Args) {
 
 fn cmd_refacto(args: &Args) {
     let system = system_arg(args);
-    let gpus = args.get_usize("gpus", 8);
-    let iters = args.get_usize("iters", DEFAULT_ITERS);
+    let gpus = num_arg(args.get_usize("gpus", 8));
+    let iters = num_arg(args.get_usize("iters", DEFAULT_ITERS));
     let dname = args.get_or("dataset", "netflix");
     let spec = datasets::by_name(dname).unwrap_or_else(|| {
         eprintln!("unknown dataset `{dname}`");
@@ -448,6 +502,7 @@ fn cmd_refacto(args: &Args) {
     let topo = system.build();
     if let Some(perts) = perturb_arg(args) {
         check_perturbations(&topo, &perts);
+        reject_permanent_outages(&perts, "use `agv faults --outage` for hard-fault studies");
         if auto_lib(args) {
             eprintln!(
                 "--lib auto with --perturb is served by `agv auto --perturb` \
@@ -519,7 +574,7 @@ fn cmd_refacto(args: &Args) {
 fn cmd_sweep_gdr(args: &Args) {
     let dname = args.get_or("dataset", "delicious");
     let spec = datasets::by_name(dname).expect("unknown dataset");
-    let gpus = args.get_usize("gpus", 8);
+    let gpus = num_arg(args.get_usize("gpus", 8));
     let limits: Vec<u64> = args
         .get("limits")
         .map(|s| s.split(',').map(|x| parse_bytes(x).expect("bad size")).collect())
@@ -559,7 +614,7 @@ fn cmd_collective(args: &Args) -> agv_bench::util::error::Result<()> {
         SystemKind::parse(s).ok_or_else(|| anyhow!("unknown system `{s}` (cluster|dgx1|cs-storm)"))?
     };
     let topo = kind.build();
-    let gpus = args.get_usize("gpus", topo.num_gpus().min(8));
+    let gpus = args.get_usize("gpus", topo.num_gpus().min(8))?;
     if gpus == 0 || gpus > topo.num_gpus() {
         return Err(anyhow!("--gpus {gpus}: `{}` has {} GPUs", topo.name, topo.num_gpus()));
     }
@@ -567,14 +622,15 @@ fn cmd_collective(args: &Args) -> agv_bench::util::error::Result<()> {
         Some(s) => parse_bytes(s).ok_or_else(|| anyhow!("--total: bad size `{s}`"))?,
         None => 64 << 20,
     };
-    let root = args.get_usize("root", 0);
+    let root = args.get_usize("root", 0)?;
     if root >= gpus {
         return Err(anyhow!("--root {root}: op spans ranks 0..{gpus}"));
     }
-    let chunks = args.get_usize("chunks", 1).max(1);
-    let seed = args.get_u64("seed", 42);
+    let chunks = args.get_usize("chunks", 1)?.max(1);
+    let seed = args.get_u64("seed", 42)?;
     let perts = perturb_arg(args).unwrap_or_default();
     perturb::validate(&topo, &perts)?;
+    reject_permanent_outages(&perts, "use `agv faults --outage` for hard-fault studies");
 
     let per_rank = (total / gpus as u64).max(1);
     let mut rng = Rng::new(seed);
@@ -630,9 +686,9 @@ fn cmd_collective(args: &Args) -> agv_bench::util::error::Result<()> {
 }
 
 fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
-    let tenants = args.get_usize("tenants", 4);
-    let ops = args.get_usize("ops", 4);
-    let seed = args.get_u64("seed", 42);
+    let tenants = args.get_usize("tenants", 4)?;
+    let ops = args.get_usize("ops", 4)?;
+    let seed = args.get_u64("seed", 42)?;
     let lib = {
         let s = args.get_or("lib", "nccl");
         TenantLib::parse(s)
@@ -659,7 +715,8 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
             parse_trace(&text).with_context(|| format!("parsing trace `{f}`"))
         })
         .transpose()?;
-    let gpus_flag = args.get("gpus").map(|_| args.get_usize("gpus", 8));
+    let gpus_flag = args.get("gpus").map(|_| args.get_usize("gpus", 8)).transpose()?;
+    let gap_flag = args.get("gap").map(|_| args.get_f64("gap", 0.0)).transpose()?;
     let mut systems: Vec<SystemKind> = match args.get_or("system", "all") {
         "all" => SystemKind::all().to_vec(),
         s => vec![SystemKind::parse(s)
@@ -689,7 +746,7 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
     // --refacto: the cpals hook — the data set's comm pattern as one
     // tenant among synthetic background tenants.
     if let Some(dname) = args.get("refacto") {
-        for flag in ["trace", "dist", "total", "ops", "perturb"] {
+        for flag in ["trace", "dist", "total", "ops", "perturb", "gap", "timeout", "retries"] {
             if args.get(flag).is_some() {
                 return Err(anyhow!(
                     "--{flag} does not apply to --refacto (its tenant replays the data set's \
@@ -697,8 +754,14 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
                 ));
             }
         }
+        if args.flag("recover") {
+            return Err(anyhow!(
+                "--recover does not apply to --refacto (the contended replay is fail-fast; \
+                 use the synthetic workload for supervised recovery)"
+            ));
+        }
         let spec = datasets::by_name(dname).ok_or_else(|| anyhow!("unknown dataset `{dname}`"))?;
-        let iters = args.get_usize("iters", 2);
+        let iters = args.get_usize("iters", 2)?;
         if iters == 0 {
             return Err(anyhow!("--iters must be at least 1"));
         }
@@ -757,8 +820,79 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
                 t0.stream = OpStream::Trace { ops: tr.clone() };
             }
         }
+        if let Some(g) = gap_flag {
+            // negatives rejected by spec.validate per system
+            for t in &mut spec.tenants {
+                t.gap = g;
+            }
+        }
         spec
     };
+
+    // --recover (or an explicit policy knob): supervised execution —
+    // hard outages stall jobs, stalled jobs re-issue through the
+    // timeout-retry-reroute-shrink driver, failure-aware SLOs out.
+    let recover =
+        args.flag("recover") || args.get("timeout").is_some() || args.get("retries").is_some();
+    if recover {
+        let mut policy = RecoveryPolicy::default_policy();
+        policy.timeout = args.get_f64("timeout", policy.timeout)?;
+        policy.max_retries = args.get_usize("retries", policy.max_retries)?;
+        if policy.timeout <= 0.0 {
+            return Err(anyhow!("--timeout must be positive seconds, got {}", policy.timeout));
+        }
+        println!(
+            "SUPERVISED WORKLOAD — hard-fault recovery (timeout {}, {} retries)",
+            fmt_time(policy.timeout),
+            policy.max_retries
+        );
+        for &kind in &systems {
+            let topo = kind.build();
+            let spec = mk_spec(topo.num_gpus());
+            spec.validate(&topo)?;
+            let sup = run_workload_recovered(&topo, &spec, Params::default(), &policy)?;
+            println!("== {} ==", kind.name());
+            match &sup.diagnosis {
+                Some(d) => println!("  shared run {d}"),
+                None => println!("  shared run completed at {}", fmt_time(sup.result.makespan)),
+            }
+            let s = &sup.slo;
+            println!(
+                "  ops: {} clean, {} recovered, {} aborted of {}",
+                s.completed_ops, s.recovered_ops, s.aborted_ops, s.total_ops
+            );
+            println!(
+                "  goodput {}/s over makespan {} ({} delivered)",
+                fmt_bytes(s.goodput as u64),
+                fmt_time(s.makespan),
+                fmt_bytes(s.delivered_bytes as u64)
+            );
+            if s.recovered_ops > 0 {
+                println!(
+                    "  recovery latency p50 {}  p95 {}  max {}",
+                    fmt_time(s.recovery_p50),
+                    fmt_time(s.recovery_p95),
+                    fmt_time(s.recovery_max)
+                );
+            }
+            for r in &sup.reissued {
+                println!(
+                    "    tenant{} op{} [{}]: {}{}",
+                    r.tenant,
+                    r.index,
+                    r.label,
+                    r.strategy.label(),
+                    r.finish.map(|f| format!(" at {}", fmt_time(f))).unwrap_or_default()
+                );
+            }
+        }
+        return Ok(());
+    }
+    if let Some(ps) = &perts {
+        // without --recover the shared run is fail-fast (Sim::run):
+        // permanent outages would stall it, not finish slowly
+        reject_permanent_outages(ps, "add --recover for supervised hard-fault execution");
+    }
     let sections = report_workload::study(&systems, Params::default(), mk_spec)?;
     print!("{}", report_workload::render(&sections));
     if let Some(dir) = csv_dir(args) {
@@ -771,9 +905,9 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
 fn cmd_e2e(args: &Args) {
     let config = args.get_or("config", "small").to_string();
     let system = system_arg(args);
-    let gpus = args.get_usize("gpus", 8);
-    let iters = args.get_usize("iters", 10);
-    let seed = args.get_u64("seed", 42);
+    let gpus = num_arg(args.get_usize("gpus", 8));
+    let iters = num_arg(args.get_usize("iters", 10));
+    let seed = num_arg(args.get_u64("seed", 42));
     let dir = args
         .get("artifacts")
         .map(PathBuf::from)

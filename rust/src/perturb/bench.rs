@@ -9,11 +9,13 @@
 //! the bench binary but never written to the artifact.
 
 use crate::comm::select::{AlgoSelector, RobustObjective};
+use crate::comm::transport::RecoveryPolicy;
 use crate::comm::{run_allgatherv, Library, Params};
 use crate::topology::systems::SystemKind;
 use crate::topology::Topology;
 use crate::util::json::{obj, Json};
 
+use super::recovery::recovered_allgatherv;
 use super::{ensemble, perturbed_allgatherv, EnsembleCfg, Perturbation};
 
 /// The bench grid: per paper system the canonical straggler scenario
@@ -79,6 +81,57 @@ fn case_doc(
     ])
 }
 
+/// Simulated metrics of one hard-outage case: the canonical
+/// link-on-route(0,1) outage per system, transient and permanent, run
+/// through the timeout–retry–reroute–shrink driver
+/// ([`crate::perturb::recovery`]) for every library. Deterministic by
+/// construction — the scenarios are fixed, the driver draws nothing.
+fn outage_case_doc(kind: SystemKind) -> Json {
+    let params = Params::default();
+    let policy = RecoveryPolicy::default_policy();
+    let topo = kind.build();
+    let gpus = topo.num_gpus().min(8);
+    let counts = vec![4u64 << 20; gpus];
+    let link = topo
+        .route_gpus(0, 1)
+        .expect("paper systems route any GPU pair")
+        .links[0];
+    let h_max = Library::all()
+        .into_iter()
+        .map(|l| run_allgatherv(l, &topo, &counts).time)
+        .fold(0.0f64, f64::max);
+    let scenarios = [
+        (
+            "transient",
+            Perturbation::link_down(link).during(h_max * 0.25, h_max * 0.5),
+        ),
+        ("permanent", Perturbation::link_down(link)),
+    ];
+    let mut rows = Vec::new();
+    for (label, pert) in &scenarios {
+        for lib in Library::all() {
+            let rec =
+                recovered_allgatherv(&topo, lib, params, &counts, std::slice::from_ref(pert), &policy);
+            rows.push(obj(vec![
+                ("scenario", Json::Str(label.to_string())),
+                ("lib", Json::Str(lib.name().to_string())),
+                ("strategy", Json::Str(rec.strategy.label())),
+                (
+                    "recovered_s",
+                    rec.time().map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("recovery_latency_s", Json::Num(rec.recovery_latency)),
+                ("survivors", Json::Num(rec.survivors as f64)),
+            ]));
+        }
+    }
+    obj(vec![
+        ("case", Json::Str(format!("{}/link{link}-outage", kind.name()))),
+        ("gpus", Json::Num(gpus as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 /// The full deterministic `BENCH_faults.json` document. Cases fan out
 /// over the bounded worker pool ([`crate::util::pool`]); results come
 /// back in case order, so the render is byte-stable.
@@ -91,10 +144,16 @@ pub fn bench_doc(seed: u64) -> Json {
         })
         .collect();
     let docs = crate::util::pool::parallel_map(jobs);
+    let outage_jobs: Vec<_> = SystemKind::all()
+        .into_iter()
+        .map(|kind| move || outage_case_doc(kind))
+        .collect();
+    let outage_docs = crate::util::pool::parallel_map(outage_jobs);
     obj(vec![
         ("bench", Json::Str("bench_faults".to_string())),
         ("seed", Json::Num(seed as f64)),
         ("cases", Json::Arr(docs)),
+        ("outage_cases", Json::Arr(outage_docs)),
     ])
 }
 
@@ -133,6 +192,21 @@ mod tests {
             let mean = robust.get("mean_s").unwrap().as_f64().unwrap();
             assert!(p95 >= mean - 1e-12, "p95 {p95} below mean {mean}");
             assert!(c.get("mean_s").is_none(), "wall-clock field leaked into the artifact");
+        }
+        // the hard-outage grid: every (system, scenario, library) cell
+        // completes — natively, by watchdog retry, by reroute, or by
+        // shrinking past a GPU whose only link died
+        let outages = doc.get("outage_cases").unwrap().as_arr().unwrap();
+        assert_eq!(outages.len(), 3);
+        for c in outages {
+            let rows = c.get("rows").unwrap().as_arr().unwrap();
+            assert_eq!(rows.len(), 6, "2 scenarios x 3 libraries");
+            for r in rows {
+                let strategy = r.get("strategy").unwrap().as_str().unwrap();
+                assert_ne!(strategy, "ABORT", "unrecovered outage cell: {r:?}");
+                let t = r.get("recovered_s").unwrap().as_f64().unwrap();
+                assert!(t.is_finite() && t > 0.0);
+            }
         }
     }
 }

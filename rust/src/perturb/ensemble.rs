@@ -39,6 +39,14 @@ pub struct EnsembleCfg {
     pub window: f64,
     /// Fault length range (seconds), used only when `window > 0`.
     pub duration: (f64, f64),
+    /// Probability a scenario also has one **hard link outage**
+    /// ([`Perturbation::LinkDown`]); 0.0 (the default) draws none and
+    /// keeps every pre-outage ensemble bit-identical.
+    pub outage_prob: f64,
+    /// Outage length range (seconds). Ensemble outages are always
+    /// transient — a permanent outage is a hand-written scenario, not a
+    /// Monte-Carlo draw (the recovery layer is what handles those).
+    pub outage_duration: (f64, f64),
 }
 
 impl EnsembleCfg {
@@ -54,12 +62,24 @@ impl EnsembleCfg {
             severity: (0.25, 0.9),
             window: 0.0,
             duration: (0.0, 0.0),
+            outage_prob: 0.0,
+            outage_duration: (0.0, 0.0),
         }
     }
 
     /// `quick` with an explicit scenario count.
     pub fn with_scenarios(mut self, scenarios: usize) -> EnsembleCfg {
         self.scenarios = scenarios;
+        self
+    }
+
+    /// Add transient hard link outages: each scenario gains one
+    /// [`Perturbation::LinkDown`] with probability `prob`, lasting
+    /// uniformly within `duration` seconds — the outage-ensemble regime
+    /// behind `agv faults --outage` and outage-aware robust selection.
+    pub fn with_outages(mut self, prob: f64, duration: (f64, f64)) -> EnsembleCfg {
+        self.outage_prob = prob;
+        self.outage_duration = duration;
         self
     }
 }
@@ -113,6 +133,20 @@ pub fn ensemble(topo: &Topology, cfg: &EnsembleCfg) -> Vec<Vec<Perturbation>> {
                 let factor = severity(&mut rng, cfg);
                 let (start, duration) = window(&mut rng);
                 perts.push(Perturbation::Straggler { rank, factor, start, duration });
+            }
+            // outages draw last, and only when enabled: a pre-outage
+            // config consumes exactly the same random stream as before,
+            // so every existing ensemble replays bit-identically
+            if cfg.outage_prob > 0.0 && rng.next_f64() < cfg.outage_prob {
+                let link = rng.gen_range(links) as usize;
+                let start =
+                    if cfg.window > 0.0 { rng.gen_f64(0.0, cfg.window) } else { 0.0 };
+                let duration = if cfg.outage_duration.1 > cfg.outage_duration.0 {
+                    rng.gen_f64(cfg.outage_duration.0, cfg.outage_duration.1)
+                } else {
+                    cfg.outage_duration.0.max(0.0)
+                };
+                perts.push(Perturbation::LinkDown { link, start, duration });
             }
             perts
         })
@@ -170,6 +204,8 @@ mod tests {
             severity: (0.3, 0.6),
             window: 0.01,
             duration: (0.001, 0.004),
+            outage_prob: 0.0,
+            outage_duration: (0.0, 0.0),
         };
         let e = ensemble(&topo, &cfg);
         let mut saw_straggler = false;
@@ -185,5 +221,34 @@ mod tests {
             }
         }
         assert!(saw_straggler);
+    }
+
+    #[test]
+    fn outage_draws_extend_without_disturbing_the_prefix() {
+        // enabling outages must not change the scale/straggler draws a
+        // config produced before the knob existed: the outage draw
+        // consumes randoms only after every existing draw
+        let topo = SystemKind::Dgx1.build();
+        let plain = ensemble(&topo, &EnsembleCfg::quick(9));
+        let outaged =
+            ensemble(&topo, &EnsembleCfg::quick(9).with_outages(1.0, (0.001, 0.002)));
+        assert_eq!(plain.len(), outaged.len());
+        let mut saw_outage = false;
+        for (a, b) in plain.iter().zip(&outaged) {
+            assert_eq!(a[..], b[..a.len()], "pre-outage draws disturbed");
+            for p in &b[a.len()..] {
+                match *p {
+                    Perturbation::LinkDown { link, start, duration } => {
+                        saw_outage = true;
+                        assert!(link < topo.links.len());
+                        assert_eq!(start, 0.0, "static config: outage at t=0");
+                        assert!((0.001..0.002).contains(&duration));
+                    }
+                    ref other => panic!("unexpected extra draw {other:?}"),
+                }
+            }
+            validate(&topo, b).unwrap();
+        }
+        assert!(saw_outage, "outage_prob 1.0 drew no outage");
     }
 }

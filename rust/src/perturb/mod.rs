@@ -11,11 +11,13 @@
 //! ([`crate::sim::Sim::capacity_event`]):
 //!
 //! - [`Perturbation`]: scale a link, drop a link to an absolute
-//!   bandwidth floor, or slow a whole GPU (every incident link), each
-//!   over an optional `[start, start+duration)` window;
+//!   bandwidth floor, slow a whole GPU (every incident link), or — the
+//!   hard-fault regime of DESIGN.md §14 — kill a link or a GPU outright
+//!   (capacity exactly 0), each over an optional
+//!   `[start, start+duration)` window;
 //! - [`apply`]: compose a perturbation set into per-link capacity
-//!   steps — overlapping scales multiply, floors clamp — and emit them
-//!   into a `Sim`;
+//!   steps — overlapping scales multiply, floors clamp, outages zero —
+//!   and emit them into a `Sim`;
 //! - [`ensemble`]: seeded Monte-Carlo scenario sets over severity /
 //!   duration / placement distributions, for robust selection
 //!   ([`crate::comm::select::AlgoSelector::select_robust`]) and the
@@ -35,8 +37,10 @@
 
 pub mod bench;
 pub mod ensemble;
+pub mod recovery;
 
 pub use ensemble::{ensemble, EnsembleCfg};
+pub use recovery::{recovered_allgatherv, Recovered, RecoveryStrategy};
 
 use std::collections::BTreeMap;
 
@@ -90,6 +94,33 @@ pub enum Perturbation {
         /// Window length (virtual seconds; `INFINITY` = forever).
         duration: f64,
     },
+    /// Hard link outage: the link's capacity drops to **exactly zero**
+    /// over the window — a dead lane (DESIGN.md §14). Unlike
+    /// [`Perturbation::LinkScale`]/[`Perturbation::LinkFloor`] (clamped
+    /// to positive capacities), an outage overrides every scale and
+    /// floor active at the same instant; flows crossing the link freeze
+    /// and the run ends [`crate::sim::SimOutcome::Stalled`] unless the
+    /// window closes or the recovery layer reroutes around it.
+    LinkDown {
+        /// Target link.
+        link: LinkId,
+        /// Window start (virtual seconds).
+        start: f64,
+        /// Window length (virtual seconds; `INFINITY` = crashed for good).
+        duration: f64,
+    },
+    /// Hard GPU outage: **every link incident to the GPU** drops to
+    /// zero over the window — a crashed device. Completing a collective
+    /// past a permanent GPU outage requires communicator-shrink
+    /// semantics ([`crate::perturb::recovery`]).
+    GpuDown {
+        /// GPU rank (rank, not device id).
+        rank: usize,
+        /// Window start (virtual seconds).
+        start: f64,
+        /// Window length (virtual seconds; `INFINITY` = crashed for good).
+        duration: f64,
+    },
 }
 
 impl Perturbation {
@@ -108,12 +139,24 @@ impl Perturbation {
         Perturbation::Straggler { rank, factor, start: 0.0, duration: f64::INFINITY }
     }
 
+    /// Permanent link outage, dead from t=0 onward.
+    pub fn link_down(link: LinkId) -> Perturbation {
+        Perturbation::LinkDown { link, start: 0.0, duration: f64::INFINITY }
+    }
+
+    /// Permanent GPU outage, crashed from t=0 onward.
+    pub fn gpu_down(rank: usize) -> Perturbation {
+        Perturbation::GpuDown { rank, start: 0.0, duration: f64::INFINITY }
+    }
+
     /// The same perturbation restricted to `[start, start+duration)`.
     pub fn during(mut self, new_start: f64, new_duration: f64) -> Perturbation {
         match &mut self {
             Perturbation::LinkScale { start, duration, .. }
             | Perturbation::LinkFloor { start, duration, .. }
-            | Perturbation::Straggler { start, duration, .. } => {
+            | Perturbation::Straggler { start, duration, .. }
+            | Perturbation::LinkDown { start, duration, .. }
+            | Perturbation::GpuDown { start, duration, .. } => {
                 *start = new_start;
                 *duration = new_duration;
             }
@@ -126,11 +169,14 @@ impl Perturbation {
         match *self {
             Perturbation::LinkScale { start, duration, .. }
             | Perturbation::LinkFloor { start, duration, .. }
-            | Perturbation::Straggler { start, duration, .. } => (start, duration),
+            | Perturbation::Straggler { start, duration, .. }
+            | Perturbation::LinkDown { start, duration, .. }
+            | Perturbation::GpuDown { start, duration, .. } => (start, duration),
         }
     }
 
-    /// Short report label ("link3 x0.50", "gpu2 straggler x0.25", ...).
+    /// Short report label ("link3 x0.50", "gpu2 straggler x0.25",
+    /// "link1 DOWN", ...).
     pub fn label(&self) -> String {
         match *self {
             Perturbation::LinkScale { link, factor, .. } => format!("link{link} x{factor:.2}"),
@@ -140,6 +186,31 @@ impl Perturbation {
             Perturbation::Straggler { rank, factor, .. } => {
                 format!("gpu{rank} straggler x{factor:.2}")
             }
+            Perturbation::LinkDown { link, .. } => format!("link{link} DOWN"),
+            Perturbation::GpuDown { rank, .. } => format!("gpu{rank} DOWN"),
+        }
+    }
+
+    /// Canonical `--perturb` grammar form of this perturbation; the
+    /// exact inverse of [`parse_list`]:
+    /// `parse_list(&p.spec()).unwrap() == vec![p]` for every variant
+    /// (pinned by `parse_list_roundtrip_and_rejections`). Infinite
+    /// durations and zero starts render as the grammar's defaults.
+    pub fn spec(&self) -> String {
+        let head = match *self {
+            Perturbation::LinkScale { link, factor, .. } => format!("link:{link}:{factor}"),
+            Perturbation::LinkFloor { link, floor_bw, .. } => format!("floor:{link}:{floor_bw}"),
+            Perturbation::Straggler { rank, factor, .. } => format!("straggler:{rank}:{factor}"),
+            Perturbation::LinkDown { link, .. } => format!("down:{link}"),
+            Perturbation::GpuDown { rank, .. } => format!("gpudown:{rank}"),
+        };
+        let (start, duration) = self.window();
+        if duration.is_finite() {
+            format!("{head}:{start}:{duration}")
+        } else if start != 0.0 {
+            format!("{head}:{start}")
+        } else {
+            head
         }
     }
 }
@@ -191,6 +262,24 @@ pub fn validate(topo: &Topology, perts: &[Perturbation]) -> Result<()> {
                 }
                 check_factor(i, "straggler factor", factor)?;
             }
+            Perturbation::LinkDown { link, .. } => {
+                if link >= topo.links.len() {
+                    return Err(anyhow!(
+                        "perturbation {i}: link {link} out of range (`{}` has {} links)",
+                        topo.name,
+                        topo.links.len()
+                    ));
+                }
+            }
+            Perturbation::GpuDown { rank, .. } => {
+                if rank >= topo.num_gpus() {
+                    return Err(anyhow!(
+                        "perturbation {i}: GPU rank {rank} out of range (`{}` has {} GPUs)",
+                        topo.name,
+                        topo.num_gpus()
+                    ));
+                }
+            }
         }
     }
     Ok(())
@@ -209,11 +298,13 @@ fn check_factor(i: usize, what: &str, factor: f64) -> Result<()> {
     Ok(())
 }
 
-/// A link-local effect over a window (straggler expanded to its links).
+/// A link-local effect over a window (straggler and GPU outage
+/// expanded to their incident links).
 #[derive(Clone, Copy, Debug)]
 enum Effect {
     Scale(f64),
     Floor(f64),
+    Down,
 }
 
 /// Compile a perturbation set into per-link **capacity steps** and emit
@@ -253,6 +344,14 @@ pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
                         .push((start, end, Effect::Scale(factor)));
                 }
             }
+            Perturbation::LinkDown { link, .. } => {
+                by_link.entry(link).or_default().push((start, end, Effect::Down));
+            }
+            Perturbation::GpuDown { rank, .. } => {
+                for link in topo.gpu_links(rank) {
+                    by_link.entry(link).or_default().push((start, end, Effect::Down));
+                }
+            }
         }
     }
     for (link, effects) in by_link {
@@ -266,9 +365,10 @@ pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
         ts.sort_by(f64::total_cmp);
         ts.dedup_by(|a, b| a.to_bits() == b.to_bits());
         for t in ts {
-            // two passes — all active scales multiply first, then all
-            // active floors clamp — so the effective capacity is
-            // independent of the order perturbations were listed in
+            // three passes — all active scales multiply first, then all
+            // active floors clamp, then any active outage zeroes — so
+            // the effective capacity is independent of the order
+            // perturbations were listed in
             let mut cap = base;
             for &(s, e, eff) in &effects {
                 if s <= t && t < e {
@@ -288,7 +388,16 @@ pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
             // the validate() factor bounds: keep the step inside f64's
             // positive range instead of tripping the engine's assert
             // (identity for every physically meaningful capacity)
-            sim.capacity_event(link, t, cap.clamp(f64::MIN_POSITIVE, f64::MAX));
+            cap = cap.clamp(f64::MIN_POSITIVE, f64::MAX);
+            // outages win over everything — a floor must not resurrect
+            // a dead link, so the exact 0.0 bypasses the clamp above
+            if effects
+                .iter()
+                .any(|&(s, e, eff)| s <= t && t < e && matches!(eff, Effect::Down))
+            {
+                cap = 0.0;
+            }
+            sim.capacity_event(link, t, cap);
         }
     }
 }
@@ -362,29 +471,41 @@ pub fn perturbed_candidate(
 /// link:<id>:<factor>[:<start>[:<duration>]]
 /// floor:<id>:<bytes-per-sec>[:<start>[:<duration>]]
 /// straggler:<rank>:<factor>[:<start>[:<duration>]]
+/// down:<id>[:<start>[:<duration>]]
+/// gpudown:<rank>[:<start>[:<duration>]]
 /// ```
 ///
-/// e.g. `--perturb straggler:0:0.5,floor:2:1GB:0.001:0.01`. Link ids
-/// are per-topology; `agv faults --system S --list-links` prints them.
+/// e.g. `--perturb straggler:0:0.5,floor:2:1GB:0.001:0.01` or
+/// `--perturb down:3:0.001:0.01` (link 3 dead for 10 ms). `down` and
+/// `gpudown` take no magnitude — an outage is total by definition. Link
+/// ids are per-topology; `agv faults --system S --list-links` prints
+/// them.
 pub fn parse_list(spec: &str) -> Result<Vec<Perturbation>> {
     let mut out = Vec::new();
     for item in spec.split(',').filter(|s| !s.is_empty()) {
         let parts: Vec<&str> = item.split(':').collect();
-        if parts.len() < 3 || parts.len() > 5 {
-            return Err(anyhow!(
-                "perturbation `{item}`: expected kind:target:magnitude[:start[:duration]]"
-            ));
+        // outage kinds carry no magnitude field; everything else does
+        let has_magnitude = !matches!(parts[0], "down" | "gpudown");
+        let (min_parts, max_parts) = if has_magnitude { (3, 5) } else { (2, 4) };
+        if parts.len() < min_parts || parts.len() > max_parts {
+            let grammar = if has_magnitude {
+                "kind:target:magnitude[:start[:duration]]"
+            } else {
+                "kind:target[:start[:duration]]"
+            };
+            return Err(anyhow!("perturbation `{item}`: expected {grammar}"));
         }
         let target: usize = parts[1]
             .parse()
             .map_err(|_| anyhow!("perturbation `{item}`: bad target `{}`", parts[1]))?;
-        let start: f64 = match parts.get(3) {
+        let start_idx = if has_magnitude { 3 } else { 2 };
+        let start: f64 = match parts.get(start_idx) {
             Some(s) => s
                 .parse()
                 .map_err(|_| anyhow!("perturbation `{item}`: bad start `{s}`"))?,
             None => 0.0,
         };
-        let duration: f64 = match parts.get(4) {
+        let duration: f64 = match parts.get(start_idx + 1) {
             Some(s) => s
                 .parse()
                 .map_err(|_| anyhow!("perturbation `{item}`: bad duration `{s}`"))?,
@@ -409,9 +530,11 @@ pub fn parse_list(spec: &str) -> Result<Vec<Perturbation>> {
                     .map_err(|_| anyhow!("perturbation `{item}`: bad factor `{}`", parts[2]))?;
                 Perturbation::Straggler { rank: target, factor, start, duration }
             }
+            "down" => Perturbation::LinkDown { link: target, start, duration },
+            "gpudown" => Perturbation::GpuDown { rank: target, start, duration },
             other => {
                 return Err(anyhow!(
-                    "perturbation `{item}`: unknown kind `{other}` (link|floor|straggler)"
+                    "perturbation `{item}`: unknown kind `{other}` (link|floor|straggler|down|gpudown)"
                 ))
             }
         };
@@ -457,6 +580,81 @@ mod tests {
             validate(&t, &[Perturbation::scale(0, 0.5).during(0.0, f64::NAN)]).is_err(),
             "nan duration"
         );
+        assert!(validate(&t, &[Perturbation::link_down(0)]).is_ok());
+        assert!(validate(&t, &[Perturbation::gpu_down(0)]).is_ok());
+        assert!(validate(&t, &[Perturbation::link_down(999)]).is_err(), "outage link range");
+        assert!(validate(&t, &[Perturbation::gpu_down(99)]).is_err(), "outage rank range");
+        assert!(
+            validate(&t, &[Perturbation::link_down(0).during(-1.0, 1.0)]).is_err(),
+            "outage negative start"
+        );
+    }
+
+    #[test]
+    fn outage_forces_exact_zero_and_floors_cannot_resurrect_it() {
+        // a floor above the base bandwidth plus a scale above 1.0 are
+        // both active during the outage window: the composed step must
+        // still be exactly 0.0 — outages win over every other effect
+        let t = SystemKind::Dgx1.build();
+        let link = t.gpu_links(0)[0];
+        let base = t.links[link].class.bandwidth();
+        let perts = [
+            Perturbation::scale(link, 2.0),
+            Perturbation::floor(link, 2.0 * base),
+            Perturbation::link_down(link).during(0.001, 0.002),
+        ];
+        let mut sim = Sim::new(&t);
+        apply(&mut sim, &perts);
+        // breakpoints: 0 (scale+floor), 0.001 (down), 0.003 (restored)
+        let expect = [(0.0, 2.0 * base), (0.001, 0.0), (0.003, 2.0 * base)];
+        assert_eq!(sim.cap_events.len(), expect.len());
+        for (ev, (t_e, cap_e)) in sim.cap_events.iter().zip(expect) {
+            assert_eq!(ev.time.to_bits(), t_e.to_bits());
+            assert_eq!(ev.capacity.to_bits(), cap_e.to_bits());
+        }
+        // listing order must not matter
+        let mut reordered = Sim::new(&t);
+        apply(&mut reordered, &[perts[2], perts[0], perts[1]]);
+        assert_eq!(sim.cap_events, reordered.cap_events);
+    }
+
+    #[test]
+    fn gpu_down_kills_every_incident_link() {
+        let t = SystemKind::CsStorm.build();
+        let mut sim = Sim::new(&t);
+        apply(&mut sim, &[Perturbation::gpu_down(3)]);
+        let links: Vec<_> = sim.cap_events.iter().map(|e| e.link).collect();
+        assert_eq!(links, t.gpu_links(3));
+        for ev in &sim.cap_events {
+            assert_eq!(ev.time, 0.0);
+            assert_eq!(ev.capacity.to_bits(), 0.0_f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn transient_outage_freezes_then_completes() {
+        // one flow over a link dead for [t1, t2): finish = t2 + what was
+        // left at t1, on both engines — the unit-level liveness anchor
+        use crate::sim::with_reference_engine;
+        let t = SystemKind::Dgx1.build();
+        let path = t.route_gpus(0, 1).unwrap();
+        let link = path.links[0];
+        let bw = t.path_bandwidth(&path);
+        let bytes = 8.0 * bw * 0.01; // 80 ms of work at full rate
+        let (t1, t2) = (0.01, 0.04);
+        let run = || {
+            let mut sim = Sim::new(&t);
+            let f = sim.flow(path.clone(), bytes, 0.0, &[]);
+            apply(&mut sim, &[Perturbation::link_down(link).during(t1, t2 - t1)]);
+            let (res, outcome) = sim.run_outcome();
+            assert!(outcome.is_completed(), "{}", outcome.describe());
+            res.finish(f)
+        };
+        let expect = t2 + (bytes - bw * t1) / bw;
+        let event = run();
+        let reference = with_reference_engine(run);
+        assert!((event - expect).abs() / expect < 1e-9, "event {event} vs {expect}");
+        assert!((reference - expect).abs() / expect < 1e-9, "ref {reference} vs {expect}");
     }
 
     #[test]
@@ -566,6 +764,76 @@ mod tests {
         for bad in ["", "link:3", "warp:3:0.5", "link:x:0.5", "link:3:abc", "link:3:0.5:z"] {
             assert!(parse_list(bad).is_err(), "`{bad}` parsed");
         }
+        // outage kinds: no magnitude field
+        let downs = parse_list("down:3,gpudown:1:0.001,down:0:0.001:0.01").unwrap();
+        assert_eq!(downs[0], Perturbation::link_down(3));
+        assert_eq!(
+            downs[1],
+            Perturbation::GpuDown { rank: 1, start: 0.001, duration: f64::INFINITY }
+        );
+        assert_eq!(
+            downs[2],
+            Perturbation::LinkDown { link: 0, start: 0.001, duration: 0.01 }
+        );
+        for bad in ["down", "down:x", "down:3:y", "down:3:0:1:2", "gpudown:1:0:z"] {
+            assert!(parse_list(bad).is_err(), "`{bad}` parsed");
+        }
+    }
+
+    #[test]
+    fn rejection_matrix_pins_clear_messages() {
+        let msg = |s: &str| parse_list(s).unwrap_err().to_string();
+        assert!(msg("warp:3:0.5").contains("unknown kind `warp` (link|floor|straggler|down|gpudown)"));
+        assert!(msg("link:3").contains("expected kind:target:magnitude[:start[:duration]]"));
+        assert!(msg("down:3:0:1:2").contains("expected kind:target[:start[:duration]]"));
+        assert!(msg("link:x:0.5").contains("bad target `x`"));
+        assert!(msg("link:3:abc").contains("bad factor `abc`"));
+        assert!(msg("floor:3:junk").contains("bad bandwidth `junk`"));
+        assert!(msg("link:3:0.5:z").contains("bad start `z`"));
+        assert!(msg("link:3:0.5:0:z").contains("bad duration `z`"));
+        assert!(msg("").contains("empty specification"));
+        // out-of-range values parse but fail validate() with the window
+        // checks the CLI surfaces before running anything
+        let t = SystemKind::Dgx1.build();
+        let neg_start = parse_list("down:0:-1").unwrap();
+        assert!(validate(&t, &neg_start).unwrap_err().to_string().contains("start must be"));
+        let zero_dur = parse_list("link:0:0.5:0:0").unwrap();
+        assert!(validate(&t, &zero_dur).is_ok(), "zero duration is a validated no-op");
+        let mut sim = Sim::new(&t);
+        apply(&mut sim, &zero_dur);
+        assert!(sim.cap_events.is_empty(), "zero-duration window must emit nothing");
+    }
+
+    #[test]
+    fn every_label_form_round_trips_through_spec() {
+        let t = SystemKind::Dgx1.build();
+        let all_forms = [
+            Perturbation::scale(3, 0.5),
+            Perturbation::scale(3, 0.5).during(0.001, 0.25),
+            Perturbation::floor(2, (1u64 << 30) as f64),
+            Perturbation::floor(2, (1u64 << 30) as f64).during(0.5, 1.5),
+            Perturbation::straggler(0, 0.25),
+            Perturbation::straggler(7, 0.75).during(0.125, 0.25),
+            Perturbation::link_down(1),
+            Perturbation::link_down(1).during(0.001, 0.01),
+            Perturbation::gpu_down(4),
+            Perturbation::gpu_down(4).during(0.25, f64::INFINITY),
+        ];
+        for p in all_forms {
+            let parsed = parse_list(&p.spec()).unwrap_or_else(|e| {
+                panic!("`{}` (from {:?}) did not parse: {e:#}", p.spec(), p)
+            });
+            assert_eq!(parsed, vec![p], "spec `{}`", p.spec());
+            assert!(!p.label().is_empty());
+            validate(&t, &[p]).unwrap();
+        }
+        // the comma-joined set round-trips as a list too
+        let joined: String =
+            all_forms.iter().map(|p| p.spec()).collect::<Vec<_>>().join(",");
+        assert_eq!(parse_list(&joined).unwrap(), all_forms.to_vec());
+        // label forms are distinct and human-scannable
+        assert_eq!(Perturbation::link_down(1).label(), "link1 DOWN");
+        assert_eq!(Perturbation::gpu_down(4).label(), "gpu4 DOWN");
     }
 
     #[test]

@@ -1,0 +1,563 @@
+//! Hard-fault recovery driver (DESIGN.md §14): timeout -> bounded
+//! retries -> schedule repair, over the stall-diagnosing engines.
+//!
+//! The model is NCCL-style **abort-and-restart**: a collective that
+//! stalls (every surviving flow frozen on zero-capacity links,
+//! [`crate::sim::SimOutcome::Stalled`]) is torn down and re-issued from
+//! scratch, never patched mid-flight. Each re-issue is a fresh gated
+//! composition at an absolute restart instant — the same compose entry
+//! points the workload engine gates arrivals through — against the
+//! *same absolute fault windows*, so a transient outage that has closed
+//! by the restart lets the retry complete, while a permanent one fails
+//! every retry and escalates.
+//!
+//! Detection has two triggers. A **stall**
+//! ([`crate::sim::SimOutcome::Stalled`]) can only come from a
+//! *permanent* fault: a finite outage window always leaves its revival
+//! capacity step pending, so the engine freezes the affected flows and
+//! completes once the window closes rather than stalling. That native
+//! ride-out is where the **watchdog** fires instead: a run that
+//! completed, but that an overlapping outage window delayed past
+//! `pristine time + timeout`, is treated as watchdog-aborted at that
+//! deadline and re-issued — NCCL's per-op timeout semantics. Soft
+//! degradations (scales, floors, stragglers) never trip the watchdog,
+//! however slow: recovery stays outage-only, and soft-fault results
+//! remain bit-identical to [`super::perturbed_allgatherv`]. The
+//! strategy ladder:
+//!
+//! 1. **Retry** (up to [`RecoveryPolicy::max_retries`]): restart at
+//!    `deadline + backoff(k)`; a re-issue whose own latency fits the
+//!    per-op budget wins — transient outages recover here. If every
+//!    retry busts the budget, the natively-completed result stands
+//!    (strategy [`RecoveryStrategy::None`]): a slow completion beats a
+//!    restart loop.
+//! 2. **Reroute**: mask every culprit link dead
+//!    ([`Topology::with_links_down`]) and recompose — the library's own
+//!    routing/P2P detection then detours around the dead lanes. Only
+//!    attempted when the masked fabric is still
+//!    [`Topology::serviceable`]; wins against permanent link outages.
+//! 3. **Shrink**: when a rank itself is gone (permanent
+//!    [`Perturbation::GpuDown`], or every incident link dead), complete
+//!    on the survivors — counts restricted to live ranks, GPU registry
+//!    remapped so survivors are ranks `0..p'`
+//!    ([`Topology::remap_gpus`]), delivery semantics re-checked against
+//!    the shrunk membership by the conformance harness.
+//! 4. **Abort**: nothing applies; the diagnosed stall is reported.
+//!
+//! The correctness spine carries over from the zero-perturbation
+//! oracle: attempt 0 *is* the [`super::perturbed_allgatherv`] path, so
+//! a run that never stalls returns results bit-identical to recovery
+//! disabled, on both engine cores (`tests/faults_differential.rs`).
+
+use crate::comm::select::{compose as compose_candidate, Candidate};
+use crate::comm::transport::RecoveryPolicy;
+use crate::comm::{compose_allgatherv, CommResult, Library, Params};
+use crate::sim::{Sim, SimOutcome, TaskId};
+use crate::topology::{LinkId, Topology};
+
+use super::{apply, Perturbation};
+
+/// How a collective ultimately completed (or failed).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoveryStrategy {
+    /// Completed on the first attempt; recovery never triggered.
+    None,
+    /// A re-issue succeeded after `attempts` retries (transient fault).
+    Retry {
+        /// Retries consumed, counting the successful one.
+        attempts: usize,
+    },
+    /// Completed on the fabric with `masked_links` routed around.
+    Reroute {
+        /// Links masked dead for the repair composition.
+        masked_links: Vec<LinkId>,
+    },
+    /// Completed on the surviving ranks only.
+    Shrink {
+        /// Ranks excluded from the shrunk communicator.
+        dead_ranks: Vec<usize>,
+        /// Links masked dead for the repair composition.
+        masked_links: Vec<LinkId>,
+    },
+    /// Unrecoverable: every strategy failed or recovery was disabled.
+    Abort,
+}
+
+impl RecoveryStrategy {
+    /// Short report label ("clean", "retry x2", "reroute(3 links)",
+    /// "shrink(-1 rank)", "ABORT").
+    pub fn label(&self) -> String {
+        match self {
+            RecoveryStrategy::None => "clean".to_string(),
+            RecoveryStrategy::Retry { attempts } => format!("retry x{attempts}"),
+            RecoveryStrategy::Reroute { masked_links } => {
+                format!("reroute({} links)", masked_links.len())
+            }
+            RecoveryStrategy::Shrink { dead_ranks, .. } => {
+                format!("shrink(-{} ranks)", dead_ranks.len())
+            }
+            RecoveryStrategy::Abort => "ABORT".to_string(),
+        }
+    }
+}
+
+/// Outcome of a recovery-supervised collective.
+#[derive(Clone, Debug)]
+pub struct Recovered {
+    /// The completed run (`None` iff aborted). On the clean path this
+    /// is bit-identical to the recovery-free perturbed run.
+    pub result: Option<CommResult>,
+    /// Which strategy completed the op.
+    pub strategy: RecoveryStrategy,
+    /// First stall instant, if the op ever stalled.
+    pub stall_time: Option<f64>,
+    /// Completion time minus first stall (0.0 on the clean path) — the
+    /// cost the fault added end-to-end, detection and backoff included.
+    pub recovery_latency: f64,
+    /// Ranks the completed collective actually served.
+    pub survivors: usize,
+}
+
+impl Recovered {
+    /// Did the op complete (on full or shrunk membership)?
+    pub fn completed(&self) -> bool {
+        self.result.is_some()
+    }
+
+    /// Completion time, if any.
+    pub fn time(&self) -> Option<f64> {
+        self.result.map(|r| r.time)
+    }
+
+    fn abort(stall: f64) -> Recovered {
+        Recovered {
+            result: None,
+            strategy: RecoveryStrategy::Abort,
+            stall_time: Some(stall),
+            recovery_latency: 0.0,
+            survivors: 0,
+        }
+    }
+}
+
+/// Rank-addressed perturbations lowered to their per-link form:
+/// `Straggler` becomes one `LinkScale` per incident link, `GpuDown` one
+/// `LinkDown` per incident link. Link ids survive
+/// [`Topology::remap_gpus`] (ranks do not), so the lowered set pins the
+/// *physical* fault windows for shrunk-membership repair runs.
+pub fn lower_to_links(topo: &Topology, perts: &[Perturbation]) -> Vec<Perturbation> {
+    let mut out = Vec::with_capacity(perts.len());
+    for p in perts {
+        match *p {
+            Perturbation::Straggler { rank, factor, start, duration } => {
+                for link in topo.gpu_links(rank) {
+                    out.push(Perturbation::LinkScale { link, factor, start, duration });
+                }
+            }
+            Perturbation::GpuDown { rank, start, duration } => {
+                for link in topo.gpu_links(rank) {
+                    out.push(Perturbation::LinkDown { link, start, duration });
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+/// Ranks dead for good at/after `stall`: a permanent
+/// [`Perturbation::GpuDown`] covering the stall instant, with the
+/// window open-ended.
+fn permanently_down_ranks(perts: &[Perturbation], p: usize, stall: f64) -> Vec<usize> {
+    let mut out: Vec<usize> = perts
+        .iter()
+        .filter_map(|q| match *q {
+            Perturbation::GpuDown { rank, start, duration }
+                if rank < p && start <= stall && duration.is_infinite() =>
+            {
+                Some(rank)
+            }
+            _ => None,
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Supervise one collective under a recovery policy. `compose` builds
+/// the op into a fresh `Sim` behind an optional gate and returns its
+/// completion task (`None` = the op is inapplicable on that fabric —
+/// then `recover_with` returns `None` too, exactly as
+/// [`crate::comm::select::simulate`] does).
+///
+/// Attempt 0 is the exact [`super::perturbed_allgatherv`] shape (no
+/// gate, same compose, same `apply`), so a run that completes without
+/// stalling is bit-identical to the recovery-free path.
+pub fn recover_with<F>(
+    topo: &Topology,
+    counts: &[u64],
+    perts: &[Perturbation],
+    policy: &RecoveryPolicy,
+    compose: F,
+) -> Option<Recovered>
+where
+    F: for<'t> Fn(&mut Sim<'t>, &[u64], Option<TaskId>) -> Option<TaskId>,
+{
+    let p = counts.len();
+    let attempt = |t: &Topology,
+                   cv: &[u64],
+                   ps: &[Perturbation],
+                   at: f64|
+     -> Option<(CommResult, SimOutcome)> {
+        let mut sim = Sim::new(t);
+        let gate = if at > 0.0 { Some(sim.delay(at, &[])) } else { None };
+        let done = compose(&mut sim, cv, gate)?;
+        apply(&mut sim, ps);
+        let (res, outcome) = sim.run_outcome();
+        Some((CommResult { time: res.finish(done), flows: res.flows }, outcome))
+    };
+
+    let (res0, out0) = attempt(topo, counts, perts, 0.0)?;
+    let SimOutcome::Stalled { time: first_stall, culprit_links, .. } = out0 else {
+        // Completed natively. Watchdog check (module docs): did an
+        // overlapping outage window freeze the op past its per-op
+        // deadline? Soft degradations never reach this block.
+        let clean = Recovered {
+            result: Some(res0),
+            strategy: RecoveryStrategy::None,
+            stall_time: None,
+            recovery_latency: 0.0,
+            survivors: p,
+        };
+        let outage_overlap = perts.iter().any(|q| {
+            matches!(q, Perturbation::LinkDown { .. } | Perturbation::GpuDown { .. }) && {
+                let (start, duration) = q.window();
+                start < res0.time && duration > 0.0
+            }
+        });
+        if !policy.enabled() || !outage_overlap {
+            return Some(clean);
+        }
+        // the per-op budget: pristine-fabric time plus the timeout
+        // (same compose, no perturbations — cheap and deterministic)
+        let (base, _) = attempt(topo, counts, &[], 0.0)?;
+        let budget = base.time + policy.timeout;
+        if res0.time <= budget {
+            return Some(clean);
+        }
+        let mut now = budget; // the watchdog-abort instant
+        for k in 0..policy.max_retries {
+            now += policy.backoff(k);
+            let (res, outcome) = attempt(topo, counts, perts, now)?;
+            if !outcome.is_completed() {
+                break; // a later window is permanent: keep the native result
+            }
+            if res.time - now <= budget {
+                return Some(Recovered {
+                    result: Some(res),
+                    strategy: RecoveryStrategy::Retry { attempts: k + 1 },
+                    stall_time: Some(budget),
+                    recovery_latency: res.time - budget,
+                    survivors: p,
+                });
+            }
+        }
+        return Some(clean);
+    };
+    if !policy.enabled() {
+        return Some(Recovered::abort(first_stall));
+    }
+
+    let mut dead: Vec<LinkId> = culprit_links;
+    let mut now = first_stall + policy.timeout;
+
+    // 1. bounded exponential-backoff retries (beats transient outages)
+    for k in 0..policy.max_retries {
+        now += policy.backoff(k);
+        let (res, outcome) = attempt(topo, counts, perts, now)?;
+        match outcome {
+            SimOutcome::Completed { .. } => {
+                return Some(Recovered {
+                    result: Some(res),
+                    strategy: RecoveryStrategy::Retry { attempts: k + 1 },
+                    stall_time: Some(first_stall),
+                    recovery_latency: res.time - first_stall,
+                    survivors: p,
+                });
+            }
+            SimOutcome::Stalled { time, culprit_links, .. } => {
+                for l in culprit_links {
+                    if !dead.contains(&l) {
+                        dead.push(l);
+                    }
+                }
+                now = time + policy.timeout;
+            }
+        }
+    }
+    dead.sort_unstable();
+
+    // 2. reroute: recompose on the fabric with the culprits masked dead
+    let masked = topo.with_links_down(&dead);
+    if masked.serviceable(p) {
+        now += policy.backoff(policy.max_retries);
+        if let Some((res, outcome)) = attempt(&masked, counts, perts, now) {
+            match outcome {
+                SimOutcome::Completed { .. } => {
+                    return Some(Recovered {
+                        result: Some(res),
+                        strategy: RecoveryStrategy::Reroute { masked_links: dead },
+                        stall_time: Some(first_stall),
+                        recovery_latency: res.time - first_stall,
+                        survivors: p,
+                    });
+                }
+                SimOutcome::Stalled { time, culprit_links, .. } => {
+                    for l in culprit_links {
+                        if !dead.contains(&l) {
+                            dead.push(l);
+                        }
+                    }
+                    dead.sort_unstable();
+                    now = time + policy.timeout;
+                }
+            }
+        }
+    }
+
+    // 3. communicator shrink: complete on the survivors
+    let masked = topo.with_links_down(&dead);
+    let gone_by_pert = permanently_down_ranks(perts, p, first_stall);
+    let survivors: Vec<usize> = (0..p)
+        .filter(|&r| {
+            !gone_by_pert.contains(&r)
+                && masked.gpu_links(r).iter().any(|&l| masked.link_alive(l))
+                && masked.try_host_cpu(masked.gpu(r)).is_some()
+        })
+        .collect();
+    if survivors.len() >= 2 && survivors.len() < p {
+        // GPU registry remapped so survivors are ranks 0..p' — every
+        // schedule generator and conformance check then sees a dense
+        // communicator of p' ranks
+        let mut perm = survivors.clone();
+        for r in 0..topo.num_gpus() {
+            if !perm.contains(&r) {
+                perm.push(r);
+            }
+        }
+        let shrunk = masked.remap_gpus(&perm);
+        if shrunk.serviceable(survivors.len()) {
+            let shrunk_counts: Vec<u64> = survivors.iter().map(|&r| counts[r]).collect();
+            // rank-addressed windows must keep their physical targets
+            // across the remap: lower them to link form first
+            let lowered = lower_to_links(topo, perts);
+            now += policy.backoff(policy.max_retries);
+            if let Some((res, outcome)) = attempt(&shrunk, &shrunk_counts, &lowered, now) {
+                if outcome.is_completed() {
+                    let dead_ranks: Vec<usize> =
+                        (0..p).filter(|r| !survivors.contains(r)).collect();
+                    return Some(Recovered {
+                        result: Some(res),
+                        strategy: RecoveryStrategy::Shrink { dead_ranks, masked_links: dead },
+                        stall_time: Some(first_stall),
+                        recovery_latency: res.time - first_stall,
+                        survivors: survivors.len(),
+                    });
+                }
+            }
+        }
+    }
+
+    Some(Recovered::abort(first_stall))
+}
+
+/// [`super::perturbed_allgatherv`] under a recovery policy: identical
+/// when the run completes cleanly; otherwise retries, reroutes or
+/// shrinks per the module-level state machine.
+pub fn recovered_allgatherv(
+    topo: &Topology,
+    lib: Library,
+    params: Params,
+    counts: &[u64],
+    perts: &[Perturbation],
+    policy: &RecoveryPolicy,
+) -> Recovered {
+    recover_with(topo, counts, perts, policy, |sim, cv, gate| {
+        Some(compose_allgatherv(sim, lib, params, cv, gate))
+    })
+    .expect("allgatherv composes for every library")
+}
+
+/// [`super::perturbed_candidate`] under a recovery policy — the
+/// outage-aware robust selector's scenario evaluator. `None` iff the
+/// candidate is inapplicable on the healthy fabric.
+pub fn recovered_candidate(
+    topo: &Topology,
+    params: Params,
+    cand: Candidate,
+    counts: &[u64],
+    perts: &[Perturbation],
+    policy: &RecoveryPolicy,
+) -> Option<Recovered> {
+    recover_with(topo, counts, perts, policy, |sim, cv, gate| {
+        compose_candidate(sim, params, cand, cv, gate)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perturb::perturbed_allgatherv;
+    use crate::topology::systems::SystemKind;
+
+    fn nvlink_on_route(topo: &Topology) -> LinkId {
+        let path = topo.route_gpus(0, 1).unwrap();
+        path.links[0]
+    }
+
+    #[test]
+    fn clean_run_is_bit_exact_with_recovery_armed() {
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![4u64 << 20; 8];
+        let policy = RecoveryPolicy::default_policy();
+        for lib in Library::all() {
+            let plain = perturbed_allgatherv(&t, lib, Params::default(), &counts, &[]);
+            let rec = recovered_allgatherv(&t, lib, Params::default(), &counts, &[], &policy);
+            assert_eq!(rec.strategy, RecoveryStrategy::None, "{}", lib.name());
+            assert_eq!(rec.recovery_latency, 0.0);
+            let r = rec.result.unwrap();
+            assert_eq!(plain.time.to_bits(), r.time.to_bits(), "{}", lib.name());
+            assert_eq!(plain.flows, r.flows);
+        }
+    }
+
+    #[test]
+    fn transient_outage_recovers_by_retry() {
+        // an NVLink dead over [1ms, 3ms): the engine freezes affected
+        // flows and completes natively once the window closes, so the
+        // WATCHDOG is what fires — libraries whose schedule crosses the
+        // link bust the per-op budget and re-issue; libraries that
+        // never touch it stay clean
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![16u64 << 20; 8];
+        let link = nvlink_on_route(&t);
+        let perts = [Perturbation::link_down(link).during(1.0e-3, 2.0e-3)];
+        let policy = RecoveryPolicy::default_policy();
+        let mut retried = 0usize;
+        for lib in Library::all() {
+            let rec = recovered_allgatherv(&t, lib, Params::default(), &counts, &perts, &policy);
+            let res = rec.result.unwrap_or_else(|| {
+                panic!("{}: {:?} did not complete", lib.name(), rec.strategy)
+            });
+            assert_eq!(rec.survivors, 8, "{}", lib.name());
+            assert!(res.time.is_finite() && res.time > 0.0);
+            match rec.strategy {
+                RecoveryStrategy::Retry { attempts } => {
+                    retried += 1;
+                    assert!(attempts >= 1);
+                    assert!(rec.recovery_latency > 0.0, "{}", lib.name());
+                    // the re-issue started after the watchdog deadline,
+                    // i.e. after the window closed
+                    assert!(res.time > 3.0e-3, "{}: {}", lib.name(), res.time);
+                }
+                RecoveryStrategy::None => {
+                    assert_eq!(rec.recovery_latency, 0.0);
+                }
+                ref other => panic!("{}: {other:?}", lib.name()),
+            }
+        }
+        assert!(retried > 0, "no library exercised the watchdog-retry path");
+    }
+
+    #[test]
+    fn permanent_link_outage_recovers_by_reroute() {
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![8u64 << 20; 8];
+        let link = nvlink_on_route(&t);
+        let perts = [Perturbation::link_down(link)];
+        let policy = RecoveryPolicy::default_policy();
+        for lib in Library::all() {
+            let rec = recovered_allgatherv(&t, lib, Params::default(), &counts, &perts, &policy);
+            if !rec.completed() {
+                panic!("{}: aborted instead of rerouting", lib.name());
+            }
+            match &rec.strategy {
+                // libraries whose schedule never crossed the dead link
+                // complete cleanly — equally valid
+                RecoveryStrategy::None => {}
+                RecoveryStrategy::Reroute { masked_links } => {
+                    assert!(masked_links.contains(&link), "{}", lib.name());
+                }
+                other => panic!("{}: {other:?}", lib.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn permanent_gpu_outage_shrinks_to_survivors() {
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![4u64 << 20; 8];
+        let perts = [Perturbation::gpu_down(3)];
+        let policy = RecoveryPolicy::default_policy();
+        for lib in Library::all() {
+            let rec = recovered_allgatherv(&t, lib, Params::default(), &counts, &perts, &policy);
+            let res = rec
+                .result
+                .unwrap_or_else(|| panic!("{}: {:?}", lib.name(), rec.strategy));
+            match &rec.strategy {
+                RecoveryStrategy::Shrink { dead_ranks, .. } => {
+                    assert_eq!(dead_ranks, &vec![3], "{}", lib.name());
+                    assert_eq!(rec.survivors, 7);
+                }
+                other => panic!("{}: expected shrink, got {other:?}", lib.name()),
+            }
+            assert!(res.time.is_finite() && res.time > 0.0);
+        }
+    }
+
+    #[test]
+    fn disabled_policy_reports_abort_on_stall() {
+        let t = SystemKind::Dgx1.build();
+        let counts = vec![8u64 << 20; 8];
+        let link = nvlink_on_route(&t);
+        let perts = [Perturbation::link_down(link)];
+        let rec = recovered_allgatherv(
+            &t,
+            Library::Nccl,
+            Params::default(),
+            &counts,
+            &perts,
+            &RecoveryPolicy::disabled(),
+        );
+        assert_eq!(rec.strategy, RecoveryStrategy::Abort);
+        assert!(!rec.completed());
+        assert!(rec.stall_time.unwrap().is_finite());
+    }
+
+    #[test]
+    fn lower_to_links_pins_physical_targets() {
+        let t = SystemKind::CsStorm.build();
+        let perts = [
+            Perturbation::scale(0, 0.5),
+            Perturbation::straggler(3, 0.25).during(0.1, 0.2),
+            Perturbation::gpu_down(2),
+        ];
+        let lowered = lower_to_links(&t, &perts);
+        assert_eq!(lowered[0], perts[0], "link-addressed entries pass through");
+        let n3 = t.gpu_links(3).len();
+        let n2 = t.gpu_links(2).len();
+        assert_eq!(lowered.len(), 1 + n3 + n2);
+        for q in &lowered[1..1 + n3] {
+            match *q {
+                Perturbation::LinkScale { factor, start, duration, .. } => {
+                    assert_eq!((factor, start, duration), (0.25, 0.1, 0.2));
+                }
+                ref other => panic!("{other:?}"),
+            }
+        }
+        for q in &lowered[1 + n3..] {
+            assert!(matches!(q, Perturbation::LinkDown { .. }), "{q:?}");
+        }
+    }
+}

@@ -1,9 +1,13 @@
 //! Fault & variability study: each paper system healthy vs degraded,
 //! schedule fragility ranking, and robust-vs-fresh selector verdicts
-//! (DESIGN.md §12). Rendered by `agv faults`.
+//! (DESIGN.md §12); with `--outage`, the hard-fault study — outage
+//! recovery strategies per system × library and the outage-aware
+//! selector verdicts (DESIGN.md §14). Rendered by `agv faults`.
 
 use crate::comm::select::{robust_argmin, Algo, AlgoSelector, RobustObjective};
+use crate::comm::transport::RecoveryPolicy;
 use crate::comm::{CommLibrary, Library, Params};
+use crate::perturb::recovery::recovered_allgatherv;
 use crate::perturb::{ensemble, perturbed_allgatherv, EnsembleCfg, Perturbation};
 use crate::topology::systems::{multi_dgx, SystemKind};
 use crate::topology::{LinkClass, Topology};
@@ -254,6 +258,231 @@ pub fn study(params: Params, seed: u64) -> FaultsReport {
         robust_scenarios: EnsembleCfg::quick(seed).scenarios,
         seed,
     }
+}
+
+/// One (system, scenario, library) cell of the outage-recovery table.
+#[derive(Clone, Debug)]
+pub struct OutageRow {
+    /// System name.
+    pub system: String,
+    /// Scenario label ("transient link3 2ms", "dead link3", "dead gpu3").
+    pub scenario: String,
+    /// Library measured.
+    pub lib: Library,
+    /// Recovery strategy that completed the op
+    /// ([`crate::perturb::RecoveryStrategy::label`]; "ABORT" = it did
+    /// not).
+    pub strategy: String,
+    /// Healthy-fabric time (seconds).
+    pub healthy: f64,
+    /// Completion time under the outage with recovery, if completed.
+    pub time: Option<f64>,
+    /// Completion minus first stall (0.0 for a clean completion).
+    pub recovery_latency: f64,
+    /// Ranks the completed collective served (shrink completes on
+    /// fewer).
+    pub survivors: usize,
+}
+
+/// The outage-aware selector's verdict on one system.
+#[derive(Clone, Debug)]
+pub struct OutageSelectRow {
+    /// System name.
+    pub system: String,
+    /// Winning candidate under [`RobustObjective::Outage`].
+    pub winner: String,
+    /// Fraction of outage scenarios the winner completed.
+    pub completion_prob: f64,
+    /// The winner's effective-cost score (seconds; completion
+    /// probability and recovery cost folded in).
+    pub score: f64,
+    /// Mean recovery latency over the winner's completed scenarios.
+    pub mean_recovery: f64,
+    /// The winner's healthy-fabric time.
+    pub healthy: f64,
+}
+
+/// The hard-fault study behind `agv faults --outage`.
+#[derive(Clone, Debug)]
+pub struct OutageReport {
+    /// Recovery-strategy rows, system-major then scenario-major.
+    pub rows: Vec<OutageRow>,
+    /// Outage-aware selection verdicts, one per paper system.
+    pub select: Vec<OutageSelectRow>,
+    /// Monte-Carlo outage scenarios behind each selection verdict.
+    pub select_scenarios: usize,
+    /// Recovery policy supervising every run.
+    pub policy: RecoveryPolicy,
+    /// Seed behind the selection ensembles.
+    pub seed: u64,
+}
+
+/// The canonical hard-fault scenarios of a system: a transient outage
+/// of a route-carrying link sized to hit mid-collective, the same link
+/// dead for good, and a dead GPU. `healthy` scales the transient window
+/// so it lands inside the op on any system.
+pub fn outage_scenarios(topo: &Topology, healthy: f64) -> Vec<(String, Vec<Perturbation>)> {
+    let link = topo
+        .route_gpus(0, 1)
+        .expect("paper systems route any GPU pair")
+        .links[0];
+    let dead_rank = topo.num_gpus().min(8) - 1;
+    vec![
+        (
+            format!("transient link{link}"),
+            vec![Perturbation::link_down(link).during(healthy * 0.25, healthy * 0.5)],
+        ),
+        (format!("dead link{link}"), vec![Perturbation::link_down(link)]),
+        (format!("dead gpu{dead_rank}"), vec![Perturbation::gpu_down(dead_rank)]),
+    ]
+}
+
+fn outage_section(kind: SystemKind, params: Params, policy: RecoveryPolicy) -> Vec<OutageRow> {
+    let topo = kind.build();
+    let gpus = topo.num_gpus().min(8);
+    let cv = vec![4u64 << 20; gpus];
+    let healthy: Vec<f64> = Library::all()
+        .into_iter()
+        .map(|lib| lib.build(params).allgatherv(&topo, &cv).time)
+        .collect();
+    let h_max = healthy.iter().cloned().fold(0.0f64, f64::max);
+    let mut rows = Vec::new();
+    for (scenario, perts) in outage_scenarios(&topo, h_max) {
+        for (li, lib) in Library::all().into_iter().enumerate() {
+            let rec = recovered_allgatherv(&topo, lib, params, &cv, &perts, &policy);
+            rows.push(OutageRow {
+                system: topo.name.clone(),
+                scenario: scenario.clone(),
+                lib,
+                strategy: rec.strategy.label(),
+                healthy: healthy[li],
+                time: rec.time(),
+                recovery_latency: rec.recovery_latency,
+                survivors: rec.survivors,
+            });
+        }
+    }
+    rows
+}
+
+/// Run the hard-fault study: recovery strategies per system × scenario
+/// × library under `policy`, plus the outage-aware selector verdicts
+/// over seeded transient-outage ensembles. Fans out over the bounded
+/// worker pool; deterministic in `seed`.
+pub fn outage_study(params: Params, seed: u64) -> OutageReport {
+    let policy = RecoveryPolicy::default_policy();
+    let row_jobs: Vec<_> = SystemKind::all()
+        .into_iter()
+        .map(|kind| move || outage_section(kind, params, policy))
+        .collect();
+    let rows: Vec<OutageRow> =
+        crate::util::pool::parallel_map(row_jobs).into_iter().flatten().collect();
+    let cfg = EnsembleCfg::quick(seed).with_scenarios(4).with_outages(0.75, (0.5e-3, 2.0e-3));
+    let select_scenarios = cfg.scenarios;
+    let select_jobs: Vec<_> = SystemKind::all()
+        .into_iter()
+        .map(|kind| {
+            move || {
+                let topo = kind.build();
+                let p = topo.num_gpus().min(8);
+                let cv = vec![4u64 << 20; p];
+                let ens = ensemble(&topo, &cfg);
+                let sel = AlgoSelector::new(params);
+                let s = sel.select_outage_robust(&topo, &cv, &ens, &policy);
+                OutageSelectRow {
+                    system: topo.name.clone(),
+                    winner: s.candidate.label(),
+                    completion_prob: s.completion_prob,
+                    score: s.score,
+                    mean_recovery: s.mean_recovery,
+                    healthy: s.healthy,
+                }
+            }
+        })
+        .collect();
+    OutageReport {
+        rows,
+        select: crate::util::pool::parallel_map(select_jobs),
+        select_scenarios,
+        policy,
+        seed,
+    }
+}
+
+/// Render the hard-fault study as text tables.
+pub fn render_outage(r: &OutageReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "OUTAGES — hard faults, timeout-retry-reroute recovery (timeout {}, {} retries)\n\n\
+         {:<12} {:<20} {:<10} {:<18} {:>12} {:>12} {:>12} {:>5}\n",
+        fmt_time(r.policy.timeout),
+        r.policy.max_retries,
+        "system",
+        "scenario",
+        "lib",
+        "strategy",
+        "healthy",
+        "recovered",
+        "rec-latency",
+        "p"
+    ));
+    for row in &r.rows {
+        out.push_str(&format!(
+            "{:<12} {:<20} {:<10} {:<18} {:>12} {:>12} {:>12} {:>5}\n",
+            row.system,
+            row.scenario,
+            row.lib.name(),
+            row.strategy,
+            fmt_time(row.healthy),
+            row.time.map(fmt_time).unwrap_or_else(|| "-".into()),
+            fmt_time(row.recovery_latency),
+            row.survivors,
+        ));
+    }
+    out.push_str(&format!(
+        "\n== outage-aware selection (seed {}, {} scenarios, objective `outage`) ==\n\
+         {:<12} {:<22} {:>10} {:>12} {:>12} {:>12}\n",
+        r.seed, r.select_scenarios, "system", "winner", "compl-prob", "score", "mean-rec", "healthy"
+    ));
+    for s in &r.select {
+        out.push_str(&format!(
+            "{:<12} {:<22} {:>9.0}% {:>12} {:>12} {:>12}\n",
+            s.system,
+            s.winner,
+            s.completion_prob * 100.0,
+            fmt_time(s.score),
+            fmt_time(s.mean_recovery),
+            fmt_time(s.healthy),
+        ));
+    }
+    let aborted = r.rows.iter().filter(|row| row.time.is_none()).count();
+    out.push_str(&format!(
+        "\noutage verdict: {}/{} (system, scenario, library) cells complete under recovery\n",
+        r.rows.len() - aborted,
+        r.rows.len()
+    ));
+    out
+}
+
+/// CSV form of the outage-recovery table.
+pub fn csv_outage(r: &OutageReport) -> String {
+    let mut out = String::from(
+        "system,scenario,lib,strategy,healthy_s,recovered_s,recovery_latency_s,survivors\n",
+    );
+    for row in &r.rows {
+        out.push_str(&format!(
+            "{},{},{},{},{:.9},{},{:.9},{}\n",
+            row.system,
+            row.scenario,
+            row.lib.name(),
+            row.strategy,
+            row.healthy,
+            row.time.map(|t| format!("{t:.9}")).unwrap_or_default(),
+            row.recovery_latency,
+            row.survivors,
+        ));
+    }
+    out
 }
 
 /// Render the study as text tables.

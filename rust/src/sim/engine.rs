@@ -209,6 +209,86 @@ pub struct SimResult {
     pub stats: SimStats,
 }
 
+/// Terminal outcome of a simulation run (DESIGN.md §14).
+///
+/// Every run terminates with one of these — the engines never hang and
+/// never emit non-finite times. A run stalls when active flows have zero
+/// aggregate capacity (their paths cross links whose capacity stepped to
+/// zero — an outage, [`crate::perturb::Perturbation::LinkDown`] /
+/// [`crate::perturb::Perturbation::GpuDown`]) and no pending capacity
+/// step can revive them, or when tasks wait on dependencies that can
+/// never complete.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimOutcome {
+    /// Every task finished; `time` is the makespan.
+    Completed {
+        /// Virtual time of the last task completion.
+        time: f64,
+    },
+    /// Progress stopped before all tasks finished. All fields are the
+    /// stall *diagnosis*: which tasks are stuck, how many in-flight
+    /// flows are starved at rate zero, and which zero-capacity links
+    /// starve them (empty when the stall is a dependency cycle rather
+    /// than an outage).
+    Stalled {
+        /// Virtual time at which progress stopped (finite).
+        time: f64,
+        /// Tasks that never completed, in task order.
+        stuck_tasks: Vec<TaskId>,
+        /// Active flows frozen at rate zero with bytes remaining.
+        starved_flows: usize,
+        /// Zero-capacity links crossed by starved flows (sorted, deduped).
+        culprit_links: Vec<LinkId>,
+    },
+}
+
+impl SimOutcome {
+    /// Did every task complete?
+    pub fn is_completed(&self) -> bool {
+        matches!(self, SimOutcome::Completed { .. })
+    }
+
+    /// Terminal virtual time: the makespan, or the instant progress
+    /// stopped. Always finite.
+    pub fn time(&self) -> f64 {
+        match self {
+            SimOutcome::Completed { time } | SimOutcome::Stalled { time, .. } => *time,
+        }
+    }
+
+    /// Zero-capacity links named by a stall diagnosis (empty for
+    /// completed runs and dependency-cycle stalls).
+    pub fn culprit_links(&self) -> &[LinkId] {
+        match self {
+            SimOutcome::Completed { .. } => &[],
+            SimOutcome::Stalled { culprit_links, .. } => culprit_links,
+        }
+    }
+
+    /// One-line human description of the outcome, used by the
+    /// [`Sim::run`] panic path and the fault reports.
+    pub fn describe(&self) -> String {
+        match self {
+            SimOutcome::Completed { time } => format!("completed at {time:.6}s"),
+            SimOutcome::Stalled { time, stuck_tasks, starved_flows, culprit_links } => {
+                if culprit_links.is_empty() {
+                    format!(
+                        "stalled at {time:.6}s: {} stuck tasks, no runnable events \
+                         (cyclic or unsatisfiable dependencies?)",
+                        stuck_tasks.len()
+                    )
+                } else {
+                    format!(
+                        "stalled at {time:.6}s: {} stuck tasks, {starved_flows} starved \
+                         flows on dead links {culprit_links:?}",
+                        stuck_tasks.len()
+                    )
+                }
+            }
+        }
+    }
+}
+
 impl SimResult {
     /// Completion time of a task (virtual seconds).
     pub fn finish(&self, id: TaskId) -> f64 {
@@ -394,8 +474,8 @@ impl<'t> Sim<'t> {
             "capacity_event: time must be finite and non-negative, got {time}"
         );
         assert!(
-            capacity.is_finite() && capacity > 0.0,
-            "capacity_event: capacity must be finite and positive, got {capacity}"
+            capacity.is_finite() && capacity >= 0.0,
+            "capacity_event: capacity must be finite and non-negative, got {capacity}"
         );
         self.cap_events.push(CapEvent { time, link, capacity });
     }
@@ -405,19 +485,39 @@ impl<'t> Sim<'t> {
         self.push(TaskSpec::Delay { secs: 0.0 }, deps)
     }
 
-    /// Execute the DAG; consumes the builder.
+    /// Execute the DAG; consumes the builder. Panics with the full
+    /// stall diagnosis if the run cannot complete (zero-capacity outage
+    /// with no revival, or a dependency cycle) — callers that inject
+    /// outages use [`Sim::run_outcome`] instead.
     ///
     /// Dispatches to [`Sim::run_reference`] inside
     /// [`with_reference_engine`] scopes; otherwise runs the event-driven
     /// engine below.
     pub fn run(self) -> SimResult {
+        let (res, outcome) = self.run_outcome();
+        if !outcome.is_completed() {
+            panic!("simulation deadlock: {}", outcome.describe());
+        }
+        res
+    }
+
+    /// Execute the DAG and report the terminal [`SimOutcome`] instead of
+    /// panicking on a stall. On a stall the [`SimResult`] is still fully
+    /// populated and finite: finished tasks keep their exact times,
+    /// stuck tasks report the stall instant, and `linkdir_bytes` holds
+    /// exactly what was delivered before progress stopped.
+    ///
+    /// On a completed run both the result *and the work counters* are
+    /// bit-identical to [`Sim::run`] — the liveness check adds no event
+    /// instants and no arithmetic.
+    pub fn run_outcome(self) -> (SimResult, SimOutcome) {
         if FORCE_REFERENCE.with(|c| c.get()) {
-            return self.run_reference();
+            return self.run_reference_outcome();
         }
         self.run_event_driven()
     }
 
-    fn run_event_driven(self) -> SimResult {
+    fn run_event_driven(self) -> (SimResult, SimOutcome) {
         let Sim { topo, mut tasks, roots, cap_events } = self;
         let n_linkdirs = topo.links.len() * 2;
         let mut caps: Vec<f64> = (0..n_linkdirs)
@@ -622,6 +722,7 @@ impl<'t> Sim<'t> {
         drain_ready!();
 
         let mut started: Vec<u32> = Vec::new();
+        let mut stalled: Option<SimOutcome> = None;
         while completed < total {
             // Next valid predicted completion (discard stale entries).
             let mut next_completion = None;
@@ -640,10 +741,38 @@ impl<'t> Sim<'t> {
                 .flatten()
                 .fold(f64::INFINITY, f64::min);
             if !t_star.is_finite() {
-                panic!(
-                    "simulation deadlock: {completed}/{total} tasks done, no runnable events \
-                     (cyclic or unsatisfiable dependencies?)"
-                );
+                // Liveness (DESIGN.md §14): no discrete events, no finite
+                // flow prediction, and no remaining capacity step that
+                // could revive a starved flow — diagnose instead of
+                // spinning. Every alive flow here sits at rate zero with
+                // bytes remaining (a positive rate would have produced a
+                // finite prediction), which under progressive filling
+                // means its path crosses a zero-capacity linkdir.
+                let mut starved_flows = 0usize;
+                let mut culprit_links: Vec<LinkId> = Vec::new();
+                for &s in &active_list {
+                    let f = &flows[s as usize];
+                    if f.alive && f.remaining > 0.0 {
+                        starved_flows += 1;
+                        culprit_links
+                            .extend(f.linkdirs.iter().filter(|&&ld| caps[ld] <= 0.0).map(|&ld| ld / 2));
+                    }
+                }
+                culprit_links.sort_unstable();
+                culprit_links.dedup();
+                let stuck_tasks: Vec<TaskId> = tasks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.finish.is_none())
+                    .map(|(id, _)| id)
+                    .collect();
+                stalled = Some(SimOutcome::Stalled {
+                    time: now,
+                    stuck_tasks,
+                    starved_flows,
+                    culprit_links,
+                });
+                break;
             }
             assert!(
                 t_star >= now - 1e-12,
@@ -851,8 +980,12 @@ impl<'t> Sim<'t> {
             }
         }
 
-        let finish: Vec<f64> = tasks.iter().map(|t| t.finish.unwrap()).collect();
+        // Stuck tasks (stall path only) report the stall instant, so
+        // every reported time stays finite; the completed path is
+        // bit-identical to the pre-liveness engine (all tasks are Some).
+        let finish: Vec<f64> = tasks.iter().map(|t| t.finish.unwrap_or(now)).collect();
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
-        SimResult { finish, makespan, linkdir_bytes, flows: flows_total, stats }
+        let outcome = stalled.unwrap_or(SimOutcome::Completed { time: makespan });
+        (SimResult { finish, makespan, linkdir_bytes, flows: flows_total, stats }, outcome)
     }
 }

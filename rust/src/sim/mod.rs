@@ -30,7 +30,7 @@
 pub mod engine;
 pub mod reference;
 
-pub use engine::{with_reference_engine, Sim, SimResult, SimStats, TaskId};
+pub use engine::{with_reference_engine, Sim, SimOutcome, SimResult, SimStats, TaskId};
 
 #[cfg(test)]
 mod tests {
@@ -366,11 +366,118 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "capacity must be finite and positive")]
-    fn capacity_event_rejects_zero_capacity() {
+    #[should_panic(expected = "capacity must be finite and non-negative")]
+    fn capacity_event_rejects_negative_capacity() {
         let t = line_topo();
         let mut sim = Sim::new(&t);
-        sim.capacity_event(0, 0.0, 0.0);
+        sim.capacity_event(0, 0.0, -1.0);
+    }
+
+    /// Zero capacity is legal (the outage substrate, DESIGN.md §14): a
+    /// flow crossing a dead link freezes; `run_outcome` diagnoses the
+    /// stall with the culprit link instead of hanging, on both engines,
+    /// and the stall time/diagnosis agree across the cores.
+    #[test]
+    fn dead_link_stalls_with_diagnosis_on_both_engines() {
+        let t = line_topo();
+        let bw = LinkClass::NvLink.bandwidth();
+        let bytes = 1.0e9;
+        let t_down = 0.01;
+        let build = || {
+            let mut sim = Sim::new(&t);
+            let p01 = t.route_gpus(0, 1).unwrap();
+            let p12 = t.route_gpus(1, 2).unwrap();
+            let a = sim.flow(p01, bytes, 0.0, &[]);
+            let _chained = sim.flow(p12.clone(), bytes, 0.0, &[a]);
+            let b = sim.flow(p12, bytes, 0.0, &[]);
+            // link 0 dies mid-flight and never recovers; link 1 is fine
+            sim.capacity_event(0, t_down, 0.0);
+            (sim, b)
+        };
+        let (sim, b) = build();
+        let (res, outcome) = sim.run_outcome();
+        let (sim_r, _) = build();
+        let (res_r, outcome_r) = sim_r.run_reference_outcome();
+        for (label, res, out) in [("event", &res, &outcome), ("reference", &res_r, &outcome_r)] {
+            let SimOutcome::Stalled { time, stuck_tasks, starved_flows, culprit_links } = out
+            else {
+                panic!("{label}: dead link did not stall: {out:?}");
+            };
+            assert!(time.is_finite() && *time >= t_down, "{label}: stall time {time}");
+            assert_eq!(culprit_links, &vec![0usize], "{label}");
+            assert_eq!(*starved_flows, 1, "{label}");
+            // flow a and its dependent are stuck; flow b completed
+            assert_eq!(stuck_tasks, &vec![0usize, 1], "{label}");
+            let solo = bytes / bw;
+            assert!((res.finish(b) - solo).abs() / solo < 1e-6, "{label}: {}", res.finish(b));
+            assert!(res.makespan.is_finite() && res.finish_times().iter().all(|f| f.is_finite()));
+            // delivered bytes: link 0 carried only what moved before the
+            // outage; link 1 carried exactly flow b's bytes
+            assert!((res.link_bytes(0) - bw * t_down).abs() / (bw * t_down) < 1e-6, "{label}");
+            assert!((res.link_bytes(1) - bytes).abs() / bytes < 1e-6, "{label}");
+        }
+        // cross-engine agreement on the stall instant
+        let rel = (outcome.time() - outcome_r.time()).abs() / outcome_r.time();
+        assert!(rel < 1e-9, "stall times diverged: {} vs {}", outcome.time(), outcome_r.time());
+    }
+
+    /// A dead link whose capacity is restored by a later step is *not* a
+    /// stall: the pending step revives the frozen flow and the finish
+    /// time is the exact two-segment integral around the dead window.
+    #[test]
+    fn outage_window_revives_frozen_flow() {
+        let t = line_topo();
+        let bw = LinkClass::NvLink.bandwidth();
+        let bytes = 2.0e9;
+        let (t1, t2) = (0.01, 0.04);
+        for reference in [false, true] {
+            let mut sim = Sim::new(&t);
+            let path = t.route_gpus(0, 1).unwrap();
+            let id = sim.flow(path.clone(), bytes, 0.0, &[]);
+            sim.capacity_event(path.links[0], t1, 0.0);
+            sim.capacity_event(path.links[0], t2, bw);
+            let (res, outcome) = if reference {
+                sim.run_reference_outcome()
+            } else {
+                sim.run_outcome()
+            };
+            assert!(outcome.is_completed(), "ref={reference}: {outcome:?}");
+            let expect = t2 + (bytes - bw * t1) / bw;
+            assert!(
+                (res.finish(id) - expect).abs() / expect < 1e-9,
+                "ref={reference}: {} vs {expect}",
+                res.finish(id)
+            );
+        }
+    }
+
+    /// `run_outcome` on a completing DAG is bit-identical to `run` —
+    /// results *and* work counters (the liveness machinery costs
+    /// nothing when it never triggers).
+    #[test]
+    fn run_outcome_is_bit_exact_to_run_when_completed() {
+        let t = crate::topology::systems::dgx1();
+        let build = || {
+            let mut sim = Sim::new(&t);
+            let mut last = None;
+            for a in 0..8usize {
+                let b = (a + 3) % 8;
+                let p = t.route_gpus(a, b).unwrap();
+                let lat = t.path_latency(&p);
+                let deps: Vec<TaskId> =
+                    if a % 2 == 0 { last.into_iter().collect() } else { vec![] };
+                last = Some(sim.flow(p, (a + 1) as f64 * 3.0e7, lat, &deps));
+            }
+            sim
+        };
+        let plain = build().run();
+        let (via_outcome, outcome) = build().run_outcome();
+        assert_eq!(outcome, SimOutcome::Completed { time: plain.makespan });
+        assert_eq!(plain.stats, via_outcome.stats);
+        assert_eq!(plain.makespan.to_bits(), via_outcome.makespan.to_bits());
+        for (a, b) in plain.finish_times().iter().zip(via_outcome.finish_times()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -39,8 +39,9 @@
 use std::collections::BinaryHeap;
 
 use super::engine::{
-    capacity_timeline, Event, HeapEntry, LinkDir, Sim, SimResult, SimStats, TaskSpec,
+    capacity_timeline, Event, HeapEntry, LinkDir, Sim, SimOutcome, SimResult, SimStats, TaskSpec,
 };
+use crate::topology::LinkId;
 
 /// An active flow being rate-controlled. `linkdirs` is moved out of the
 /// task spec at activation so the hot loops (rate recomputation, byte
@@ -57,8 +58,23 @@ struct ActiveFlow {
 impl<'t> Sim<'t> {
     /// Execute the DAG on the pre-rewrite reference core; consumes the
     /// builder. Produces a [`SimResult`] with all-zero
-    /// [`SimStats`] (this engine predates the counters).
+    /// [`SimStats`] (this engine predates the counters). Panics with
+    /// the stall diagnosis if the run cannot complete, exactly like
+    /// [`Sim::run`].
     pub fn run_reference(self) -> SimResult {
+        let (res, outcome) = self.run_reference_outcome();
+        if !outcome.is_completed() {
+            panic!("simulation deadlock: {}", outcome.describe());
+        }
+        res
+    }
+
+    /// [`Sim::run_reference`] with the terminal [`SimOutcome`] reported
+    /// instead of a stall panic — the reference half of the liveness
+    /// differential contract: both cores must agree on *whether* a run
+    /// stalls, on the stall time (~1e-9 relative) and on the culprit
+    /// link set exactly.
+    pub fn run_reference_outcome(self) -> (SimResult, SimOutcome) {
         let Sim { topo, mut tasks, roots, cap_events } = self;
         let n_linkdirs = topo.links.len() * 2;
         let mut caps: Vec<f64> = (0..n_linkdirs)
@@ -196,6 +212,7 @@ impl<'t> Sim<'t> {
         drain_ready!();
         recompute_rates!();
 
+        let mut stalled: Option<SimOutcome> = None;
         while completed < total {
             // Next discrete event vs next flow completion.
             let next_event_t = heap.peek().map(|e| e.time);
@@ -218,10 +235,33 @@ impl<'t> Sim<'t> {
                 .flatten()
                 .fold(f64::INFINITY, f64::min);
             if !t_star.is_finite() {
-                panic!(
-                    "simulation deadlock: {completed}/{total} tasks done, no runnable events \
-                     (cyclic or unsatisfiable dependencies?)"
-                );
+                // Liveness, mirroring the event engine (DESIGN.md §14):
+                // every active flow here is frozen at rate zero with
+                // bytes remaining, i.e. starved by a zero-capacity link.
+                let mut starved_flows = 0usize;
+                let mut culprit_links: Vec<LinkId> = Vec::new();
+                for f in &active {
+                    if f.remaining > 0.0 {
+                        starved_flows += 1;
+                        culprit_links
+                            .extend(f.linkdirs.iter().filter(|&&ld| caps[ld] <= 0.0).map(|&ld| ld / 2));
+                    }
+                }
+                culprit_links.sort_unstable();
+                culprit_links.dedup();
+                let stuck_tasks: Vec<usize> = tasks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.finish.is_none())
+                    .map(|(id, _)| id)
+                    .collect();
+                stalled = Some(SimOutcome::Stalled {
+                    time: now,
+                    stuck_tasks,
+                    starved_flows,
+                    culprit_links,
+                });
+                break;
             }
             assert!(
                 t_star >= now - 1e-12,
@@ -335,14 +375,20 @@ impl<'t> Sim<'t> {
             }
         }
 
-        let finish: Vec<f64> = tasks.iter().map(|t| t.finish.unwrap()).collect();
+        // Stuck tasks (stall path only) report the stall instant; the
+        // completed path is bit-identical to the seed engine.
+        let finish: Vec<f64> = tasks.iter().map(|t| t.finish.unwrap_or(now)).collect();
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
-        SimResult {
-            finish,
-            makespan,
-            linkdir_bytes,
-            flows: flows_total,
-            stats: SimStats::default(),
-        }
+        let outcome = stalled.unwrap_or(SimOutcome::Completed { time: makespan });
+        (
+            SimResult {
+                finish,
+                makespan,
+                linkdir_bytes,
+                flows: flows_total,
+                stats: SimStats::default(),
+            },
+            outcome,
+        )
     }
 }

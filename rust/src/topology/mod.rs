@@ -121,6 +121,12 @@ pub struct Topology {
     adj: Vec<Vec<(LinkId, DeviceId)>>,
     /// GPU rank -> device id (dense, rank i at index i).
     gpus: Vec<DeviceId>,
+    /// Per-link dead flags (DESIGN.md §14): a dead link keeps its id —
+    /// so perturbation targets and byte accounting stay stable — but is
+    /// invisible to routing, P2P detection and host-CPU discovery.
+    /// Empty set on every constructed system; only
+    /// [`Topology::with_links_down`] sets flags.
+    dead: Vec<bool>,
 }
 
 impl Topology {
@@ -132,6 +138,7 @@ impl Topology {
             links: Vec::new(),
             adj: Vec::new(),
             gpus: Vec::new(),
+            dead: Vec::new(),
         }
     }
 
@@ -155,7 +162,62 @@ impl Topology {
         self.links.push(Link { a, b, class });
         self.adj[a].push((id, b));
         self.adj[b].push((id, a));
+        self.dead.push(false);
         id
+    }
+
+    /// The same topology with `links` marked **dead** — the masked
+    /// fabric a recovery reroute plans against
+    /// ([`crate::perturb::recovery`]). Link ids are preserved (the
+    /// fault windows and byte accounting still name them); routing,
+    /// [`Topology::p2p_accessible`], [`Topology::nvlink_direct`] and
+    /// host-CPU discovery all skip dead links. Out-of-range ids are
+    /// ignored.
+    pub fn with_links_down(&self, links: &[LinkId]) -> Topology {
+        let mut t = self.clone();
+        for &l in links {
+            if l < t.dead.len() {
+                t.dead[l] = true;
+            }
+        }
+        t
+    }
+
+    /// Is this link usable (not masked dead)?
+    pub fn link_alive(&self, l: LinkId) -> bool {
+        !self.dead.get(l).copied().unwrap_or(false)
+    }
+
+    /// Ids of every masked-dead link, ascending.
+    pub fn dead_links(&self) -> Vec<LinkId> {
+        (0..self.links.len()).filter(|&l| !self.link_alive(l)).collect()
+    }
+
+    /// Can ranks `0..p` still run a collective on this (possibly
+    /// masked) fabric? Requires every GPU to reach its host CPU and
+    /// every GPU pair to be routable — the pre-flight check a recovery
+    /// reroute performs before composing on the masked topology (a mask
+    /// that severs a rank needs communicator shrink instead).
+    pub fn serviceable(&self, p: usize) -> bool {
+        if p == 0 || p > self.num_gpus() {
+            return false;
+        }
+        let cpus: Vec<Option<DeviceId>> =
+            (0..p).map(|r| self.try_host_cpu(self.gpu(r))).collect();
+        if cpus.iter().any(|c| c.is_none()) {
+            return false;
+        }
+        for a in 0..p {
+            for b in (a + 1)..p {
+                if self.route_gpus(a, b).is_none() {
+                    return false;
+                }
+                if self.route(cpus[a].unwrap(), cpus[b].unwrap()).is_none() {
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     /// Number of GPUs registered.
@@ -186,17 +248,27 @@ impl Topology {
     /// The CPU socket that owns a device's PCIe hierarchy (walks up
     /// through PCIe switches). Used for host-staging endpoints.
     pub fn host_cpu(&self, d: DeviceId) -> DeviceId {
-        // BFS limited to PCIe links until a CPU is reached.
+        self.try_host_cpu(d)
+            .unwrap_or_else(|| panic!("device {d} has no host CPU reachable over PCIe"))
+    }
+
+    /// [`Topology::host_cpu`] without the panic: `None` when no live
+    /// PCIe/QPI path leads to a CPU (a masked-dead uplink can sever a
+    /// GPU from its host — [`Topology::serviceable`] surfaces that as a
+    /// shrink condition instead of a crash).
+    pub fn try_host_cpu(&self, d: DeviceId) -> Option<DeviceId> {
+        // BFS limited to live PCIe links until a CPU is reached.
         let mut visited = vec![false; self.devices.len()];
         let mut queue = std::collections::VecDeque::new();
         queue.push_back(d);
         visited[d] = true;
         while let Some(cur) = queue.pop_front() {
             if matches!(self.devices[cur].kind, DeviceKind::Cpu { .. }) {
-                return cur;
+                return Some(cur);
             }
             for &(l, peer) in &self.adj[cur] {
                 if !visited[peer]
+                    && self.link_alive(l)
                     && self.devices[peer].node == self.devices[d].node
                     && matches!(self.links[l].class, LinkClass::PcieGen3x16 | LinkClass::Qpi)
                 {
@@ -205,7 +277,7 @@ impl Topology {
                 }
             }
         }
-        panic!("device {d} has no host CPU reachable over PCIe");
+        None
     }
 
     /// Are two GPUs on the same host node?
@@ -213,12 +285,12 @@ impl Topology {
         self.devices[self.gpu(rank_a)].node == self.devices[self.gpu(rank_b)].node
     }
 
-    /// Is there a *direct* NVLink connection between two GPUs?
+    /// Is there a *direct* live NVLink connection between two GPUs?
     pub fn nvlink_direct(&self, rank_a: usize, rank_b: usize) -> bool {
         let (da, db) = (self.gpu(rank_a), self.gpu(rank_b));
         self.adj[da]
             .iter()
-            .any(|&(l, peer)| peer == db && self.links[l].class.is_nvlink())
+            .any(|&(l, peer)| peer == db && self.link_alive(l) && self.links[l].class.is_nvlink())
     }
 
     /// GPUDirect P2P capability (the rule MVAPICH is constrained by,
@@ -254,7 +326,10 @@ impl Topology {
                 continue; // endpoints may touch the CPU; transit may not
             }
             for &(l, peer) in &self.adj[cur] {
-                if !visited[peer] && self.links[l].class == LinkClass::PcieGen3x16 {
+                if !visited[peer]
+                    && self.link_alive(l)
+                    && self.links[l].class == LinkClass::PcieGen3x16
+                {
                     visited[peer] = true;
                     queue.push_back(peer);
                 }
@@ -435,6 +510,27 @@ mod tests {
         let p = t.route_gpus(0, 1).unwrap();
         // bottleneck must be the IB link
         assert!((t.path_bandwidth(&p) - LinkClass::InfinibandFdr.bandwidth()).abs() < 1.0);
+    }
+
+    #[test]
+    fn masked_uplink_severs_a_gpu_and_serviceability_sees_it() {
+        let t = two_gpu_nvlink();
+        assert!(t.serviceable(2));
+        // gpu0's only PCIe uplink is link 0: masking it leaves gpu0
+        // routable to gpu1 over NVLink but hostless -> not serviceable
+        let masked = t.with_links_down(&[0]);
+        assert!(masked.try_host_cpu(masked.gpu(0)).is_none());
+        assert!(masked.route_gpus(0, 1).is_some(), "NVLink route survives");
+        assert!(!masked.serviceable(2));
+        assert!(masked.serviceable(1), "rank 1 alone is fine");
+        // masking every incident link of gpu1 severs it completely
+        let dead1 = t.with_links_down(&t.gpu_links(1));
+        assert!(dead1.route_gpus(0, 1).is_none());
+        assert!(!dead1.serviceable(2));
+        // dgx1: one dead NVLink still leaves the fabric serviceable
+        let d = crate::topology::systems::dgx1();
+        let nv = d.gpu_links(0).into_iter().find(|&l| d.links[l].class.is_nvlink()).unwrap();
+        assert!(d.with_links_down(&[nv]).serviceable(8));
     }
 
     #[test]

@@ -77,7 +77,7 @@ pub fn widest_shortest_path(topo: &Topology, from: DeviceId, to: DeviceId) -> Op
         done[cur] = true;
         let cost = best[cur].unwrap();
         for &(l, peer) in topo.neighbors(cur) {
-            if done[peer] {
+            if done[peer] || !topo.link_alive(l) {
                 continue;
             }
             let link = &topo.links[l];
@@ -172,7 +172,7 @@ pub fn nvlink_path(topo: &Topology, from: DeviceId, to: DeviceId) -> Option<Path
             break;
         }
         for &(l, peer) in topo.neighbors(cur) {
-            if !visited[peer] && topo.links[l].class.is_nvlink() {
+            if !visited[peer] && topo.link_alive(l) && topo.links[l].class.is_nvlink() {
                 visited[peer] = true;
                 prev[peer] = Some((cur, l));
                 queue.push_back(peer);
@@ -316,6 +316,28 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, vec![0, 2, 4, 6]);
         assert_eq!(ring[0], 0);
+    }
+
+    #[test]
+    fn dead_links_are_invisible_to_both_searches() {
+        // kill the diamond's g0-g1 NVLink: the widest path detours over
+        // PCIe, and the NVLink-only search loses g0 entirely
+        let t = diamond();
+        let nv01 = 0; // add order: g0-g1 NVLink is link 0
+        let masked = t.with_links_down(&[nv01]);
+        assert!(!masked.link_alive(nv01));
+        assert_eq!(masked.dead_links(), vec![nv01]);
+        let p = masked.route_gpus(0, 3).unwrap();
+        assert!(
+            p.links.iter().all(|&l| masked.link_alive(l)),
+            "detour crossed a dead link: {p:?}"
+        );
+        assert!(p.links.iter().all(|&l| !masked.links[l].class.is_nvlink()));
+        assert!(masked.route_nvlink_only(0, 3).is_none());
+        assert!(!masked.nvlink_direct(0, 1));
+        // the unmasked topology is untouched
+        assert!(t.link_alive(nv01));
+        assert!(t.route_nvlink_only(0, 3).is_some());
     }
 
     #[test]

@@ -1,8 +1,14 @@
 //! Tiny CLI argument parser (clap is unavailable offline).
 //!
 //! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! Numeric accessors return a clean [`crate::util::error::Error`] on
+//! malformed values — the binary surfaces these as usage errors (exit
+//! 2) instead of panicking.
 
 use std::collections::BTreeMap;
+
+use crate::anyhow;
+use crate::util::error::Result;
 
 /// Parsed command line: subcommand, positionals, `--key value` options
 /// and bare `--flag`s.
@@ -67,25 +73,37 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    /// `--name` parsed as `usize` (panics with a usage message on junk).
-    pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
-            .unwrap_or(default)
+    /// `--name` parsed as `usize` (clean usage error on junk).
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{v}`")),
+            None => Ok(default),
+        }
     }
 
-    /// `--name` parsed as `u64` (panics with a usage message on junk).
-    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got `{v}`")))
-            .unwrap_or(default)
+    /// `--name` parsed as `u64` (clean usage error on junk).
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got `{v}`")),
+            None => Ok(default),
+        }
     }
 
-    /// `--name` parsed as `f64` (panics with a usage message on junk).
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got `{v}`")))
-            .unwrap_or(default)
+    /// `--name` parsed as `f64` (clean usage error on junk; rejects
+    /// NaN/infinite spellings — no flag means anything non-finite).
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v
+                .parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| anyhow!("--{name} expects a finite number, got `{v}`")),
+            None => Ok(default),
+        }
     }
 }
 
@@ -119,14 +137,29 @@ mod tests {
         let a = parse(&["osu", "--system", "dgx1", "--gpus", "8", "--csv"]);
         assert_eq!(a.subcommand.as_deref(), Some("osu"));
         assert_eq!(a.get("system"), Some("dgx1"));
-        assert_eq!(a.get_usize("gpus", 2), 8);
+        assert_eq!(a.get_usize("gpus", 2).unwrap(), 8);
         assert!(a.flag("csv"));
     }
 
     #[test]
     fn key_equals_value() {
         let a = parse(&["run", "--seed=42"]);
-        assert_eq!(a.get_u64("seed", 0), 42);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn malformed_numerics_are_clean_errors() {
+        let a = parse(&["collective", "--chunks", "many", "--gap", "soon", "--seed", "-1"]);
+        let e = a.get_usize("chunks", 1).unwrap_err();
+        assert!(e.to_string().contains("--chunks expects an integer"), "{e}");
+        let e = a.get_f64("gap", 0.0).unwrap_err();
+        assert!(e.to_string().contains("--gap expects a finite number"), "{e}");
+        assert!(a.get_u64("seed", 0).is_err(), "negative u64");
+        // non-finite spellings parse as f64 but are rejected as flags
+        let b = parse(&["x", "--gap", "NaN"]);
+        assert!(b.get_f64("gap", 0.0).is_err(), "NaN gap");
+        let c = parse(&["x", "--gap", "inf"]);
+        assert!(c.get_f64("gap", 0.0).is_err(), "inf gap");
     }
 
     #[test]
@@ -140,7 +173,7 @@ mod tests {
         let a = parse(&[]);
         assert!(a.subcommand.is_none());
         assert_eq!(a.get_or("x", "d"), "d");
-        assert_eq!(a.get_f64("y", 1.5), 1.5);
+        assert_eq!(a.get_f64("y", 1.5).unwrap(), 1.5);
     }
 
     #[test]

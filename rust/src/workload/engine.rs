@@ -34,14 +34,14 @@ use super::spec::{TenantLib, TenantSpec, WorkloadSpec};
 /// full and isolated runs (plans are removal-invariant).
 #[derive(Clone, Debug)]
 pub(crate) struct PlannedOp {
-    op: CollectiveOp,
-    counts: Vec<u64>,
-    plan: OpPlan,
-    label: String,
+    pub(crate) op: CollectiveOp,
+    pub(crate) counts: Vec<u64>,
+    pub(crate) plan: OpPlan,
+    pub(crate) label: String,
 }
 
 #[derive(Clone, Debug)]
-enum OpPlan {
+pub(crate) enum OpPlan {
     /// Fixed library with its own MVAPICH-style algorithm selection.
     Lib(Library),
     /// Auto-selected (library, algorithm) pair, frozen at plan time.
@@ -85,7 +85,12 @@ pub(crate) fn plan(
 /// `ChunkCfg::none()` the Allgatherv spec builds the task-for-task
 /// identical DAG as `compose_allgatherv`, so the pre-existing
 /// differential tests lock the shared dispatch rather than a fork.
-fn compose_planned(sim: &mut Sim, params: Params, op: &PlannedOp, gate: Option<TaskId>) -> TaskId {
+pub(crate) fn compose_planned(
+    sim: &mut Sim,
+    params: Params,
+    op: &PlannedOp,
+    gate: Option<TaskId>,
+) -> TaskId {
     match op.plan {
         OpPlan::Lib(lib) => {
             let spec = CollectiveSpec::from_vector(op.op, &op.counts);
@@ -197,23 +202,29 @@ pub fn run_workload_with_baseline(
     Ok((contended, isolated_planned(topo, params, &plans)))
 }
 
-/// Compose and execute the planned ops in one shared sim.
-pub(crate) fn run_planned(
-    topo: &Topology,
+/// One composed tenant op awaiting execution in the shared sim:
+/// bookkeeping `run_planned` / the SLO runner turn into [`OpRecord`]s.
+pub(crate) struct PendingOp {
+    pub(crate) tenant: usize,
+    pub(crate) index: usize,
+    pub(crate) label: String,
+    pub(crate) bytes: u64,
+    pub(crate) gate: Option<TaskId>,
+    pub(crate) done: TaskId,
+    pub(crate) flows: usize,
+}
+
+/// Compose every planned op into the shared sim — the gating DAG of the
+/// module docs. Shared verbatim by the fail-fast path ([`run_planned`])
+/// and the fault-supervised path ([`crate::workload::slo`]), so the two
+/// can never diverge on DAG shape (the never-triggered bit-exactness
+/// contract rides on that).
+pub(crate) fn compose_workload(
+    sim: &mut Sim,
     spec: &WorkloadSpec,
     params: Params,
     plans: &[Vec<PlannedOp>],
-) -> WorkloadResult {
-    struct PendingOp {
-        tenant: usize,
-        index: usize,
-        label: String,
-        bytes: u64,
-        gate: Option<TaskId>,
-        done: TaskId,
-        flows: usize,
-    }
-    let mut sim = Sim::new(topo);
+) -> Vec<PendingOp> {
     let mut pending: Vec<PendingOp> = Vec::new();
     for (t, (ten, tplan)) in spec.tenants.iter().zip(plans).enumerate() {
         let mut rng = ten.arrival_rng(spec.seed);
@@ -230,7 +241,7 @@ pub(crate) fn run_planned(
                 Some(sim.delay(delay, &deps))
             };
             let mark = sim.task_count();
-            let done = compose_planned(&mut sim, params, op, gate);
+            let done = compose_planned(sim, params, op, gate);
             pending.push(PendingOp {
                 tenant: t,
                 index: k,
@@ -243,6 +254,18 @@ pub(crate) fn run_planned(
             prev = Some(done);
         }
     }
+    pending
+}
+
+/// Compose and execute the planned ops in one shared sim.
+pub(crate) fn run_planned(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+    plans: &[Vec<PlannedOp>],
+) -> WorkloadResult {
+    let mut sim = Sim::new(topo);
+    let pending = compose_workload(&mut sim, spec, params, plans);
 
     // Fault timeline: the shared fabric degrades at the spec's scheduled
     // windows (DESIGN.md §12). An empty set emits no capacity steps, so
@@ -250,7 +273,18 @@ pub(crate) fn run_planned(
     crate::perturb::apply(&mut sim, &spec.faults);
 
     let res = sim.run();
+    collect_result(topo, spec, &res, pending)
+}
 
+/// Turn a finished shared run into the per-tenant aggregation. Also the
+/// tail of the fault-supervised path, on whatever `SimResult` the
+/// outcome-returning run produced.
+pub(crate) fn collect_result(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    res: &crate::sim::SimResult,
+    pending: Vec<PendingOp>,
+) -> WorkloadResult {
     let mut tenants: Vec<TenantResult> = spec
         .tenants
         .iter()

@@ -25,6 +25,11 @@
 //!   capacity steps on the shared sim ([`crate::perturb`]), so
 //!   multi-tenant runs degrade mid-flight; an empty set is bit-exact to
 //!   the pristine engine (DESIGN.md §12);
+//! - [`slo`]: the fault-supervised runner — hard outages stall jobs,
+//!   stalled jobs are re-issued through the timeout–retry–reroute–
+//!   shrink driver ([`crate::perturb::recovery`]) or aborted, and the
+//!   run reports failure-aware SLOs: goodput, completed vs recovered
+//!   vs aborted ops, recovery-latency percentiles (DESIGN.md §14);
 //! - [`bench`]: the deterministic measurement grid behind
 //!   `bench_workload` / `BENCH_workload.json` (simulated metrics only,
 //!   so the artifact is byte-reproducible from its seed).
@@ -38,6 +43,7 @@
 
 pub mod bench;
 pub mod engine;
+pub mod slo;
 pub mod spec;
 pub mod trace;
 
@@ -45,5 +51,6 @@ pub use engine::{
     isolated_times, run_workload, run_workload_with_baseline, OpRecord, TenantResult,
     WorkloadResult,
 };
+pub use slo::{run_workload_recovered, RecoveredWorkload, ReissuedOp, WorkloadSlo};
 pub use spec::{OpStream, TenantLib, TenantSpec, WorkloadSpec};
 pub use trace::parse_trace;

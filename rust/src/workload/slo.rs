@@ -1,0 +1,325 @@
+//! Fault-supervised workload execution and failure-aware SLO
+//! reporting (DESIGN.md §14).
+//!
+//! [`super::run_workload`] is fail-fast: a hard outage that starves the
+//! shared DAG panics with the stall diagnosis. This module is the
+//! production-shaped alternative: the shared run executes through
+//! [`crate::sim::Sim::run_outcome`], and when it stalls, every job
+//! (tenant op) whose completion task is stuck is **re-issued** through
+//! the timeout–retry–reroute–shrink driver
+//! ([`crate::perturb::recovery::recover_with`]) against the same
+//! absolute fault timeline — or aborted outright when the recovery
+//! policy is disabled. The run then reports job-level SLOs: goodput,
+//! completed vs recovered vs aborted ops, and recovery-latency
+//! percentiles.
+//!
+//! Two timeline caveats, both deliberate: re-issued jobs run on an
+//! otherwise idle fabric (an operator restarting a wedged job after its
+//! peers drained), and a job that was merely queued behind a stalled
+//! predecessor may re-issue cleanly (strategy
+//! [`RecoveryStrategy::None`], zero recovery latency).
+//!
+//! The PR-5 anchor contract extends here: with an empty fault set — or
+//! recovery armed but never triggered — the supervised run's
+//! [`WorkloadResult`] is bit-identical to [`super::run_workload`]'s,
+//! because both paths share the engine's `compose_workload` and
+//! `collect_result` verbatim and `run_outcome` is bit-exact to `run`
+//! on completed paths (`tests/faults_differential.rs`).
+
+use crate::comm::collective::{compose_collective, CollectiveSpec};
+use crate::comm::select::compose as compose_candidate;
+use crate::comm::transport::{ChunkCfg, RecoveryPolicy};
+use crate::comm::Params;
+use crate::perturb::recovery::{recover_with, RecoveryStrategy};
+use crate::sim::{Sim, SimOutcome};
+use crate::topology::Topology;
+use crate::util::error::Result;
+use crate::util::stats::percentile;
+
+use super::engine::{self, OpPlan, WorkloadResult};
+use super::spec::WorkloadSpec;
+
+/// One job that failed in the shared run and went through the recovery
+/// driver (or straight to abort). The authoritative record for the op —
+/// the stalled shared run's [`super::OpRecord`] for the same (tenant,
+/// index) only shows the stall time.
+#[derive(Clone, Debug)]
+pub struct ReissuedOp {
+    /// Index of the owning tenant in the spec.
+    pub tenant: usize,
+    /// Op index within the tenant's stream.
+    pub index: usize,
+    /// Library (or "LIB/algo") label that ran the op.
+    pub label: String,
+    /// How the re-issue completed ([`RecoveryStrategy::Abort`] = it
+    /// did not).
+    pub strategy: RecoveryStrategy,
+    /// Completion time on the driver's absolute timeline, if completed.
+    pub finish: Option<f64>,
+    /// Completion minus first stall (the driver's recovery-latency
+    /// accounting; 0.0 for a clean re-issue or an abort).
+    pub recovery_latency: f64,
+}
+
+/// Job-level service levels of one supervised run.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSlo {
+    /// Ops across all tenants.
+    pub total_ops: usize,
+    /// Ops that completed in the shared run, no recovery involved.
+    pub completed_ops: usize,
+    /// Failed ops the recovery driver completed (full or shrunk
+    /// membership).
+    pub recovered_ops: usize,
+    /// Failed ops that exhausted every strategy (or had recovery
+    /// disabled).
+    pub aborted_ops: usize,
+    /// Payload bytes of completed + recovered ops; a shrunk completion
+    /// contributes only its survivors' counts.
+    pub delivered_bytes: f64,
+    /// `delivered_bytes / makespan` — the failure-aware throughput
+    /// (0.0 when nothing completed).
+    pub goodput: f64,
+    /// Last completion over clean and re-issued ops; the stall time if
+    /// everything aborted. Always finite.
+    pub makespan: f64,
+    /// Median recovery latency over recovered ops (0.0 when none).
+    pub recovery_p50: f64,
+    /// 95th-percentile recovery latency over recovered ops.
+    pub recovery_p95: f64,
+    /// Worst recovery latency over recovered ops.
+    pub recovery_max: f64,
+}
+
+/// Outcome of [`run_workload_recovered`].
+#[derive(Clone, Debug)]
+pub struct RecoveredWorkload {
+    /// The shared run's aggregation. On a clean run, bit-identical to
+    /// [`super::run_workload`]; on a stalled run, finish times of
+    /// failed ops read as the stall time (see [`ReissuedOp`]).
+    pub result: WorkloadResult,
+    /// Whether the shared run stalled.
+    pub stalled: bool,
+    /// The stall diagnosis ([`SimOutcome::describe`]), if any.
+    pub diagnosis: Option<String>,
+    /// Every failed op's recovery verdict, in (tenant, op) order.
+    pub reissued: Vec<ReissuedOp>,
+    /// Job-level service levels.
+    pub slo: WorkloadSlo,
+}
+
+/// Run a workload under fault supervision: execute the shared DAG,
+/// re-issue stalled jobs through the recovery driver per `policy`,
+/// aggregate failure-aware SLOs (module docs).
+pub fn run_workload_recovered(
+    topo: &Topology,
+    spec: &WorkloadSpec,
+    params: Params,
+    policy: &RecoveryPolicy,
+) -> Result<RecoveredWorkload> {
+    let plans = engine::plan(topo, spec, params)?;
+    let mut sim = Sim::new(topo);
+    let pending = engine::compose_workload(&mut sim, spec, params, &plans);
+    crate::perturb::apply(&mut sim, &spec.faults);
+    let (res, outcome) = sim.run_outcome();
+
+    let (stalled, diagnosis, stuck) = match &outcome {
+        SimOutcome::Completed { .. } => (false, None, Vec::new()),
+        SimOutcome::Stalled { stuck_tasks, .. } => {
+            (true, Some(outcome.describe()), stuck_tasks.clone())
+        }
+    };
+
+    let mut reissued = Vec::new();
+    let mut delivered = 0.0f64;
+    let mut completed_ops = 0usize;
+    let mut recovered_ops = 0usize;
+    let mut aborted_ops = 0usize;
+    let mut recovery_lat: Vec<f64> = Vec::new();
+    let mut makespan: f64 = 0.0;
+
+    for p in &pending {
+        if stuck.binary_search(&p.done).is_err() {
+            // completed in the shared run
+            completed_ops += 1;
+            delivered += p.bytes as f64;
+            makespan = makespan.max(res.finish(p.done));
+            continue;
+        }
+        let plan = &plans[p.tenant][p.index];
+        let rec = if policy.enabled() {
+            recover_with(topo, &plan.counts, &spec.faults, policy, |sim, cv, gate| {
+                match plan.plan {
+                    OpPlan::Lib(lib) => {
+                        let cspec = CollectiveSpec::from_vector(plan.op, cv);
+                        Some(compose_collective(sim, lib, params, &cspec, ChunkCfg::none(), gate))
+                    }
+                    OpPlan::Cand(cand) => compose_candidate(sim, params, cand, cv, gate),
+                }
+            })
+        } else {
+            None
+        };
+        match rec {
+            Some(r) if r.completed() => {
+                recovered_ops += 1;
+                recovery_lat.push(r.recovery_latency);
+                let mut bytes = p.bytes as f64;
+                if let RecoveryStrategy::Shrink { dead_ranks, .. } = &r.strategy {
+                    bytes -= dead_ranks.iter().map(|&d| plan.counts[d] as f64).sum::<f64>();
+                }
+                delivered += bytes;
+                makespan = makespan.max(r.time().unwrap());
+                reissued.push(ReissuedOp {
+                    tenant: p.tenant,
+                    index: p.index,
+                    label: p.label.clone(),
+                    strategy: r.strategy,
+                    finish: r.time(),
+                    recovery_latency: r.recovery_latency,
+                });
+            }
+            _ => {
+                aborted_ops += 1;
+                reissued.push(ReissuedOp {
+                    tenant: p.tenant,
+                    index: p.index,
+                    label: p.label.clone(),
+                    strategy: RecoveryStrategy::Abort,
+                    finish: None,
+                    recovery_latency: 0.0,
+                });
+            }
+        }
+    }
+
+    if completed_ops + recovered_ops == 0 {
+        makespan = outcome.time();
+    }
+    let (p50, p95, pmax) = if recovery_lat.is_empty() {
+        (0.0, 0.0, 0.0)
+    } else {
+        (
+            percentile(&recovery_lat, 50.0),
+            percentile(&recovery_lat, 95.0),
+            recovery_lat.iter().fold(0.0f64, |a, &b| a.max(b)),
+        )
+    };
+    let slo = WorkloadSlo {
+        total_ops: pending.len(),
+        completed_ops,
+        recovered_ops,
+        aborted_ops,
+        delivered_bytes: delivered,
+        goodput: if makespan > 0.0 { delivered / makespan } else { 0.0 },
+        makespan,
+        recovery_p50: p50,
+        recovery_p95: p95,
+        recovery_max: pmax,
+    };
+    Ok(RecoveredWorkload {
+        result: engine::collect_result(topo, spec, &res, pending),
+        stalled,
+        diagnosis,
+        reissued,
+        slo,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Library;
+    use crate::perturb::Perturbation;
+    use crate::topology::systems::SystemKind;
+    use crate::workload::spec::TenantLib;
+    use crate::workload::run_workload;
+
+    #[test]
+    fn pristine_supervised_run_is_bit_exact_to_run_workload() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = WorkloadSpec::synthetic(3, 2, 8, TenantLib::Fixed(Library::Nccl), 4 << 20, 7);
+        let plain = run_workload(&topo, &spec, Params::default()).unwrap();
+        let sup = run_workload_recovered(
+            &topo,
+            &spec,
+            Params::default(),
+            &RecoveryPolicy::default_policy(),
+        )
+        .unwrap();
+        assert!(!sup.stalled);
+        assert!(sup.reissued.is_empty());
+        assert_eq!(sup.slo.completed_ops, sup.slo.total_ops);
+        assert_eq!(sup.slo.aborted_ops, 0);
+        assert_eq!(sup.result.makespan.to_bits(), plain.makespan.to_bits());
+        for (a, b) in sup
+            .result
+            .all_ops()
+            .zip(plain.all_ops())
+        {
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.flows, b.flows);
+        }
+        assert_eq!(sup.slo.makespan.to_bits(), {
+            let last = plain.all_ops().map(|o| o.finish).fold(0.0f64, f64::max);
+            last.to_bits()
+        });
+        assert!(sup.slo.goodput > 0.0);
+    }
+
+    #[test]
+    fn permanent_outage_recovers_stalled_jobs() {
+        let topo = SystemKind::Dgx1.build();
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        let spec =
+            WorkloadSpec::synthetic(2, 2, 8, TenantLib::Fixed(Library::Nccl), 4 << 20, 3)
+                .with_faults(vec![Perturbation::link_down(link)]);
+        let sup = run_workload_recovered(
+            &topo,
+            &spec,
+            Params::default(),
+            &RecoveryPolicy::default_policy(),
+        )
+        .unwrap();
+        assert!(sup.stalled, "a permanent outage must stall the shared run");
+        assert!(sup.diagnosis.as_deref().unwrap().contains("stalled"));
+        assert!(sup.slo.recovered_ops > 0, "{:?}", sup.slo);
+        assert_eq!(sup.slo.aborted_ops, 0, "{:?}", sup.reissued);
+        assert_eq!(
+            sup.slo.completed_ops + sup.slo.recovered_ops,
+            sup.slo.total_ops
+        );
+        assert!(sup.slo.goodput > 0.0 && sup.slo.goodput.is_finite());
+        assert!(sup.slo.makespan.is_finite());
+        assert!(sup.slo.recovery_max >= sup.slo.recovery_p95);
+        assert!(sup.slo.recovery_p95 >= sup.slo.recovery_p50);
+        for r in &sup.reissued {
+            assert!(r.finish.unwrap().is_finite(), "{:?}", r.strategy);
+            assert!(!matches!(r.strategy, RecoveryStrategy::Abort));
+        }
+    }
+
+    #[test]
+    fn disabled_policy_aborts_stalled_jobs() {
+        let topo = SystemKind::Dgx1.build();
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        let spec =
+            WorkloadSpec::synthetic(2, 1, 8, TenantLib::Fixed(Library::Nccl), 4 << 20, 3)
+                .with_faults(vec![Perturbation::link_down(link)]);
+        let sup = run_workload_recovered(
+            &topo,
+            &spec,
+            Params::default(),
+            &RecoveryPolicy::disabled(),
+        )
+        .unwrap();
+        assert!(sup.stalled);
+        assert!(sup.slo.aborted_ops > 0);
+        assert_eq!(sup.slo.recovered_ops, 0);
+        assert!(sup.slo.makespan.is_finite());
+        for r in &sup.reissued {
+            assert_eq!(r.strategy, RecoveryStrategy::Abort);
+            assert!(r.finish.is_none());
+        }
+    }
+}

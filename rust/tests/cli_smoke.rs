@@ -214,6 +214,117 @@ fn workload_perturbed_runs() {
 }
 
 #[test]
+fn malformed_numeric_flags_are_rejected_cleanly() {
+    // bad --chunks / --gap / --iters never panic: the rejection names
+    // the flag and what it expects, and the exit is the command's
+    // normal failure path
+    let cases: &[&[&str]] = &[
+        &["collective", "--op", "allreduce", "--gpus", "2", "--chunks", "many"],
+        &[
+            "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+            "--gpus", "2", "--gap", "soon",
+        ],
+        &["fig3", "--iters", "not-a-number"],
+    ];
+    for args in cases {
+        let out = agv(args);
+        assert!(
+            !out.status.success(),
+            "`agv {}` accepted a malformed numeric flag",
+            args.join(" ")
+        );
+        let err = stderr(&out);
+        assert!(err.contains("expects"), "`agv {}`:\n{err}", args.join(" "));
+        assert!(!err.contains("panicked"), "`agv {}` panicked:\n{err}", args.join(" "));
+    }
+    // malformed --perturb outage items are rejected with the grammar
+    let out = agv(&["osu", "--system", "dgx1", "--gpus", "2", "--perturb", "down:one"]);
+    assert_eq!(out.status.code(), Some(2), "{}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("bad target"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+    let out = agv(&["osu", "--system", "dgx1", "--gpus", "2", "--perturb", "gpudown:0:0.5:1:2:3"]);
+    assert_eq!(out.status.code(), Some(2), "{}", stderr(&out));
+    assert!(stderr(&out).contains("expected"), "{}", stderr(&out));
+}
+
+#[test]
+fn fail_fast_commands_reject_permanent_outages() {
+    // a permanent outage would starve the fail-fast engine (diagnosed
+    // stall, not a slow finish): the CLI points at the recovery-aware
+    // surfaces instead of panicking mid-run
+    let out = agv(&[
+        "osu", "--system", "dgx1", "--gpus", "2", "--lib", "nccl", "--perturb", "down:0",
+    ]);
+    assert_eq!(out.status.code(), Some(2), "{}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("faults --outage"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+    // a *transient* outage revives and completes natively
+    let out = agv(&[
+        "osu", "--system", "dgx1", "--gpus", "2", "--lib", "nccl",
+        "--perturb", "down:0:0.0005:0.001",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("degraded"), "{}", stdout(&out));
+}
+
+#[test]
+fn workload_gap_flag_runs_and_rejects_negative() {
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--gap", "0.002",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("WORKLOAD"), "{}", stdout(&out));
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--gap", "-0.5",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "{}", stderr(&out));
+    let err = stderr(&out);
+    assert!(err.contains("gap"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn workload_recover_supervises_hard_outages() {
+    // a permanently dead GPU with only 2 ranks: no quorum to shrink
+    // to, so the stalled jobs abort — but the supervised run completes
+    // with SLO accounting instead of panicking
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--perturb", "gpudown:0", "--recover",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("SUPERVISED WORKLOAD"), "{text}");
+    assert!(text.contains("aborted"), "{text}");
+    // without --recover the same spec is rejected up front: the
+    // fail-fast engine would stall, not finish slowly
+    let out = agv(&[
+        "workload", "--system", "dgx1", "--tenants", "2", "--ops", "1",
+        "--gpus", "2", "--total", "1MB", "--perturb", "gpudown:0",
+    ]);
+    assert_eq!(out.status.code(), Some(2), "{}", stderr(&out));
+    assert!(stderr(&out).contains("--recover"), "{}", stderr(&out));
+    // ... and --recover does not apply to the --refacto hook
+    let out = agv(&["workload", "--refacto", "netflix", "--recover"]);
+    assert_eq!(out.status.code(), Some(1), "{}", stderr(&out));
+    assert!(stderr(&out).contains("--recover"), "{}", stderr(&out));
+}
+
+#[test]
+#[ignore = "full 3-system outage study; covered in release by CI's hard-fault smoke step"]
+fn faults_outage_study_runs() {
+    let out = agv(&["faults", "--outage", "--seed", "7"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("OUTAGES"), "{text}");
+    assert!(text.contains("outage verdict"), "{text}");
+}
+
+#[test]
 fn workload_smoke_on_each_system() {
     for system in ["cluster", "dgx1", "cs-storm"] {
         let out = agv(&[

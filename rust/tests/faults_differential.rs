@@ -13,9 +13,13 @@
 //! implementation.
 
 use agv_bench::comm::select::{candidates, simulate};
+use agv_bench::comm::transport::RecoveryPolicy;
 use agv_bench::comm::{run_allgatherv, Library, Params};
-use agv_bench::perturb::{perturbed_allgatherv, perturbed_candidate, Perturbation};
-use agv_bench::sim::with_reference_engine;
+use agv_bench::perturb::{
+    perturbed_allgatherv, perturbed_candidate, recovered_allgatherv, Perturbation,
+    RecoveryStrategy,
+};
+use agv_bench::sim::{with_reference_engine, Sim, SimOutcome};
 use agv_bench::topology::systems::{multi_dgx, SystemKind};
 use agv_bench::topology::{LinkClass, Topology};
 use agv_bench::util::prng::Rng;
@@ -180,6 +184,180 @@ fn workload_with_zero_magnitude_faults_is_bit_exact() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn recovery_armed_but_never_triggered_is_bit_exact_both_engines() {
+    // the PR-7 anchor extension: arming the timeout-retry-reroute
+    // driver changes nothing unless a hard outage actually overlaps
+    // the run — over soft degradations (which freeze nothing and can
+    // never trip the watchdog) the recovered result is bit-for-bit the
+    // plain perturbed one, per system x library, on BOTH engines
+    check("faults-recovery-neutral", 3, |rng| {
+        let policy = RecoveryPolicy::default_policy();
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = kind.max_gpus().min(8);
+            let cv = counts::irregular(rng, p, 8 << 20);
+            let soft = vec![
+                Perturbation::straggler(rng.gen_range(p as u64) as usize, 0.5),
+                Perturbation::scale(rng.gen_range(topo.links.len() as u64) as usize, 0.6),
+            ];
+            for lib in Library::all() {
+                for reference in [false, true] {
+                    let run = || {
+                        let base =
+                            perturbed_allgatherv(&topo, lib, Params::default(), &cv, &soft);
+                        let rec = recovered_allgatherv(
+                            &topo,
+                            lib,
+                            Params::default(),
+                            &cv,
+                            &soft,
+                            &policy,
+                        );
+                        (base, rec)
+                    };
+                    let (base, rec) =
+                        if reference { with_reference_engine(run) } else { run() };
+                    assert_eq!(
+                        rec.strategy,
+                        RecoveryStrategy::None,
+                        "ref={reference} {}/{}",
+                        topo.name,
+                        lib.name()
+                    );
+                    assert_eq!(rec.recovery_latency, 0.0);
+                    let r = rec.result.expect("clean recovery completes");
+                    assert_eq!(
+                        r.time.to_bits(),
+                        base.time.to_bits(),
+                        "ref={reference} {}/{}: armed driver moved the run: {} vs {}",
+                        topo.name,
+                        lib.name(),
+                        r.time,
+                        base.time
+                    );
+                    assert_eq!(r.flows, base.flows);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn stall_diagnosis_agrees_across_engines() {
+    // an unrecoverable outage must come back as a *diagnosed* stall on
+    // BOTH engines: same stuck tasks, same starved-flow count, same
+    // culprit links, stall instants within the engines' ~1e-9 contract
+    let topo = SystemKind::Dgx1.build();
+    let cv = vec![4u64 << 20; 8];
+    let link = topo.route_gpus(0, 1).unwrap().links[0];
+    let perts = [Perturbation::link_down(link)];
+    let outcome_of = |reference: bool| {
+        let run = || {
+            let mut sim = Sim::new(&topo);
+            agv_bench::comm::compose_allgatherv(
+                &mut sim,
+                Library::Nccl,
+                Params::default(),
+                &cv,
+                None,
+            );
+            agv_bench::perturb::apply(&mut sim, &perts);
+            sim.run_outcome().1
+        };
+        if reference { with_reference_engine(run) } else { run() }
+    };
+    let (ev, rf) = (outcome_of(false), outcome_of(true));
+    match (&ev, &rf) {
+        (
+            SimOutcome::Stalled {
+                time: te,
+                stuck_tasks: se,
+                starved_flows: fe,
+                culprit_links: le,
+            },
+            SimOutcome::Stalled {
+                time: tr,
+                stuck_tasks: sr,
+                starved_flows: fr,
+                culprit_links: lr,
+            },
+        ) => {
+            assert_eq!(se, sr, "stuck-task sets diverged");
+            assert_eq!(fe, fr, "starved-flow counts diverged");
+            assert_eq!(le, lr, "culprit links diverged");
+            assert!(
+                le.contains(&link),
+                "diagnosis does not name the dead link {link}: {le:?}"
+            );
+            let rel = (te - tr).abs() / tr.max(1e-12);
+            assert!(rel < 1e-9, "stall instants diverged: {te} vs {tr}");
+        }
+        _ => panic!("engines disagree on liveness: {} vs {}", ev.describe(), rf.describe()),
+    }
+}
+
+#[test]
+fn midrun_link_outage_completes_on_every_system_and_library() {
+    // acceptance: a single mid-run link outage on every system x
+    // library completes under the default policy — natively (frozen
+    // flows thaw when the window closes), by watchdog retry, or — when
+    // the outage never lifts — by reroute, or by shrinking past a GPU
+    // whose only fabric link died
+    let policy = RecoveryPolicy::default_policy();
+    for kind in SystemKind::all() {
+        let topo = kind.build();
+        let p = kind.max_gpus().min(8);
+        let cv = vec![4u64 << 20; p];
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        for lib in Library::all() {
+            let healthy = run_allgatherv(lib, &topo, &cv);
+            let transient =
+                Perturbation::link_down(link).during(healthy.time * 0.3, healthy.time);
+            let rec = recovered_allgatherv(
+                &topo,
+                lib,
+                Params::default(),
+                &cv,
+                &[transient],
+                &policy,
+            );
+            assert!(
+                rec.completed(),
+                "{}/{} transient: {:?}",
+                topo.name,
+                lib.name(),
+                rec.strategy
+            );
+            let t = rec.time().unwrap();
+            assert!(
+                t.is_finite() && t >= healthy.time * (1.0 - 1e-9),
+                "{}/{}: outage run {} beat the healthy run {}",
+                topo.name,
+                lib.name(),
+                t,
+                healthy.time
+            );
+            let rec = recovered_allgatherv(
+                &topo,
+                lib,
+                Params::default(),
+                &cv,
+                &[Perturbation::link_down(link)],
+                &policy,
+            );
+            assert!(
+                rec.completed() && !matches!(rec.strategy, RecoveryStrategy::Abort),
+                "{}/{} permanent: {:?}",
+                topo.name,
+                lib.name(),
+                rec.strategy
+            );
+        }
+    }
 }
 
 #[test]

@@ -22,9 +22,11 @@
 //!   library on its own ensemble, by construction.
 
 use agv_bench::comm::select::{AlgoSelector, RobustObjective};
+use agv_bench::comm::transport::RecoveryPolicy;
 use agv_bench::comm::{run_allgatherv, CommResult, Library, Params};
 use agv_bench::perturb::{
-    ensemble, perturbed_allgatherv, perturbed_candidate, EnsembleCfg, Perturbation,
+    ensemble, perturbed_allgatherv, perturbed_candidate, recovered_allgatherv, EnsembleCfg,
+    Perturbation, RecoveryStrategy,
 };
 use agv_bench::sim::Sim;
 use agv_bench::topology::systems::SystemKind;
@@ -227,6 +229,116 @@ fn prop_robust_selector_never_loses_to_fixed_libraries() {
                     fixed
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_overlapping_scale_floor_windows_are_order_invariant() {
+    // apply() composes overlapping effects on a link in fixed passes
+    // (all active scales multiply, then all active floors clamp, then
+    // outages zero), so how scale and floor windows interleave in the
+    // *listing* cannot move a single bit. Kept to one scale per link —
+    // two scales on one link multiply in listing order, which pins the
+    // fp rounding deterministically but not permutation-invariantly.
+    check("faults-order-invariance", 8, |rng| {
+        let topo = random_system(rng);
+        let lib = random_lib(rng);
+        let p = 2 + rng.gen_range(7) as usize;
+        let cv = counts::irregular(rng, p, 16 << 20);
+        let healthy = run_allgatherv(lib, &topo, &cv);
+        let t = healthy.time;
+        let rank = rng.gen_range(p as u64) as usize;
+        // a link the straggler's per-link scales cannot also touch
+        let link = (0..topo.links.len())
+            .map(|i| (i + rng.gen_range(topo.links.len() as u64) as usize) % topo.links.len())
+            .find(|l| !topo.gpu_links(rank).contains(l))
+            .expect("every system has non-GPU-incident links");
+        let base = topo.links[link].class.bandwidth();
+        let perts = [
+            Perturbation::scale(link, 0.3 + 0.5 * rng.next_f64()).during(0.0, t * 0.7),
+            Perturbation::floor(link, base * (0.2 + 0.3 * rng.next_f64())).during(t * 0.25, t),
+            Perturbation::floor(link, base * (0.3 + 0.3 * rng.next_f64()))
+                .during(t * 0.4, f64::INFINITY),
+            Perturbation::straggler(rank, 0.4 + 0.4 * rng.next_f64()).during(t * 0.1, t * 0.8),
+        ];
+        let orders: [[usize; 4]; 3] = [[0, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2]];
+        let runs: Vec<CommResult> = orders
+            .iter()
+            .map(|ord| {
+                let set: Vec<Perturbation> = ord.iter().map(|&i| perts[i].clone()).collect();
+                perturbed_allgatherv(&topo, lib, Params::default(), &cv, &set)
+            })
+            .collect();
+        for r in &runs[1..] {
+            if r.time.to_bits() != runs[0].time.to_bits() || r.flows != runs[0].flows {
+                return Err(format!(
+                    "{}/{} link {link}: listing order moved the result: {} vs {}",
+                    topo.name,
+                    lib.name(),
+                    r.time,
+                    runs[0].time
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_magnitude_outages_are_bit_exact_and_recovery_neutral() {
+    // the PR-7 extension of the zero-magnitude oracle: outage kinds
+    // over empty windows are filtered with the rest (no capacity step
+    // is ever emitted), and a recovery policy armed over such a set
+    // never fires — the result stays bit-for-bit the healthy run
+    check("faults-zeromag-outage", 6, |rng| {
+        let topo = random_system(rng);
+        let lib = random_lib(rng);
+        let p = 2 + rng.gen_range(7) as usize;
+        let cv = counts::irregular(rng, p, 16 << 20);
+        let healthy = run_allgatherv(lib, &topo, &cv);
+        let link = rng.gen_range(topo.links.len() as u64) as usize;
+        let rank = rng.gen_range(p as u64) as usize;
+        let perts = vec![
+            Perturbation::link_down(link).during(rng.next_f64() * 1e-3, 0.0),
+            Perturbation::gpu_down(rank).during(healthy.time * rng.next_f64(), 0.0),
+            Perturbation::scale(link, 1.0),
+        ];
+        let degraded = perturbed_allgatherv(&topo, lib, Params::default(), &cv, &perts);
+        if degraded.time.to_bits() != healthy.time.to_bits() || degraded.flows != healthy.flows {
+            return Err(format!(
+                "{}/{}: zero-magnitude outages moved the run: {} vs {}",
+                topo.name,
+                lib.name(),
+                degraded.time,
+                healthy.time
+            ));
+        }
+        let rec = recovered_allgatherv(
+            &topo,
+            lib,
+            Params::default(),
+            &cv,
+            &perts,
+            &RecoveryPolicy::default_policy(),
+        );
+        if rec.strategy != RecoveryStrategy::None || rec.recovery_latency != 0.0 {
+            return Err(format!(
+                "{}/{}: recovery fired on a no-op set: {:?}",
+                topo.name,
+                lib.name(),
+                rec.strategy
+            ));
+        }
+        if rec.time().unwrap().to_bits() != healthy.time.to_bits() {
+            return Err(format!(
+                "{}/{}: armed-but-idle recovery moved the run: {} vs {}",
+                topo.name,
+                lib.name(),
+                rec.time().unwrap(),
+                healthy.time
+            ));
         }
         Ok(())
     });

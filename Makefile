@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery verify bench bench-smoke bench-workload bench-faults bench-collectives artifacts fmt clippy
+.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery test-scale verify bench bench-smoke bench-workload bench-faults bench-collectives artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -39,6 +39,18 @@ test-recovery:
 	cargo test --test faults_differential outage
 	cargo test --test faults_differential recovery
 	cargo test --test faults_differential stall
+
+# The thousand-rank scale subsystem on its own: the three-way
+# sharded / unsharded / reference differential harness, the parametric
+# fabric property tests, the large-P (256/1024/4096) schedule-
+# conformance cases and the byte-for-byte pin of the BENCH_engine.json
+# scale subtree (CI runs this as a dedicated step; also part of
+# `make test`).
+test-scale:
+	cargo test --test scale_differential
+	cargo test --test proptests prop_fa
+	cargo test --test schedule_conformance conformance_p
+	cargo test --test workload_determinism scale
 
 verify: build test
 

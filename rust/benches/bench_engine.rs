@@ -12,7 +12,8 @@
 //! slashes iteration counts for the CI smoke step.
 
 use agv_bench::comm::{run_allgatherv, Library};
-use agv_bench::sim::{Sim, SimResult};
+use agv_bench::sim::scale::{build_leaf_rings, leaf_group_size, scale_doc, scale_specs};
+use agv_bench::sim::{run_sharded, Sim, SimResult};
 use agv_bench::topology::systems::{cluster, dgx1};
 use agv_bench::topology::Topology;
 use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
@@ -113,11 +114,54 @@ fn main() {
         }
     }
 
+    // thousand-rank fabrics (DESIGN.md §15): the sharded driver on the
+    // leaf-ring workload, swept over shard counts. shards=1 is the
+    // whole-DAG single-engine baseline (same partition code path), so
+    // the curve is a pure shard-count speedup. Quick mode runs the
+    // ~1k-rank fabrics; the full bench runs the >= 4096-rank ones.
+    let mut scale_curve: Vec<Json> = Vec::new();
+    for spec in scale_specs(quick_mode()) {
+        let topo = spec.build();
+        let group = leaf_group_size(spec);
+        let ranks = topo.num_gpus();
+        let mut base_mean = f64::NAN;
+        for shards in [1usize, 4, 16, 64] {
+            let name = format!("scale/{}/{ranks}ranks/shards{shards}", spec.name());
+            let r = bench(&name, warmup(1), iters(2), || {
+                black_box(run_sharded(build_leaf_rings(&topo, group, 42), shards, usize::MAX));
+            });
+            if shards == 1 {
+                base_mean = r.mean_s;
+            }
+            let speedup = base_mean / r.mean_s;
+            println!("{}   ({speedup:.2}x vs 1 shard)", r.report_line());
+            cases.push(r.to_json(&[("speedup_vs_1_shard", speedup)]));
+            scale_curve.push(obj(vec![
+                ("system", Json::Str(spec.name())),
+                ("ranks", Json::Num(ranks as f64)),
+                ("shards", Json::Num(shards as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("speedup_vs_1_shard", Json::Num(speedup)),
+            ]));
+        }
+        println!();
+    }
+
     if json_out {
         let doc = obj(vec![
             ("bench", Json::Str("bench_engine".into())),
             ("quick", Json::Bool(quick_mode())),
             ("cases", Json::Arr(cases)),
+            // deterministic sharded-vs-unsharded agreement metrics (the
+            // determinism suite pins this subtree byte-for-byte) next
+            // to the wall-clock shard-count speedup curve
+            (
+                "scale",
+                obj(vec![
+                    ("cross_check", scale_doc(42, quick_mode())),
+                    ("speedup_curve", Json::Arr(scale_curve)),
+                ]),
+            ),
             (
                 "speedup_vs_reference",
                 obj(speedups

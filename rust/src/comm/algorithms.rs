@@ -120,24 +120,25 @@ pub fn ring_allgatherv(p: usize, order: Option<&[usize]>) -> Schedule {
 
 /// Recursive doubling: requires power-of-two P; at step s ranks exchange
 /// everything they hold with their partner at distance 2^s.
+///
+/// Closed form (no held-set bookkeeping, so schedule generation is
+/// output-linear and survives the 4096-rank fabrics): entering the step
+/// with distance `dist = 2^s`, rank r holds exactly the aligned block
+/// window `[(r / dist)·dist, (r / dist)·dist + dist)` — its own block
+/// widened by each earlier exchange — and ships that whole window,
+/// ascending, to `r ^ dist`. The test module keeps the original
+/// set-tracking builder as an executable specification and asserts
+/// step-for-step, op-for-op equality.
 pub fn recursive_doubling_allgatherv(p: usize) -> Schedule {
     assert!(p.is_power_of_two(), "recursive doubling needs power-of-two P");
-    let mut held: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
     let mut steps = Vec::new();
     let mut dist = 1;
     while dist < p {
-        let mut ops = Vec::new();
-        let mut new_held = held.clone();
+        let mut ops = Vec::with_capacity(p);
         for r in 0..p {
-            let partner = r ^ dist;
-            ops.push(SendOp { from: r, to: partner, blocks: held[r].clone() });
-            new_held[partner].extend(held[r].iter().copied());
+            let base = r & !(dist - 1);
+            ops.push(SendOp { from: r, to: r ^ dist, blocks: (base..base + dist).collect() });
         }
-        for h in new_held.iter_mut() {
-            h.sort_unstable();
-            h.dedup();
-        }
-        held = new_held;
         steps.push(ops);
         dist <<= 1;
     }
@@ -146,32 +147,29 @@ pub fn recursive_doubling_allgatherv(p: usize) -> Schedule {
 
 /// Bruck allgather(v): works for any P in ceil(log2 P) steps; rank r
 /// sends everything it holds to rank (r - 2^s + P) % P at step s.
+///
+/// Closed form (the original membership-scanning builder was O(P³) and
+/// dominated schedule generation at 4096 ranks): entering the step with
+/// distance `dist`, rank r holds the cyclic window {r, r+1, …, r+dist−1}
+/// (mod P) and its receiver `(r − dist) mod P` holds the window just
+/// behind it, so the blocks the receiver is missing are exactly
+/// `{(r + i) mod P : i < min(dist, P − dist)}` — the leading part of
+/// r's window that the two windows don't share once they wrap. Blocks
+/// are listed in ascending numeric order, matching the sorted held-set
+/// order of the original builder (kept in the test module as the
+/// executable specification, asserted equal for every P up to 33).
 pub fn bruck_allgatherv(p: usize) -> Schedule {
     assert!(p >= 1);
-    let mut held: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
     let mut steps = Vec::new();
     let mut dist = 1;
     while dist < p {
-        let mut ops = Vec::new();
-        let mut new_held = held.clone();
+        let m = dist.min(p - dist);
+        let mut ops = Vec::with_capacity(p);
         for r in 0..p {
-            let to = (r + p - dist) % p;
-            // send the blocks the receiver does not yet have
-            let missing: Vec<usize> = held[r]
-                .iter()
-                .copied()
-                .filter(|b| !held[to].contains(b))
-                .collect();
-            if !missing.is_empty() {
-                new_held[to].extend(missing.iter().copied());
-                ops.push(SendOp { from: r, to, blocks: missing });
-            }
+            let mut blocks: Vec<usize> = (0..m).map(|i| (r + i) % p).collect();
+            blocks.sort_unstable();
+            ops.push(SendOp { from: r, to: (r + p - dist) % p, blocks });
         }
-        for h in new_held.iter_mut() {
-            h.sort_unstable();
-            h.dedup();
-        }
-        held = new_held;
         steps.push(ops);
         dist <<= 1;
     }
@@ -753,6 +751,85 @@ mod tests {
     use super::*;
     use crate::prop_assert;
     use crate::util::prop::check;
+
+    /// The original set-tracking recursive-doubling builder, kept as the
+    /// executable specification for the closed-form rewrite.
+    fn reference_recursive_doubling(p: usize) -> Schedule {
+        assert!(p.is_power_of_two());
+        let mut held: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
+        let mut steps = Vec::new();
+        let mut dist = 1;
+        while dist < p {
+            let mut ops = Vec::new();
+            let mut new_held = held.clone();
+            for r in 0..p {
+                let partner = r ^ dist;
+                ops.push(SendOp { from: r, to: partner, blocks: held[r].clone() });
+                new_held[partner].extend(held[r].iter().copied());
+            }
+            for h in new_held.iter_mut() {
+                h.sort_unstable();
+                h.dedup();
+            }
+            held = new_held;
+            steps.push(ops);
+            dist <<= 1;
+        }
+        Schedule { steps }
+    }
+
+    /// The original O(P³) membership-scanning Bruck builder, kept as the
+    /// executable specification for the closed-form rewrite.
+    fn reference_bruck(p: usize) -> Schedule {
+        assert!(p >= 1);
+        let mut held: Vec<Vec<usize>> = (0..p).map(|r| vec![r]).collect();
+        let mut steps = Vec::new();
+        let mut dist = 1;
+        while dist < p {
+            let mut ops = Vec::new();
+            let mut new_held = held.clone();
+            for r in 0..p {
+                let to = (r + p - dist) % p;
+                let missing: Vec<usize> = held[r]
+                    .iter()
+                    .copied()
+                    .filter(|b| !held[to].contains(b))
+                    .collect();
+                if !missing.is_empty() {
+                    new_held[to].extend(missing.iter().copied());
+                    ops.push(SendOp { from: r, to, blocks: missing });
+                }
+            }
+            for h in new_held.iter_mut() {
+                h.sort_unstable();
+                h.dedup();
+            }
+            held = new_held;
+            steps.push(ops);
+            dist <<= 1;
+        }
+        Schedule { steps }
+    }
+
+    #[test]
+    fn closed_form_recursive_doubling_matches_reference() {
+        // identical output, not merely equivalent delivery: same steps,
+        // same op order, same block order
+        for p in [1usize, 2, 4, 8, 16, 32] {
+            assert_eq!(
+                recursive_doubling_allgatherv(p).steps,
+                reference_recursive_doubling(p).steps,
+                "p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_bruck_matches_reference() {
+        for p in 1..=33usize {
+            assert_eq!(bruck_allgatherv(p).steps, reference_bruck(p).steps, "p={p}");
+        }
+    }
 
     #[test]
     fn ring_delivers_all_p() {

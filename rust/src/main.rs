@@ -22,7 +22,7 @@ use agv_bench::report::{
 use agv_bench::runtime::{default_artifacts_dir, Runtime};
 use agv_bench::tensor::messages::mode_counts;
 use agv_bench::tensor::{datasets, synth};
-use agv_bench::topology::systems::SystemKind;
+use agv_bench::topology::systems::{SystemKind, SystemSpec};
 use agv_bench::util::cli::{parse_bytes, Args};
 use agv_bench::util::{fmt_bytes, fmt_time};
 use agv_bench::workload::{parse_trace, run_workload_recovered, OpStream, TenantLib, WorkloadSpec};
@@ -33,18 +33,20 @@ agv — reproduction of 'An Empirical Evaluation of Allgatherv on Multi-GPU Syst
 USAGE: agv <command> [options]
 
 COMMANDS
-  topo                         Fig. 1: print the three system topologies
+  topo [--list] [--system S]   Fig. 1: print the three system topologies (--system: one
+                               system or parametric fabric; --list: the accepted specs)
   fig2 [--csv-dir DIR]         Fig. 2: OSU Allgatherv sweep (all systems/libraries)
   table1 [--csv-dir DIR]       Table I: data set message statistics vs paper
   fig3 [--iters N] [--csv-dir DIR]
                                Fig. 3: ReFacTo communication time grid
   findings                     §VI headline ratios, ours vs paper
-  auto [--dataset D] [--gpus N] [--csv-dir DIR] [--perturb SPEC] [--robust [mean|p95|outage]]
+  auto [--dataset D] [--gpus N] [--system S] [--csv-dir DIR] [--perturb SPEC]
+       [--robust [mean|p95|outage]]
                                auto-selected (library, algorithm) vs each fixed library
                                (--perturb: argmin on the degraded fabric; --robust:
                                argmin of mean/p95 over a seeded fault ensemble)
   osu --system S --gpus N [--lib L] [--perturb SPEC]
-                               one OSU sweep (S: cluster|dgx1|cs-storm; L: mpi|mpi-cuda|nccl|auto;
+                               one OSU sweep (L: mpi|mpi-cuda|nccl|auto;
                                --perturb runs the sweep on a degraded fabric)
   refacto --dataset D --system S --gpus N [--lib L] [--iters N] [--perturb SPEC]
                                one ReFacTo communication simulation (--lib auto picks per mode;
@@ -77,6 +79,9 @@ COMMANDS
                                bcast|alltoallv): the §IV count shapes per library with
                                the auto verdict; --chunks K pipelines every logical
                                send as K wire chunks (NCCL-style ring pipelining)
+  --system S                   a paper system (cluster|dgx1|cs-storm) or a parametric
+                               fabric: fat-tree:k=<even> | dragonfly:a=<n>,p=<n>,h=<n>
+                               | multi-plane-pod:nodes=<n>,gpus=<n>,rails=<n>
   --perturb SPEC               comma-separated faults: link:<id>:<factor>[:<start>[:<dur>]]
                                | floor:<id>:<bytes/s>[:<start>[:<dur>]]
                                | straggler:<rank>:<factor>[:<start>[:<dur>]]
@@ -92,7 +97,7 @@ fn main() {
     let args = Args::from_env();
     let cmd = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match cmd.as_str() {
-        "topo" => cmd_topo(),
+        "topo" => cmd_topo(&args),
         "fig2" => cmd_fig2(&args),
         "table1" => cmd_table1(&args),
         "fig3" => cmd_fig3(&args),
@@ -138,10 +143,16 @@ fn num_arg<T>(parsed: agv_bench::util::error::Result<T>) -> T {
     })
 }
 
-fn system_arg(args: &Args) -> SystemKind {
+fn system_arg(args: &Args) -> SystemSpec {
     let s = args.get_or("system", "dgx1");
-    SystemKind::parse(s).unwrap_or_else(|| {
-        eprintln!("unknown system `{s}` (cluster|dgx1|cs-storm)");
+    parse_system(s)
+}
+
+/// Parse one `--system` value — a paper system or a parametric fabric
+/// spec. Malformed specs are usage errors: clean hint, exit 2.
+fn parse_system(s: &str) -> SystemSpec {
+    SystemSpec::parse(s).unwrap_or_else(|e| {
+        eprintln!("--system: {e:#}");
         std::process::exit(2);
     })
 }
@@ -207,9 +218,23 @@ fn robust_arg(args: &Args) -> Option<RobustObjective> {
     })
 }
 
-fn cmd_topo() {
-    for kind in SystemKind::all() {
-        let t = kind.build();
+fn cmd_topo(args: &Args) {
+    if args.flag("list") || args.get("list").is_some() {
+        println!("systems accepted by --system:");
+        for k in SystemSpec::paper_all() {
+            println!("  {:<44} {:>5} GPUs (paper Fig. 1)", k.name(), k.max_gpus());
+        }
+        println!("  fat-tree:k=<even>                            k^3/4 hosts, full-bisection Clos");
+        println!("  dragonfly:a=<n>,p=<n>,h=<n>                  a*h+1 groups of a routers, p hosts each");
+        println!("  multi-plane-pod:nodes=<n>,gpus=<n>,rails=<n> rail-optimized, one plane per rail");
+        return;
+    }
+    let specs: Vec<SystemSpec> = match args.get("system") {
+        Some(_) => vec![system_arg(args)],
+        None => SystemSpec::paper_all().to_vec(),
+    };
+    for spec in specs {
+        let t = spec.build();
         println!("== {} ==", t.name);
         println!(
             "  devices: {}  links: {}  GPUs: {}",
@@ -218,17 +243,21 @@ fn cmd_topo() {
             t.num_gpus()
         );
         let n = t.num_gpus();
-        println!("  GPUDirect P2P matrix (rows/cols = GPU ranks, '+' = P2P):");
-        for a in 0..n {
-            let row: String = (0..n)
-                .map(|b| if t.p2p_accessible(a, b) { '+' } else { '.' })
-                .collect();
-            println!("    {a:>2} {row}");
+        if n <= 16 {
+            println!("  GPUDirect P2P matrix (rows/cols = GPU ranks, '+' = P2P):");
+            for a in 0..n {
+                let row: String = (0..n)
+                    .map(|b| if t.p2p_accessible(a, b) { '+' } else { '.' })
+                    .collect();
+                println!("    {a:>2} {row}");
+            }
+        } else {
+            println!("  GPUDirect P2P matrix omitted ({n} GPUs; printed for 16 or fewer)");
         }
         println!("  sample routes:");
         for (a, b) in [(0usize, 1usize), (0, n / 2), (0, n - 1)] {
-            if a == b {
-                continue;
+            if a == b || b >= n {
+                continue; // degenerate 1-GPU fabrics have no routes to show
             }
             let p = t.route_gpus(a, b).unwrap();
             let bw = t.path_bandwidth(&p);
@@ -293,6 +322,7 @@ fn cmd_auto(args: &Args) {
         None => datasets::all(),
     };
     let gpus_filter = args.get("gpus").map(|_| num_arg(args.get_usize("gpus", 8)));
+    let system_override = args.get("system").map(|_| system_arg(args));
     let perts = perturb_arg(args);
     if let Some(ps) = &perts {
         reject_permanent_outages(ps, "use `agv faults --outage` for hard-fault studies");
@@ -317,8 +347,12 @@ fn cmd_auto(args: &Args) {
                 None => format!("seeded ensemble, seed {seed}"),
             }
         );
-        for kind in SystemKind::all() {
-            let topo = kind.build();
+        let systems: Vec<SystemSpec> = match system_override {
+            Some(s) => vec![s],
+            None => SystemSpec::paper_all().to_vec(),
+        };
+        for spec_sys in systems {
+            let topo = spec_sys.build();
             if gpus > topo.num_gpus() {
                 continue;
             }
@@ -326,9 +360,9 @@ fn cmd_auto(args: &Args) {
                 Some(ps) => {
                     // a hand-written set may name links/ranks only some
                     // systems have: skip those systems instead of dying
-                    // mid-report (agv auto has no --system flag)
+                    // mid-report
                     if let Err(e) = perturb::validate(&topo, ps) {
-                        println!("== {} @ {gpus} GPUs — skipped ({e:#}) ==", kind.name());
+                        println!("== {} @ {gpus} GPUs — skipped ({e:#}) ==", spec_sys.name());
                         continue;
                     }
                     vec![ps.clone()]
@@ -336,7 +370,7 @@ fn cmd_auto(args: &Args) {
                 None => perturb::ensemble(&topo, &EnsembleCfg::quick(seed)),
             };
             let sel = AlgoSelector::new(Params::default());
-            println!("== {} @ {gpus} GPUs ==", kind.name());
+            println!("== {} @ {gpus} GPUs ==", spec_sys.name());
             for spec in &specs {
                 let counts = mode_counts(spec, gpus);
                 for (m, cv) in counts.iter().enumerate() {
@@ -356,7 +390,7 @@ fn cmd_auto(args: &Args) {
         }
         return;
     }
-    let rows = report_auto::grid(&specs, gpus_filter);
+    let rows = report_auto::grid(&specs, gpus_filter, system_override);
     print!("{}", report_auto::render(&rows));
     if let Some(dir) = csv_dir(args) {
         let p = write_csv(&dir, "auto.csv", &report_auto::csv(&rows)).unwrap();
@@ -366,14 +400,11 @@ fn cmd_auto(args: &Args) {
 
 fn cmd_faults(args: &Args) {
     if args.flag("list-links") || args.get("list-links").is_some() {
-        let kind = match args.get("list-links") {
-            Some(s) => SystemKind::parse(s).unwrap_or_else(|| {
-                eprintln!("unknown system `{s}` (cluster|dgx1|cs-storm)");
-                std::process::exit(2);
-            }),
+        let spec = match args.get("list-links") {
+            Some(s) => parse_system(s),
             None => system_arg(args),
         };
-        print!("{}", report_faults::links_table(&kind.build()));
+        print!("{}", report_faults::links_table(&spec.build()));
         return;
     }
     let seed = num_arg(args.get_u64("seed", 42));
@@ -609,11 +640,9 @@ fn cmd_collective(args: &Args) -> agv_bench::util::error::Result<()> {
         CollectiveOp::parse(s)
             .ok_or_else(|| anyhow!("unknown op `{s}` (allgatherv|allreduce|bcast|alltoallv)"))?
     };
-    let kind = {
-        let s = args.get_or("system", "dgx1");
-        SystemKind::parse(s).ok_or_else(|| anyhow!("unknown system `{s}` (cluster|dgx1|cs-storm)"))?
-    };
-    let topo = kind.build();
+    // bad system specs are usage errors (exit 2 with the grammar hint),
+    // unlike the runtime failures this fn returns as Err (exit 1)
+    let topo = system_arg(args).build();
     let gpus = args.get_usize("gpus", topo.num_gpus().min(8))?;
     if gpus == 0 || gpus > topo.num_gpus() {
         return Err(anyhow!("--gpus {gpus}: `{}` has {} GPUs", topo.name, topo.num_gpus()));
@@ -717,10 +746,9 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
         .transpose()?;
     let gpus_flag = args.get("gpus").map(|_| args.get_usize("gpus", 8)).transpose()?;
     let gap_flag = args.get("gap").map(|_| args.get_f64("gap", 0.0)).transpose()?;
-    let mut systems: Vec<SystemKind> = match args.get_or("system", "all") {
-        "all" => SystemKind::all().to_vec(),
-        s => vec![SystemKind::parse(s)
-            .ok_or_else(|| anyhow!("unknown system `{s}` (cluster|dgx1|cs-storm|all)"))?],
+    let mut systems: Vec<SystemSpec> = match args.get_or("system", "all") {
+        "all" => SystemSpec::paper_all().to_vec(),
+        s => vec![parse_system(s)],
     };
 
     let perts = perturb_arg(args);

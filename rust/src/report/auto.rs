@@ -8,7 +8,7 @@ use crate::comm::{CommLibrary, Library, Params};
 use crate::cpals::comm_model::refacto_comm_auto;
 use crate::tensor::messages::mode_counts;
 use crate::tensor::TensorSpec;
-use crate::topology::systems::{multi_dgx, SystemKind};
+use crate::topology::systems::{multi_dgx, SystemKind, SystemSpec};
 use crate::topology::Topology;
 use crate::util::{fmt_time, stats};
 
@@ -36,24 +36,44 @@ impl AutoRow {
     }
 }
 
-/// The systems of the study: the paper's three (with the Fig. 2 GPU
-/// counts) plus a 2-node multi-DGX at 16 GPUs, where the hierarchical
-/// schedules have a non-trivial grouping to exploit.
-fn systems() -> Vec<(String, Topology, Vec<usize>)> {
-    let mut out: Vec<(String, Topology, Vec<usize>)> = SystemKind::all()
-        .into_iter()
-        .map(|k| (k.name().to_string(), k.build(), crate::osu::gpu_counts(k)))
-        .collect();
-    out.push(("multi-dgx-2".to_string(), multi_dgx(2), vec![16]));
-    out
+/// The systems of the study. Default (`system = None`): the paper's
+/// three (with the Fig. 2 GPU counts) plus a 2-node multi-DGX at 16
+/// GPUs, where the hierarchical schedules have a non-trivial grouping
+/// to exploit. With an explicit `--system` spec the study runs on that
+/// one system — paper GPU counts for paper systems, a single capped
+/// rank count for the parametric fabrics (a full fat-tree would put
+/// thousands of ranks in one collective row).
+fn systems(system: Option<SystemSpec>) -> Vec<(String, Topology, Vec<usize>)> {
+    match system {
+        Some(spec) => {
+            let topo = spec.build();
+            let counts = match spec {
+                SystemSpec::Paper(k) => crate::osu::gpu_counts(k),
+                _ => vec![topo.num_gpus().min(16)],
+            };
+            vec![(spec.name(), topo, counts)]
+        }
+        None => {
+            let mut out: Vec<(String, Topology, Vec<usize>)> = SystemKind::all()
+                .into_iter()
+                .map(|k| (k.name().to_string(), k.build(), crate::osu::gpu_counts(k)))
+                .collect();
+            out.push(("multi-dgx-2".to_string(), multi_dgx(2), vec![16]));
+            out
+        }
+    }
 }
 
 /// Build the comparison grid for the given data sets, optionally
-/// restricted to one GPU count. Rows fan out over the bounded worker
-/// pool — each is an independent pure simulation.
-pub fn grid(specs: &[TensorSpec], gpus_filter: Option<usize>) -> Vec<AutoRow> {
+/// restricted to one GPU count and/or one system. Rows fan out over
+/// the bounded worker pool — each is an independent pure simulation.
+pub fn grid(
+    specs: &[TensorSpec],
+    gpus_filter: Option<usize>,
+    system: Option<SystemSpec>,
+) -> Vec<AutoRow> {
     let mut jobs: Vec<Box<dyn FnOnce() -> AutoRow + Send>> = Vec::new();
-    for (name, topo, gpu_counts) in systems() {
+    for (name, topo, gpu_counts) in systems(system) {
         for &gpus in &gpu_counts {
             if gpus_filter.is_some_and(|g| g != gpus) {
                 continue;
@@ -176,7 +196,7 @@ mod tests {
 
     #[test]
     fn single_cell_grid_renders_and_auto_wins() {
-        let rows = grid(&[datasets::netflix()], Some(2));
+        let rows = grid(&[datasets::netflix()], Some(2), None);
         // three paper systems at 2 GPUs (multi-dgx only runs at 16)
         assert_eq!(rows.len(), 3);
         for r in &rows {
@@ -198,11 +218,21 @@ mod tests {
 
     #[test]
     fn multi_dgx_rows_present_at_16() {
-        let rows = grid(&[datasets::amazon()], Some(16));
+        let rows = grid(&[datasets::amazon()], Some(16), None);
         assert!(rows.iter().any(|r| r.system == "multi-dgx-2"));
         // every 16-GPU system except the DGX-1 (max 8) shows up
         assert!(rows.iter().any(|r| r.system == "cluster"));
         assert!(rows.iter().any(|r| r.system == "cs-storm"));
         assert!(!rows.iter().any(|r| r.system == "dgx1"));
+    }
+
+    #[test]
+    fn system_override_restricts_the_grid_to_a_fabric() {
+        let spec = SystemSpec::MultiPlanePod { nodes: 2, gpus: 4, rails: 2 };
+        let rows = grid(&[datasets::netflix()], None, Some(spec));
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].system, "pod-2x4x2");
+        assert_eq!(rows[0].gpus, 8);
+        assert!(rows[0].auto_time > 0.0 && rows[0].auto_time <= rows[0].best_fixed());
     }
 }

@@ -3,7 +3,7 @@
 //! `agv workload`.
 
 use crate::comm::Params;
-use crate::topology::systems::SystemKind;
+use crate::topology::systems::SystemSpec;
 use crate::topology::Topology;
 use crate::util::error::Result;
 use crate::util::{fmt_time, stats};
@@ -102,23 +102,23 @@ pub fn section(topo: &Topology, spec: &WorkloadSpec, params: Params) -> Result<S
     })
 }
 
-/// The default study: the same spec shape on each paper system
-/// (sections fan out over the bounded worker pool, results in system
-/// order). `mk_spec` receives the system's GPU budget so specs can
-/// adapt rank counts.
+/// The default study: the same spec shape on each system — paper
+/// systems or parametric fabrics (sections fan out over the bounded
+/// worker pool, results in system order). `mk_spec` receives the
+/// system's GPU budget so specs can adapt rank counts.
 pub fn study(
-    systems: &[SystemKind],
+    systems: &[SystemSpec],
     params: Params,
     mk_spec: impl Fn(usize) -> WorkloadSpec + Sync,
 ) -> Result<Vec<SystemSection>> {
     let jobs: Vec<_> = systems
         .iter()
-        .map(|&kind| {
+        .map(|&spec| {
             let mk = &mk_spec;
             move || {
-                let topo = kind.build();
-                let spec = mk(topo.num_gpus());
-                section(&topo, &spec, params)
+                let topo = spec.build();
+                let wspec = mk(topo.num_gpus());
+                section(&topo, &wspec, params)
             }
         })
         .collect();
@@ -220,11 +220,11 @@ mod tests {
 
     #[test]
     fn study_renders_all_systems_with_contention() {
-        let secs = study(&SystemKind::all(), Params::default(), small_spec).unwrap();
+        let secs = study(&SystemSpec::paper_all(), Params::default(), small_spec).unwrap();
         assert_eq!(secs.len(), 3);
         let text = render(&secs);
-        for k in SystemKind::all() {
-            assert!(text.contains(k.name()), "{k:?} missing:\n{text}");
+        for k in SystemSpec::paper_all() {
+            assert!(text.contains(k.name().as_str()), "{k:?} missing:\n{text}");
         }
         assert!(text.contains("WORKLOAD"));
         assert!(text.contains("slowdown"));
@@ -240,8 +240,27 @@ mod tests {
     }
 
     #[test]
+    fn study_runs_on_parametric_fabrics() {
+        // the contended-tenant study must work unchanged on the scale
+        // fabrics: a small rail-optimized pod and a fat-tree
+        let systems = [
+            SystemSpec::MultiPlanePod { nodes: 2, gpus: 4, rails: 2 },
+            SystemSpec::FatTree { k: 4 },
+        ];
+        let secs = study(&systems, Params::default(), small_spec).unwrap();
+        assert_eq!(secs.len(), 2);
+        assert_eq!(secs[0].system, "pod-2x4x2");
+        assert_eq!(secs[1].system, "fat-tree-k4");
+        for s in &secs {
+            assert!(s.makespan > 0.0 && s.flows > 0, "{}: empty section", s.system);
+            // fabric names must stay CSV-safe (one column per field)
+            assert!(!s.system.contains(','), "{}", s.system);
+        }
+    }
+
+    #[test]
     fn section_is_deterministic() {
-        let topo = SystemKind::Dgx1.build();
+        let topo = SystemSpec::parse("dgx1").unwrap().build();
         let spec = small_spec(8);
         let a = section(&topo, &spec, Params::default()).unwrap();
         let b = section(&topo, &spec, Params::default()).unwrap();

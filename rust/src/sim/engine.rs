@@ -517,7 +517,12 @@ impl<'t> Sim<'t> {
         self.run_event_driven()
     }
 
-    fn run_event_driven(self) -> (SimResult, SimOutcome) {
+    /// The event-driven core, unconditionally (no reference-engine
+    /// dispatch). The sharded driver ([`super::sharded`]) calls this
+    /// directly from pool workers because the [`with_reference_engine`]
+    /// override is thread-local and deliberately does not propagate to
+    /// spawned threads — a shard must never silently switch cores.
+    pub(crate) fn run_event_driven(self) -> (SimResult, SimOutcome) {
         let Sim { topo, mut tasks, roots, cap_events } = self;
         let n_linkdirs = topo.links.len() * 2;
         let mut caps: Vec<f64> = (0..n_linkdirs)
@@ -530,11 +535,16 @@ impl<'t> Sim<'t> {
         let mut stats = SimStats::default();
 
         // Discrete events (activations, delays), as in the reference.
-        let mut events: BinaryHeap<HeapEntry> = BinaryHeap::new();
+        // Heap storage is reserved up front (capped) so thousand-rank
+        // DAGs batch their pushes into one allocation instead of
+        // doubling through reallocations mid-run; ordering and
+        // arithmetic are unchanged.
+        let heap_cap = tasks.len().min(1 << 20);
+        let mut events: BinaryHeap<HeapEntry> = BinaryHeap::with_capacity(heap_cap);
         let mut seq = 0u64;
 
         // Lazy completion-prediction heap (§8 item 1).
-        let mut predictions: BinaryHeap<Prediction> = BinaryHeap::new();
+        let mut predictions: BinaryHeap<Prediction> = BinaryHeap::with_capacity(heap_cap);
         let mut pred_seq = 0u64;
 
         // Flow slab + O(1)-removal active list + per-linkdir membership.

@@ -26,11 +26,22 @@
 //! - [`reference`] — the pre-rewrite O(F²·L) core, retained as a
 //!   differential-testing oracle ([`Sim::run_reference`], or route whole
 //!   comm models through it with [`engine::with_reference_engine`]).
+//!
+//! At thousand-rank scale a third driver sits *above* the engine:
+//! [`sharded`] partitions the DAG by link locality into independent
+//! components and runs each bucket of components on its own pool worker
+//! (DESIGN.md §15) — 1e-9-identical to the unsharded engine, pinned
+//! three ways by `tests/scale_differential.rs`. [`scale`] packages the
+//! deterministic scale-study cases the engine bench and the CI scale
+//! step share.
 
 pub mod engine;
 pub mod reference;
+pub mod scale;
+pub mod sharded;
 
 pub use engine::{with_reference_engine, Sim, SimOutcome, SimResult, SimStats, TaskId};
+pub use sharded::{run_sharded, ShardReport};
 
 #[cfg(test)]
 mod tests {

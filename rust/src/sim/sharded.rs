@@ -1,0 +1,393 @@
+//! Sharded driver over the event engine (DESIGN.md §15): partition the
+//! flow graph by **link locality** and fan the pieces across
+//! [`crate::util::pool`] workers.
+//!
+//! Max-min fair sharing couples two flows only when their link sets
+//! overlap (directly or transitively), and dependencies couple tasks
+//! only along DAG edges. Both relations are *local*, so the union of
+//! {task—dependent edges} ∪ {flow—link incidences} splits the simulation
+//! into connected components that provably never exchange bytes, rates
+//! or events. Each component is an independent simulation; components
+//! are bucketed round-robin into shard [`Sim`]s and every shard runs the
+//! unmodified PR-2 event engine on its own worker.
+//!
+//! - Flows whose link sets stay within one component never synchronize
+//!   with the rest of the run — they pay no cross-shard coordination at
+//!   all (there are no locks; shards share nothing but the read-only
+//!   topology).
+//! - A flow whose link set touches two components *merges* them: the
+//!   union-find closes over its incidences, so the "merged shard"
+//!   fallback of the design is simply the component the flow welds
+//!   together. Worst case (one flow crossing every link) degenerates to
+//!   a single shard — exactly the unsharded engine.
+//! - Capacity steps ride with their link's component; steps on links no
+//!   flow ever crosses are parked on shard 0 (they cannot affect any
+//!   rate).
+//!
+//! Shard bookkeeping is flat SoA arrays (union-find parent/size arena,
+//! `shard_of`/`local_id` maps) — no per-task allocation beyond the task
+//! specs themselves, which are *moved* into their shard, not cloned.
+//!
+//! **Numerical contract**: per-component arithmetic is identical to the
+//! unsharded engine, but the unsharded progressive-filling refill takes
+//! its fair-share increment as a min over *all* loaded linkdirs — across
+//! components — so low-order bits can differ whenever unrelated
+//! components are concurrently active. Results agree to 1e-9 relative
+//! (`tests/scale_differential.rs` pins sharded vs unsharded vs
+//! `sim/reference.rs` three ways); they are *not* promised bit-identical
+//! to the unsharded run. Shard *count* does not change which flows
+//! couple, only how components are bucketed.
+
+use super::engine::{Sim, SimOutcome, SimResult, SimStats, Task, TaskSpec};
+use crate::util::pool;
+
+/// Union-find over tasks + links, SoA (parent/size arenas), path
+/// halving + union by size.
+struct Uf {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl Uf {
+    fn new(n: usize) -> Uf {
+        assert!(n < u32::MAX as usize, "shard planner supports < 2^32 tasks+links");
+        Uf { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        let (big, small) = if self.size[ra as usize] >= self.size[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[small as usize] = big;
+        self.size[big as usize] += self.size[small as usize];
+    }
+}
+
+/// How the shard planner split a DAG, for reports and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardReport {
+    /// Connected components containing at least one task.
+    pub components: usize,
+    /// Shard simulations actually run (`min(requested, components)`).
+    pub shards: usize,
+    /// Task count of the largest shard — the wall-clock critical path.
+    pub largest_shard_tasks: usize,
+}
+
+/// Run a DAG sharded: partition into link-locality components, bucket
+/// them into at most `shards` shard [`Sim`]s, and execute the shards on
+/// at most `max_workers` pool workers. Merges results back into the
+/// original task numbering; see the module docs for the 1e-9 numerical
+/// contract. `stats` fields are summed across shards (counter totals are
+/// not comparable to an unsharded run of the same DAG).
+pub fn run_sharded(
+    sim: Sim<'_>,
+    shards: usize,
+    max_workers: usize,
+) -> (SimResult, SimOutcome, ShardReport) {
+    let topo = sim.topology();
+    let Sim { mut tasks, cap_events, .. } = sim;
+    let n = tasks.len();
+    let n_links = topo.links.len();
+    if n == 0 {
+        let res = SimResult {
+            finish: Vec::new(),
+            makespan: 0.0,
+            linkdir_bytes: vec![0.0; 2 * n_links],
+            flows: 0,
+            stats: SimStats::default(),
+        };
+        let report = ShardReport { components: 0, shards: 0, largest_shard_tasks: 0 };
+        return (res, SimOutcome::Completed { time: 0.0 }, report);
+    }
+
+    // 1. Union tasks along dependency edges and flow—link incidences.
+    let mut uf = Uf::new(n + n_links);
+    for (i, task) in tasks.iter().enumerate() {
+        for &d in &task.dependents {
+            uf.union(i as u32, d as u32);
+        }
+        if let TaskSpec::Flow { linkdirs, .. } = &task.spec {
+            for &ld in linkdirs {
+                uf.union(i as u32, (n + ld / 2) as u32);
+            }
+        }
+    }
+
+    // 2. Number components in first-task order (deterministic), then
+    //    bucket them round-robin into shards.
+    const UNSEEN: u32 = u32::MAX;
+    let mut comp_of_root = vec![UNSEEN; n + n_links];
+    let mut components = 0u32;
+    let mut comp_of_task = vec![0u32; n];
+    for i in 0..n {
+        let r = uf.find(i as u32) as usize;
+        if comp_of_root[r] == UNSEEN {
+            comp_of_root[r] = components;
+            components += 1;
+        }
+        comp_of_task[i] = comp_of_root[r];
+    }
+    let num_shards = shards.max(1).min(components as usize).max(1);
+    let shard_of_comp = |c: u32| (c as usize) % num_shards;
+
+    // 3. Move tasks into their shards, preserving relative order (so
+    //    event tie-breaking inside a shard matches the unsharded order
+    //    of its component), and remap dependency edges to local ids.
+    let mut local_id = vec![0u32; n];
+    let mut shard_tasks: Vec<Vec<Task>> = (0..num_shards).map(|_| Vec::new()).collect();
+    let mut global_ids: Vec<Vec<usize>> = (0..num_shards).map(|_| Vec::new()).collect();
+    for (i, task) in tasks.iter_mut().enumerate() {
+        let s = shard_of_comp(comp_of_task[i]);
+        local_id[i] = shard_tasks[s].len() as u32;
+        global_ids[s].push(i);
+        shard_tasks[s].push(Task {
+            spec: std::mem::replace(&mut task.spec, TaskSpec::Delay { secs: 0.0 }),
+            pending_deps: task.pending_deps,
+            dependents: std::mem::take(&mut task.dependents),
+            finish: None,
+        });
+    }
+    for ts in &mut shard_tasks {
+        for t in ts.iter_mut() {
+            for d in &mut t.dependents {
+                // dependents share the component, hence the shard
+                *d = local_id[*d] as usize;
+            }
+        }
+    }
+
+    // 4. Capacity steps follow their link's component; links no flow
+    //    crosses park on shard 0 (their steps cannot change any rate).
+    let mut shard_caps: Vec<Vec<super::engine::CapEvent>> =
+        (0..num_shards).map(|_| Vec::new()).collect();
+    for e in cap_events {
+        let r = uf.find((n + e.link) as u32) as usize;
+        let s = if comp_of_root[r] == UNSEEN { 0 } else { shard_of_comp(comp_of_root[r]) };
+        shard_caps[s].push(e);
+    }
+
+    let largest_shard_tasks = shard_tasks.iter().map(|t| t.len()).max().unwrap_or(0);
+
+    // 5. Fan the shards across pool workers. Each shard calls the
+    //    event-driven core *directly*: the reference-engine override is
+    //    thread-local and must not silently vanish on worker threads.
+    let jobs: Vec<_> = shard_tasks
+        .into_iter()
+        .zip(shard_caps)
+        .map(|(ts, caps)| {
+            let roots: Vec<usize> = ts
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.pending_deps == 0)
+                .map(|(i, _)| i)
+                .collect();
+            let shard_sim = Sim { topo, tasks: ts, roots, cap_events: caps };
+            move || shard_sim.run_event_driven()
+        })
+        .collect();
+    let results = pool::parallel_map_n(max_workers, jobs);
+
+    // 6. Merge. Terminal time is the instant the last shard stopped —
+    //    the same instant the unsharded loop would have run dry — and
+    //    stuck tasks report it, exactly like the unsharded stall path.
+    let mut terminal = 0.0f64;
+    let mut all_completed = true;
+    for (_, out) in &results {
+        terminal = terminal.max(out.time());
+        all_completed &= out.is_completed();
+    }
+    let mut finish = vec![0.0f64; n];
+    let mut linkdir_bytes = vec![0.0f64; 2 * n_links];
+    let mut flows = 0usize;
+    let mut stats = SimStats::default();
+    let mut stuck_tasks: Vec<usize> = Vec::new();
+    let mut starved_flows = 0usize;
+    let mut culprit_links: Vec<usize> = Vec::new();
+    for (s, (res, out)) in results.iter().enumerate() {
+        for (li, &gi) in global_ids[s].iter().enumerate() {
+            finish[gi] = res.finish[li];
+        }
+        for (acc, &b) in linkdir_bytes.iter_mut().zip(&res.linkdir_bytes) {
+            *acc += b;
+        }
+        flows += res.flows;
+        stats.events += res.stats.events;
+        stats.completions += res.stats.completions;
+        stats.full_refills += res.stats.full_refills;
+        stats.refill_flow_visits += res.stats.refill_flow_visits;
+        stats.fast_updates += res.stats.fast_updates;
+        stats.settlements += res.stats.settlements;
+        stats.heap_pushes += res.stats.heap_pushes;
+        stats.cap_events += res.stats.cap_events;
+        if let SimOutcome::Stalled {
+            stuck_tasks: st, starved_flows: sf, culprit_links: cl, ..
+        } = out
+        {
+            stuck_tasks.extend(st.iter().map(|&li| global_ids[s][li]));
+            starved_flows += sf;
+            culprit_links.extend_from_slice(cl);
+        }
+    }
+    let (outcome, makespan) = if all_completed {
+        let makespan = finish.iter().cloned().fold(0.0, f64::max);
+        (SimOutcome::Completed { time: makespan }, makespan)
+    } else {
+        stuck_tasks.sort_unstable();
+        culprit_links.sort_unstable();
+        culprit_links.dedup();
+        for &gi in &stuck_tasks {
+            finish[gi] = terminal; // unsharded semantics: stall instant
+        }
+        let makespan = finish.iter().cloned().fold(0.0, f64::max);
+        (
+            SimOutcome::Stalled {
+                time: terminal,
+                stuck_tasks: stuck_tasks.clone(),
+                starved_flows,
+                culprit_links,
+            },
+            makespan,
+        )
+    };
+    let report =
+        ShardReport { components: components as usize, shards: num_shards, largest_shard_tasks };
+    (SimResult { finish, makespan, linkdir_bytes, flows, stats }, outcome, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::systems::{cluster, dgx1};
+
+    /// Two calls of `build` produce identical DAGs; run one unsharded
+    /// and one sharded and compare under the 1e-9 contract.
+    fn compare(
+        topo: &crate::topology::Topology,
+        shards: usize,
+        workers: usize,
+        build: impl Fn(&mut Sim<'_>),
+    ) -> ShardReport {
+        let mut a = Sim::new(topo);
+        build(&mut a);
+        let (ra, oa) = a.run_outcome();
+        let mut b = Sim::new(topo);
+        build(&mut b);
+        let (rb, ob, report) = run_sharded(b, shards, workers);
+        assert_eq!(oa.is_completed(), ob.is_completed());
+        assert!((oa.time() - ob.time()).abs() <= 1e-9 * oa.time().abs().max(1.0));
+        assert_eq!(ra.finish_times().len(), rb.finish_times().len());
+        for (x, y) in ra.finish_times().iter().zip(rb.finish_times()) {
+            assert!((x - y).abs() < 1e-11 + 1e-9 * y.abs(), "finish {x} vs {y}");
+        }
+        assert_eq!(ra.flows, rb.flows);
+        for (x, y) in ra.linkdir_bytes.iter().zip(&rb.linkdir_bytes) {
+            assert!((x - y).abs() <= 1e-6 * y.abs().max(1.0), "bytes {x} vs {y}");
+        }
+        report
+    }
+
+    /// Per-node chains on the cluster star: each node's PCIe hop is its
+    /// own component (the shared IB switch links are only crossed by
+    /// that node's up-flow in this DAG).
+    fn disjoint_chains(sim: &mut Sim<'_>) {
+        let t = sim.topology();
+        for r in 0..t.num_gpus() {
+            let cpu = t.host_cpu(t.gpu(r));
+            let p = t.route(t.gpu(r), cpu).unwrap();
+            let a = sim.flow(p.clone(), 1e6 * (r + 1) as f64, 1e-6, &[]);
+            let b = sim.flow(p.clone(), 5e5, 1e-6, &[a]);
+            sim.delay(1e-6, &[b]);
+        }
+    }
+
+    #[test]
+    fn disjoint_components_agree_and_split() {
+        let topo = cluster(8);
+        for (shards, workers) in [(1, 1), (4, 2), (64, 4)] {
+            let report = compare(&topo, shards, workers, disjoint_chains);
+            assert_eq!(report.components, 8);
+            assert_eq!(report.shards, shards.min(8));
+        }
+    }
+
+    #[test]
+    fn shared_links_merge_components() {
+        let topo = dgx1();
+        let report = compare(&topo, 8, 4, |sim| {
+            let t = sim.topology();
+            // rank 0 -> 1 -> 2 chained flows share GPU1's links: one
+            // component; rank 4 -> 5 independent: a second component
+            let a = sim.flow(t.route_gpus(0, 1).unwrap(), 2e6, 0.0, &[]);
+            sim.flow(t.route_gpus(1, 2).unwrap(), 2e6, 0.0, &[a]);
+            sim.flow(t.route_gpus(1, 2).unwrap(), 1e6, 0.0, &[]); // contends
+            sim.flow(t.route_gpus(4, 5).unwrap(), 3e6, 0.0, &[]);
+        });
+        assert_eq!(report.components, 2);
+        assert_eq!(report.shards, 2);
+    }
+
+    #[test]
+    fn outage_stall_merges_diagnosis() {
+        let topo = cluster(4);
+        // node 0's PCIe uplink dies mid-flow; node 1's chain completes
+        let dead_link = {
+            let p = topo.route(topo.gpu(0), topo.host_cpu(topo.gpu(0))).unwrap();
+            p.links[0]
+        };
+        let build = |sim: &mut Sim<'_>| {
+            let t = sim.topology();
+            let p0 = t.route(t.gpu(0), t.host_cpu(t.gpu(0))).unwrap();
+            let f = sim.flow(p0, 1e9, 0.0, &[]);
+            sim.delay(1.0, &[f]); // stuck dependent
+            let p1 = t.route(t.gpu(1), t.host_cpu(t.gpu(1))).unwrap();
+            sim.flow(p1, 1e6, 0.0, &[]);
+            sim.capacity_event(dead_link, 1e-3, 0.0);
+        };
+        let mut a = Sim::new(&topo);
+        build(&mut a);
+        let (ra, oa) = a.run_outcome();
+        let mut b = Sim::new(&topo);
+        build(&mut b);
+        let (rb, ob, report) = run_sharded(b, 8, 2);
+        assert_eq!(report.components, 2);
+        let (SimOutcome::Stalled { time: ta, stuck_tasks: sa, culprit_links: ca, .. },
+             SimOutcome::Stalled { time: tb, stuck_tasks: sb, culprit_links: cb, .. }) =
+            (&oa, &ob)
+        else {
+            panic!("expected both stalled: {oa:?} vs {ob:?}");
+        };
+        assert_eq!(sa, sb);
+        assert_eq!(ca, cb);
+        assert_eq!(cb, &vec![dead_link]);
+        assert!((ta - tb).abs() <= 1e-9 * ta.abs().max(1.0));
+        for (x, y) in ra.finish_times().iter().zip(rb.finish_times()) {
+            assert!((x - y).abs() < 1e-11 + 1e-9 * y.abs());
+        }
+    }
+
+    #[test]
+    fn empty_dag_is_a_completed_noop() {
+        let topo = dgx1();
+        let sim = Sim::new(&topo);
+        let (res, out, report) = run_sharded(sim, 4, 4);
+        assert!(out.is_completed());
+        assert_eq!(res.makespan, 0.0);
+        assert_eq!(report.components, 0);
+    }
+}

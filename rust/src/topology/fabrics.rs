@@ -1,0 +1,742 @@
+//! Parametric large-scale fabrics (DESIGN.md §15): the thousand-GPU
+//! topologies production Allgatherv actually runs on, beyond the
+//! paper's three 16-GPU systems.
+//!
+//! Three canonical parametrizations:
+//! - [`fat_tree`]`(k)` — k-ary fat-tree (Al-Fares et al.): k pods of
+//!   k/2 edge + k/2 aggregation switches, (k/2)² cores, k³/4 hosts,
+//!   full bisection (per switch, uplink capacity == host capacity);
+//! - [`dragonfly`]`(a, p, h)` — canonical group/router/global-link
+//!   parametrization (Kim et al.): g = a·h + 1 groups of `a` fully
+//!   meshed routers, `p` hosts per router, `h` global ports per router,
+//!   exactly one global link between every group pair;
+//! - [`multi_plane_pod`]`(nodes, gpus_per_node, rails)` — rail-optimized
+//!   multi-plane DGX pods: NVLink full mesh inside each node, `rails`
+//!   NICs per node each wired to its own plane switch, GPU i using rail
+//!   i mod rails.
+//!
+//! Every host is the cluster idiom of [`super::systems`]: a cpu + gpu
+//! (+ nic) chain, so MPI host staging, `node_groups`, `gpu_links`,
+//! `bandwidth_ring_over` and `with_links_down` all work unchanged.
+//!
+//! At these sizes the O(V²) Dijkstra in [`super::routing`] is far too
+//! slow to call per GPU pair, so each builder attaches a [`Fabric`] —
+//! structural routing tables keyed by [`DeviceId`] (stable across
+//! [`Topology::remap_gpus`]) that assemble the canonical minimal route
+//! in O(path length). ECMP choices are determinized by the destination
+//! host index. A structural route that would cross a masked-dead link
+//! (or touch a device the tables do not know) returns `None`, and
+//! [`Topology::route`] falls back to the Dijkstra search — exactly the
+//! `with_links_down` reroute semantics of the paper systems.
+
+use std::sync::Arc;
+
+use super::routing::Path;
+use super::{DeviceId, DeviceKind, LinkClass, LinkId, Topology};
+
+// ---------------------------------------------------------------------------
+// Structural routing tables
+// ---------------------------------------------------------------------------
+
+/// Where a device sits inside a host's gpu -> cpu -> nic chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ChainPos {
+    /// The GPU at the bottom of the chain.
+    Gpu,
+    /// The host CPU in the middle.
+    Cpu,
+    /// The NIC attaching the host to its leaf switch.
+    Nic,
+}
+
+/// One host's chain and its attachment point. `c0`/`c1` are fabric
+/// coordinates: (pod, edge) on a fat-tree, (group, router) on a
+/// dragonfly.
+#[derive(Clone, Debug)]
+struct Host {
+    gpu: DeviceId,
+    cpu: DeviceId,
+    nic: DeviceId,
+    l_gpu_cpu: LinkId,
+    l_cpu_nic: LinkId,
+    l_nic_leaf: LinkId,
+    leaf: DeviceId,
+    c0: usize,
+    c1: usize,
+}
+
+impl Host {
+    /// The chain from `pos` up to (and including) the leaf switch.
+    fn chain_up(&self, pos: ChainPos) -> (Vec<DeviceId>, Vec<LinkId>) {
+        match pos {
+            ChainPos::Gpu => (
+                vec![self.gpu, self.cpu, self.nic, self.leaf],
+                vec![self.l_gpu_cpu, self.l_cpu_nic, self.l_nic_leaf],
+            ),
+            ChainPos::Cpu => {
+                (vec![self.cpu, self.nic, self.leaf], vec![self.l_cpu_nic, self.l_nic_leaf])
+            }
+            ChainPos::Nic => (vec![self.nic, self.leaf], vec![self.l_nic_leaf]),
+        }
+    }
+}
+
+/// Switch-level core of a host-chain fabric.
+#[derive(Debug)]
+enum TreeCore {
+    /// k-ary fat-tree switch stages.
+    FatTree {
+        /// k/2 — hosts per edge, edges per pod, uplinks per switch.
+        half_k: usize,
+        /// `aggs[pod][a]` — aggregation switch devices.
+        aggs: Vec<Vec<DeviceId>>,
+        /// `cores[a * half_k + c]` — core switch devices.
+        cores: Vec<DeviceId>,
+        /// `edge_agg[pod][e][a]` — link edge(pod,e) <-> agg(pod,a).
+        edge_agg: Vec<Vec<Vec<LinkId>>>,
+        /// `agg_core[pod][a][c]` — link agg(pod,a) <-> core(a·k/2+c).
+        agg_core: Vec<Vec<Vec<LinkId>>>,
+    },
+    /// Dragonfly local meshes + global links.
+    Dragonfly {
+        /// `routers[group][r]` — router devices.
+        routers: Vec<Vec<DeviceId>>,
+        /// `local[group][i][j]` — intra-group mesh link (i != j).
+        local: Vec<Vec<Vec<LinkId>>>,
+        /// `global[gi][gj]` — (link, router idx in gi, router idx in
+        /// gj) of the single global link between the groups (gi != gj).
+        global: Vec<Vec<(LinkId, usize, usize)>>,
+    },
+}
+
+impl TreeCore {
+    /// The switch segment from leaf (c0a, c1a) to leaf (c0b, c1b):
+    /// intermediate devices (exclusive of both leaves) and the links,
+    /// `links.len() == devices.len() + 1`. `dst_host` determinizes the
+    /// ECMP choice.
+    fn segment(
+        &self,
+        (c0a, c1a): (usize, usize),
+        (c0b, c1b): (usize, usize),
+        dst_host: usize,
+    ) -> (Vec<DeviceId>, Vec<LinkId>) {
+        match self {
+            TreeCore::FatTree { half_k, aggs, cores, edge_agg, agg_core } => {
+                let a = dst_host % half_k;
+                if c0a == c0b {
+                    // same pod: up to one aggregation switch and down
+                    (vec![aggs[c0a][a]], vec![edge_agg[c0a][c1a][a], edge_agg[c0a][c1b][a]])
+                } else {
+                    // cross-pod: edge -> agg -> core -> agg -> edge
+                    let c = (dst_host / half_k) % half_k;
+                    (
+                        vec![aggs[c0a][a], cores[a * half_k + c], aggs[c0b][a]],
+                        vec![
+                            edge_agg[c0a][c1a][a],
+                            agg_core[c0a][a][c],
+                            agg_core[c0b][a][c],
+                            edge_agg[c0b][c1b][a],
+                        ],
+                    )
+                }
+            }
+            TreeCore::Dragonfly { routers, local, global } => {
+                if c0a == c0b {
+                    // same group: one local mesh hop
+                    (vec![], vec![local[c0a][c1a][c1b]])
+                } else {
+                    // minimal global route: local detour to the router
+                    // owning the global link, cross, local detour down
+                    let (gl, ra, rb) = global[c0a][c0b];
+                    let mut devices = Vec::new();
+                    let mut links = Vec::new();
+                    if c1a != ra {
+                        links.push(local[c0a][c1a][ra]);
+                        devices.push(routers[c0a][ra]);
+                    }
+                    links.push(gl);
+                    if rb != c1b {
+                        devices.push(routers[c0b][rb]);
+                        links.push(local[c0b][rb][c1b]);
+                    }
+                    (devices, links)
+                }
+            }
+        }
+    }
+}
+
+/// Host-chain fabric (fat-tree or dragonfly): per-host chains plus the
+/// switch core.
+#[derive(Debug)]
+struct TreeFabric {
+    hosts: Vec<Host>,
+    /// Device -> (host index, chain position); `None` for switches.
+    host_of: Vec<Option<(usize, ChainPos)>>,
+    core: TreeCore,
+}
+
+impl TreeFabric {
+    fn route(&self, from: DeviceId, to: DeviceId) -> Option<Path> {
+        let (ha, pa) = self.host_of.get(from).copied().flatten()?;
+        let (hb, pb) = self.host_of.get(to).copied().flatten()?;
+        let (a_devs, a_links) = self.hosts[ha].chain_up(pa);
+        let (b_devs, b_links) = self.hosts[hb].chain_up(pb);
+        if self.hosts[ha].leaf == self.hosts[hb].leaf {
+            return Some(join_at_suffix(a_devs, a_links, b_devs, b_links));
+        }
+        let ca = (self.hosts[ha].c0, self.hosts[ha].c1);
+        let cb = (self.hosts[hb].c0, self.hosts[hb].c1);
+        let (mid_devs, mid_links) = self.core.segment(ca, cb, hb);
+        let mut devices = a_devs;
+        devices.extend(mid_devs);
+        devices.extend(b_devs.into_iter().rev());
+        let mut links = a_links;
+        links.extend(mid_links);
+        links.extend(b_links.into_iter().rev());
+        Some(Path { devices, links })
+    }
+}
+
+/// Join two up-chains that end at the same device by trimming their
+/// longest common suffix; the first shared device is the junction.
+fn join_at_suffix(
+    a_devs: Vec<DeviceId>,
+    a_links: Vec<LinkId>,
+    b_devs: Vec<DeviceId>,
+    b_links: Vec<LinkId>,
+) -> Path {
+    let (la, lb) = (a_devs.len(), b_devs.len());
+    let mut s = 0;
+    while s < la && s < lb && a_devs[la - 1 - s] == b_devs[lb - 1 - s] {
+        s += 1;
+    }
+    debug_assert!(s >= 1, "chains must share their leaf");
+    let mut devices: Vec<DeviceId> = a_devs[..=la - s].to_vec();
+    devices.extend(b_devs[..lb - s].iter().rev());
+    let mut links: Vec<LinkId> = a_links[..la - s].to_vec();
+    links.extend(b_links[..lb - s].iter().rev());
+    Path { devices, links }
+}
+
+/// Where a device sits inside a multi-plane pod.
+#[derive(Clone, Copy, Debug)]
+enum PodLoc {
+    /// GPU `idx` of a node.
+    Gpu { node: usize, idx: usize },
+    /// A node's CPU.
+    Cpu { node: usize },
+    /// Rail NIC `rail` of a node.
+    Nic { node: usize, rail: usize },
+}
+
+impl PodLoc {
+    fn node(self) -> usize {
+        match self {
+            PodLoc::Gpu { node, .. } | PodLoc::Cpu { node } | PodLoc::Nic { node, .. } => node,
+        }
+    }
+}
+
+/// One pod node's devices and links.
+#[derive(Debug)]
+struct PodNode {
+    cpu: DeviceId,
+    gpus: Vec<DeviceId>,
+    nics: Vec<DeviceId>,
+    l_gpu_cpu: Vec<LinkId>,
+    l_nic_cpu: Vec<LinkId>,
+    l_nic_plane: Vec<LinkId>,
+    /// NVLink full mesh: `mesh[i][j]` (i != j).
+    mesh: Vec<Vec<LinkId>>,
+}
+
+/// Rail-optimized multi-plane pod fabric.
+#[derive(Debug)]
+struct PodFabric {
+    rails: usize,
+    nodes: Vec<PodNode>,
+    planes: Vec<DeviceId>,
+    loc: Vec<Option<PodLoc>>,
+}
+
+impl PodFabric {
+    /// Chain from a device up to its node's rail-`r` NIC.
+    fn up_to_nic(&self, l: PodLoc, r: usize) -> (Vec<DeviceId>, Vec<LinkId>) {
+        let n = &self.nodes[l.node()];
+        match l {
+            PodLoc::Gpu { idx, .. } => (
+                vec![n.gpus[idx], n.cpu, n.nics[r]],
+                vec![n.l_gpu_cpu[idx], n.l_nic_cpu[r]],
+            ),
+            PodLoc::Cpu { .. } => (vec![n.cpu, n.nics[r]], vec![n.l_nic_cpu[r]]),
+            PodLoc::Nic { rail, .. } if rail == r => (vec![n.nics[r]], vec![]),
+            PodLoc::Nic { rail, .. } => (
+                vec![n.nics[rail], n.cpu, n.nics[r]],
+                vec![n.l_nic_cpu[rail], n.l_nic_cpu[r]],
+            ),
+        }
+    }
+
+    fn route(&self, from: DeviceId, to: DeviceId) -> Option<Path> {
+        let la = self.loc.get(from).copied().flatten()?;
+        let lb = self.loc.get(to).copied().flatten()?;
+        let (na, nb) = (la.node(), lb.node());
+        if na == nb {
+            let n = &self.nodes[na];
+            let (devices, links) = match (la, lb) {
+                (PodLoc::Gpu { idx: i, .. }, PodLoc::Gpu { idx: j, .. }) => {
+                    (vec![n.gpus[i], n.gpus[j]], vec![n.mesh[i][j]])
+                }
+                (PodLoc::Gpu { idx, .. }, PodLoc::Cpu { .. }) => {
+                    (vec![n.gpus[idx], n.cpu], vec![n.l_gpu_cpu[idx]])
+                }
+                (PodLoc::Cpu { .. }, PodLoc::Gpu { idx, .. }) => {
+                    (vec![n.cpu, n.gpus[idx]], vec![n.l_gpu_cpu[idx]])
+                }
+                (PodLoc::Cpu { .. }, PodLoc::Nic { rail, .. }) => {
+                    (vec![n.cpu, n.nics[rail]], vec![n.l_nic_cpu[rail]])
+                }
+                (PodLoc::Nic { rail, .. }, PodLoc::Cpu { .. }) => {
+                    (vec![n.nics[rail], n.cpu], vec![n.l_nic_cpu[rail]])
+                }
+                (PodLoc::Gpu { idx, .. }, PodLoc::Nic { rail, .. }) => (
+                    vec![n.gpus[idx], n.cpu, n.nics[rail]],
+                    vec![n.l_gpu_cpu[idx], n.l_nic_cpu[rail]],
+                ),
+                (PodLoc::Nic { rail, .. }, PodLoc::Gpu { idx, .. }) => (
+                    vec![n.nics[rail], n.cpu, n.gpus[idx]],
+                    vec![n.l_nic_cpu[rail], n.l_gpu_cpu[idx]],
+                ),
+                (PodLoc::Nic { rail: i, .. }, PodLoc::Nic { rail: j, .. }) => (
+                    vec![n.nics[i], n.cpu, n.nics[j]],
+                    vec![n.l_nic_cpu[i], n.l_nic_cpu[j]],
+                ),
+                (PodLoc::Cpu { .. }, PodLoc::Cpu { .. }) => return None, // from == to
+            };
+            return Some(Path { devices, links });
+        }
+        // Cross-node: pick the rail (source GPU's rail, else the
+        // destination GPU's, else a destination-node hash).
+        let r = match (la, lb) {
+            (PodLoc::Gpu { idx, .. }, _) => idx % self.rails,
+            (_, PodLoc::Gpu { idx, .. }) => idx % self.rails,
+            _ => nb % self.rails,
+        };
+        let (mut devices, mut links) = self.up_to_nic(la, r);
+        let (down_devs, down_links) = self.up_to_nic(lb, r);
+        links.push(self.nodes[na].l_nic_plane[r]);
+        devices.push(self.planes[r]);
+        links.push(self.nodes[nb].l_nic_plane[r]);
+        devices.extend(down_devs.into_iter().rev());
+        links.extend(down_links.into_iter().rev());
+        Some(Path { devices, links })
+    }
+}
+
+/// Structural routing tables a parametric fabric attaches to its
+/// [`Topology`]. [`Topology::route`] consults this first and falls back
+/// to the Dijkstra search when the answer is `None`.
+#[derive(Debug)]
+pub(crate) enum Fabric {
+    /// Host-chain fabric (fat-tree or dragonfly).
+    Tree(TreeFabric),
+    /// Rail-optimized multi-plane pod.
+    Pod(PodFabric),
+}
+
+impl Fabric {
+    /// The canonical minimal route, or `None` when an endpoint is
+    /// outside the tables, `from == to`, or the route would cross a
+    /// dead link (the caller then falls back to Dijkstra).
+    pub(crate) fn try_route(
+        &self,
+        topo: &Topology,
+        from: DeviceId,
+        to: DeviceId,
+    ) -> Option<Path> {
+        if from == to {
+            return None;
+        }
+        let path = match self {
+            Fabric::Tree(t) => t.route(from, to)?,
+            Fabric::Pod(p) => p.route(from, to)?,
+        };
+        if path.links.iter().any(|&l| !topo.link_alive(l)) {
+            return None;
+        }
+        Some(path)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builders
+// ---------------------------------------------------------------------------
+
+/// Add one cpu + gpu + nic host chained to `leaf`, returning its
+/// [`Host`] record. Mirrors the paper cluster's per-node idiom.
+fn add_host(
+    t: &mut Topology,
+    rank: usize,
+    node: usize,
+    prefix: &str,
+    leaf: DeviceId,
+    (c0, c1): (usize, usize),
+) -> Host {
+    let cpu = t.add_device(DeviceKind::Cpu { socket: 0 }, node, format!("{prefix}.cpu"));
+    let gpu = t.add_device(DeviceKind::Gpu { rank }, node, format!("{prefix}.gpu"));
+    let nic = t.add_device(DeviceKind::Nic, node, format!("{prefix}.hca"));
+    let l_gpu_cpu = t.add_link(gpu, cpu, LinkClass::PcieGen3x16);
+    let l_cpu_nic = t.add_link(cpu, nic, LinkClass::PcieGen3x16);
+    let l_nic_leaf = t.add_link(nic, leaf, LinkClass::InfinibandFdr);
+    Host { gpu, cpu, nic, l_gpu_cpu, l_cpu_nic, l_nic_leaf, leaf, c0, c1 }
+}
+
+/// Record a host's three chain devices in the device->host map.
+fn index_host(host_of: &mut Vec<Option<(usize, ChainPos)>>, h: usize, host: &Host) {
+    let max = host.gpu.max(host.cpu).max(host.nic);
+    if host_of.len() <= max {
+        host_of.resize(max + 1, None);
+    }
+    host_of[host.gpu] = Some((h, ChainPos::Gpu));
+    host_of[host.cpu] = Some((h, ChainPos::Cpu));
+    host_of[host.nic] = Some((h, ChainPos::Nic));
+}
+
+/// k-ary fat-tree (k even, k >= 2): k pods × (k/2 edge + k/2 agg)
+/// switches, (k/2)² cores, k/2 hosts per edge — k³/4 single-GPU hosts
+/// with full bisection bandwidth (every switch stage has equal up- and
+/// down-capacity). Host ranks are dense in (pod, edge, slot) order;
+/// every host is its own node.
+pub fn fat_tree(k: usize) -> Topology {
+    assert!(k >= 2 && k % 2 == 0, "fat-tree arity must be even and >= 2, got {k}");
+    let half = k / 2;
+    let mut t = Topology::new(format!("fat-tree-k{k}"));
+    let cores: Vec<DeviceId> = (0..half * half)
+        .map(|c| t.add_device(DeviceKind::IbSwitch, usize::MAX, format!("core{c}")))
+        .collect();
+    let mut hosts = Vec::with_capacity(k * half * half);
+    let mut host_of: Vec<Option<(usize, ChainPos)>> = Vec::new();
+    let mut aggs = Vec::with_capacity(k);
+    let mut edge_agg = Vec::with_capacity(k);
+    let mut agg_core = Vec::with_capacity(k);
+    for pod in 0..k {
+        let edges: Vec<DeviceId> = (0..half)
+            .map(|e| t.add_device(DeviceKind::IbSwitch, usize::MAX, format!("p{pod}.edge{e}")))
+            .collect();
+        let pod_aggs: Vec<DeviceId> = (0..half)
+            .map(|a| t.add_device(DeviceKind::IbSwitch, usize::MAX, format!("p{pod}.agg{a}")))
+            .collect();
+        for (e, &edge) in edges.iter().enumerate() {
+            for slot in 0..half {
+                let rank = hosts.len();
+                let node = rank;
+                let prefix = format!("p{pod}.e{e}.h{slot}");
+                let host = add_host(&mut t, rank, node, &prefix, edge, (pod, e));
+                index_host(&mut host_of, rank, &host);
+                hosts.push(host);
+            }
+        }
+        let ea: Vec<Vec<LinkId>> = edges
+            .iter()
+            .map(|&edge| {
+                pod_aggs
+                    .iter()
+                    .map(|&agg| t.add_link(edge, agg, LinkClass::InfinibandFdr))
+                    .collect()
+            })
+            .collect();
+        let ac: Vec<Vec<LinkId>> = pod_aggs
+            .iter()
+            .enumerate()
+            .map(|(a, &agg)| {
+                (0..half)
+                    .map(|c| t.add_link(agg, cores[a * half + c], LinkClass::InfinibandFdr))
+                    .collect()
+            })
+            .collect();
+        aggs.push(pod_aggs);
+        edge_agg.push(ea);
+        agg_core.push(ac);
+    }
+    host_of.resize(t.devices.len(), None);
+    t.fabric = Some(Arc::new(Fabric::Tree(TreeFabric {
+        hosts,
+        host_of,
+        core: TreeCore::FatTree { half_k: half, aggs, cores, edge_agg, agg_core },
+    })));
+    t
+}
+
+/// Canonical dragonfly (a routers/group, p hosts/router, h global
+/// ports/router): g = a·h + 1 groups, routers fully meshed within a
+/// group, exactly one global link between every group pair (absolute
+/// arrangement: offset o = gj − gi is served by router (o−1)/h on the
+/// source side). g·a·p single-GPU hosts, ranks dense in (group, router,
+/// slot) order; every host is its own node.
+pub fn dragonfly(a: usize, p: usize, h: usize) -> Topology {
+    assert!(a >= 1, "dragonfly needs at least one router per group");
+    assert!(p >= 1, "dragonfly needs at least one host per router");
+    assert!(h >= 1, "dragonfly needs at least one global port per router");
+    let g = a * h + 1;
+    let mut t = Topology::new(format!("dragonfly-{a}x{p}x{h}"));
+    let mut routers = Vec::with_capacity(g);
+    let mut local = Vec::with_capacity(g);
+    let mut hosts = Vec::new();
+    let mut host_of: Vec<Option<(usize, ChainPos)>> = Vec::new();
+    for gi in 0..g {
+        let rs: Vec<DeviceId> = (0..a)
+            .map(|r| t.add_device(DeviceKind::IbSwitch, usize::MAX, format!("g{gi}.r{r}")))
+            .collect();
+        for (r, &router) in rs.iter().enumerate() {
+            for slot in 0..p {
+                let rank = hosts.len();
+                let prefix = format!("g{gi}.r{r}.h{slot}");
+                let host = add_host(&mut t, rank, rank, &prefix, router, (gi, r));
+                index_host(&mut host_of, rank, &host);
+                hosts.push(host);
+            }
+        }
+        // intra-group full mesh
+        let mut mesh = vec![vec![0 as LinkId; a]; a];
+        for i in 0..a {
+            for j in (i + 1)..a {
+                let l = t.add_link(rs[i], rs[j], LinkClass::InfinibandFdr);
+                mesh[i][j] = l;
+                mesh[j][i] = l;
+            }
+        }
+        routers.push(rs);
+        local.push(mesh);
+    }
+    // global links: one per group pair, absolute arrangement
+    let mut global = vec![vec![(0 as LinkId, 0usize, 0usize); g]; g];
+    for gi in 0..g {
+        for gj in (gi + 1)..g {
+            let o = gj - gi; // offset 1..=a*h
+            let ri = (o - 1) / h;
+            let rj = (g - o - 1) / h; // gi as seen from gj: offset g - o
+            let l = t.add_link(routers[gi][ri], routers[gj][rj], LinkClass::InfinibandFdr);
+            global[gi][gj] = (l, ri, rj);
+            global[gj][gi] = (l, rj, ri);
+        }
+    }
+    host_of.resize(t.devices.len(), None);
+    t.fabric = Some(Arc::new(Fabric::Tree(TreeFabric {
+        hosts,
+        host_of,
+        core: TreeCore::Dragonfly { routers, local, global },
+    })));
+    t
+}
+
+/// Rail-optimized multi-plane DGX pod: `nodes` hosts of
+/// `gpus_per_node` GPUs in an NVLink full mesh (each on PCIe to the
+/// node CPU), `rails` NICs per node, NIC r wired to plane switch r.
+/// Inter-node traffic from GPU i rides rail i mod rails, so
+/// same-rail GPUs never contend with other rails' planes. Ranks are
+/// dense in (node, gpu) order.
+pub fn multi_plane_pod(nodes: usize, gpus_per_node: usize, rails: usize) -> Topology {
+    assert!(nodes >= 1, "pod needs at least one node");
+    assert!(gpus_per_node >= 1, "pod needs at least one GPU per node");
+    assert!(rails >= 1, "pod needs at least one rail");
+    let mut t = Topology::new(format!("pod-{nodes}x{gpus_per_node}x{rails}"));
+    let planes: Vec<DeviceId> = (0..rails)
+        .map(|r| t.add_device(DeviceKind::IbSwitch, usize::MAX, format!("plane{r}")))
+        .collect();
+    let mut pod_nodes = Vec::with_capacity(nodes);
+    let mut loc: Vec<Option<PodLoc>> = vec![None; rails];
+    for node in 0..nodes {
+        let cpu = t.add_device(DeviceKind::Cpu { socket: 0 }, node, format!("n{node}.cpu"));
+        let gpus: Vec<DeviceId> = (0..gpus_per_node)
+            .map(|i| {
+                t.add_device(
+                    DeviceKind::Gpu { rank: node * gpus_per_node + i },
+                    node,
+                    format!("n{node}.gpu{i}"),
+                )
+            })
+            .collect();
+        let nics: Vec<DeviceId> = (0..rails)
+            .map(|r| t.add_device(DeviceKind::Nic, node, format!("n{node}.hca{r}")))
+            .collect();
+        let l_gpu_cpu: Vec<LinkId> =
+            gpus.iter().map(|&g| t.add_link(g, cpu, LinkClass::PcieGen3x16)).collect();
+        let l_nic_cpu: Vec<LinkId> =
+            nics.iter().map(|&n| t.add_link(cpu, n, LinkClass::PcieGen3x16)).collect();
+        let l_nic_plane: Vec<LinkId> = nics
+            .iter()
+            .zip(&planes)
+            .map(|(&n, &pl)| t.add_link(n, pl, LinkClass::InfinibandFdr))
+            .collect();
+        let mut mesh = vec![vec![0 as LinkId; gpus_per_node]; gpus_per_node];
+        for i in 0..gpus_per_node {
+            for j in (i + 1)..gpus_per_node {
+                let l = t.add_link(gpus[i], gpus[j], LinkClass::NvLink);
+                mesh[i][j] = l;
+                mesh[j][i] = l;
+            }
+        }
+        loc.resize(t.devices.len(), None);
+        loc[cpu] = Some(PodLoc::Cpu { node });
+        for (i, &gd) in gpus.iter().enumerate() {
+            loc[gd] = Some(PodLoc::Gpu { node, idx: i });
+        }
+        for (r, &nd) in nics.iter().enumerate() {
+            loc[nd] = Some(PodLoc::Nic { node, rail: r });
+        }
+        pod_nodes.push(PodNode { cpu, gpus, nics, l_gpu_cpu, l_nic_cpu, l_nic_plane, mesh });
+    }
+    loc.resize(t.devices.len(), None);
+    t.fabric = Some(Arc::new(Fabric::Pod(PodFabric { rails, nodes: pod_nodes, planes, loc })));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::routing::widest_shortest_path;
+    use crate::topology::systems::node_groups;
+
+    /// Every (devices, links) pair is consistent and every link is a
+    /// real edge between its neighbors.
+    fn assert_valid_path(t: &Topology, p: &Path) {
+        assert_eq!(p.links.len() + 1, p.devices.len());
+        for (i, &l) in p.links.iter().enumerate() {
+            let (a, b) = (p.devices[i], p.devices[i + 1]);
+            let link = &t.links[l];
+            assert!(
+                (link.a == a && link.b == b) || (link.a == b && link.b == a),
+                "link {l} does not join devices {a} and {b}"
+            );
+            assert!(t.link_alive(l));
+        }
+        // no device revisited
+        let mut seen = p.devices.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), p.devices.len(), "path revisits a device: {p:?}");
+    }
+
+    /// Structural routes must match Dijkstra on (bottleneck bw, hops) —
+    /// the widest-shortest criterion — for every GPU pair.
+    fn assert_matches_dijkstra(t: &Topology) {
+        for a in 0..t.num_gpus() {
+            for b in 0..t.num_gpus() {
+                if a == b {
+                    continue;
+                }
+                let fast = t.route_gpus(a, b).expect("structural route");
+                assert_valid_path(t, &fast);
+                let slow = widest_shortest_path(t, t.gpu(a), t.gpu(b)).expect("dijkstra");
+                assert_eq!(
+                    t.path_bandwidth(&fast).to_bits(),
+                    t.path_bandwidth(&slow).to_bits(),
+                    "{}: {a}->{b} bandwidth mismatch",
+                    t.name
+                );
+                assert_eq!(fast.hops(), slow.hops(), "{}: {a}->{b} hop mismatch", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_counts_and_routes() {
+        let t = fat_tree(4);
+        assert_eq!(t.num_gpus(), 16); // k^3/4
+        assert_matches_dijkstra(&t);
+        // host chains work: staging endpoints + per-host node groups
+        assert!(t.try_host_cpu(t.gpu(0)).is_some());
+        assert_eq!(node_groups(&t, 16).len(), 16);
+    }
+
+    #[test]
+    fn fat_tree_k2_degenerate() {
+        let t = fat_tree(2);
+        assert_eq!(t.num_gpus(), 2);
+        assert_matches_dijkstra(&t);
+    }
+
+    #[test]
+    fn dragonfly_counts_and_routes() {
+        let t = dragonfly(2, 2, 2);
+        assert_eq!(t.num_gpus(), (2 * 2 + 1) * 2 * 2); // g*a*p = 20
+        assert_matches_dijkstra(&t);
+    }
+
+    #[test]
+    fn dragonfly_minimal_degenerate() {
+        let t = dragonfly(1, 1, 1);
+        assert_eq!(t.num_gpus(), 2);
+        assert_matches_dijkstra(&t);
+    }
+
+    #[test]
+    fn pod_counts_and_routes() {
+        let t = multi_plane_pod(3, 4, 2);
+        assert_eq!(t.num_gpus(), 12);
+        assert_matches_dijkstra(&t);
+        // node grouping: gpus_per_node members per node
+        let g = node_groups(&t, 12);
+        assert_eq!(g.len(), 3);
+        assert!(g.iter().all(|m| m.len() == 4));
+        // intra-node pairs ride the NVLink mesh directly
+        assert!(t.nvlink_direct(0, 3));
+        let p = t.route_gpus(0, 3).unwrap();
+        assert_eq!(p.hops(), 1);
+        // rails split inter-node traffic: gpu0 (rail 0) and gpu1
+        // (rail 1) reach node 1 over disjoint planes
+        let p0 = t.route_gpus(0, 4).unwrap();
+        let p1 = t.route_gpus(1, 4).unwrap();
+        let ib0: Vec<_> =
+            p0.links.iter().filter(|&&l| t.links[l].class == LinkClass::InfinibandFdr).collect();
+        let ib1: Vec<_> =
+            p1.links.iter().filter(|&&l| t.links[l].class == LinkClass::InfinibandFdr).collect();
+        assert!(ib0.iter().all(|l| !ib1.contains(l)), "rails share an IB link");
+    }
+
+    #[test]
+    fn dead_structural_link_falls_back_to_dijkstra() {
+        let t = fat_tree(4);
+        let p = t.route_gpus(0, 15).unwrap();
+        // kill the first switch-level hop of the structural route
+        let dead = *p.links.iter().find(|&&l| {
+            t.links[l].class == LinkClass::InfinibandFdr
+                && t.devices[t.links[l].a].node == usize::MAX
+        }).unwrap();
+        let masked = t.with_links_down(&[dead]);
+        let rerouted = masked.route_gpus(0, 15).expect("fat-tree has path diversity");
+        assert!(rerouted.links.iter().all(|&l| masked.link_alive(l)));
+        assert_valid_path(&masked, &rerouted);
+    }
+
+    #[test]
+    fn remap_keeps_structural_routing_consistent() {
+        let t = multi_plane_pod(2, 2, 1);
+        let perm = vec![3, 2, 1, 0];
+        let t2 = t.remap_gpus(&perm);
+        // new rank 0 is old rank 3 (node 1); new rank 3 is old rank 0
+        let p = t2.route_gpus(0, 3).unwrap();
+        assert_eq!(p.devices[0], t.gpu(3));
+        assert_eq!(*p.devices.last().unwrap(), t.gpu(0));
+        assert_valid_path(&t2, &p);
+    }
+
+    #[test]
+    fn gpu_links_entries_are_incident() {
+        for t in [fat_tree(4), dragonfly(2, 1, 1), multi_plane_pod(2, 3, 2)] {
+            for r in 0..t.num_gpus() {
+                for l in t.gpu_links(r) {
+                    let link = &t.links[l];
+                    assert!(link.a == t.gpu(r) || link.b == t.gpu(r), "{} rank {r}", t.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even")]
+    fn odd_arity_rejected() {
+        let _ = fat_tree(5);
+    }
+}

@@ -14,9 +14,11 @@
 //!   paper's explanation of NCCL's DGX-1 advantage — §II-B)
 //! - which links are NVLink, so NCCL's ring search can prefer them?
 
+pub mod fabrics;
 pub mod routing;
 pub mod systems;
 
+pub use fabrics::{dragonfly, fat_tree, multi_plane_pod};
 pub use routing::Path;
 
 /// Index of a device in [`Topology::devices`].
@@ -127,6 +129,12 @@ pub struct Topology {
     /// Empty set on every constructed system; only
     /// [`Topology::with_links_down`] sets flags.
     dead: Vec<bool>,
+    /// Structural routing tables for parametric fabrics (DESIGN.md
+    /// §15). `None` on the hand-built paper systems; the [`fabrics`]
+    /// builders attach one so [`Topology::route`] stays O(path length)
+    /// at thousands of endpoints. Shared via `Arc` so masked clones
+    /// ([`Topology::with_links_down`]) stay cheap.
+    fabric: Option<std::sync::Arc<fabrics::Fabric>>,
 }
 
 impl Topology {
@@ -139,6 +147,7 @@ impl Topology {
             adj: Vec::new(),
             gpus: Vec::new(),
             dead: Vec::new(),
+            fabric: None,
         }
     }
 
@@ -342,6 +351,16 @@ impl Topology {
     /// minimize hop count (a "widest-shortest" path, which is how both
     /// NVLink-first and PCIe-fallback routing behave in practice).
     pub fn route(&self, from: DeviceId, to: DeviceId) -> Option<Path> {
+        // Parametric fabrics carry structural tables that assemble the
+        // canonical minimal route in O(path length); a miss (dead link
+        // on the canonical route, endpoint outside the tables) falls
+        // back to the Dijkstra search below, preserving the masked-
+        // fabric reroute semantics.
+        if let Some(f) = &self.fabric {
+            if let Some(p) = f.try_route(self, from, to) {
+                return Some(p);
+            }
+        }
         routing::widest_shortest_path(self, from, to)
     }
 

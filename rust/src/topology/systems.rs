@@ -9,7 +9,9 @@
 //!   pair); pairs hang off shared PCIe switches (4 GPUs per switch),
 //!   two switches per socket, QPI between sockets.
 
+use super::fabrics::{dragonfly, fat_tree, multi_plane_pod};
 use super::{DeviceKind, LinkClass, Topology};
+use crate::util::error::{Error, Result};
 
 /// Which of the paper's systems to build (plus GPU-count slicing as in
 /// the experiments: the paper runs 2/8/16 GPUs where the system allows).
@@ -64,6 +66,196 @@ impl SystemKind {
     /// All three systems, in the paper's plotting order.
     pub fn all() -> [SystemKind; 3] {
         [SystemKind::Cluster, SystemKind::Dgx1, SystemKind::CsStorm]
+    }
+}
+
+/// A parsed `--system` argument: one of the paper's hand-built systems
+/// or a parametric large-scale fabric (DESIGN.md §15), e.g.
+/// `fat-tree:k=16`, `dragonfly:a=8,p=4,h=4`,
+/// `multi-plane-pod:nodes=64,gpus=8,rails=4`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemSpec {
+    /// One of the paper's three 16-GPU systems.
+    Paper(SystemKind),
+    /// k-ary fat-tree, `fat-tree:k=<even>` — k³/4 hosts.
+    FatTree {
+        /// Switch arity (even, >= 2).
+        k: usize,
+    },
+    /// Canonical dragonfly, `dragonfly:a=<n>,p=<n>,h=<n>` —
+    /// (a·h+1)·a·p hosts.
+    Dragonfly {
+        /// Routers per group.
+        a: usize,
+        /// Hosts per router.
+        p: usize,
+        /// Global ports per router.
+        h: usize,
+    },
+    /// Rail-optimized multi-plane pod,
+    /// `multi-plane-pod:nodes=<n>,gpus=<n>,rails=<n>` (alias `pod:`).
+    MultiPlanePod {
+        /// Number of DGX-class nodes.
+        nodes: usize,
+        /// GPUs per node (NVLink full mesh).
+        gpus: usize,
+        /// NICs/planes per node.
+        rails: usize,
+    },
+}
+
+/// Parse `key=value` fields in `keys` order; every key required exactly
+/// once, nothing else accepted.
+fn parse_fields(family: &str, params: &str, keys: &[&str]) -> Result<Vec<usize>> {
+    let mut vals: Vec<Option<usize>> = vec![None; keys.len()];
+    for part in params.split(',') {
+        let (k, v) = part.split_once('=').ok_or_else(|| {
+            Error::msg(format!(
+                "malformed field '{part}' in --system {family} spec (expected key=value)"
+            ))
+        })?;
+        let (k, v) = (k.trim(), v.trim());
+        let idx = keys.iter().position(|&n| n == k).ok_or_else(|| {
+            Error::msg(format!(
+                "unknown field '{k}' for --system {family} (accepted: {})",
+                keys.join(", ")
+            ))
+        })?;
+        let n: usize = v.parse().map_err(|_| {
+            Error::msg(format!("field '{k}' must be a non-negative integer, got '{v}'"))
+        })?;
+        if vals[idx].replace(n).is_some() {
+            return Err(Error::msg(format!("duplicate field '{k}' in --system {family} spec")));
+        }
+    }
+    keys.iter()
+        .zip(&vals)
+        .map(|(k, v)| {
+            v.ok_or_else(|| Error::msg(format!("--system {family} spec is missing '{k}='")))
+        })
+        .collect()
+}
+
+impl SystemSpec {
+    /// The accepted `--system` grammar, for error hints and `agv topo
+    /// --list`.
+    pub fn grammar() -> &'static str {
+        "cluster | dgx1 | cs-storm | fat-tree:k=<even> | \
+         dragonfly:a=<n>,p=<n>,h=<n> | multi-plane-pod:nodes=<n>,gpus=<n>,rails=<n>"
+    }
+
+    /// Parse a `--system` argument. Plain names resolve to the paper
+    /// systems; `family:key=value,...` specs resolve to parametric
+    /// fabrics. Every rejection names the offending field and shows a
+    /// valid example.
+    pub fn parse(s: &str) -> Result<SystemSpec> {
+        let s = s.trim();
+        let Some((family, params)) = s.split_once(':') else {
+            if let Some(k) = SystemKind::parse(s) {
+                return Ok(SystemSpec::Paper(k));
+            }
+            return Err(Error::msg(format!(
+                "unknown system '{s}' (accepted: {})",
+                SystemSpec::grammar()
+            )));
+        };
+        match family.trim().to_ascii_lowercase().as_str() {
+            "fat-tree" | "fattree" | "ft" => {
+                let v = parse_fields("fat-tree", params, &["k"])?;
+                let k = v[0];
+                if k < 2 || k % 2 != 0 {
+                    return Err(Error::msg(format!(
+                        "fat-tree arity must be even and >= 2, got k={k} \
+                         (try --system fat-tree:k=16)"
+                    )));
+                }
+                Ok(SystemSpec::FatTree { k })
+            }
+            "dragonfly" | "dfly" => {
+                let v = parse_fields("dragonfly", params, &["a", "p", "h"])?;
+                let (a, p, h) = (v[0], v[1], v[2]);
+                if a == 0 {
+                    return Err(Error::msg(
+                        "dragonfly needs at least one router per group (a >= 1)",
+                    ));
+                }
+                if p == 0 {
+                    return Err(Error::msg(
+                        "dragonfly needs at least one host per router (p >= 1)",
+                    ));
+                }
+                if h == 0 {
+                    return Err(Error::msg(
+                        "h=0 leaves dragonfly groups disconnected; use h >= 1",
+                    ));
+                }
+                Ok(SystemSpec::Dragonfly { a, p, h })
+            }
+            "multi-plane-pod" | "pod" => {
+                let v = parse_fields("multi-plane-pod", params, &["nodes", "gpus", "rails"])?;
+                let (nodes, gpus, rails) = (v[0], v[1], v[2]);
+                if nodes == 0 {
+                    return Err(Error::msg("pod needs at least one node (nodes >= 1)"));
+                }
+                if gpus == 0 {
+                    return Err(Error::msg("pod needs at least one GPU per node (gpus >= 1)"));
+                }
+                if rails == 0 {
+                    return Err(Error::msg(
+                        "zero rails leaves pod nodes unreachable; use rails >= 1",
+                    ));
+                }
+                Ok(SystemSpec::MultiPlanePod { nodes, gpus, rails })
+            }
+            other => Err(Error::msg(format!(
+                "unknown system family '{other}' (accepted: {})",
+                SystemSpec::grammar()
+            ))),
+        }
+    }
+
+    /// Report/CSV-safe name (no commas), matching the built topology's
+    /// `name`: e.g. "fat-tree-k16", "dragonfly-8x4x4", "pod-64x8x4".
+    pub fn name(self) -> String {
+        match self {
+            SystemSpec::Paper(k) => k.name().to_string(),
+            SystemSpec::FatTree { k } => format!("fat-tree-k{k}"),
+            SystemSpec::Dragonfly { a, p, h } => format!("dragonfly-{a}x{p}x{h}"),
+            SystemSpec::MultiPlanePod { nodes, gpus, rails } => {
+                format!("pod-{nodes}x{gpus}x{rails}")
+            }
+        }
+    }
+
+    /// Total GPU endpoints of the built system.
+    pub fn max_gpus(self) -> usize {
+        match self {
+            SystemSpec::Paper(k) => k.max_gpus(),
+            SystemSpec::FatTree { k } => k * k * k / 4,
+            SystemSpec::Dragonfly { a, p, h } => (a * h + 1) * a * p,
+            SystemSpec::MultiPlanePod { nodes, gpus, .. } => nodes * gpus,
+        }
+    }
+
+    /// Construct the topology.
+    pub fn build(self) -> Topology {
+        match self {
+            SystemSpec::Paper(k) => k.build(),
+            SystemSpec::FatTree { k } => fat_tree(k),
+            SystemSpec::Dragonfly { a, p, h } => dragonfly(a, p, h),
+            SystemSpec::MultiPlanePod { nodes, gpus, rails } => {
+                multi_plane_pod(nodes, gpus, rails)
+            }
+        }
+    }
+
+    /// The paper's three systems as specs, in plotting order.
+    pub fn paper_all() -> [SystemSpec; 3] {
+        [
+            SystemSpec::Paper(SystemKind::Cluster),
+            SystemSpec::Paper(SystemKind::Dgx1),
+            SystemSpec::Paper(SystemKind::CsStorm),
+        ]
     }
 }
 
@@ -387,6 +579,69 @@ mod tests {
         }
         assert_eq!(SystemKind::parse("DGX-1"), Some(SystemKind::Dgx1));
         assert_eq!(SystemKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn system_spec_accepts_canonical_forms() {
+        for (s, gpus) in [
+            ("cluster", 16),
+            ("dgx1", 8),
+            ("cs-storm", 16),
+            ("fat-tree:k=4", 16),
+            ("FAT-TREE:k=4", 16),
+            ("ft:k=2", 2),
+            ("dragonfly:a=2,p=2,h=2", 20),
+            ("dragonfly:h=2,a=2,p=2", 20), // field order is free
+            ("pod:nodes=3,gpus=4,rails=2", 12),
+            ("multi-plane-pod:nodes=2,gpus=8,rails=4", 16),
+        ] {
+            let spec = SystemSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e:#}"));
+            assert_eq!(spec.max_gpus(), gpus, "{s}");
+            let t = spec.build();
+            assert_eq!(t.num_gpus(), gpus, "{s}");
+            assert_eq!(t.name, spec.name(), "{s}");
+            assert!(!spec.name().contains(','), "CSV-unsafe name for {s}");
+        }
+    }
+
+    #[test]
+    fn system_spec_rejection_matrix() {
+        // (spec, fragment the hint must contain)
+        for (s, hint) in [
+            ("fat-tree:k=5", "even"),
+            ("fat-tree:k=0", "even"),
+            ("fat-tree:k=-4", "integer"),
+            ("fat-tree:k=4,k=4", "duplicate"),
+            ("fat-tree:", "expected key=value"),
+            ("fat-tree:arity=4", "unknown field"),
+            ("dragonfly:a=2,p=2", "missing 'h='"),
+            ("dragonfly:a=0,p=1,h=1", "router per group"),
+            ("dragonfly:a=1,p=0,h=1", "host per router"),
+            ("dragonfly:a=1,p=1,h=0", "disconnected"),
+            ("pod:nodes=0,gpus=8,rails=1", "at least one node"),
+            ("pod:nodes=2,gpus=0,rails=1", "GPU per node"),
+            ("pod:nodes=2,gpus=8,rails=0", "zero rails"),
+            ("torus:k=4", "unknown system family"),
+            ("nope", "unknown system"),
+        ] {
+            let err = SystemSpec::parse(s).expect_err(s);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(hint), "{s}: hint '{hint}' not in '{msg}'");
+        }
+    }
+
+    #[test]
+    fn fabric_node_groups_feed_hierarchical_schedules() {
+        // pod: gpus-per-node groups, leaders at node boundaries
+        let t = SystemSpec::parse("pod:nodes=4,gpus=4,rails=2").unwrap().build();
+        let g = node_groups(&t, 16);
+        assert_eq!(g.len(), 4);
+        for (n, members) in g.iter().enumerate() {
+            assert_eq!(members, &(4 * n..4 * n + 4).collect::<Vec<_>>());
+        }
+        // fat-tree / dragonfly: one single-GPU host per node
+        let ft = SystemSpec::parse("fat-tree:k=4").unwrap().build();
+        assert_eq!(node_groups(&ft, 16).len(), 16);
     }
 
     #[test]

@@ -40,9 +40,23 @@ where
     T: Send,
     F: FnOnce() -> T + Send,
 {
+    parallel_map_n(usize::MAX, jobs)
+}
+
+/// [`parallel_map`] with an explicit worker ceiling: at most
+/// `max_workers` scoped threads (still capped by available parallelism
+/// and the job count). The sharded event engine uses this to fan shard
+/// runs across a *chosen* number of workers — its speedup curve in
+/// `BENCH_engine.json` sweeps this knob — and `max_workers = 1` is the
+/// deterministic inline path.
+pub fn parallel_map_n<T, F>(max_workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
     let n = jobs.len();
     // zero/one job or a single-core box: run inline, no threads
-    let workers = worker_count(n);
+    let workers = worker_count(n).min(max_workers.max(1));
     if n <= 1 || workers == 1 {
         return jobs.into_iter().map(|j| j()).collect();
     }
@@ -117,6 +131,19 @@ mod tests {
         let empty: Vec<fn() -> u8> = Vec::new();
         assert!(parallel_map(empty).is_empty());
         assert_eq!(parallel_map(vec![|| 7u8]), vec![7]);
+    }
+
+    #[test]
+    fn bounded_worker_override() {
+        // max_workers = 1 runs inline and in order; a mid-size ceiling
+        // still returns results in job order
+        for cap in [1usize, 2, 3] {
+            let jobs: Vec<_> = (0..25usize).map(|i| move || i * 2).collect();
+            let out = parallel_map_n(cap, jobs);
+            assert_eq!(out, (0..25usize).map(|i| i * 2).collect::<Vec<_>>());
+        }
+        // max_workers = 0 is treated as 1, not a panic
+        assert_eq!(parallel_map_n(0, vec![|| 5u8]), vec![5]);
     }
 
     #[test]

@@ -118,6 +118,52 @@ pub mod counts {
     }
 }
 
+/// Random small fabric specs for the topology property tests: sizes
+/// stay modest (a few hundred devices at most) so each proptest case
+/// builds and routes in microseconds, while still sweeping every
+/// parameter the builders branch on. Deterministic in the seeded
+/// [`Rng`].
+pub mod fabrics {
+    use crate::topology::systems::SystemSpec;
+    use crate::util::prng::Rng;
+
+    /// Random even fat-tree arity: k ∈ {2, 4, 6, 8}.
+    pub fn fat_tree_spec(rng: &mut Rng) -> SystemSpec {
+        SystemSpec::FatTree { k: 2 * (1 + rng.gen_range(4) as usize) }
+    }
+
+    /// Random dragonfly: a ∈ 1..=4 routers/group, p ∈ 1..=3 hosts/router,
+    /// h ∈ 1..=3 global links/router (so 2..=234 hosts).
+    pub fn dragonfly_spec(rng: &mut Rng) -> SystemSpec {
+        SystemSpec::Dragonfly {
+            a: 1 + rng.gen_range(4) as usize,
+            p: 1 + rng.gen_range(3) as usize,
+            h: 1 + rng.gen_range(3) as usize,
+        }
+    }
+
+    /// Random rail-optimized pod: nodes ∈ 1..=6, gpus ∈ 1..=8,
+    /// rails ∈ 1..=gpus (more rails than GPUs never adds a distinct
+    /// route, so the generator keeps the interesting range).
+    pub fn pod_spec(rng: &mut Rng) -> SystemSpec {
+        let gpus = 1 + rng.gen_range(8) as usize;
+        SystemSpec::MultiPlanePod {
+            nodes: 1 + rng.gen_range(6) as usize,
+            gpus,
+            rails: 1 + rng.gen_range(gpus as u64) as usize,
+        }
+    }
+
+    /// Any fabric family, uniformly.
+    pub fn any_fabric(rng: &mut Rng) -> SystemSpec {
+        match rng.gen_range(3) {
+            0 => fat_tree_spec(rng),
+            1 => dragonfly_spec(rng),
+            _ => pod_spec(rng),
+        }
+    }
+}
+
 /// Assert helper producing `Result` for use inside properties.
 #[macro_export]
 macro_rules! prop_assert {
@@ -202,6 +248,28 @@ mod tests {
             assert_eq!(m.len(), p * p);
             for r in 0..p {
                 assert_eq!(m[r * p + r], 0, "diagonal {r} not resident");
+            }
+        }
+    }
+
+    #[test]
+    fn fabric_generators_stay_in_their_ranges() {
+        use crate::topology::systems::SystemSpec;
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(13);
+        for _ in 0..128 {
+            match fabrics::any_fabric(&mut rng) {
+                SystemSpec::FatTree { k } => {
+                    assert!(k % 2 == 0 && (2..=8).contains(&k), "k={k}")
+                }
+                SystemSpec::Dragonfly { a, p, h } => {
+                    assert!((1..=4).contains(&a) && (1..=3).contains(&p) && (1..=3).contains(&h))
+                }
+                SystemSpec::MultiPlanePod { nodes, gpus, rails } => {
+                    assert!((1..=6).contains(&nodes) && (1..=8).contains(&gpus));
+                    assert!((1..=gpus).contains(&rails));
+                }
+                SystemSpec::Paper(_) => panic!("fabric generator yielded a paper system"),
             }
         }
     }

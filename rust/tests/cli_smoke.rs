@@ -473,6 +473,101 @@ fn findings_emits_section_vi_ratio_lines() {
     assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
 }
 
+// ---------------------------------------------------------------------------
+// Parametric fabrics on the --system grammar (DESIGN.md §15)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topo_list_pins_the_system_grammar() {
+    let out = agv(&["topo", "--list"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("systems accepted by --system:"), "{text}");
+    for paper in ["cluster", "dgx1", "cs-storm"] {
+        let line = text.lines().find(|l| l.trim_start().starts_with(paper));
+        assert!(line.is_some_and(|l| l.contains("GPUs (paper Fig. 1)")), "{paper}:\n{text}");
+    }
+    assert!(text.contains("fat-tree:k=<even>"), "{text}");
+    assert!(text.contains("dragonfly:a=<n>,p=<n>,h=<n>"), "{text}");
+    assert!(text.contains("multi-plane-pod:nodes=<n>,gpus=<n>,rails=<n>"), "{text}");
+}
+
+#[test]
+fn topo_builds_fabrics_and_omits_large_matrices() {
+    // a small pod still prints the P2P matrix; a 1024-host fat-tree
+    // omits it instead of dumping a megabyte of dots
+    let out = agv(&["topo", "--system", "multi-plane-pod:nodes=2,gpus=4,rails=2"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("== pod-2x4x2 =="), "{text}");
+    assert!(text.contains("GPUDirect P2P matrix"), "{text}");
+    assert!(text.contains("sample routes:"), "{text}");
+    let out = agv(&["topo", "--system", "fat-tree:k=16"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("== fat-tree-k16 =="), "{text}");
+    assert!(text.contains("P2P matrix omitted (1024 GPUs"), "{text}");
+}
+
+#[test]
+fn fabric_specs_accepted_across_subcommands() {
+    // the same --system grammar works on every surface that takes one
+    let out = agv(&["osu", "--system", "fat-tree:k=4", "--gpus", "2", "--lib", "nccl"]);
+    assert!(out.status.success(), "osu: {}", stderr(&out));
+    assert!(stdout(&out).contains("fat-tree-k4"), "{}", stdout(&out));
+    let out = agv(&[
+        "collective", "--op", "allgatherv", "--system", "dragonfly:a=2,p=2,h=2",
+        "--gpus", "2", "--total", "1MB",
+    ]);
+    assert!(out.status.success(), "collective: {}", stderr(&out));
+    assert!(stdout(&out).contains("dragonfly-2x2x2"), "{}", stdout(&out));
+    let out = agv(&[
+        "workload", "--system", "multi-plane-pod:nodes=2,gpus=4,rails=2",
+        "--tenants", "2", "--ops", "1", "--gpus", "2", "--total", "1MB",
+    ]);
+    assert!(out.status.success(), "workload: {}", stderr(&out));
+    assert!(stdout(&out).contains("pod-2x4x2"), "{}", stdout(&out));
+    let out = agv(&[
+        "auto", "--dataset", "netflix", "--system", "multi-plane-pod:nodes=2,gpus=4,rails=2",
+    ]);
+    assert!(out.status.success(), "auto: {}", stderr(&out));
+    assert!(stdout(&out).contains("pod-2x4x2"), "{}", stdout(&out));
+}
+
+#[test]
+fn malformed_fabric_specs_exit_2_with_a_hint() {
+    // every rejection is a usage error (exit 2) whose message names the
+    // offending field and shows the accepted form
+    let cases: &[(&[&str], &str)] = &[
+        (&["osu", "--system", "fat-tree:k=3"], "even"),
+        (&["osu", "--system", "fat-tree:k=3"], "try --system fat-tree:k=16"),
+        (&["osu", "--system", "fat-tree:k=0"], "even and >= 2"),
+        (&["osu", "--system", "dragonfly:a=2,p=2,h=0"], "h=0 leaves dragonfly groups"),
+        (
+            &["osu", "--system", "multi-plane-pod:nodes=2,gpus=4,rails=0"],
+            "zero rails leaves pod nodes unreachable",
+        ),
+        (&["osu", "--system", "torus:x=4"], "unknown system family 'torus'"),
+        (&["osu", "--system", "torus:x=4"], "fat-tree:k=<even>"), // grammar hint
+        (&["osu", "--system", "fat-tree:arity=4"], "unknown field 'arity'"),
+        (&["osu", "--system", "dragonfly:a=2,p=2"], "missing 'h='"),
+        (&["osu", "--system", "fat-tree:k=four"], "non-negative integer"),
+        // the same parse guards every surface, not just osu
+        (&["collective", "--op", "allreduce", "--system", "fat-tree:k=7"], "even"),
+        (&["workload", "--system", "dragonfly:a=0,p=1,h=1"], "router per group"),
+        (&["auto", "--dataset", "netflix", "--system", "pod:nodes=0,gpus=4,rails=1"], "node"),
+        (&["topo", "--system", "mesh"], "unknown system"),
+    ];
+    for (args, fragment) in cases {
+        let out = agv(args);
+        assert_eq!(out.status.code(), Some(2), "`agv {}`:\n{}", args.join(" "), stderr(&out));
+        let err = stderr(&out);
+        assert!(err.contains("--system"), "`agv {}` lost the flag name:\n{err}", args.join(" "));
+        assert!(err.contains(fragment), "`agv {}` missing '{fragment}':\n{err}", args.join(" "));
+        assert!(!err.contains("panicked"), "`agv {}` panicked:\n{err}", args.join(" "));
+    }
+}
+
 #[test]
 fn e2e_and_artifacts_parse_without_artifacts() {
     // Without `make artifacts` these exit 1 ("cannot open artifacts"),

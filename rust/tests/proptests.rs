@@ -12,8 +12,10 @@ use agv_bench::prop_assert;
 use agv_bench::sim::Sim;
 use agv_bench::tensor::partition::{profile_nnz_share, profile_rows};
 use agv_bench::tensor::ModeProfile;
-use agv_bench::topology::systems::{node_groups, SystemKind};
-use agv_bench::util::prop::{check, counts};
+use agv_bench::topology::systems::{node_groups, SystemKind, SystemSpec};
+use agv_bench::topology::{DeviceKind, LinkClass, Path, Topology};
+use agv_bench::util::prng::Rng;
+use agv_bench::util::prop::{check, counts, fabrics};
 
 #[test]
 fn prop_any_algorithm_delivers_everything() {
@@ -359,6 +361,185 @@ fn prop_nccl_bcast_series_delivers_on_detected_rings() {
             "{} p={p} ring={ring:?}",
             sys.name()
         );
+        Ok(())
+    });
+}
+
+/// Path sanity shared by the fabric properties: consistent shape,
+/// every link a declared live edge joining its neighbors, endpoints
+/// the requested GPUs, no device revisited.
+fn check_path(t: &Topology, p: &Path, a: usize, b: usize) -> Result<(), String> {
+    prop_assert!(p.links.len() + 1 == p.devices.len(), "{}: ragged path {p:?}", t.name);
+    prop_assert!(p.devices[0] == t.gpu(a), "{}: path does not start at GPU {a}", t.name);
+    prop_assert!(*p.devices.last().unwrap() == t.gpu(b), "{}: path does not end at {b}", t.name);
+    for (i, &l) in p.links.iter().enumerate() {
+        prop_assert!(l < t.links.len(), "{}: undeclared link {l}", t.name);
+        prop_assert!(t.link_alive(l), "{}: path crosses dead link {l}", t.name);
+        let (x, y) = (p.devices[i], p.devices[i + 1]);
+        let link = &t.links[l];
+        prop_assert!(
+            (link.a == x && link.b == y) || (link.a == y && link.b == x),
+            "{}: link {l} does not join {x}-{y}",
+            t.name
+        );
+    }
+    let mut seen = p.devices.clone();
+    seen.sort_unstable();
+    seen.dedup();
+    prop_assert!(seen.len() == p.devices.len(), "{}: path revisits a device", t.name);
+    Ok(())
+}
+
+/// All-pairs when small, a random sample when large — routing the full
+/// 156² of the biggest generated dragonfly every case would dominate
+/// the suite's runtime without covering anything new.
+fn pair_sample(rng: &mut Rng, n: usize) -> Vec<(usize, usize)> {
+    if n <= 24 {
+        (0..n).flat_map(|a| (0..n).filter(move |&b| b != a).map(move |b| (a, b))).collect()
+    } else {
+        (0..600)
+            .map(|_| (rng.gen_range(n as u64) as usize, rng.gen_range(n as u64) as usize))
+            .filter(|&(a, b)| a != b)
+            .collect()
+    }
+}
+
+#[test]
+fn prop_fabric_all_gpu_pairs_route() {
+    // connectivity: every generated fabric routes every (sampled) GPU
+    // pair through declared live links only, endpoints included
+    check("fabric-connectivity", 24, |rng| {
+        let spec = fabrics::any_fabric(rng);
+        let t = spec.build();
+        let n = t.num_gpus();
+        prop_assert!(n >= 1 && n == spec.max_gpus(), "{spec:?}: {n} GPUs");
+        for (a, b) in pair_sample(rng, n) {
+            let Some(p) = t.route_gpus(a, b) else {
+                return Err(format!("{}: no route {a}->{b}", t.name));
+            };
+            check_path(&t, &p, a, b)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fabric_gpu_links_are_symmetric() {
+    // every rank sees the same multiset of adjacent link capacities
+    // (the fabrics are rank-symmetric by construction), and each entry
+    // is genuinely incident to that rank's GPU
+    check("fabric-gpu-links", 32, |rng| {
+        let spec = fabrics::any_fabric(rng);
+        let t = spec.build();
+        let classes = |r: usize| -> Vec<u64> {
+            let mut c: Vec<u64> =
+                t.gpu_links(r).iter().map(|&l| t.links[l].class.bandwidth().to_bits()).collect();
+            c.sort_unstable();
+            c
+        };
+        let expect = classes(0);
+        for r in 0..t.num_gpus() {
+            for &l in &t.gpu_links(r) {
+                let link = &t.links[l];
+                prop_assert!(
+                    link.a == t.gpu(r) || link.b == t.gpu(r),
+                    "{}: gpu_links({r}) lists non-incident link {l}",
+                    t.name
+                );
+            }
+            prop_assert!(
+                classes(r) == expect,
+                "{}: rank {r} capacity multiset differs from rank 0",
+                t.name
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fabric_reroutes_around_dead_switch_links() {
+    // with_links_down on a switch-level link of a live route: the
+    // fallback route (when one exists) avoids the dead link and stays
+    // valid; on a cross-pod fat-tree of arity >= 4 a detour must exist
+    check("fabric-reroute", 24, |rng| {
+        let spec = fabrics::any_fabric(rng);
+        let t = spec.build();
+        let n = t.num_gpus();
+        if n < 2 {
+            return Ok(());
+        }
+        let a = rng.gen_range(n as u64) as usize;
+        let b = (a + 1 + rng.gen_range(n as u64 - 1) as usize) % n;
+        let p = t.route_gpus(a, b).expect("fabric route");
+        // switch-level = both endpoints are fabric switches (node-less)
+        let Some(&dead) = p
+            .links
+            .iter()
+            .find(|&&l| {
+                t.devices[t.links[l].a].node == usize::MAX
+                    && t.devices[t.links[l].b].node == usize::MAX
+            })
+        else {
+            return Ok(()); // intra-node or single-hop: nothing to kill
+        };
+        let masked = t.with_links_down(&[dead]);
+        match masked.route_gpus(a, b) {
+            Some(re) => {
+                prop_assert!(!re.links.contains(&dead), "{}: reroute reuses dead link", t.name);
+                check_path(&masked, &re, a, b)?;
+            }
+            None => {
+                let diverse = matches!(spec, SystemSpec::FatTree { k } if k >= 4);
+                prop_assert!(
+                    !diverse,
+                    "{}: no reroute for {a}->{b} despite path diversity",
+                    t.name
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fat_tree_size_and_full_bisection() {
+    // fat_tree(k) hosts exactly k^3/4 GPUs, and every switch stage has
+    // equal aggregate up/down capacity: one same-class uplink per host
+    // at each of the three stages, and every switch of uniform degree k
+    check("fat-tree-bisection", 16, |rng| {
+        let SystemSpec::FatTree { k } = fabrics::fat_tree_spec(rng) else { unreachable!() };
+        let t = SystemSpec::FatTree { k }.build();
+        let hosts = k * k * k / 4;
+        prop_assert!(t.num_gpus() == hosts, "k={k}: {} GPUs, want {hosts}", t.num_gpus());
+        let is_switch = |d: usize| t.devices[d].kind == DeviceKind::IbSwitch;
+        let mut host_up = 0usize; // nic <-> edge
+        let mut inter = 0usize; // edge<->agg and agg<->core
+        let mut degree = vec![0usize; t.devices.len()];
+        for l in &t.links {
+            match (is_switch(l.a), is_switch(l.b)) {
+                (true, true) => {
+                    prop_assert!(l.class == LinkClass::InfinibandFdr, "k={k}: mixed classes");
+                    inter += 1;
+                    degree[l.a] += 1;
+                    degree[l.b] += 1;
+                }
+                (true, false) | (false, true) => {
+                    prop_assert!(l.class == LinkClass::InfinibandFdr, "k={k}: mixed classes");
+                    host_up += 1;
+                    degree[if is_switch(l.a) { l.a } else { l.b }] += 1;
+                }
+                (false, false) => {} // host-internal chain links
+            }
+        }
+        prop_assert!(host_up == hosts, "k={k}: {host_up} host uplinks, want {hosts}");
+        // edge->agg carries one link per host equivalent, agg->core too
+        prop_assert!(inter == 2 * hosts, "k={k}: {inter} switch links, want {}", 2 * hosts);
+        for (d, &deg) in degree.iter().enumerate() {
+            if is_switch(d) {
+                prop_assert!(deg == k, "k={k}: switch {d} degree {deg}");
+            }
+        }
         Ok(())
     });
 }

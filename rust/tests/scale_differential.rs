@@ -1,0 +1,209 @@
+//! Three-way differential harness for the sharded event engine
+//! (DESIGN.md §15): on identical DAGs, the **sharded** driver, the
+//! **unsharded** event core, and the retained O(F²·L) **reference**
+//! engine must agree — finish times within the mixed
+//! `1e-11 + 1e-9·|t|` tolerance, makespans within 1e-9 relative,
+//! per-linkdir bytes within 1e-6 relative.
+//!
+//! Coverage: every library's composed Allgatherv on the three paper
+//! systems plus a small fat-tree and a small dragonfly; a mid-flight
+//! capacity step; and a permanent outage, where all three must produce
+//! the *same stall diagnosis* (terminal time, stuck set, culprits).
+//! The shard grid sweeps 1 / few / more-shards-than-components so the
+//! merged-shard fallback, the round-robin bucketing, and the
+//! single-shard degenerate all run.
+
+use agv_bench::comm::{compose_allgatherv, Library, Params};
+use agv_bench::sim::{run_sharded, with_reference_engine, Sim, SimOutcome, SimResult};
+use agv_bench::topology::systems::SystemSpec;
+use agv_bench::topology::Topology;
+
+/// (shards, max_workers) grid every scenario runs under.
+const SHARD_GRID: &[(usize, usize)] = &[(1, 1), (4, 2), (64, 8)];
+
+/// The systems under differential test: the paper's three plus one
+/// small instance of each scale fabric family.
+fn systems() -> Vec<SystemSpec> {
+    let mut v = SystemSpec::paper_all().to_vec();
+    v.push(SystemSpec::FatTree { k: 4 });
+    v.push(SystemSpec::Dragonfly { a: 2, p: 2, h: 2 });
+    v
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() < 1e-11 + 1e-9 * b.abs()
+}
+
+/// Assert two engine results agree under the differential contract.
+fn assert_results_agree(label: &str, got: &SimResult, want: &SimResult) {
+    let rel = (got.makespan - want.makespan).abs() / want.makespan.abs().max(1e-300);
+    assert!(rel < 1e-9, "{label}: makespan {} vs {} (rel {rel:e})", got.makespan, want.makespan);
+    let (gf, wf) = (got.finish_times(), want.finish_times());
+    assert_eq!(gf.len(), wf.len(), "{label}: task count");
+    for (i, (a, b)) in gf.iter().zip(wf).enumerate() {
+        assert!(close(*a, *b), "{label}: task {i} finish {a} vs {b}");
+    }
+    for (ld, (a, b)) in got.linkdir_bytes.iter().zip(&want.linkdir_bytes).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1.0);
+        assert!(rel < 1e-6, "{label}: linkdir {ld} bytes {a} vs {b}");
+    }
+}
+
+/// Assert two outcomes describe the same terminal state: same kind,
+/// same terminal time (mixed tolerance), same stall diagnosis.
+fn assert_outcomes_agree(label: &str, got: &SimOutcome, want: &SimOutcome) {
+    assert_eq!(got.is_completed(), want.is_completed(), "{label}: outcome kind");
+    assert!(
+        close(got.time(), want.time()),
+        "{label}: terminal time {} vs {}",
+        got.time(),
+        want.time()
+    );
+    assert_eq!(got.culprit_links(), want.culprit_links(), "{label}: culprits");
+    if let (
+        SimOutcome::Stalled { stuck_tasks: gs, starved_flows: gn, .. },
+        SimOutcome::Stalled { stuck_tasks: ws, starved_flows: wn, .. },
+    ) = (got, want)
+    {
+        assert_eq!(gs, ws, "{label}: stuck task sets");
+        assert_eq!(gn, wn, "{label}: starved flow counts");
+    }
+}
+
+/// Run `build`'s DAG through all three engines and the shard grid:
+/// event-driven (the baseline everything is compared against), the
+/// O(F²·L) reference core via the thread-local override, and the
+/// sharded driver at every grid point.
+fn three_way(topo: &Topology, label: &str, build: impl Fn(&mut Sim)) {
+    let run = || {
+        let mut sim = Sim::new(topo);
+        build(&mut sim);
+        sim.run_outcome()
+    };
+    let (event, event_out) = run();
+    {
+        let (reference, ref_out) = with_reference_engine(&run);
+        assert_results_agree(&format!("{label}/reference"), &reference, &event);
+        assert_outcomes_agree(&format!("{label}/reference"), &ref_out, &event_out);
+    }
+    for &(shards, workers) in SHARD_GRID {
+        let mut sim = Sim::new(topo);
+        build(&mut sim);
+        let (sharded, sharded_out, report) = run_sharded(sim, shards, workers);
+        let l = format!("{label}/shards{shards}w{workers}");
+        assert!(report.shards <= shards.max(1), "{l}: {report:?}");
+        assert_results_agree(&l, &sharded, &event);
+        assert_outcomes_agree(&l, &sharded_out, &event_out);
+    }
+}
+
+/// Irregular §IV-style counts for `p` ranks.
+fn counts(p: usize) -> Vec<u64> {
+    let base = [64u64 << 10, 16 << 20, 256 << 10, 1 << 20];
+    (0..p).map(|r| base[r % base.len()] + r as u64).collect()
+}
+
+#[test]
+fn every_library_agrees_on_every_system() {
+    for spec in systems() {
+        let topo = spec.build();
+        let p = topo.num_gpus().min(8);
+        let cv = counts(p);
+        for lib in Library::all() {
+            three_way(&topo, &format!("{}/{}", spec.name(), lib.name()), |sim: &mut Sim| {
+                compose_allgatherv(sim, lib, Params::default(), &cv, None);
+            });
+        }
+    }
+}
+
+#[test]
+fn concurrent_libraries_share_one_fabric() {
+    // two independent tenants (different libraries) on one fabric: their
+    // flow graphs may or may not share links — exactly what the shard
+    // planner must get right — and all engines must agree either way
+    for spec in [SystemSpec::parse("dgx1").unwrap(), SystemSpec::FatTree { k: 4 }] {
+        let topo = spec.build();
+        let p = topo.num_gpus().min(8);
+        let cv = counts(p);
+        three_way(&topo, &format!("{}/nccl+mpi", spec.name()), |sim: &mut Sim| {
+            compose_allgatherv(sim, Library::Nccl, Params::default(), &cv, None);
+            compose_allgatherv(sim, Library::Mpi, Params::default(), &cv, None);
+        });
+    }
+}
+
+#[test]
+fn capacity_step_scenario_agrees() {
+    // halve a route-0->1 link mid-flight: the step lands while flows
+    // are active, so lazy settlement and shard-local cap routing both
+    // run. Cross-checked on a paper system and both fabric families.
+    for spec in [
+        SystemSpec::parse("cs-storm").unwrap(),
+        SystemSpec::FatTree { k: 4 },
+        SystemSpec::Dragonfly { a: 2, p: 2, h: 2 },
+    ] {
+        let topo = spec.build();
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        let cap = topo.links[link].class.bandwidth();
+        let cv = counts(topo.num_gpus().min(8));
+        three_way(&topo, &format!("{}/cap-step", spec.name()), |sim: &mut Sim| {
+            compose_allgatherv(sim, Library::Nccl, Params::default(), &cv, None);
+            sim.capacity_event(link, 2.0e-5, cap * 0.5);
+            // independent second component: ranks at the far end
+            let n = sim.topology().num_gpus();
+            let path = sim.topology().route_gpus(n - 2, n - 1).unwrap();
+            let lat = sim.topology().path_latency(&path);
+            sim.flow(path, 3.0e6, lat, &[]);
+        });
+    }
+}
+
+#[test]
+fn outage_scenario_agrees_on_the_stall_diagnosis() {
+    // permanent zero-capacity step with a dependent task behind it: all
+    // three engines must stall with the same time, stuck set, culprits,
+    // while an untouched component still completes
+    for spec in [SystemSpec::parse("cluster").unwrap(), SystemSpec::Dragonfly { a: 2, p: 2, h: 2 }]
+    {
+        let topo = spec.build();
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        three_way(&topo, &format!("{}/outage", spec.name()), |sim: &mut Sim| {
+            let t = sim.topology();
+            let p01 = t.route_gpus(0, 1).unwrap();
+            let lat = t.path_latency(&p01);
+            let doomed = sim.flow(p01, 1.0e9, lat, &[]);
+            sim.delay(1.0e-3, &[doomed]); // can never run
+            sim.capacity_event(link, 1.0e-4, 0.0); // outage, no revival
+            let n = t.num_gpus();
+            let free = t.route_gpus(n - 2, n - 1).unwrap();
+            let lat2 = t.path_latency(&free);
+            sim.flow(free, 1.0e6, lat2, &[]); // separate component, completes
+        });
+    }
+}
+
+#[test]
+fn sharded_leaf_rings_agree_on_small_fabrics() {
+    // the exact DAG shape the scale bench times, at test-sized fabrics:
+    // one ring per leaf group, every group its own component
+    use agv_bench::sim::scale::{build_leaf_rings, leaf_group_size};
+    for spec in [
+        SystemSpec::FatTree { k: 4 },
+        SystemSpec::Dragonfly { a: 2, p: 3, h: 2 },
+        SystemSpec::MultiPlanePod { nodes: 3, gpus: 4, rails: 2 },
+    ] {
+        let topo = spec.build();
+        let group = leaf_group_size(spec);
+        let (event, event_out) = {
+            let sim = build_leaf_rings(&topo, group, 5);
+            sim.run_outcome()
+        };
+        assert!(event_out.is_completed());
+        for &(shards, workers) in SHARD_GRID {
+            let (sharded, out, _) = run_sharded(build_leaf_rings(&topo, group, 5), shards, workers);
+            assert!(out.is_completed());
+            assert_results_agree(&format!("{}/leaf-rings/{shards}", spec.name()), &sharded, &event);
+        }
+    }
+}

@@ -26,7 +26,7 @@ use agv_bench::comm::algorithms::{
 use agv_bench::comm::select::{candidates, simulate, Algo, AlgoSelector, Candidate};
 use agv_bench::comm::{Library, Params};
 use agv_bench::prop_assert;
-use agv_bench::topology::systems::{multi_dgx, node_groups, SystemKind};
+use agv_bench::topology::systems::{multi_dgx, node_groups, SystemKind, SystemSpec};
 use agv_bench::topology::Topology;
 use agv_bench::util::prng::Rng;
 use agv_bench::util::prop::{check, counts};
@@ -203,6 +203,91 @@ fn conformance_hierarchical_on_system_groupings() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Large P on the scale fabrics (DESIGN.md §15) — counting only, no
+// timing: logical delivery via `execute` where affordable plus the
+// closed-form transfer counts everywhere; the flow simulator never runs
+// at these sizes (that's the scale bench's job).
+// ---------------------------------------------------------------------------
+
+/// Counting-only conformance for schedules too big to replay: the
+/// per-block P-1 closed form and the P·(P-1) total, without the
+/// held-set execution.
+fn assert_transfer_counts(p: usize, schedules: &[&Schedule], label: &str) {
+    for (b, &n) in block_transfers(p, schedules).iter().enumerate() {
+        assert_eq!(n, p - 1, "{label}: block {b} moved {n} times");
+    }
+    let total: usize = schedules.iter().map(|s| s.total_block_transfers()).sum();
+    assert_eq!(total, p * (p - 1), "{label}: total transfers off the closed form");
+}
+
+#[test]
+fn conformance_p256_on_pod_grouping() {
+    // 256 ranks = a 32-node 8-GPU pod; the hierarchical schedules use
+    // its real node grouping
+    let p = 256;
+    let topo = SystemSpec::MultiPlanePod { nodes: 32, gpus: 8, rails: 2 }.build();
+    assert_eq!(topo.num_gpus(), p);
+    let groups = node_groups(&topo, p);
+    assert_eq!(groups.len(), 32);
+    for (s, label) in [
+        (ring_allgatherv(p, None), "ring"),
+        (bruck_allgatherv(p), "bruck"),
+        (hierarchical_allgatherv(p, &groups, LeaderAlgo::Ring), "hier-ring"),
+        (hierarchical_allgatherv(p, &groups, LeaderAlgo::Bruck), "hier-bruck"),
+    ] {
+        assert_allgatherv_conformance(p, &[&s], &format!("{label} p={p}")).unwrap();
+    }
+}
+
+#[test]
+fn conformance_p1024_on_fat_tree_and_pod_grouping() {
+    // 1024 ranks = fat_tree(16)'s host count (the quick-mode scale
+    // fabric) and a 128-node pod for the hierarchical grouping
+    let p = 1024;
+    assert_eq!(SystemSpec::FatTree { k: 16 }.build().num_gpus(), p);
+    let pod = SystemSpec::MultiPlanePod { nodes: 128, gpus: 8, rails: 4 }.build();
+    assert_eq!(pod.num_gpus(), p);
+    let groups = node_groups(&pod, p);
+    for (s, label) in [
+        (ring_allgatherv(p, None), "ring"),
+        (recursive_doubling_allgatherv(p), "rec-dbl"),
+        (hierarchical_allgatherv(p, &groups, LeaderAlgo::Bruck), "hier-bruck"),
+    ] {
+        assert_allgatherv_conformance(p, &[&s], &format!("{label} p={p}")).unwrap();
+    }
+}
+
+#[test]
+fn conformance_p4096_logarithmic_schedules_execute() {
+    // 4096 ranks (the full-bench scale): the logarithmic schedules
+    // (12 steps) still replay through `execute`; the ring's 4095 step
+    // snapshots would copy ~67 GB of held-set state, so it is covered
+    // by the counting-only closed form at this size instead
+    let p = 4096;
+    for (s, label) in
+        [(bruck_allgatherv(p), "bruck"), (recursive_doubling_allgatherv(p), "rec-dbl")]
+    {
+        assert_allgatherv_conformance(p, &[&s], &format!("{label} p={p}")).unwrap();
+    }
+    let ring = ring_allgatherv(p, None);
+    assert_transfer_counts(p, &[&ring], "ring p=4096");
+}
+
+#[test]
+fn conformance_p4096_hierarchical_counting_only() {
+    // a 512-node pod's grouping: the two-level schedule stays
+    // delivery-minimal at 4096 ranks (counting only — its ring of 512
+    // leaders makes a full replay as costly as the flat ring's)
+    let p = 4096;
+    let pod = SystemSpec::MultiPlanePod { nodes: 512, gpus: 8, rails: 4 }.build();
+    assert_eq!(pod.num_gpus(), p);
+    let groups = node_groups(&pod, p);
+    assert_eq!(groups.len(), 512);
+    let s = hierarchical_allgatherv(p, &groups, LeaderAlgo::Ring);
+    assert_transfer_counts(p, &[&s], "hier-ring p=4096");
 }
 
 // ---------------------------------------------------------------------------

@@ -7,7 +7,8 @@
 
 use agv_bench::comm::{Library, Params};
 use agv_bench::report::workload as report_workload;
-use agv_bench::topology::systems::SystemKind;
+use agv_bench::sim::scale::scale_doc;
+use agv_bench::topology::systems::{SystemKind, SystemSpec};
 use agv_bench::workload::bench::bench_doc;
 use agv_bench::workload::{run_workload, TenantLib, WorkloadSpec};
 
@@ -59,13 +60,29 @@ fn report_render_is_byte_identical_across_runs() {
     };
     let run = || {
         let sections =
-            report_workload::study(&SystemKind::all(), Params::default(), mk).unwrap();
+            report_workload::study(&SystemSpec::paper_all(), Params::default(), mk).unwrap();
         (report_workload::render(&sections), report_workload::csv(&sections))
     };
     let (ra, ca) = run();
     let (rb, cb) = run();
     assert_eq!(ra, rb, "report render diverged between runs");
     assert_eq!(ca, cb, "report csv diverged between runs");
+}
+
+#[test]
+fn scale_cross_check_doc_is_byte_identical_across_runs() {
+    // the `scale.cross_check` subtree of BENCH_engine.json: sharded
+    // runs at full worker fan-out must merge deterministically (by
+    // shard index, never completion order), so the rendered doc is
+    // byte-identical run over run — quick-mode fabrics (~1k ranks)
+    // keep this affordable in tier-1
+    let a = scale_doc(42, true).render();
+    let b = scale_doc(42, true).render();
+    assert_eq!(a, b, "BENCH_engine.json scale subtree is not reproducible");
+    let c = scale_doc(43, true).render();
+    assert_ne!(a, c, "the scale-case seed is not live in the artifact");
+    assert!(a.contains("fat-tree-k16"), "quick fat-tree case missing:\n{a}");
+    assert!(a.contains("dragonfly-8x4x4"), "quick dragonfly case missing:\n{a}");
 }
 
 #[test]

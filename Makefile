@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery test-scale verify bench bench-smoke bench-workload bench-faults bench-collectives artifacts fmt clippy
+.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery test-scale verify bench bench-smoke bench-delta bench-workload bench-faults bench-collectives artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -79,6 +79,15 @@ bench-faults:
 # The collective-suite grid on its own; writes BENCH_collectives.json.
 bench-collectives:
 	cargo bench --bench bench_collectives -- --json
+
+# Warm-started delta-simulation smoke (DESIGN.md §16): runs the fault
+# and workload ensemble benches in quick mode, which asserts warm-vs-
+# cold agreement to 1e-9 per scenario and gates the warm/cold wall-
+# clock ratio at >= 2x, and prints the measured speedup. No canonical
+# artifact is touched (quick mode writes BENCH_*.quick.json scratch).
+bench-delta:
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_faults -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_workload -- --json
 
 # CI smoke: every bench target builds and runs with slashed iteration
 # counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick

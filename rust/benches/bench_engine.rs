@@ -126,6 +126,12 @@ fn main() {
         let ranks = topo.num_gpus();
         let mut base_mean = f64::NAN;
         for shards in [1usize, 4, 16, 64] {
+            // shards actually executed (vs requested): the collapse
+            // guard makes a welded-DAG degradation visible instead of
+            // silently paying pool dispatch for one effective shard
+            let (probe, _, _) =
+                run_sharded(build_leaf_rings(&topo, group, 42), shards, usize::MAX);
+            let effective = probe.stats.shards_effective;
             let name = format!("scale/{}/{ranks}ranks/shards{shards}", spec.name());
             let r = bench(&name, warmup(1), iters(2), || {
                 black_box(run_sharded(build_leaf_rings(&topo, group, 42), shards, usize::MAX));
@@ -134,12 +140,19 @@ fn main() {
                 base_mean = r.mean_s;
             }
             let speedup = base_mean / r.mean_s;
-            println!("{}   ({speedup:.2}x vs 1 shard)", r.report_line());
-            cases.push(r.to_json(&[("speedup_vs_1_shard", speedup)]));
+            println!(
+                "{}   ({speedup:.2}x vs 1 shard, {effective} effective)",
+                r.report_line()
+            );
+            cases.push(r.to_json(&[
+                ("speedup_vs_1_shard", speedup),
+                ("shards_effective", effective as f64),
+            ]));
             scale_curve.push(obj(vec![
                 ("system", Json::Str(spec.name())),
                 ("ranks", Json::Num(ranks as f64)),
                 ("shards", Json::Num(shards as f64)),
+                ("shards_effective", Json::Num(effective as f64)),
                 ("mean_s", Json::Num(r.mean_s)),
                 ("speedup_vs_1_shard", Json::Num(speedup)),
             ]));

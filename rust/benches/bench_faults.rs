@@ -14,9 +14,10 @@
 //! bench targets.
 
 use agv_bench::comm::select::{AlgoSelector, RobustObjective};
-use agv_bench::comm::Params;
-use agv_bench::perturb::bench::{bench_cases, bench_doc};
-use agv_bench::perturb::{ensemble, perturbed_allgatherv, EnsembleCfg};
+use agv_bench::comm::{compose_allgatherv, Library, Params};
+use agv_bench::perturb::bench::{bench_cases, bench_doc, delta_ensemble};
+use agv_bench::perturb::{ensemble, perturbed_allgatherv, DeltaSim, EnsembleCfg};
+use agv_bench::sim::Sim;
 use agv_bench::topology::systems::SystemKind;
 use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
 
@@ -50,6 +51,42 @@ fn main() {
         black_box(sel.select_robust(&topo, &counts, &ens, RobustObjective::P95));
     });
     println!("{}   ({:.0} scenario-sims/s)", r.report_line(), sims_per_select as f64 / r.mean_s);
+
+    // wall-clock: warm-started delta replay vs cold re-simulation of a
+    // time-windowed ensemble over one recorded baseline (DESIGN.md
+    // §16). The deterministic work-unit counterpart of this ratio is
+    // what BENCH_faults.json records; quick mode gates the wall-clock
+    // ratio at >= 2x so a regression fails the CI smoke step.
+    let mut sim = Sim::new(&topo);
+    let done = compose_allgatherv(&mut sim, Library::Nccl, Params::default(), &counts, None);
+    let delta = DeltaSim::record(sim);
+    let dens = delta_ensemble(&topo, delta.baseline().makespan, SEED);
+    let warm = bench("faults/delta-warm/dgx1/nccl", warmup(1), iters(16), || {
+        for perts in &dens {
+            black_box(delta.run(perts));
+        }
+    });
+    println!("{}", warm.report_line());
+    let cold = bench("faults/delta-cold/dgx1/nccl", warmup(1), iters(4), || {
+        for perts in &dens {
+            black_box(delta.run_cold(perts));
+        }
+    });
+    println!("{}", cold.report_line());
+    let speedup = cold.mean_s / warm.mean_s;
+    println!("  -> delta-sim speedup over cold re-simulation: {speedup:.2}x");
+    {
+        // agreement tripwire on the exact ensemble just timed
+        for perts in &dens {
+            let tw = delta.run(perts).0.finish(done);
+            let tc = delta.run_cold(perts).0.finish(done);
+            let rel = (tw - tc).abs() / tc.abs().max(1e-300);
+            assert!(rel < 1e-9, "warm {tw} vs cold {tc} diverged: {rel}");
+        }
+    }
+    if quick_mode() {
+        assert!(speedup >= 2.0, "delta-sim quick gate: {speedup:.2}x < 2x");
+    }
 
     if json_out {
         let doc = bench_doc(SEED);

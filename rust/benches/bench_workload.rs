@@ -15,9 +15,10 @@
 //! bench targets.
 
 use agv_bench::comm::Params;
+use agv_bench::perturb::bench::delta_ensemble;
 use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
 use agv_bench::workload::bench::{bench_cases, bench_doc};
-use agv_bench::workload::run_workload;
+use agv_bench::workload::{run_workload, WorkloadDelta};
 
 /// Seed of the canonical BENCH_workload.json grid.
 const SEED: u64 = 42;
@@ -33,6 +34,38 @@ fn main() {
             black_box(run_workload(&topo, &spec, Params::default()).unwrap());
         });
         println!("{}   ({:.0} ops/s)", r.report_line(), ops as f64 / r.mean_s);
+    }
+
+    // wall-clock: fault-timeline ensemble over one workload DAG, warm
+    // delta replay vs cold re-simulation (DESIGN.md §16). Quick mode
+    // gates the ratio at >= 2x; BENCH_workload.json records the
+    // deterministic work-unit counterpart.
+    let (label, topo, spec) = bench_cases(SEED).remove(0);
+    let wd = WorkloadDelta::record(&topo, &spec, Params::default())
+        .expect("bench spec must validate");
+    let makespan = wd.run(&[]).makespan;
+    let ens = delta_ensemble(&topo, makespan, SEED);
+    let warm = bench(&format!("workload/delta-warm/{label}"), warmup(1), iters(8), || {
+        for faults in &ens {
+            black_box(wd.run(faults));
+        }
+    });
+    println!("{}", warm.report_line());
+    let cold = bench(&format!("workload/delta-cold/{label}"), warmup(1), iters(2), || {
+        for faults in &ens {
+            black_box(wd.run_cold(faults));
+        }
+    });
+    println!("{}", cold.report_line());
+    let speedup = cold.mean_s / warm.mean_s;
+    println!("  -> delta-sim speedup over cold re-simulation: {speedup:.2}x");
+    for faults in &ens {
+        let rel = (wd.run(faults).makespan - wd.run_cold(faults).makespan).abs()
+            / wd.run_cold(faults).makespan.max(1e-300);
+        assert!(rel < 1e-9, "warm-vs-cold workload divergence: {rel}");
+    }
+    if quick_mode() {
+        assert!(speedup >= 2.0, "delta-sim quick gate: {speedup:.2}x < 2x");
     }
 
     if json_out {

@@ -505,8 +505,13 @@ impl AlgoSelector {
     /// Simulate every applicable candidate under **every scenario** of a
     /// perturbation ensemble, in [`candidates`] order. Each algorithm's
     /// schedule is built once and shared across both MPI transports and
-    /// all scenarios (one-build-many-sims — the scenario loop only pays
-    /// compose + run). Returns per-candidate per-scenario makespans.
+    /// all scenarios, and each candidate's *simulation* is run cold
+    /// exactly once: a [`crate::perturb::DeltaSim`] baseline is recorded
+    /// per candidate and every scenario replays against it, resuming
+    /// live simulation only from its first divergence point (DESIGN.md
+    /// §16). Healthy scenarios are pure replays; perturbed ones agree
+    /// with a cold run to 1e-9 (`tests/faults_differential.rs`).
+    /// Returns per-candidate per-scenario makespans.
     pub fn evaluate_robust(
         &self,
         topo: &Topology,
@@ -515,22 +520,29 @@ impl AlgoSelector {
     ) -> Vec<(Candidate, Vec<f64>)> {
         assert!(!ensemble.is_empty(), "robust evaluation needs at least one scenario");
         let p = counts.len();
-        let run_sched = |lib: Library, sched: &Schedule| -> Vec<f64> {
+        let replay_all = |done: crate::sim::TaskId,
+                          delta: &crate::perturb::DeltaSim| -> Vec<f64> {
             ensemble
                 .iter()
                 .map(|perts| {
-                    let mut sim = crate::sim::Sim::new(topo);
-                    let done = match lib {
-                        Library::Mpi => {
-                            mpi::Mpi::new(self.params).compose_with(&mut sim, counts, sched, None)
-                        }
-                        _ => mpi_cuda::MpiCuda::new(self.params)
-                            .compose_with(&mut sim, counts, sched, None),
-                    };
-                    crate::perturb::apply(&mut sim, perts);
-                    sim.run().finish(done)
+                    let (res, out) = delta.run(perts);
+                    if !out.is_completed() {
+                        panic!("simulation deadlock: {}", out.describe());
+                    }
+                    res.finish(done)
                 })
                 .collect()
+        };
+        let run_sched = |lib: Library, sched: &Schedule| -> Vec<f64> {
+            let mut sim = crate::sim::Sim::new(topo);
+            let done = match lib {
+                Library::Mpi => {
+                    mpi::Mpi::new(self.params).compose_with(&mut sim, counts, sched, None)
+                }
+                _ => mpi_cuda::MpiCuda::new(self.params)
+                    .compose_with(&mut sim, counts, sched, None),
+            };
+            replay_all(done, &crate::perturb::DeltaSim::record(sim))
         };
         let mut out = Vec::new();
         for algo in Algo::scheduled() {
@@ -540,15 +552,9 @@ impl AlgoSelector {
                 }
             }
         }
-        let nccl_times: Vec<f64> = ensemble
-            .iter()
-            .map(|perts| {
-                let mut sim = crate::sim::Sim::new(topo);
-                let done = nccl::Nccl::new(self.params).compose(&mut sim, counts, None);
-                crate::perturb::apply(&mut sim, perts);
-                sim.run().finish(done)
-            })
-            .collect();
+        let mut sim = crate::sim::Sim::new(topo);
+        let done = nccl::Nccl::new(self.params).compose(&mut sim, counts, None);
+        let nccl_times = replay_all(done, &crate::perturb::DeltaSim::record(sim));
         out.push((Candidate { lib: Library::Nccl, algo: Algo::BcastSeries }, nccl_times));
         out
     }
@@ -624,6 +630,13 @@ impl AlgoSelector {
     /// panic: they retry, reroute, shrink or abort per `policy`, and
     /// the full [`crate::perturb::Recovered`] verdicts come back so
     /// callers can report strategies, not just times.
+    ///
+    /// Each candidate is cold-simulated once: a
+    /// [`crate::perturb::DeltaSim`] baseline is recorded off the
+    /// ungated composition and every scenario's attempt-0 (and
+    /// watchdog budget) replays against it. Gated retries and repair
+    /// compositions still run cold inside the driver — they change the
+    /// DAG, so there is nothing to replay.
     pub fn evaluate_outage(
         &self,
         topo: &Topology,
@@ -635,11 +648,16 @@ impl AlgoSelector {
         let p = counts.len();
         let mut out = Vec::new();
         for cand in candidates(topo, p) {
+            let mut sim = crate::sim::Sim::new(topo);
+            let Some(done) = compose(&mut sim, self.params, cand, counts, None) else {
+                continue; // inapplicable, exactly as recovered_candidate reports
+            };
+            let delta = crate::perturb::DeltaSim::record(sim);
             let mut recs = Vec::with_capacity(ensemble.len());
             let mut applicable = true;
             for perts in ensemble {
-                match crate::perturb::recovery::recovered_candidate(
-                    topo, self.params, cand, counts, perts, policy,
+                match crate::perturb::recovery::recovered_candidate_warm(
+                    topo, self.params, cand, counts, perts, policy, &delta, done,
                 ) {
                     Some(rec) => recs.push(rec),
                     None => {

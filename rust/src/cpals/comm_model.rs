@@ -81,13 +81,21 @@ pub struct AutoRefactoReport {
     pub total_time: f64,
     /// per-mode selector verdicts (single iteration)
     pub per_mode: [Selection; 3],
+    /// decision-table hits across the three per-mode selector calls
+    pub cache_hits: usize,
+    /// decision-table misses across the three per-mode selector calls
+    pub cache_misses: usize,
 }
 
 /// Simulate ReFacTo's communication with per-mode auto-selection: each
-/// mode's count vector gets its own exhaustive (library, algorithm)
-/// argmin — the three modes of one data set can legitimately pick
-/// different winners (the paper's "no single library wins" finding,
-/// taken to its per-call conclusion).
+/// mode's count vector gets its own (library, algorithm) argmin — the
+/// three modes of one data set can legitimately pick different winners
+/// (the paper's "no single library wins" finding, taken to its
+/// per-call conclusion). Selections go through the decision-table
+/// cache ([`AlgoSelector::select`]): a mode whose (system, ranks,
+/// irregularity bucket) key repeats re-simulates only the shortlist,
+/// and the verdict carries `cached = true`; the table statistics ride
+/// along in the report.
 pub fn refacto_comm_auto(
     topo: &Topology,
     params: Params,
@@ -96,13 +104,14 @@ pub fn refacto_comm_auto(
     iters: usize,
 ) -> AutoRefactoReport {
     assert!(gpus >= 1 && gpus <= topo.num_gpus());
-    let selector = AlgoSelector::new(params);
+    let mut selector = AlgoSelector::new(params);
     let counts = mode_counts(spec, gpus);
     let per_mode = [
-        selector.select_fresh(topo, &counts[0]),
-        selector.select_fresh(topo, &counts[1]),
-        selector.select_fresh(topo, &counts[2]),
+        selector.select(topo, &counts[0]),
+        selector.select(topo, &counts[1]),
+        selector.select(topo, &counts[2]),
     ];
+    let (cache_hits, cache_misses) = selector.cache_stats();
     let once: f64 = per_mode.iter().map(|s| s.time).sum();
     AutoRefactoReport {
         dataset: spec.name,
@@ -110,6 +119,8 @@ pub fn refacto_comm_auto(
         iters,
         total_time: once * iters as f64,
         per_mode,
+        cache_hits,
+        cache_misses,
     }
 }
 

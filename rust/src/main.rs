@@ -574,11 +574,16 @@ fn cmd_refacto(args: &Args) {
         println!("  auto      total {:>12}", fmt_time(r.total_time));
         for (m, sel) in r.per_mode.iter().enumerate() {
             println!(
-                "    mode {m}: {:>12}/iter via {}",
+                "    mode {m}: {:>12}/iter via {}{}",
                 fmt_time(sel.time),
-                sel.candidate.label()
+                sel.candidate.label(),
+                if sel.cached { "  [cached]" } else { "" },
             );
         }
+        println!(
+            "  decision-table cache: {} hits / {} misses",
+            r.cache_hits, r.cache_misses
+        );
         return;
     }
     let libs = library_arg(args)

@@ -81,6 +81,91 @@ fn case_doc(
     ])
 }
 
+/// Time-windowed fault ensemble for the delta-simulation grid
+/// (DESIGN.md §16): fault starts uniform over **eight baseline
+/// makespans** — faults are not synchronized to the collective, so
+/// most arrive mid-run or after it — with sub-makespan windows and a
+/// quarter of scenarios carrying a transient hard outage. The regime
+/// the warm-start tier targets: a healthy prefix worth skipping.
+pub fn delta_ensemble(topo: &Topology, makespan: f64, seed: u64) -> Vec<Vec<Perturbation>> {
+    let cfg = EnsembleCfg {
+        scenarios: 32,
+        seed,
+        degraded_links: 1,
+        straggler_prob: 0.5,
+        severity: (0.3, 0.8),
+        window: 8.0 * makespan,
+        duration: (0.2 * makespan, 0.6 * makespan),
+        outage_prob: 0.25,
+        outage_duration: (0.05 * makespan, 0.2 * makespan),
+    };
+    ensemble(topo, &cfg)
+}
+
+/// Deterministic delta-simulation metrics of one case (DESIGN.md §16):
+/// per library, the unperturbed baseline is recorded once and every
+/// scenario of [`delta_ensemble`] runs both warm and cold. The doc
+/// reports the replay-tier mix and the cold/warm **work-unit** ratio
+/// ([`crate::sim::replay::work_units`]) — simulated work, not
+/// wall-clock, so the subtree reproduces byte-for-byte from its seed
+/// (`tests/workload_determinism.rs` pins it). Warm-vs-cold makespan
+/// agreement to 1e-9 is asserted on every scenario as a tripwire.
+fn delta_case_doc(label: &str, topo: &Topology, counts: &[u64], seed: u64) -> Json {
+    use crate::sim::replay::work_units;
+    let params = Params::default();
+    let mut warm_units = 0u64;
+    let mut cold_units = 0u64;
+    let (mut n_identical, mut n_cold, mut n_tail, mut n_warm) = (0u64, 0u64, 0u64, 0u64);
+    let mut max_rel = 0.0f64;
+    let mut scenarios = 0u64;
+    for lib in Library::all() {
+        let mut sim = crate::sim::Sim::new(topo);
+        let done = crate::comm::compose_allgatherv(&mut sim, lib, params, counts, None);
+        let delta = super::DeltaSim::record(sim);
+        let ens = delta_ensemble(topo, delta.baseline().makespan, seed);
+        for perts in &ens {
+            let mode = delta.mode(perts);
+            let (rw, ow) = delta.run(perts);
+            let (rc, oc) = delta.run_cold(perts);
+            assert!(
+                ow.is_completed() && oc.is_completed(),
+                "{label}/{}: transient-fault scenario did not complete",
+                lib.name()
+            );
+            match mode {
+                "identical" => n_identical += 1,
+                "cold" => n_cold += 1,
+                "tail" => n_tail += 1,
+                _ => n_warm += 1,
+            }
+            // the two pure-replay tiers execute zero live events; the
+            // stats they return are the baseline's and must not be
+            // billed as replay cost
+            if !matches!(mode, "identical" | "tail") {
+                warm_units += work_units(&rw.stats);
+            }
+            cold_units += work_units(&rc.stats);
+            let (tw, tc) = (rw.finish(done), rc.finish(done));
+            let rel = (tw - tc).abs() / tc.abs().max(1e-300);
+            assert!(rel < 1e-9, "{label}/{}: warm {tw} vs cold {tc}", lib.name());
+            max_rel = max_rel.max(rel);
+            scenarios += 1;
+        }
+    }
+    obj(vec![
+        ("case", Json::Str(label.to_string())),
+        ("scenarios", Json::Num(scenarios as f64)),
+        ("identical", Json::Num(n_identical as f64)),
+        ("cold", Json::Num(n_cold as f64)),
+        ("tail", Json::Num(n_tail as f64)),
+        ("warm", Json::Num(n_warm as f64)),
+        ("warm_work_units", Json::Num(warm_units as f64)),
+        ("cold_work_units", Json::Num(cold_units as f64)),
+        ("work_ratio", Json::Num(cold_units as f64 / warm_units.max(1) as f64)),
+        ("max_rel_err", Json::Num(max_rel)),
+    ])
+}
+
 /// Simulated metrics of one hard-outage case: the canonical
 /// link-on-route(0,1) outage per system, transient and permanent, run
 /// through the timeout–retry–reroute–shrink driver
@@ -149,11 +234,17 @@ pub fn bench_doc(seed: u64) -> Json {
         .map(|kind| move || outage_case_doc(kind))
         .collect();
     let outage_docs = crate::util::pool::parallel_map(outage_jobs);
+    let delta_jobs: Vec<_> = cases
+        .iter()
+        .map(|(label, topo, counts, _)| move || delta_case_doc(label, topo, counts, seed))
+        .collect();
+    let delta_docs = crate::util::pool::parallel_map(delta_jobs);
     obj(vec![
         ("bench", Json::Str("bench_faults".to_string())),
         ("seed", Json::Num(seed as f64)),
         ("cases", Json::Arr(docs)),
         ("outage_cases", Json::Arr(outage_docs)),
+        ("delta_sim", Json::Arr(delta_docs)),
     ])
 }
 
@@ -196,6 +287,29 @@ mod tests {
         // the hard-outage grid: every (system, scenario, library) cell
         // completes — natively, by watchdog retry, by reroute, or by
         // shrinking past a GPU whose only link died
+        // the delta-sim grid: every scenario agreed warm-vs-cold (the
+        // doc builder asserts 1e-9 per scenario), the tier counts add
+        // up, and replaying never costs more work than cold re-runs
+        let deltas = doc.get("delta_sim").unwrap().as_arr().unwrap();
+        assert_eq!(deltas.len(), 3);
+        for d in deltas {
+            let n = d.get("scenarios").unwrap().as_f64().unwrap();
+            assert_eq!(n, 96.0, "3 libraries x 32 scenarios");
+            let tiers: f64 = ["identical", "cold", "tail", "warm"]
+                .iter()
+                .map(|k| d.get(k).unwrap().as_f64().unwrap())
+                .sum();
+            assert_eq!(tiers, n, "replay tiers must partition the scenarios");
+            let warm = d.get("warm_work_units").unwrap().as_f64().unwrap();
+            let cold = d.get("cold_work_units").unwrap().as_f64().unwrap();
+            assert!(warm <= cold, "replay cost {warm} exceeds cold cost {cold}");
+            let ratio = d.get("work_ratio").unwrap().as_f64().unwrap();
+            assert!(ratio >= 1.0, "delta tier slower than cold: {ratio}");
+            assert!(
+                d.get("max_rel_err").unwrap().as_f64().unwrap() < 1e-9,
+                "warm-vs-cold tolerance breached"
+            );
+        }
         let outages = doc.get("outage_cases").unwrap().as_arr().unwrap();
         assert_eq!(outages.len(), 3);
         for c in outages {

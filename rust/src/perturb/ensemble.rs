@@ -154,8 +154,14 @@ pub fn ensemble(topo: &Topology, cfg: &EnsembleCfg) -> Vec<Vec<Perturbation>> {
 }
 
 fn severity(rng: &mut Rng, cfg: &EnsembleCfg) -> f64 {
+    // Draw unconditionally: a collapsed severity range must consume
+    // exactly one random like a genuine one, otherwise every subsequent
+    // draw in the scenario (windows, durations, straggler and outage
+    // coin-flips) shifts when the range degenerates. The draw is
+    // *discarded*, never skipped, when there is nothing to draw from.
+    let draw = rng.gen_f64(cfg.severity.0, cfg.severity.1);
     if cfg.severity.1 > cfg.severity.0 {
-        rng.gen_f64(cfg.severity.0, cfg.severity.1)
+        draw
     } else {
         cfg.severity.0
     }
@@ -221,6 +227,61 @@ mod tests {
             }
         }
         assert!(saw_straggler);
+    }
+
+    #[test]
+    fn degenerate_severity_range_does_not_shift_the_stream() {
+        // Regression: `severity` used to skip its draw entirely when
+        // the range collapsed, so `severity: (0.5, 0.5)` shifted every
+        // subsequent random in the scenario — different links, windows,
+        // coin-flips. Scenario k must now be identical in every
+        // non-severity field between a collapsed and a genuine range.
+        let topo = SystemKind::Dgx1.build();
+        let mut degenerate = EnsembleCfg::quick(11);
+        degenerate.severity = (0.5, 0.5);
+        degenerate.window = 0.01;
+        degenerate.duration = (0.001, 0.004);
+        degenerate = degenerate.with_outages(0.5, (0.001, 0.002));
+        let mut ranged = degenerate;
+        ranged.severity = (0.5, 0.9);
+        let a = ensemble(&topo, &degenerate);
+        let b = ensemble(&topo, &ranged);
+        assert_eq!(a.len(), b.len());
+        for (k, (sa, sb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(sa.len(), sb.len(), "scenario {k}: draw structure diverged");
+            for (pa, pb) in sa.iter().zip(sb) {
+                match (pa, pb) {
+                    (
+                        Perturbation::LinkScale { link: la, factor: fa, start: ta, duration: da },
+                        Perturbation::LinkScale { link: lb, factor: fb, start: tb, duration: db },
+                    ) => {
+                        assert_eq!(la, lb, "scenario {k}: degraded link shifted");
+                        assert_eq!(*fa, 0.5, "collapsed range must yield its lower bound");
+                        assert!((0.5..0.9).contains(fb));
+                        assert_eq!(ta.to_bits(), tb.to_bits(), "scenario {k}: window start");
+                        assert_eq!(da.to_bits(), db.to_bits(), "scenario {k}: window length");
+                    }
+                    (
+                        Perturbation::Straggler { rank: ra, factor: fa, start: ta, duration: da },
+                        Perturbation::Straggler { rank: rb, factor: _, start: tb, duration: db },
+                    ) => {
+                        assert_eq!(ra, rb, "scenario {k}: straggler rank shifted");
+                        assert_eq!(*fa, 0.5);
+                        assert_eq!(ta.to_bits(), tb.to_bits());
+                        assert_eq!(da.to_bits(), db.to_bits());
+                    }
+                    (
+                        Perturbation::LinkDown { link: la, start: ta, duration: da },
+                        Perturbation::LinkDown { link: lb, start: tb, duration: db },
+                    ) => {
+                        assert_eq!(la, lb, "scenario {k}: outage link shifted");
+                        assert_eq!(ta.to_bits(), tb.to_bits());
+                        assert_eq!(da.to_bits(), db.to_bits());
+                    }
+                    other => panic!("scenario {k}: perturbation kind shifted: {other:?}"),
+                }
+            }
+        }
     }
 
     #[test]

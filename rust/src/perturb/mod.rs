@@ -320,7 +320,18 @@ enum Effect {
 ///
 /// Panics on an invalid set; run [`validate`] first for a clean error.
 pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
-    let topo = sim.topology();
+    for (link, time, capacity) in compile(sim.topology(), perts) {
+        sim.capacity_event(link, time, capacity);
+    }
+}
+
+/// The compile half of [`apply`]: compose a perturbation set into
+/// `(link, time, capacity)` steps *without* a `Sim` to emit them into.
+/// Emission order and every capacity bit are identical to what
+/// [`apply`] pushes — [`DeltaSim`] feeds these straight to the replay
+/// layer, so a warm-started scenario sees exactly the capacity steps a
+/// cold run would.
+pub(crate) fn compile(topo: &Topology, perts: &[Perturbation]) -> Vec<(LinkId, f64, f64)> {
     // per-link list of (start, end, effect), in perturbation order
     let mut by_link: BTreeMap<LinkId, Vec<(f64, f64, Effect)>> = BTreeMap::new();
     for p in perts {
@@ -354,6 +365,7 @@ pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
             }
         }
     }
+    let mut out = Vec::new();
     for (link, effects) in by_link {
         let base = topo.links[link].class.bandwidth();
         // breakpoints: every window start and every finite window end
@@ -397,8 +409,88 @@ pub fn apply(sim: &mut Sim, perts: &[Perturbation]) {
             {
                 cap = 0.0;
             }
-            sim.capacity_event(link, t, cap);
+            out.push((link, t, cap));
         }
+    }
+    out
+}
+
+/// Warm-started delta-simulation over one composed DAG (DESIGN.md
+/// §16): record the unperturbed baseline once, then run each perturbed
+/// scenario by fast-forwarding the baseline's event log to the
+/// scenario's first divergence point and simulating live only from
+/// there ([`crate::sim::replay`]).
+///
+/// This is the second caching tier for ensemble consumers — the first
+/// is the build-once schedule cache (compose once, simulate many). The
+/// contract: [`DeltaSim::run`] agrees with [`DeltaSim::run_cold`] to
+/// the engine's ~1e-9 relative tolerance, and is **bit-exact** whenever
+/// the scenario cannot diverge mid-run (empty/zero-magnitude sets,
+/// divergence at t=0, perturbations past the baseline makespan, or a
+/// reference-engine scope).
+pub struct DeltaSim<'t> {
+    baseline: crate::sim::Baseline<'t>,
+}
+
+impl<'t> DeltaSim<'t> {
+    /// Record the unperturbed baseline from a fully composed `Sim`.
+    /// Panics if the builder already carries capacity events.
+    pub fn record(sim: Sim<'t>) -> DeltaSim<'t> {
+        DeltaSim { baseline: crate::sim::Baseline::record(sim) }
+    }
+
+    /// The unperturbed baseline result.
+    pub fn baseline(&self) -> &crate::sim::SimResult {
+        self.baseline.result()
+    }
+
+    /// The unperturbed baseline outcome.
+    pub fn baseline_outcome(&self) -> &crate::sim::SimOutcome {
+        self.baseline.outcome()
+    }
+
+    /// Run one perturbed scenario, warm-started from the baseline's
+    /// divergence point. Panics on an invalid set; run [`validate`]
+    /// first for a clean error.
+    pub fn run(&self, perts: &[Perturbation]) -> (crate::sim::SimResult, crate::sim::SimOutcome) {
+        self.baseline.replay(self.steps(perts))
+    }
+
+    /// Cold re-run of the same scenario from the pristine DAG —
+    /// bit-exact to composing and running it fresh. The differential
+    /// reference for [`DeltaSim::run`] in tests and `make bench-delta`.
+    pub fn run_cold(
+        &self,
+        perts: &[Perturbation],
+    ) -> (crate::sim::SimResult, crate::sim::SimOutcome) {
+        self.baseline.replay_cold(self.steps(perts))
+    }
+
+    /// Which replay tier one scenario takes: `"identical"` (pure
+    /// replay of the baseline), `"tail"` (every step lands past the
+    /// baseline makespan — also a pure replay), `"cold"` (divergence
+    /// at t=0, or a reference-engine scope), or `"warm"` (genuine
+    /// mid-run resume). The bench grids cost scenarios by tier: the
+    /// two pure-replay tiers execute zero live events.
+    pub fn mode(&self, perts: &[Perturbation]) -> &'static str {
+        use crate::sim::replay::ReplayMode;
+        match self.baseline.plan(&self.steps(perts)) {
+            ReplayMode::Identical => "identical",
+            ReplayMode::Cold => "cold",
+            ReplayMode::Tail => "tail",
+            ReplayMode::Warm => "warm",
+        }
+    }
+
+    fn steps(&self, perts: &[Perturbation]) -> Vec<crate::sim::engine::CapEvent> {
+        let topo = self.baseline.topo();
+        compile(topo, perts)
+            .into_iter()
+            .map(|(link, time, capacity)| {
+                assert!(link < topo.links.len(), "perturbation targets link {link} off-topology");
+                crate::sim::engine::CapEvent { time, link, capacity }
+            })
+            .collect()
     }
 }
 

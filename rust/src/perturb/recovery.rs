@@ -204,6 +204,29 @@ pub fn recover_with<F>(
 where
     F: for<'t> Fn(&mut Sim<'t>, &[u64], Option<TaskId>) -> Option<TaskId>,
 {
+    recover_with_warm(topo, counts, perts, policy, compose, None)
+}
+
+/// [`recover_with`] with the attempt-0 and watchdog-budget runs served
+/// by a pre-recorded delta-simulation baseline instead of cold
+/// simulations: the outage-aware selector records one
+/// [`crate::perturb::DeltaSim`] per candidate and replays every
+/// scenario of the ensemble against it (DESIGN.md §16). Only the
+/// ungated attempt-0 shape can warm-start — gated retries, rerouted
+/// and shrunk repair runs compose a *different* DAG (gate task, masked
+/// fabric, remapped ranks) and stay on the cold path. `warm` carries
+/// the baseline and the completion task of its composition.
+pub(crate) fn recover_with_warm<F>(
+    topo: &Topology,
+    counts: &[u64],
+    perts: &[Perturbation],
+    policy: &RecoveryPolicy,
+    compose: F,
+    warm: Option<(&crate::perturb::DeltaSim<'_>, TaskId)>,
+) -> Option<Recovered>
+where
+    F: for<'t> Fn(&mut Sim<'t>, &[u64], Option<TaskId>) -> Option<TaskId>,
+{
     let p = counts.len();
     let attempt = |t: &Topology,
                    cv: &[u64],
@@ -218,7 +241,17 @@ where
         Some((CommResult { time: res.finish(done), flows: res.flows }, outcome))
     };
 
-    let (res0, out0) = attempt(topo, counts, perts, 0.0)?;
+    let replay = |d: &crate::perturb::DeltaSim<'_>,
+                  done: TaskId,
+                  ps: &[Perturbation]|
+     -> (CommResult, SimOutcome) {
+        let (res, outcome) = d.run(ps);
+        (CommResult { time: res.finish(done), flows: res.flows }, outcome)
+    };
+    let (res0, out0) = match warm {
+        Some((d, done)) => replay(d, done, perts),
+        None => attempt(topo, counts, perts, 0.0)?,
+    };
     let SimOutcome::Stalled { time: first_stall, culprit_links, .. } = out0 else {
         // Completed natively. Watchdog check (module docs): did an
         // overlapping outage window freeze the op past its per-op
@@ -240,8 +273,12 @@ where
             return Some(clean);
         }
         // the per-op budget: pristine-fabric time plus the timeout
-        // (same compose, no perturbations — cheap and deterministic)
-        let (base, _) = attempt(topo, counts, &[], 0.0)?;
+        // (same compose, no perturbations — cheap and deterministic;
+        // with a baseline on hand it is literally the recorded run)
+        let base = match warm {
+            Some((d, done)) => replay(d, done, &[]).0,
+            None => attempt(topo, counts, &[], 0.0)?.0,
+        };
         let budget = base.time + policy.timeout;
         if res0.time <= budget {
             return Some(clean);
@@ -403,6 +440,30 @@ pub fn recovered_candidate(
     recover_with(topo, counts, perts, policy, |sim, cv, gate| {
         compose_candidate(sim, params, cand, cv, gate)
     })
+}
+
+/// [`recovered_candidate`] with the attempt-0 run replayed against a
+/// shared delta-simulation baseline — the ensemble fast path of
+/// [`crate::comm::select::AlgoSelector::evaluate_outage`]. `done` is
+/// the completion task of the composition `delta` recorded.
+pub(crate) fn recovered_candidate_warm(
+    topo: &Topology,
+    params: Params,
+    cand: Candidate,
+    counts: &[u64],
+    perts: &[Perturbation],
+    policy: &RecoveryPolicy,
+    delta: &crate::perturb::DeltaSim<'_>,
+    done: TaskId,
+) -> Option<Recovered> {
+    recover_with_warm(
+        topo,
+        counts,
+        perts,
+        policy,
+        |sim, cv, gate| compose_candidate(sim, params, cand, cv, gate),
+        Some((delta, done)),
+    )
 }
 
 #[cfg(test)]

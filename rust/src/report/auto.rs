@@ -27,6 +27,12 @@ pub struct AutoRow {
     pub auto_time: f64,
     /// The winning candidate label per mode (e.g. "MPI-CUDA/hier-ring").
     pub auto_labels: [String; 3],
+    /// Whether each mode's verdict came from the decision table.
+    pub cached: [bool; 3],
+    /// Decision-table hits across the row's three selector calls.
+    pub cache_hits: usize,
+    /// Decision-table misses across the row's three selector calls.
+    pub cache_misses: usize,
 }
 
 impl AutoRow {
@@ -106,6 +112,9 @@ fn row(system: &str, topo: &Topology, spec: &TensorSpec, gpus: usize) -> AutoRow
         fixed,
         auto_time: auto.total_time,
         auto_labels: auto.per_mode.map(|s| s.candidate.label()),
+        cached: auto.per_mode.map(|s| s.cached),
+        cache_hits: auto.cache_hits,
+        cache_misses: auto.cache_misses,
     }
 }
 
@@ -135,6 +144,12 @@ pub fn render(rows: &[AutoRow]) -> String {
                 .map(|&(_, t)| fmt_time(t))
                 .unwrap_or_else(|| "-".to_string())
         };
+        let choices: Vec<String> = r
+            .auto_labels
+            .iter()
+            .zip(r.cached)
+            .map(|(l, c)| if c { format!("{l}*") } else { l.clone() })
+            .collect();
         out.push_str(&format!(
             "{:<10} {:<12} {:>4} {:>12} {:>12} {:>12} {:>12} {:>7.2}x  {}\n",
             r.dataset,
@@ -145,15 +160,23 @@ pub fn render(rows: &[AutoRow]) -> String {
             t(Library::Nccl),
             fmt_time(r.auto_time),
             speedup,
-            r.auto_labels.join(" | "),
+            choices.join(" | "),
         ));
     }
     if !rows.is_empty() {
+        let (hits, misses) = rows
+            .iter()
+            .fold((0usize, 0usize), |(h, m), r| (h + r.cache_hits, m + r.cache_misses));
         out.push_str(&format!(
             "\nauto matches or beats the best fixed library on {wins}/{} rows; \
              geomean speedup vs best fixed {:.2}x\n",
             rows.len(),
             stats::geomean(&speedups),
+        ));
+        out.push_str(&format!(
+            "decision-table cache: {hits} hits / {misses} misses over {} selector calls \
+             (* = verdict served from the table, time re-simulated)\n",
+            hits + misses,
         ));
     }
     out
@@ -206,11 +229,22 @@ mod tests {
                 "{} {}: auto {} vs best fixed {}",
                 r.dataset, r.system, r.auto_time, r.best_fixed()
             );
+            // three selector calls per row, each a table hit or miss,
+            // and the per-mode cached flags agree with the counters
+            assert_eq!(r.cache_hits + r.cache_misses, 3, "{} {}", r.dataset, r.system);
+            assert_eq!(
+                r.cached.iter().filter(|&&c| c).count(),
+                r.cache_hits,
+                "{} {}: cached flags disagree with cache_stats",
+                r.dataset,
+                r.system
+            );
         }
         let text = render(&rows);
         assert!(text.contains("AUTO-SELECTION"));
         assert!(text.contains("NETFLIX"));
         assert!(text.contains("geomean"));
+        assert!(text.contains("decision-table cache:"), "{text}");
         let c = csv(&rows);
         assert_eq!(c.lines().count(), 4);
         assert!(c.starts_with("dataset,"));

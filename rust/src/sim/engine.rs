@@ -192,6 +192,12 @@ pub struct SimStats {
     /// Capacity-change events applied (no-op changes are filtered out
     /// before the run and never reach this counter — nor the engine).
     pub cap_events: u64,
+    /// Connected-component shards that actually executed when the
+    /// sharded driver ([`super::sharded`]) ran this simulation: 0 for
+    /// plain single-engine runs, 1 when union-find collapsed every task
+    /// into one component and the driver short-circuited to the plain
+    /// engine, `n` when `n` shards genuinely ran in parallel.
+    pub shards_effective: u64,
 }
 
 /// Simulation outcome.
@@ -328,6 +334,73 @@ pub fn with_reference_engine<T>(f: impl FnOnce() -> T) -> T {
     }
     let _reset = Reset(FORCE_REFERENCE.with(|c| c.replace(true)));
     f()
+}
+
+/// Is the thread-local reference-engine override active on this
+/// thread? [`super::replay::Baseline`] checks this when recording: under
+/// the override a baseline degrades to cold re-runs so differential
+/// tests still route every simulation through the reference core.
+pub(crate) fn reference_forced() -> bool {
+    FORCE_REFERENCE.with(|c| c.get())
+}
+
+/// Compact event log recorded by a baseline run (DESIGN.md §16).
+///
+/// Only **rate assignments** are recorded — one `(time, rate)` pair per
+/// task at each of the engine's two rate-assignment sites (full-refill
+/// apply and the sole-occupant start fast path). Everything else the
+/// warm-start seam needs is already implied: task finishes live on
+/// [`SimResult::finish`], activation instants are dependency finishes
+/// plus latency, and a flow's rate is 0.0 from activation until its
+/// first record. [`super::replay`] reconstructs the engine's full
+/// settled state at any instant from this plus the baseline result.
+#[derive(Clone, Debug, Default)]
+pub(crate) struct EventLog {
+    /// `rates[task]` = chronological `(time, rate)` assignments for the
+    /// flow owned by `task` (empty for delays and zero-byte flows).
+    pub(crate) rates: Vec<Vec<(f64, f64)>>,
+}
+
+impl EventLog {
+    pub(crate) fn new(tasks: usize) -> EventLog {
+        EventLog { rates: vec![Vec::new(); tasks] }
+    }
+}
+
+/// An in-flight flow reconstructed at the warm-start instant.
+#[derive(Clone, Debug)]
+pub(crate) struct WarmFlow {
+    pub(crate) task: TaskId,
+    /// Bytes left at the resume instant.
+    pub(crate) remaining: f64,
+    /// Rate under the baseline's settled allocation at the resume
+    /// instant (a live capacity step re-shares it only if it lands on
+    /// a loaded linkdir).
+    pub(crate) rate: f64,
+    pub(crate) linkdirs: Vec<LinkDir>,
+}
+
+/// Pre-settled engine state at a resume instant, built by
+/// [`super::replay::Baseline`] from a baseline's event log. The engine
+/// seeds its loop state from this instead of t=0 and simulates live
+/// only from `now` onward.
+#[derive(Clone, Debug)]
+pub(crate) struct WarmStart {
+    /// Resume instant — the first divergence point.
+    pub(crate) now: f64,
+    /// Tasks already finished by `now` with their baseline finish
+    /// times, in task order.
+    pub(crate) finished: Vec<(TaskId, f64)>,
+    /// Flows activated by `now` (matches [`SimResult::flows`] rules:
+    /// positive-byte flow tasks whose activation instant has passed).
+    pub(crate) flows_total: usize,
+    /// Bytes already delivered per linkdir by `now`.
+    pub(crate) linkdir_bytes: Vec<f64>,
+    /// Flows in flight at `now`.
+    pub(crate) flows: Vec<WarmFlow>,
+    /// Discrete events scheduled but not yet fired at `now` (ready
+    /// tasks waiting out latency/delay), sorted by (time, task).
+    pub(crate) events: Vec<(f64, Event)>,
 }
 
 /// A scheduled capacity step: at `time`, both directions of `link`
@@ -523,6 +596,31 @@ impl<'t> Sim<'t> {
     /// override is thread-local and deliberately does not propagate to
     /// spawned threads — a shard must never silently switch cores.
     pub(crate) fn run_event_driven(self) -> (SimResult, SimOutcome) {
+        self.run_core(None, None)
+    }
+
+    /// Event-driven run that also records the compact [`EventLog`] a
+    /// [`super::replay::Baseline`] replays from. Results and work
+    /// counters are bit-identical to [`Sim::run_event_driven`] —
+    /// recording only appends to the log at the two rate-assignment
+    /// sites, adding no event instants and no arithmetic.
+    pub(crate) fn run_event_driven_logged(self, log: &mut EventLog) -> (SimResult, SimOutcome) {
+        self.run_core(Some(log), None)
+    }
+
+    /// Event-driven run resuming from a pre-settled [`WarmStart`]
+    /// instead of t=0. The work counters count live work only — the
+    /// replayed prefix costs nothing, which is the point of the
+    /// delta-simulation tier (DESIGN.md §16).
+    pub(crate) fn run_event_driven_warm(self, warm: WarmStart) -> (SimResult, SimOutcome) {
+        self.run_core(None, Some(warm))
+    }
+
+    fn run_core(
+        self,
+        mut log: Option<&mut EventLog>,
+        warm: Option<WarmStart>,
+    ) -> (SimResult, SimOutcome) {
         let Sim { topo, mut tasks, roots, cap_events } = self;
         let n_linkdirs = topo.links.len() * 2;
         let mut caps: Vec<f64> = (0..n_linkdirs)
@@ -722,11 +820,95 @@ impl<'t> Sim<'t> {
                             settle(&mut flows[si], &mut linkdir_bytes, now, &mut stats);
                             flows[si].rate = r;
                             flows[si].epoch += 1;
+                            if let Some(l) = log.as_deref_mut() {
+                                l.rates[flows[si].task].push((now, r));
+                            }
                             push_prediction!(s);
                         }
                     }
                 }
             }};
+        }
+
+        if let Some(w) = warm {
+            // Resume from a pre-settled instant (DESIGN.md §16): seed
+            // the loop state the baseline had at `w.now` and simulate
+            // live from there. No refill is forced here — the first
+            // live capacity step triggers one only if it lands on a
+            // loaded linkdir, exactly as in a cold run.
+            debug_assert_eq!(w.linkdir_bytes.len(), n_linkdirs);
+            now = w.now;
+            linkdir_bytes = w.linkdir_bytes;
+            flows_total = w.flows_total;
+            // Roots already fired in the replayed prefix; pending work
+            // is seeded explicitly below.
+            ready_queue.clear();
+            for &(id, t) in &w.finished {
+                tasks[id].finish = Some(t);
+                completed += 1;
+                for di in 0..tasks[id].dependents.len() {
+                    let dep = tasks[id].dependents[di];
+                    tasks[dep].pending_deps -= 1;
+                }
+            }
+            // Capacity steps strictly before the resume instant touch
+            // only linkdirs no flow ever crosses (that is how the
+            // divergence point is chosen); apply them directly so the
+            // main loop never sees an event in the past.
+            while let Some(&(t, ld, cap)) = cap_timeline.get(cap_idx) {
+                if t >= now {
+                    break;
+                }
+                cap_idx += 1;
+                caps[ld] = cap;
+                spare[ld] = cap;
+                stats.cap_events += 1;
+            }
+            for &(t, e) in &w.events {
+                let s = seq;
+                seq += 1;
+                events.push(HeapEntry { time: t, seq: s, event: e });
+            }
+            for wf in w.flows {
+                // The slot owns the linkdirs for its active lifetime,
+                // as on a live activation.
+                if let TaskSpec::Flow { linkdirs, .. } = &mut tasks[wf.task].spec {
+                    linkdirs.clear();
+                }
+                let slot = flows.len() as u32;
+                flows.push(FlowSlot {
+                    task: wf.task,
+                    remaining: wf.remaining,
+                    rate: wf.rate,
+                    last_update: now,
+                    epoch: 0,
+                    alive: true,
+                    list_pos: active_list.len() as u32,
+                    linkdirs: wf.linkdirs,
+                    member_pos: Vec::new(),
+                });
+                active_list.push(slot);
+                let mut mp = Vec::with_capacity(flows[slot as usize].linkdirs.len());
+                for (k, &ld) in flows[slot as usize].linkdirs.iter().enumerate() {
+                    mp.push(members[ld].len() as u32);
+                    members[ld].push((slot, k as u32));
+                }
+                flows[slot as usize].member_pos = mp;
+            }
+            // Loaded linkdirs carry the baseline allocation; idle ones
+            // keep the exact-restore invariant (spare == caps bitwise).
+            for ld in 0..n_linkdirs {
+                if !members[ld].is_empty() {
+                    let mut left = caps[ld];
+                    for &(m, _) in &members[ld] {
+                        left -= flows[m as usize].rate;
+                    }
+                    spare[ld] = left;
+                }
+            }
+            for s in 0..flows.len() as u32 {
+                push_prediction!(s);
+            }
         }
 
         drain_ready!();
@@ -975,6 +1157,9 @@ impl<'t> Sim<'t> {
                             r = r.min(spare[ld]);
                         }
                         flows[si].rate = r;
+                        if let Some(l) = log.as_deref_mut() {
+                            l.rates[flows[si].task].push((now, r));
+                        }
                         for &ld in &flows[si].linkdirs {
                             spare[ld] -= r;
                         }

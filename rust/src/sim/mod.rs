@@ -34,14 +34,25 @@
 //! three ways by `tests/scale_differential.rs`. [`scale`] packages the
 //! deterministic scale-study cases the engine bench and the CI scale
 //! step share.
+//!
+//! For fault *ensembles* — many perturbed variants of one DAG — the
+//! [`replay`] module adds warm-started delta-simulation (DESIGN.md
+//! §16): record an unperturbed baseline once ([`replay::Baseline`]),
+//! then re-run each perturbed scenario by fast-forwarding the
+//! baseline's event log to the scenario's first divergence point and
+//! simulating live only from there. 1e-9-identical to cold runs, and
+//! bit-exact whenever the scenario cannot diverge at all.
 
 pub mod engine;
 pub mod reference;
+pub mod replay;
 pub mod scale;
 pub mod sharded;
 
 pub use engine::{with_reference_engine, Sim, SimOutcome, SimResult, SimStats, TaskId};
 pub use sharded::{run_sharded, ShardReport};
+
+pub(crate) use replay::Baseline;
 
 #[cfg(test)]
 mod tests {

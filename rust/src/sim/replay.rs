@@ -1,0 +1,580 @@
+//! Warm-started delta-simulation for fault ensembles (DESIGN.md §16).
+//!
+//! Robust selection, Monte-Carlo fault ensembles, and workload fault
+//! timelines re-simulate near-identical DAGs: every scenario is the
+//! same task graph under a different set of capacity steps. Scenario
+//! count (candidates × scenarios × systems) — not DAG size — is the
+//! dominant cost. This module makes the per-scenario marginal cost
+//! proportional to what the perturbation actually *changes*:
+//!
+//! 1. [`Baseline::record`] runs the unperturbed DAG once through
+//!    [`Sim::run_event_driven_logged`], capturing the compact
+//!    [`EventLog`](super::engine::EventLog) (per-task rate histories;
+//!    finishes and activation instants are already implied by the
+//!    result and the DAG).
+//! 2. [`Baseline::replay`] classifies a perturbed scenario by its
+//!    **divergence point** — the first surviving capacity step that
+//!    touches a linkdir any flow ever crosses — and dispatches:
+//!    - no such step: the baseline result verbatim (bit-exact, zero
+//!      live events);
+//!    - divergence at `t <= 0`, a stalled baseline, or the reference
+//!      engine forced at record time: a **cold** re-run, bit-exact to
+//!      a freshly composed simulation;
+//!    - divergence at/after the baseline makespan: the perturbation
+//!      can no longer affect anything — baseline verbatim, still
+//!      `Completed` (a cold run never applies steps past completion);
+//!    - genuine mid-run divergence: reconstruct the engine's settled
+//!      state at the divergence instant from the log (finished tasks,
+//!      in-flight flows with integrated residual bytes and last
+//!      rates, pending latency/delay events) and resume **live**
+//!      simulation there via [`Sim::run_event_driven_warm`].
+//!
+//! Replay invariants: completions due exactly at the divergence
+//! instant happen under the baseline's old rates (exactly as a cold
+//! run orders them); no refill is forced at resume — the first live
+//! capacity step triggers one only if it lands on a loaded linkdir;
+//! warm results agree with cold runs to the same ~1e-9 relative
+//! contract the sharded driver carries, while the bit-exact modes
+//! above are bitwise identical. `tests/faults_differential.rs` pins
+//! warm-vs-cold agreement across every library × paper system ×
+//! perturbation class.
+
+use super::engine::{
+    capacity_timeline, reference_forced, CapEvent, Event, EventLog, Sim, SimOutcome, SimResult,
+    Task, TaskSpec, WarmFlow, WarmStart,
+};
+use super::TaskId;
+use crate::topology::Topology;
+
+/// How [`Baseline::replay`] will execute a given scenario.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum ReplayMode {
+    /// No surviving capacity step touches a linkdir any flow crosses:
+    /// the baseline result is returned verbatim. Bit-exact, zero live
+    /// events.
+    Identical,
+    /// Divergence at `t <= 0`, a non-`Completed` baseline, or the
+    /// reference engine forced at record time: cold re-run from the
+    /// pristine DAG, bit-exact to a freshly composed simulation
+    /// (including reference-engine dispatch).
+    Cold,
+    /// Divergence at or after the baseline makespan of a completed
+    /// baseline: nothing left to perturb — baseline verbatim, still
+    /// reported `Completed`.
+    Tail,
+    /// Genuine mid-run divergence: warm-started live simulation from
+    /// the divergence instant.
+    Warm,
+}
+
+/// A recorded unperturbed run: the pristine DAG, its result, and the
+/// event log needed to reconstruct engine state at any instant.
+pub(crate) struct Baseline<'t> {
+    topo: &'t Topology,
+    /// Pristine pre-run task clone (specs intact, `finish: None`).
+    tasks: Vec<Task>,
+    roots: Vec<TaskId>,
+    result: SimResult,
+    outcome: SimOutcome,
+    log: EventLog,
+    /// Per-task activation instant: max dependency finish plus the
+    /// task's latency (flows) or duration (delays).
+    fire: Vec<f64>,
+    /// `used[ld]` — some positive-byte flow crosses linkdir `ld`.
+    /// Steps on unused linkdirs cannot change any rate, settlement, or
+    /// stall diagnosis, so they never count as divergence.
+    used: Vec<bool>,
+    /// Recorded under [`super::engine::with_reference_engine`]: every
+    /// replay degrades to a cold `run_outcome` so differential tests
+    /// still route all simulation through the reference core.
+    cold_only: bool,
+}
+
+impl<'t> Baseline<'t> {
+    /// Run the **unperturbed** DAG once, recording its event log.
+    /// Panics if the builder already carries capacity events — a
+    /// baseline is by definition the scenario with none.
+    pub(crate) fn record(sim: Sim<'t>) -> Baseline<'t> {
+        let Sim { topo, tasks, roots, cap_events } = sim;
+        assert!(cap_events.is_empty(), "baseline must be unperturbed (got capacity events)");
+        let pristine = tasks.clone();
+        let cold_only = reference_forced();
+        let mut log = EventLog::new(pristine.len());
+        let run = Sim { topo, tasks, roots: roots.clone(), cap_events: Vec::new() };
+        let (result, outcome) = if cold_only {
+            run.run_outcome()
+        } else {
+            run.run_event_driven_logged(&mut log)
+        };
+        // Activation instants from the DAG + finish times: dependents
+        // always have larger ids (Sim::push enforces it), so one
+        // ascending pass settles every max-dependency-finish.
+        let n = pristine.len();
+        let mut ready = vec![0.0f64; n];
+        for id in 0..n {
+            let f = result.finish[id];
+            for &d in &pristine[id].dependents {
+                if f > ready[d] {
+                    ready[d] = f;
+                }
+            }
+        }
+        let fire: Vec<f64> = (0..n)
+            .map(|id| match pristine[id].spec {
+                TaskSpec::Flow { latency, .. } => ready[id] + latency,
+                TaskSpec::Delay { secs } => ready[id] + secs,
+            })
+            .collect();
+        let mut used = vec![false; topo.links.len() * 2];
+        for t in &pristine {
+            if let TaskSpec::Flow { ref linkdirs, bytes, .. } = t.spec {
+                if bytes > 0.0 {
+                    for &ld in linkdirs {
+                        used[ld] = true;
+                    }
+                }
+            }
+        }
+        Baseline { topo, tasks: pristine, roots, result, outcome, log, fire, used, cold_only }
+    }
+
+    /// The topology the baseline was recorded over.
+    pub(crate) fn topo(&self) -> &'t Topology {
+        self.topo
+    }
+
+    /// The unperturbed run's result.
+    pub(crate) fn result(&self) -> &SimResult {
+        &self.result
+    }
+
+    /// The unperturbed run's terminal outcome.
+    pub(crate) fn outcome(&self) -> &SimOutcome {
+        &self.outcome
+    }
+
+    /// How [`Baseline::replay`] would execute this scenario.
+    pub(crate) fn plan(&self, cap_events: &[CapEvent]) -> ReplayMode {
+        self.classify(cap_events).0
+    }
+
+    /// Divergence classification: the mode, plus the divergence
+    /// instant for [`ReplayMode::Warm`] (0.0 otherwise).
+    fn classify(&self, cap_events: &[CapEvent]) -> (ReplayMode, f64) {
+        if cap_events.is_empty() {
+            return (ReplayMode::Identical, 0.0);
+        }
+        if self.cold_only || !self.outcome.is_completed() {
+            return (ReplayMode::Cold, 0.0);
+        }
+        let timeline = capacity_timeline(self.topo, cap_events);
+        let t_d = timeline.iter().find(|&&(_, ld, _)| self.used[ld]).map(|&(t, _, _)| t);
+        match t_d {
+            // every step was a bitwise no-op or touched only linkdirs
+            // no flow crosses — neither can change anything
+            None => (ReplayMode::Identical, 0.0),
+            Some(t) if t <= 0.0 => (ReplayMode::Cold, t),
+            Some(t) if t >= self.result.makespan => (ReplayMode::Tail, t),
+            Some(t) => (ReplayMode::Warm, t),
+        }
+    }
+
+    /// Execute the perturbed scenario, reusing as much of the baseline
+    /// as its divergence point allows (module docs for the contract).
+    pub(crate) fn replay(&self, cap_events: Vec<CapEvent>) -> (SimResult, SimOutcome) {
+        let (mode, t_d) = self.classify(&cap_events);
+        match mode {
+            ReplayMode::Identical | ReplayMode::Tail => {
+                (self.result.clone(), self.outcome.clone())
+            }
+            ReplayMode::Cold => self.replay_cold(cap_events),
+            ReplayMode::Warm => {
+                let warm = self.warm_start(t_d);
+                let sim = Sim {
+                    topo: self.topo,
+                    tasks: self.tasks.clone(),
+                    roots: self.roots.clone(),
+                    cap_events,
+                };
+                sim.run_event_driven_warm(warm)
+            }
+        }
+    }
+
+    /// Cold re-run of the scenario from the pristine DAG — bit-exact
+    /// to composing and running it fresh (the benchmark reference the
+    /// differential suites and `make bench-delta` compare against).
+    pub(crate) fn replay_cold(&self, cap_events: Vec<CapEvent>) -> (SimResult, SimOutcome) {
+        let sim = Sim {
+            topo: self.topo,
+            tasks: self.tasks.clone(),
+            roots: self.roots.clone(),
+            cap_events,
+        };
+        // run_outcome, not run_event_driven: honors a forced reference
+        // engine so differential routing stays airtight
+        sim.run_outcome()
+    }
+
+    /// Reconstruct the engine's settled state at `t_d` from the log.
+    fn warm_start(&self, t_d: f64) -> WarmStart {
+        let n = self.tasks.len();
+        let finish = &self.result.finish;
+        let n_linkdirs = self.topo.links.len() * 2;
+        let mut finished: Vec<(TaskId, f64)> = Vec::new();
+        let mut deps_left: Vec<usize> = self.tasks.iter().map(|t| t.pending_deps).collect();
+        let mut linkdir_bytes = vec![0.0; n_linkdirs];
+        let mut flows_total = 0usize;
+        // Completions due exactly at t_d happen under the old rates —
+        // the same order a cold run delivers them in — so `<=` is the
+        // correct boundary: divergence at a completion instant sees
+        // that completion already settled.
+        for id in 0..n {
+            if finish[id] <= t_d {
+                finished.push((id, finish[id]));
+                for &d in &self.tasks[id].dependents {
+                    deps_left[d] -= 1;
+                }
+                if let TaskSpec::Flow { ref linkdirs, bytes, .. } = self.tasks[id].spec {
+                    if bytes > 0.0 {
+                        flows_total += 1;
+                        for &ld in linkdirs {
+                            linkdir_bytes[ld] += bytes;
+                        }
+                    }
+                }
+            }
+        }
+        let mut flows: Vec<WarmFlow> = Vec::new();
+        let mut events: Vec<(f64, Event)> = Vec::new();
+        for id in 0..n {
+            if finish[id] <= t_d || deps_left[id] != 0 {
+                continue; // already settled, or not yet ready at t_d
+            }
+            let fire = self.fire[id];
+            match self.tasks[id].spec {
+                TaskSpec::Flow { ref linkdirs, bytes, .. }
+                    if bytes > 0.0 && !linkdirs.is_empty() && fire <= t_d =>
+                {
+                    // In flight at t_d: integrate the piecewise-constant
+                    // rate history up to t_d for the residual bytes, and
+                    // carry the last recorded rate into the live run.
+                    let recs = &self.log.rates[id];
+                    let mut moved = 0.0f64;
+                    let mut rate = 0.0f64;
+                    for (i, &(t0, r)) in recs.iter().enumerate() {
+                        if t0 > t_d {
+                            break;
+                        }
+                        rate = r;
+                        let t1 = recs.get(i + 1).map(|&(t, _)| t).unwrap_or(t_d).min(t_d);
+                        if t1 > t0 {
+                            moved += r * (t1 - t0);
+                        }
+                    }
+                    let moved = moved.min(bytes);
+                    for &ld in linkdirs {
+                        linkdir_bytes[ld] += moved;
+                    }
+                    flows_total += 1;
+                    flows.push(WarmFlow {
+                        task: id,
+                        remaining: bytes - moved,
+                        rate,
+                        linkdirs: linkdirs.clone(),
+                    });
+                }
+                TaskSpec::Flow { .. } => {
+                    // Ready but its latency has not elapsed (zero-byte
+                    // and pathless flows finish at `fire`, so an
+                    // unfinished one is always still waiting).
+                    debug_assert!(fire > t_d, "ready flow unfinished past its fire instant");
+                    events.push((fire, Event::Activate(id)));
+                }
+                TaskSpec::Delay { .. } => {
+                    debug_assert!(fire > t_d, "ready delay unfinished past its fire instant");
+                    events.push((fire, Event::DelayDone(id)));
+                }
+            }
+        }
+        events.sort_by(|a, b| {
+            a.0.total_cmp(&b.0).then_with(|| event_task(&a.1).cmp(&event_task(&b.1)))
+        });
+        WarmStart { now: t_d, finished, flows_total, linkdir_bytes, flows, events }
+    }
+}
+
+fn event_task(e: &Event) -> TaskId {
+    match *e {
+        Event::Activate(id) | Event::DelayDone(id) => id,
+    }
+}
+
+/// Deterministic work-counter total for speedup accounting: the
+/// engine's event + settlement + refill-visit counters, which measure
+/// simulation work without wall-clock noise. BENCH artifacts record
+/// cold/warm ratios of this so the delta-sim speedup is
+/// byte-reproducible.
+pub fn work_units(stats: &super::SimStats) -> u64 {
+    stats.events + stats.completions + stats.settlements + stats.refill_flow_visits + stats.heap_pushes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::systems::SystemKind;
+    use crate::topology::{DeviceKind, LinkClass, Topology};
+
+    fn line_topo() -> Topology {
+        let mut t = Topology::new("line");
+        let g0 = t.add_device(DeviceKind::Gpu { rank: 0 }, 0, "g0");
+        let g1 = t.add_device(DeviceKind::Gpu { rank: 1 }, 0, "g1");
+        let g2 = t.add_device(DeviceKind::Gpu { rank: 2 }, 0, "g2");
+        t.add_link(g0, g1, LinkClass::NvLink);
+        t.add_link(g1, g2, LinkClass::NvLink);
+        t
+    }
+
+    /// A contended DAG over the DGX-1 with dependencies and latency —
+    /// the same shape the engine unit tests use.
+    fn contended_dag(t: &Topology) -> Sim<'_> {
+        let mut sim = Sim::new(t);
+        let mut last = None;
+        for a in 0..8usize {
+            for b in 0..8usize {
+                if a != b {
+                    let p = t.route_gpus(a, b).unwrap();
+                    let lat = t.path_latency(&p);
+                    let deps: Vec<TaskId> =
+                        if (a + b) % 3 == 0 { last.into_iter().collect() } else { vec![] };
+                    last = Some(sim.flow(p, (a * 131 + b) as f64 * 1e6 + 1.0, lat, &deps));
+                }
+            }
+        }
+        sim
+    }
+
+    fn assert_close(a: &SimResult, b: &SimResult, label: &str) {
+        let rel = (a.makespan - b.makespan).abs() / b.makespan.max(1e-300);
+        assert!(rel < 1e-9, "{label}: makespan {} vs {}", a.makespan, b.makespan);
+        assert_eq!(a.flows, b.flows, "{label}: flow count");
+        for (i, (x, y)) in a.finish.iter().zip(&b.finish).enumerate() {
+            assert!((x - y).abs() < 1e-11 + 1e-9 * y.abs(), "{label}: task {i}: {x} vs {y}");
+        }
+        for (ld, (x, y)) in a.linkdir_bytes.iter().zip(&b.linkdir_bytes).enumerate() {
+            let denom = y.abs().max(1.0);
+            assert!((x - y).abs() / denom < 1e-9, "{label}: linkdir {ld}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn identical_scenario_is_pure_replay_and_bit_exact() {
+        let t = SystemKind::Dgx1.build();
+        let baseline = Baseline::record(contended_dag(&t));
+        assert_eq!(baseline.plan(&[]), ReplayMode::Identical);
+        let (res, out) = baseline.replay(Vec::new());
+        // zero live events: the returned result IS the baseline's —
+        // same stats, every float bit-identical
+        assert_eq!(res.stats, baseline.result().stats);
+        assert_eq!(res.makespan.to_bits(), baseline.result().makespan.to_bits());
+        for (a, b) in res.finish.iter().zip(&baseline.result().finish) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in res.linkdir_bytes.iter().zip(&baseline.result().linkdir_bytes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(out.is_completed());
+        // and bit-exact to a fresh cold run of the same DAG
+        let fresh = contended_dag(&t).run();
+        assert_eq!(res.makespan.to_bits(), fresh.makespan.to_bits());
+    }
+
+    #[test]
+    fn zero_magnitude_steps_are_identical_mode() {
+        // steps whose capacity equals the base bandwidth bit-for-bit
+        // are filtered by the timeline; the plan must see no divergence
+        let t = SystemKind::Dgx1.build();
+        let baseline = Baseline::record(contended_dag(&t));
+        let noops: Vec<CapEvent> = (0..t.links.len())
+            .map(|l| CapEvent { time: 1.0e-6, link: l, capacity: t.links[l].class.bandwidth() })
+            .collect();
+        assert_eq!(baseline.plan(&noops), ReplayMode::Identical);
+        let (res, _) = baseline.replay(noops);
+        assert_eq!(res.makespan.to_bits(), baseline.result().makespan.to_bits());
+    }
+
+    #[test]
+    fn divergence_at_t_zero_falls_back_to_cold_bit_exactly() {
+        let t = SystemKind::Dgx1.build();
+        let baseline = Baseline::record(contended_dag(&t));
+        let hot = t.route_gpus(0, 1).unwrap().links[0];
+        let step = CapEvent {
+            time: 0.0,
+            link: hot,
+            capacity: 0.5 * t.links[hot].class.bandwidth(),
+        };
+        assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Cold);
+        let (res, out) = baseline.replay(vec![step]);
+        let mut fresh = contended_dag(&t);
+        fresh.cap_events.push(step);
+        let (fres, fout) = fresh.run_outcome();
+        assert_eq!(out, fout);
+        assert_eq!(res.stats, fres.stats, "cold fallback must do identical work");
+        assert_eq!(res.makespan.to_bits(), fres.makespan.to_bits());
+        for (a, b) in res.finish.iter().zip(&fres.finish) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in res.linkdir_bytes.iter().zip(&fres.linkdir_bytes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_resume_agrees_with_cold_on_a_loaded_linkdir_step() {
+        let t = SystemKind::Dgx1.build();
+        let baseline = Baseline::record(contended_dag(&t));
+        let hot = t.route_gpus(0, 1).unwrap().links[0];
+        let t_d = 0.4 * baseline.result().makespan;
+        let step =
+            CapEvent { time: t_d, link: hot, capacity: 0.3 * t.links[hot].class.bandwidth() };
+        assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Warm);
+        let (warm, wout) = baseline.replay(vec![step]);
+        let (cold, cout) = baseline.replay_cold(vec![step]);
+        assert!(wout.is_completed() && cout.is_completed());
+        assert_close(&warm, &cold, "loaded-linkdir step");
+        // the whole point: the warm run did strictly less work
+        assert!(
+            work_units(&warm.stats) < work_units(&cold.stats),
+            "warm {} !< cold {}",
+            work_units(&warm.stats),
+            work_units(&cold.stats)
+        );
+    }
+
+    #[test]
+    fn divergence_exactly_at_a_completion_instant_agrees_with_cold() {
+        let t = SystemKind::Dgx1.build();
+        let baseline = Baseline::record(contended_dag(&t));
+        // pick a completion instant strictly inside the run
+        let makespan = baseline.result().makespan;
+        let t_d = baseline
+            .result()
+            .finish
+            .iter()
+            .copied()
+            .filter(|&f| f > 0.2 * makespan && f < 0.8 * makespan)
+            .fold(f64::INFINITY, f64::min);
+        assert!(t_d.is_finite(), "no interior completion to test against");
+        let hot = t.route_gpus(2, 3).unwrap().links[0];
+        let step =
+            CapEvent { time: t_d, link: hot, capacity: 0.25 * t.links[hot].class.bandwidth() };
+        assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Warm);
+        let (warm, _) = baseline.replay(vec![step]);
+        let (cold, _) = baseline.replay_cold(vec![step]);
+        assert_close(&warm, &cold, "completion-instant divergence");
+    }
+
+    #[test]
+    fn idle_linkdir_divergence_forces_no_refill() {
+        // A -> B serial chain on a line: link 1 is idle when the step
+        // lands on it; the warm run must apply the step without a
+        // refill and still agree with the cold run.
+        let t = line_topo();
+        let bw = LinkClass::NvLink.bandwidth();
+        let bytes = 1.0e9;
+        let build = |t: &Topology| {
+            let mut sim = Sim::new(t);
+            let a = sim.flow(t.route_gpus(0, 1).unwrap(), bytes, 0.0, &[]);
+            let _b = sim.flow(t.route_gpus(1, 2).unwrap(), bytes, 0.0, &[a]);
+            sim
+        };
+        let baseline = Baseline::record(build(&t));
+        let t_d = 0.5 * bytes / bw; // halfway through flow A: link 1 idle
+        let step = CapEvent { time: t_d, link: 1, capacity: 0.5 * bw };
+        assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Warm);
+        let (warm, wout) = baseline.replay(vec![step]);
+        assert!(wout.is_completed());
+        assert_eq!(warm.stats.full_refills, 0, "idle-linkdir step forced a refill");
+        let (cold, _) = baseline.replay_cold(vec![step]);
+        assert_close(&warm, &cold, "idle-linkdir step");
+        // exact closed form: B runs after A at the halved capacity
+        let expect = bytes / bw + bytes / (0.5 * bw);
+        assert!((warm.makespan - expect).abs() / expect < 1e-9, "{}", warm.makespan);
+    }
+
+    #[test]
+    fn permanent_outage_after_makespan_still_reports_completed() {
+        let t = SystemKind::Dgx1.build();
+        let baseline = Baseline::record(contended_dag(&t));
+        let hot = t.route_gpus(0, 1).unwrap().links[0];
+        let step = CapEvent {
+            time: 2.0 * baseline.result().makespan,
+            link: hot,
+            capacity: 0.0,
+        };
+        assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Tail);
+        let (res, out) = baseline.replay(vec![step]);
+        assert!(out.is_completed(), "post-makespan outage flipped the outcome: {out:?}");
+        assert_eq!(res.makespan.to_bits(), baseline.result().makespan.to_bits());
+        // a cold run never reaches the step either
+        let (cold, cout) = baseline.replay_cold(vec![step]);
+        assert!(cout.is_completed());
+        assert_eq!(res.makespan.to_bits(), cold.makespan.to_bits());
+    }
+
+    #[test]
+    fn mid_run_outage_stalls_identically_warm_and_cold() {
+        let t = line_topo();
+        let bw = LinkClass::NvLink.bandwidth();
+        let bytes = 1.0e9;
+        let build = |t: &Topology| {
+            let mut sim = Sim::new(t);
+            sim.flow(t.route_gpus(0, 1).unwrap(), bytes, 0.0, &[]);
+            sim
+        };
+        let baseline = Baseline::record(build(&t));
+        let t_d = 0.25 * bytes / bw;
+        let step = CapEvent { time: t_d, link: 0, capacity: 0.0 };
+        assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Warm);
+        let (warm, wout) = baseline.replay(vec![step]);
+        let (cold, cout) = baseline.replay_cold(vec![step]);
+        let (SimOutcome::Stalled { time: wt, culprit_links: wl, .. },
+             SimOutcome::Stalled { time: ct, culprit_links: cl, .. }) = (&wout, &cout)
+        else {
+            panic!("outage did not stall: warm {wout:?} cold {cout:?}");
+        };
+        assert!((wt - ct).abs() < 1e-11 + 1e-9 * ct.abs());
+        assert_eq!(wl, cl);
+        // delivered bytes before the stall agree too
+        for (a, b) in warm.linkdir_bytes.iter().zip(&cold.linkdir_bytes) {
+            let denom = b.abs().max(1.0);
+            assert!((a - b).abs() / denom < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reference_override_degrades_to_cold_bit_exactly() {
+        use crate::sim::with_reference_engine;
+        let t = SystemKind::Dgx1.build();
+        let hot = t.route_gpus(0, 1).unwrap().links[0];
+        let step = CapEvent {
+            time: 1.0e-4,
+            link: hot,
+            capacity: 0.5 * t.links[hot].class.bandwidth(),
+        };
+        let (via_replay, via_fresh) = with_reference_engine(|| {
+            let baseline = Baseline::record(contended_dag(&t));
+            assert_eq!(baseline.plan(std::slice::from_ref(&step)), ReplayMode::Cold);
+            let (r, _) = baseline.replay(vec![step]);
+            let mut fresh = contended_dag(&t);
+            fresh.cap_events.push(step);
+            let (f, _) = fresh.run_outcome();
+            (r, f)
+        });
+        assert_eq!(via_replay.stats, Default::default(), "reference stats are all-zero");
+        assert_eq!(via_replay.makespan.to_bits(), via_fresh.makespan.to_bits());
+        for (a, b) in via_replay.finish.iter().zip(&via_fresh.finish) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

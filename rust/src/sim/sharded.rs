@@ -94,7 +94,13 @@ pub struct ShardReport {
 /// at most `max_workers` pool workers. Merges results back into the
 /// original task numbering; see the module docs for the 1e-9 numerical
 /// contract. `stats` fields are summed across shards (counter totals are
-/// not comparable to an unsharded run of the same DAG).
+/// not comparable to an unsharded run of the same DAG) — except
+/// [`SimStats::shards_effective`], which is *set* to the shard count
+/// that actually ran, so callers can tell a genuine parallel run from a
+/// collapsed one. When union-find welds every component into a single
+/// bucket the driver short-circuits to the plain engine (bit-exact, no
+/// pool dispatch) and reports `shards_effective == 1` instead of
+/// masquerading as a sharded run.
 pub fn run_sharded(
     sim: Sim<'_>,
     shards: usize,
@@ -144,6 +150,24 @@ pub fn run_sharded(
         comp_of_task[i] = comp_of_root[r];
     }
     let num_shards = shards.max(1).min(components as usize).max(1);
+    if num_shards == 1 {
+        // Silent-collapse fix: one bucket means zero parallelism, so
+        // sharding would only pay pool dispatch and then report merged
+        // counters indistinguishable from a real multi-shard run. Run
+        // the plain engine and say so via `shards_effective`.
+        let roots: Vec<usize> = tasks
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.pending_deps == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let plain = Sim { topo, tasks, roots, cap_events };
+        let (mut res, out) = plain.run_event_driven();
+        res.stats.shards_effective = 1;
+        let report =
+            ShardReport { components: components as usize, shards: 1, largest_shard_tasks: n };
+        return (res, out, report);
+    }
     let shard_of_comp = |c: u32| (c as usize) % num_shards;
 
     // 3. Move tasks into their shards, preserving relative order (so
@@ -235,6 +259,9 @@ pub fn run_sharded(
         stats.settlements += res.stats.settlements;
         stats.heap_pushes += res.stats.heap_pushes;
         stats.cap_events += res.stats.cap_events;
+        // shards_effective is deliberately NOT summed: each shard ran
+        // plain (reports 0), and the merged result must say how many
+        // shards genuinely executed — set once below.
         if let SimOutcome::Stalled {
             stuck_tasks: st, starved_flows: sf, culprit_links: cl, ..
         } = out
@@ -265,6 +292,7 @@ pub fn run_sharded(
             makespan,
         )
     };
+    stats.shards_effective = num_shards as u64;
     let report =
         ShardReport { components: components as usize, shards: num_shards, largest_shard_tasks };
     (SimResult { finish, makespan, linkdir_bytes, flows, stats }, outcome, report)
@@ -299,6 +327,9 @@ mod tests {
         for (x, y) in ra.linkdir_bytes.iter().zip(&rb.linkdir_bytes) {
             assert!((x - y).abs() <= 1e-6 * y.abs().max(1.0), "bytes {x} vs {y}");
         }
+        // plain runs report 0; the sharded driver reports what ran
+        assert_eq!(ra.stats.shards_effective, 0);
+        assert_eq!(rb.stats.shards_effective, report.shards as u64);
         report
     }
 
@@ -379,6 +410,39 @@ mod tests {
         for (x, y) in ra.finish_times().iter().zip(rb.finish_times()) {
             assert!((x - y).abs() < 1e-11 + 1e-9 * y.abs());
         }
+    }
+
+    #[test]
+    fn single_component_collapse_short_circuits_to_the_plain_engine() {
+        // chained flows weld every task into one component: requesting 8
+        // shards must degrade to the plain engine, visibly (satellite
+        // fix for the silent-collapse bug)
+        let topo = dgx1();
+        let build = |sim: &mut Sim<'_>| {
+            let t = sim.topology();
+            let a = sim.flow(t.route_gpus(0, 1).unwrap(), 2e6, 0.0, &[]);
+            sim.flow(t.route_gpus(1, 2).unwrap(), 2e6, 0.0, &[a]);
+            sim.flow(t.route_gpus(1, 2).unwrap(), 1e6, 0.0, &[]);
+        };
+        let mut a = Sim::new(&topo);
+        build(&mut a);
+        let (ra, oa) = a.run_outcome();
+        let mut b = Sim::new(&topo);
+        build(&mut b);
+        let (rb, ob, report) = run_sharded(b, 8, 4);
+        assert_eq!(report.components, 1);
+        assert_eq!(report.shards, 1);
+        assert_eq!(report.largest_shard_tasks, 3);
+        assert_eq!(rb.stats.shards_effective, 1, "collapse must be reported, not silent");
+        // the short-circuit IS the plain engine: bit-exact, not 1e-9
+        assert_eq!(oa.time().to_bits(), ob.time().to_bits());
+        for (x, y) in ra.finish_times().iter().zip(rb.finish_times()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in ra.linkdir_bytes.iter().zip(&rb.linkdir_bytes) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(ra.stats.events, rb.stats.events);
     }
 
     #[test]

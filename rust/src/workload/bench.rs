@@ -15,7 +15,7 @@ use crate::topology::Topology;
 use crate::util::json::{obj, Json};
 use crate::util::stats::percentile;
 
-use super::engine::run_workload;
+use super::engine::{run_workload, WorkloadDelta};
 use super::spec::{TenantLib, WorkloadSpec};
 
 /// The bench grid: per paper system a 4-tenant NCCL contention case,
@@ -60,6 +60,62 @@ fn case_doc(label: &str, topo: &Topology, spec: &WorkloadSpec) -> Json {
     ])
 }
 
+/// Deterministic delta-simulation metrics of one workload case
+/// (DESIGN.md §16): the multi-tenant DAG is composed and cold-run once
+/// ([`WorkloadDelta::record`]), then every scenario of the
+/// time-windowed fault ensemble ([`crate::perturb::bench::delta_ensemble`])
+/// runs both warm and cold. Reports the replay-tier mix and the
+/// cold/warm work-unit ratio — simulated work only, byte-reproducible
+/// from the seed. Warm-vs-cold makespan agreement to 1e-9 is asserted
+/// per scenario as a tripwire.
+fn delta_case_doc(label: &str, topo: &Topology, spec: &WorkloadSpec, seed: u64) -> Json {
+    use crate::sim::replay::work_units;
+    let wd = WorkloadDelta::record(topo, spec, Params::default())
+        .expect("bench spec must validate");
+    let ens =
+        crate::perturb::bench::delta_ensemble(topo, wd.delta.baseline().makespan, seed);
+    let mut warm_units = 0u64;
+    let mut cold_units = 0u64;
+    let (mut n_identical, mut n_cold, mut n_tail, mut n_warm) = (0u64, 0u64, 0u64, 0u64);
+    let mut max_rel = 0.0f64;
+    for perts in &ens {
+        let mode = wd.delta.mode(perts);
+        let (rw, ow) = wd.delta.run(perts);
+        let (rc, oc) = wd.delta.run_cold(perts);
+        assert!(
+            ow.is_completed() && oc.is_completed(),
+            "{label}: transient-fault timeline did not complete"
+        );
+        match mode {
+            "identical" => n_identical += 1,
+            "cold" => n_cold += 1,
+            "tail" => n_tail += 1,
+            _ => n_warm += 1,
+        }
+        // pure replays (identical/tail) execute zero live events; their
+        // returned stats are the baseline's and are not billed
+        if !matches!(mode, "identical" | "tail") {
+            warm_units += work_units(&rw.stats);
+        }
+        cold_units += work_units(&rc.stats);
+        let rel = (rw.makespan - rc.makespan).abs() / rc.makespan.abs().max(1e-300);
+        assert!(rel < 1e-9, "{label}: warm {} vs cold {}", rw.makespan, rc.makespan);
+        max_rel = max_rel.max(rel);
+    }
+    obj(vec![
+        ("case", Json::Str(label.to_string())),
+        ("scenarios", Json::Num(ens.len() as f64)),
+        ("identical", Json::Num(n_identical as f64)),
+        ("cold", Json::Num(n_cold as f64)),
+        ("tail", Json::Num(n_tail as f64)),
+        ("warm", Json::Num(n_warm as f64)),
+        ("warm_work_units", Json::Num(warm_units as f64)),
+        ("cold_work_units", Json::Num(cold_units as f64)),
+        ("work_ratio", Json::Num(cold_units as f64 / warm_units.max(1) as f64)),
+        ("max_rel_err", Json::Num(max_rel)),
+    ])
+}
+
 /// The full deterministic `BENCH_workload.json` document. Cases fan
 /// out over the bounded worker pool ([`crate::util::pool`]); results
 /// come back in case order, so the render is byte-stable.
@@ -70,10 +126,16 @@ pub fn bench_doc(seed: u64) -> Json {
         .map(|(label, topo, spec)| move || case_doc(label, topo, spec))
         .collect();
     let docs = crate::util::pool::parallel_map(jobs);
+    let delta_jobs: Vec<_> = cases
+        .iter()
+        .map(|(label, topo, spec)| move || delta_case_doc(label, topo, spec, seed))
+        .collect();
+    let delta_docs = crate::util::pool::parallel_map(delta_jobs);
     obj(vec![
         ("bench", Json::Str("bench_workload".to_string())),
         ("seed", Json::Num(seed as f64)),
         ("cases", Json::Arr(docs)),
+        ("delta_sim", Json::Arr(delta_docs)),
     ])
 }
 
@@ -101,6 +163,24 @@ mod tests {
             assert!(c.get("mean_s").is_none(), "wall-clock field leaked into the artifact");
             let u = c.get("utilization").unwrap().as_f64().unwrap();
             assert!(u > 0.0 && u <= 1.0);
+        }
+        // the delta-sim grid: tier counts partition the scenarios and
+        // warm replay never costs more work than cold re-simulation
+        let deltas = doc.get("delta_sim").unwrap().as_arr().unwrap();
+        assert_eq!(deltas.len(), 4);
+        for d in deltas {
+            let n = d.get("scenarios").unwrap().as_f64().unwrap();
+            assert_eq!(n, 32.0);
+            let tiers: f64 = ["identical", "cold", "tail", "warm"]
+                .iter()
+                .map(|k| d.get(k).unwrap().as_f64().unwrap())
+                .sum();
+            assert_eq!(tiers, n, "replay tiers must partition the scenarios");
+            let warm = d.get("warm_work_units").unwrap().as_f64().unwrap();
+            let cold = d.get("cold_work_units").unwrap().as_f64().unwrap();
+            assert!(warm <= cold, "replay cost {warm} exceeds cold cost {cold}");
+            assert!(d.get("work_ratio").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(d.get("max_rel_err").unwrap().as_f64().unwrap() < 1e-9);
         }
     }
 }

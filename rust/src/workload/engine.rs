@@ -204,6 +204,7 @@ pub fn run_workload_with_baseline(
 
 /// One composed tenant op awaiting execution in the shared sim:
 /// bookkeeping `run_planned` / the SLO runner turn into [`OpRecord`]s.
+#[derive(Clone)]
 pub(crate) struct PendingOp {
     pub(crate) tenant: usize,
     pub(crate) index: usize,
@@ -325,6 +326,70 @@ pub(crate) fn collect_result(
         total_bytes,
         utilization,
         peak_utilization,
+    }
+}
+
+/// Delta-simulation executor for **fault-timeline ensembles** over one
+/// workload DAG (DESIGN.md §16): the planned ops are composed and
+/// cold-simulated exactly once at record time, and every fault
+/// timeline then replays against that baseline, resuming live
+/// simulation only from its first divergence point. The spec's own
+/// `faults` field is deliberately *not* recorded — the baseline is the
+/// unperturbed fabric, and scenarios arrive per [`WorkloadDelta::run`]
+/// call. An empty timeline is a pure replay, bit-exact to
+/// [`run_workload`] on a fault-free spec; perturbed timelines agree
+/// with a cold run to 1e-9 (`tests/faults_differential.rs`).
+pub struct WorkloadDelta<'a> {
+    topo: &'a Topology,
+    spec: &'a WorkloadSpec,
+    pub(crate) delta: crate::perturb::DeltaSim<'a>,
+    pending: Vec<PendingOp>,
+}
+
+impl<'a> WorkloadDelta<'a> {
+    /// Plan, compose and cold-simulate the unperturbed workload once.
+    pub fn record(
+        topo: &'a Topology,
+        spec: &'a WorkloadSpec,
+        params: Params,
+    ) -> Result<WorkloadDelta<'a>> {
+        let plans = plan(topo, spec, params)?;
+        Ok(Self::from_plans(topo, spec, params, &plans))
+    }
+
+    /// [`WorkloadDelta::record`] from an already-planned op list (the
+    /// bench grids plan once and share plans across systems' runs).
+    pub(crate) fn from_plans(
+        topo: &'a Topology,
+        spec: &'a WorkloadSpec,
+        params: Params,
+        plans: &[Vec<PlannedOp>],
+    ) -> WorkloadDelta<'a> {
+        let mut sim = Sim::new(topo);
+        let pending = compose_workload(&mut sim, spec, params, plans);
+        WorkloadDelta { topo, spec, delta: crate::perturb::DeltaSim::record(sim), pending }
+    }
+
+    /// Replay one fault timeline against the recorded baseline. Panics
+    /// on a deadlocked scenario exactly as [`run_planned`]'s `sim.run()`
+    /// does.
+    pub fn run(&self, faults: &[crate::perturb::Perturbation]) -> WorkloadResult {
+        let (res, out) = self.delta.run(faults);
+        if !out.is_completed() {
+            panic!("simulation deadlock: {}", out.describe());
+        }
+        collect_result(self.topo, self.spec, &res, self.pending.clone())
+    }
+
+    /// Cold reference run of the same timeline on the pristine DAG —
+    /// what `make bench-delta` and the differential tests compare
+    /// [`WorkloadDelta::run`] against.
+    pub fn run_cold(&self, faults: &[crate::perturb::Perturbation]) -> WorkloadResult {
+        let (res, out) = self.delta.run_cold(faults);
+        if !out.is_completed() {
+            panic!("simulation deadlock: {}", out.describe());
+        }
+        collect_result(self.topo, self.spec, &res, self.pending.clone())
     }
 }
 

@@ -24,7 +24,9 @@
 //! - fault timelines: a [`WorkloadSpec::faults`] set compiles into
 //!   capacity steps on the shared sim ([`crate::perturb`]), so
 //!   multi-tenant runs degrade mid-flight; an empty set is bit-exact to
-//!   the pristine engine (DESIGN.md §12);
+//!   the pristine engine (DESIGN.md §12); fault *ensembles* over one
+//!   DAG compose once and replay warm-started through
+//!   [`WorkloadDelta`] (DESIGN.md §16);
 //! - [`slo`]: the fault-supervised runner — hard outages stall jobs,
 //!   stalled jobs are re-issued through the timeout–retry–reroute–
 //!   shrink driver ([`crate::perturb::recovery`]) or aborted, and the
@@ -49,7 +51,7 @@ pub mod trace;
 
 pub use engine::{
     isolated_times, run_workload, run_workload_with_baseline, OpRecord, TenantResult,
-    WorkloadResult,
+    WorkloadDelta, WorkloadResult,
 };
 pub use slo::{run_workload_recovered, RecoveredWorkload, ReissuedOp, WorkloadSlo};
 pub use spec::{OpStream, TenantLib, TenantSpec, WorkloadSpec};

@@ -119,6 +119,10 @@ fn auto_report_single_cell_runs() {
     assert!(text.contains("AUTO-SELECTION"), "{text}");
     assert!(text.contains("NETFLIX"), "{text}");
     assert!(text.contains("geomean"), "{text}");
+    // the selector's decision-table statistics ride the report footer
+    assert!(text.contains("decision-table cache:"), "{text}");
+    assert!(text.contains("hits"), "{text}");
+    assert!(text.contains("misses"), "{text}");
 }
 
 #[test]
@@ -141,6 +145,7 @@ fn refacto_auto_lib_runs() {
     let text = stdout(&out);
     assert!(text.contains("auto selection"), "{text}");
     assert!(text.contains("mode 0"), "{text}");
+    assert!(text.contains("decision-table cache:"), "{text}");
 }
 
 #[test]

@@ -11,6 +11,12 @@
 //! licenses every degraded number the subsystem reports: the fault
 //! path IS the validated path plus real capacity steps, not a second
 //! implementation.
+//!
+//! PR 9 adds the warm-replay oracle: every perturbation class replayed
+//! warm from a recorded baseline (DESIGN.md §16) must agree with a cold
+//! re-simulation — bit-exactly on the identical/cold/tail planner
+//! tiers, to 1e-9 on the genuinely warm tier — on makespan, every
+//! per-op finish instant, and every linkdir byte count.
 
 use agv_bench::comm::select::{candidates, simulate};
 use agv_bench::comm::transport::RecoveryPolicy;
@@ -358,6 +364,129 @@ fn midrun_link_outage_completes_on_every_system_and_library() {
             );
         }
     }
+}
+
+#[test]
+fn warm_replay_agrees_with_cold_resimulation_across_the_grid() {
+    // the PR-9 acceptance oracle: per paper system x library, a
+    // baseline is recorded once and every perturbation class is run
+    // both warm (fast-forward to first divergence, resume live) and
+    // cold (fresh end-to-end simulation). Identical/cold/tail tiers
+    // must be bit-exact — they are promises, not approximations — and
+    // the warm tier must agree to 1e-9 relative on makespan, every
+    // per-op finish, and every linkdir byte count.
+    use agv_bench::perturb::bench::delta_ensemble;
+    use agv_bench::perturb::DeltaSim;
+    use agv_bench::sim::TaskId;
+
+    fn agree(delta: &DeltaSim<'_>, done: TaskId, perts: &[Perturbation], what: &str) {
+        let mode = delta.mode(perts);
+        let bit_exact = mode != "warm";
+        let (rw, ow) = delta.run(perts);
+        let (rc, oc) = delta.run_cold(perts);
+        assert_eq!(
+            ow.is_completed(),
+            oc.is_completed(),
+            "{what}[{mode}]: liveness diverged: {} vs {}",
+            ow.describe(),
+            oc.describe()
+        );
+        if !oc.is_completed() {
+            return;
+        }
+        let near = |a: f64, b: f64| (a - b).abs() <= 1e-9 * b.abs().max(1e-12);
+        if bit_exact {
+            assert_eq!(
+                rw.makespan.to_bits(),
+                rc.makespan.to_bits(),
+                "{what}[{mode}]: makespan {} vs {}",
+                rw.makespan,
+                rc.makespan
+            );
+        }
+        assert!(
+            near(rw.makespan, rc.makespan),
+            "{what}[{mode}]: makespan {} vs {}",
+            rw.makespan,
+            rc.makespan
+        );
+        assert!(near(rw.finish(done), rc.finish(done)), "{what}[{mode}]: collective finish");
+        let (fw, fc) = (rw.finish_times(), rc.finish_times());
+        assert_eq!(fw.len(), fc.len(), "{what}[{mode}]: task counts diverged");
+        for (i, (a, b)) in fw.iter().zip(fc).enumerate() {
+            if bit_exact {
+                assert_eq!(a.to_bits(), b.to_bits(), "{what}[{mode}]: finish[{i}] {a} vs {b}");
+            }
+            assert!(near(*a, *b), "{what}[{mode}]: finish[{i}] {a} vs {b}");
+        }
+        for (i, (a, b)) in rw.linkdir_bytes.iter().zip(&rc.linkdir_bytes).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+                "{what}[{mode}]: linkdir_bytes[{i}] {a} vs {b}"
+            );
+        }
+    }
+
+    check("faults-warm-vs-cold-grid", 2, |rng| {
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let p = kind.max_gpus().min(8);
+            let cv = counts::irregular(rng, p, 8 << 20);
+            for lib in Library::all() {
+                let mut sim = Sim::new(&topo);
+                let done = agv_bench::comm::compose_allgatherv(
+                    &mut sim,
+                    lib,
+                    Params::default(),
+                    &cv,
+                    None,
+                );
+                let delta = DeltaSim::record(sim);
+                let m = delta.baseline().makespan;
+                let link = rng.gen_range(topo.links.len() as u64) as usize;
+                let rank = rng.gen_range(p as u64) as usize;
+
+                // identical tier: nothing to replay differently
+                assert_eq!(delta.mode(&[]), "identical");
+                agree(&delta, done, &[], "empty");
+                agree(&delta, done, &zero_magnitude_set(rng, &topo), "zeromag");
+
+                // cold tier: degradation active from t=0 (divergence at
+                // the very first instant — warm start must fall back)
+                let stat =
+                    [Perturbation::scale(link, 0.5), Perturbation::straggler(rank, 0.4)];
+                assert_eq!(delta.mode(&stat), "cold");
+                agree(&delta, done, &stat, "static");
+
+                // warm tier: degradation windows opening mid-run
+                let base_bw = topo.links[link].class.bandwidth();
+                let wnd = [
+                    Perturbation::scale(link, 0.3).during(0.4 * m, 0.4 * m),
+                    Perturbation::floor(link, base_bw * 0.2).during(0.5 * m, 0.2 * m),
+                ];
+                agree(&delta, done, &wnd, "midrun-degrade");
+
+                // warm tier: a transient outage the engine rides out
+                let out = [Perturbation::link_down(link).during(0.5 * m, 0.1 * m)];
+                agree(&delta, done, &out, "transient-outage");
+
+                // tail tier: the fault arrives after the baseline
+                // already finished — pure replay, still Completed
+                let tail = [Perturbation::link_down(link).during(2.0 * m, m)];
+                assert_eq!(delta.mode(&tail), "tail");
+                agree(&delta, done, &tail, "post-makespan");
+
+                // the time-windowed ensemble class (what the benches
+                // replay): a mixed draw across all four tiers
+                for (i, perts) in
+                    delta_ensemble(&topo, m, rng.next_u64()).iter().take(6).enumerate()
+                {
+                    agree(&delta, done, perts, &format!("ensemble[{i}]"));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

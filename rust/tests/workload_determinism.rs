@@ -51,6 +51,23 @@ fn faults_bench_doc_is_byte_identical_across_runs() {
     // just make sure the section is actually there
     assert!(a.contains("outage_cases"), "outage grid missing from BENCH_faults.json");
     assert!(a.contains("\"strategy\""), "recovery verdicts missing from the outage grid");
+    // the PR-9 delta-simulation grid rides the same artifact: replay
+    // tier counts and work-unit ratios are simulated metrics, pinned
+    // byte-for-byte by the equality above — make sure the subtree and
+    // its load-bearing fields are actually present
+    for key in ["delta_sim", "\"warm_work_units\"", "\"cold_work_units\"", "\"work_ratio\"", "\"max_rel_err\""] {
+        assert!(a.contains(key), "{key} missing from the BENCH_faults.json delta-sim subtree");
+    }
+}
+
+#[test]
+fn workload_bench_doc_carries_the_delta_sim_subtree() {
+    // BENCH_workload.json grows the same delta-simulation grid; the
+    // byte-equality test above pins its values, this pins its presence
+    let a = bench_doc(42).render();
+    for key in ["delta_sim", "\"warm_work_units\"", "\"work_ratio\"", "\"max_rel_err\""] {
+        assert!(a.contains(key), "{key} missing from the BENCH_workload.json delta-sim subtree");
+    }
 }
 
 #[test]

@@ -1,6 +1,6 @@
 # Convenience targets. Tier-1 verify is `make verify`.
 
-.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery test-scale verify bench bench-smoke bench-delta bench-workload bench-faults bench-collectives artifacts fmt clippy
+.PHONY: build test test-conformance test-workload test-faults test-collectives test-recovery test-scale test-serve verify bench bench-smoke bench-delta bench-workload bench-faults bench-collectives bench-serve artifacts fmt clippy
 
 build:
 	cargo build --release
@@ -40,6 +40,16 @@ test-recovery:
 	cargo test --test faults_differential recovery
 	cargo test --test faults_differential stall
 
+# The open-loop serving engine on its own: the serve unit suite
+# (closed-loop anchor, policy semantics, warm-up/knee detection, the
+# warm-started ServeDelta), the report section, the BENCH_serve.json
+# byte pin and the `agv serve` CLI smoke (CI runs this as a dedicated
+# step; all of it is also part of `make test`).
+test-serve:
+	cargo test --lib serve
+	cargo test --test workload_determinism serve
+	cargo test --test cli_smoke serve
+
 # The thousand-rank scale subsystem on its own: the three-way
 # sharded / unsharded / reference differential harness, the parametric
 # fabric property tests, the large-P (256/1024/4096) schedule-
@@ -63,6 +73,7 @@ bench:
 	cargo bench --bench bench_hierarchy -- --json
 	cargo bench --bench bench_workload -- --json
 	cargo bench --bench bench_faults -- --json
+	cargo bench --bench bench_serve -- --json
 	cargo bench --bench bench_collectives -- --json
 	cargo bench --bench bench_ablations
 
@@ -80,6 +91,11 @@ bench-faults:
 bench-collectives:
 	cargo bench --bench bench_collectives -- --json
 
+# The serving capacity grid alone (BENCH_serve.json is byte-reproducible
+# from its seed; AGV_BENCH_QUICK=1 redirects to the .quick.json name).
+bench-serve:
+	cargo bench --bench bench_serve -- --json
+
 # Warm-started delta-simulation smoke (DESIGN.md §16): runs the fault
 # and workload ensemble benches in quick mode, which asserts warm-vs-
 # cold agreement to 1e-9 per scenario and gates the warm/cold wall-
@@ -88,6 +104,7 @@ bench-collectives:
 bench-delta:
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_faults -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_workload -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_serve -- --json
 
 # CI smoke: every bench target builds and runs with slashed iteration
 # counts (AGV_BENCH_QUICK=1) so the targets cannot bit-rot. In quick
@@ -98,6 +115,7 @@ bench-smoke:
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_hierarchy -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_workload -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_faults -- --json
+	AGV_BENCH_QUICK=1 cargo bench --bench bench_serve -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_collectives -- --json
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_ablations
 	AGV_BENCH_QUICK=1 cargo bench --bench bench_osu_fig2

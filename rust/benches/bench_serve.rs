@@ -1,0 +1,83 @@
+//! Open-loop serving engine benchmark: wall-clock cost of composing
+//! and simulating a serving DAG per system, warm-vs-cold delta replay
+//! over fault ensembles, plus the deterministic simulated-metric
+//! payload (knee curves, policy comparison, zero-rate anchor).
+//!
+//! `cargo bench --bench bench_serve [-- --json]`
+//!
+//! With `--json` (what `make bench-serve` passes) the simulated
+//! metrics are written to `BENCH_serve.json` at the repo root.
+//! Deliberately, the artifact holds **no wall-clock numbers** — only
+//! simulation outputs — so the same seed reproduces it byte-for-byte
+//! (tests/workload_determinism.rs pins the in-process equivalent).
+//! Wall-clock timing of the same cases is printed below instead.
+//! `AGV_BENCH_QUICK=1` slashes iteration counts and redirects the
+//! artifact to `BENCH_serve.quick.json` (scratch), as in the other
+//! bench targets.
+
+use agv_bench::comm::Params;
+use agv_bench::perturb::bench::delta_ensemble;
+use agv_bench::util::bench::{bench, black_box, iters, quick_mode, warmup};
+use agv_bench::workload::serve::bench::{bench_cases, bench_doc};
+use agv_bench::workload::{run_serve, ServeDelta};
+
+/// Seed of the canonical BENCH_serve.json grid.
+const SEED: u64 = 42;
+
+fn main() {
+    let json_out = std::env::args().any(|a| a == "--json");
+
+    // wall-clock: how fast does the engine compose + simulate one
+    // serving case (arrivals, admission gates, the shared DAG)?
+    for (label, topo, spec) in bench_cases(SEED) {
+        let jobs: usize = spec.workload.tenants.iter().map(|t| t.ops).sum();
+        let name = format!("serve/{label}");
+        let r = bench(&name, warmup(1), iters(8), || {
+            black_box(run_serve(&topo, &spec, Params::default()).unwrap());
+        });
+        println!("{}   ({:.0} jobs/s)", r.report_line(), jobs as f64 / r.mean_s);
+    }
+
+    // wall-clock: fault-timeline ensemble over one serving DAG, warm
+    // delta replay vs cold re-simulation (DESIGN.md §16/§17). Quick
+    // mode gates the ratio at >= 2x; BENCH_serve.json records the
+    // deterministic work-unit counterpart in its delta_sim subtree.
+    let (label, topo, spec) = bench_cases(SEED).remove(0);
+    let sd = ServeDelta::record(&topo, &spec, Params::default())
+        .expect("bench spec must validate");
+    let makespan = sd.run(&[]).makespan;
+    let ens = delta_ensemble(&topo, makespan, SEED);
+    let warm = bench(&format!("serve/delta-warm/{label}"), warmup(1), iters(8), || {
+        for faults in &ens {
+            black_box(sd.run(faults));
+        }
+    });
+    println!("{}", warm.report_line());
+    let cold = bench(&format!("serve/delta-cold/{label}"), warmup(1), iters(2), || {
+        for faults in &ens {
+            black_box(sd.run_cold(faults));
+        }
+    });
+    println!("{}", cold.report_line());
+    let speedup = cold.mean_s / warm.mean_s;
+    println!("  -> delta-sim speedup over cold re-simulation: {speedup:.2}x");
+    for faults in &ens {
+        let rel = (sd.run(faults).makespan - sd.run_cold(faults).makespan).abs()
+            / sd.run_cold(faults).makespan.max(1e-300);
+        assert!(rel < 1e-9, "warm-vs-cold serve divergence: {rel}");
+    }
+    if quick_mode() {
+        assert!(speedup >= 2.0, "delta-sim quick gate: {speedup:.2}x < 2x");
+    }
+
+    if json_out {
+        let doc = bench_doc(SEED);
+        let path = if quick_mode() {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.quick.json")
+        } else {
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json")
+        };
+        std::fs::write(path, doc.render() + "\n").expect("write BENCH_serve json");
+        println!("\nwrote {path}");
+    }
+}

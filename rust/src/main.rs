@@ -16,8 +16,8 @@ use agv_bench::cpals::driver::Driver;
 use agv_bench::osu::distributions::Distribution;
 use agv_bench::perturb::{self, EnsembleCfg, Perturbation};
 use agv_bench::report::{
-    auto as report_auto, faults as report_faults, fig2, fig3, findings, table1,
-    workload as report_workload, write_csv,
+    auto as report_auto, faults as report_faults, fig2, fig3, findings,
+    serve as report_serve, table1, workload as report_workload, write_csv,
 };
 use agv_bench::runtime::{default_artifacts_dir, Runtime};
 use agv_bench::tensor::messages::mode_counts;
@@ -25,7 +25,10 @@ use agv_bench::tensor::{datasets, synth};
 use agv_bench::topology::systems::{SystemKind, SystemSpec};
 use agv_bench::util::cli::{parse_bytes, Args};
 use agv_bench::util::{fmt_bytes, fmt_time};
-use agv_bench::workload::{parse_trace, run_workload_recovered, OpStream, TenantLib, WorkloadSpec};
+use agv_bench::workload::{
+    parse_trace, run_serve, run_workload_recovered, ArrivalProcess, OpStream, QueuePolicy,
+    ServeSpec, TenantLib, WorkloadSpec,
+};
 
 const HELP: &str = "\
 agv — reproduction of 'An Empirical Evaluation of Allgatherv on Multi-GPU Systems' (CCGRID'18)
@@ -73,6 +76,16 @@ COMMANDS
                                re-issued via timeout-retry-reroute-shrink and the
                                run reports goodput + recovery-latency SLOs)
 
+  serve [--system S|all] [--tenants K] [--jobs N] [--lib L|auto] [--gpus N]
+        [--total BYTES] [--dist D] [--rate R] [--policy fifo|fair|reject]
+        [--depth K] [--seed N] [--csv-dir DIR]
+                               open-loop serving study: jobs arrive via seeded Poisson
+                               streams, pass admission control (fifo/fair window, or
+                               reject-on-depth), run on the shared fabric; without
+                               --rate sweeps offered load and reports the p95 knee
+                               capacity per system; --rate R pins one offered load
+                               (R jobs/s per tenant; --rate 0 = the closed-loop limit,
+                               bit-exact to the workload engine)
   collective [--op O] [--system S] [--gpus N] [--total BYTES] [--chunks K]
              [--root R] [--seed N] [--perturb SPEC]
                                op-generic collective study (O: allgatherv|allreduce|
@@ -110,6 +123,12 @@ fn main() {
         "workload" => {
             if let Err(e) = cmd_workload(&args) {
                 eprintln!("workload failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        "serve" => {
+            if let Err(e) = cmd_serve(&args) {
+                eprintln!("serve failed: {e:#}");
                 std::process::exit(1);
             }
         }
@@ -931,6 +950,140 @@ fn cmd_workload(args: &Args) -> agv_bench::util::error::Result<()> {
     if let Some(dir) = csv_dir(args) {
         let p = write_csv(&dir, "workload.csv", &report_workload::csv(&sections))?;
         eprintln!("wrote {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> agv_bench::util::error::Result<()> {
+    // usage errors (malformed numerics, unknown enum values) exit 2
+    // before any simulation; runtime failures return Err (exit 1)
+    let tenants = num_arg(args.get_usize("tenants", 2));
+    let jobs = num_arg(args.get_usize("jobs", 8));
+    let seed = num_arg(args.get_u64("seed", 42));
+    let depth = num_arg(args.get_usize("depth", 4));
+    if depth == 0 {
+        eprintln!("--depth must be at least 1");
+        std::process::exit(2);
+    }
+    let rate = args.get("rate").map(|_| num_arg(args.get_f64("rate", 0.0)));
+    if let Some(r) = rate {
+        if !r.is_finite() || r < 0.0 {
+            eprintln!("--rate must be finite non-negative jobs/second per tenant, got {r}");
+            std::process::exit(2);
+        }
+    }
+    let policy = {
+        let s = args.get_or("policy", "fifo");
+        QueuePolicy::parse(s, depth).unwrap_or_else(|| {
+            eprintln!("unknown policy `{s}` (fifo|fair|reject)");
+            std::process::exit(2);
+        })
+    };
+    let lib = {
+        let s = args.get_or("lib", "nccl");
+        TenantLib::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown library `{s}` (mpi|mpi-cuda|nccl|auto)");
+            std::process::exit(2);
+        })
+    };
+    let total = match args.get("total") {
+        Some(s) => parse_bytes(s).unwrap_or_else(|| {
+            eprintln!("--total: bad size `{s}`");
+            std::process::exit(2);
+        }),
+        None => 4 << 20,
+    };
+    let dist = args.get("dist").map(|s| {
+        Distribution::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown distribution `{s}` (uniform|linear|geometric|spike|random-zipf)");
+            std::process::exit(2);
+        })
+    });
+    let gpus_flag = args.get("gpus").map(|_| num_arg(args.get_usize("gpus", 8)));
+    let systems: Vec<SystemSpec> = match args.get_or("system", "all") {
+        "all" => SystemSpec::paper_all().to_vec(),
+        s => vec![parse_system(s)],
+    };
+
+    let mk_spec = |max_gpus: usize| -> ServeSpec {
+        let gpus = gpus_flag.unwrap_or(max_gpus.min(8));
+        let mut spec = ServeSpec::synthetic(
+            tenants,
+            jobs,
+            gpus,
+            lib.clone(),
+            total,
+            seed,
+            // placeholder: the sweep overrides per rho, the pinned
+            // path overrides with --rate
+            ArrivalProcess::Poisson { rate: 1.0 },
+            policy,
+        );
+        if let Some(d) = dist {
+            for t in &mut spec.workload.tenants {
+                if let OpStream::Distribution { dist, .. } = &mut t.stream {
+                    *dist = d;
+                }
+            }
+        }
+        spec
+    };
+
+    match rate {
+        // no --rate: sweep offered load against each system's own
+        // saturation rate and report the p95 knee capacity
+        None => {
+            let sections = report_serve::study(
+                &systems,
+                Params::default(),
+                &report_serve::DEFAULT_RHOS,
+                mk_spec,
+            )?;
+            print!("{}", report_serve::render(&sections));
+            if let Some(dir) = csv_dir(args) {
+                let p = write_csv(&dir, "serve.csv", &report_serve::csv(&sections))?;
+                eprintln!("wrote {}", p.display());
+            }
+        }
+        // --rate R: one pinned offered load per system (R = 0 is the
+        // closed-loop limit, bit-exact to the workload engine)
+        Some(r) => {
+            println!(
+                "SERVE — {} per tenant, policy {}, {tenants} tenants x {jobs} jobs",
+                if r == 0.0 {
+                    "closed loop (zero arrival rate)".to_string()
+                } else {
+                    format!("poisson {r} jobs/s")
+                },
+                policy.label(),
+            );
+            for &kind in &systems {
+                let topo = kind.build();
+                let mut spec = mk_spec(topo.num_gpus());
+                spec.arrivals = ArrivalProcess::from_rate(r);
+                let res = run_serve(&topo, &spec, Params::default())?;
+                println!(
+                    "== {} — {} completed, {} rejected ({} warm-up), makespan {} ==",
+                    kind.name(),
+                    res.completed,
+                    res.rejected,
+                    res.warmup_jobs,
+                    fmt_time(res.makespan),
+                );
+                println!(
+                    "  latency p50 {}  p95 {}  p99.9 {}  mean {}  wait {}",
+                    fmt_time(res.p50),
+                    fmt_time(res.p95),
+                    fmt_time(res.p999),
+                    fmt_time(res.mean_latency),
+                    fmt_time(res.mean_wait),
+                );
+                println!(
+                    "  offered {:.2} jobs/s, served {:.2} jobs/s, {} flows",
+                    res.offered_rate, res.throughput, res.flows
+                );
+            }
+        }
     }
     Ok(())
 }

@@ -11,6 +11,7 @@ pub mod faults;
 pub mod fig2;
 pub mod fig3;
 pub mod findings;
+pub mod serve;
 pub mod table1;
 pub mod workload;
 

@@ -1,0 +1,298 @@
+//! Serving-capacity study: latency vs offered load per system, with
+//! the p95 knee point (DESIGN.md §17). Rendered by `agv serve`.
+//!
+//! Each system plans its op streams once, derives a saturation rate
+//! from its own isolated service time, then sweeps Poisson offered
+//! load over a rho grid (fractions of saturation) re-composing the
+//! serving DAG per point. The knee is the last point whose p95 stays
+//! within [`crate::workload::serve::KNEE_FACTOR`] of the lowest-load
+//! p95 — the fabric's practical serving capacity.
+
+use crate::comm::Params;
+use crate::topology::systems::SystemSpec;
+use crate::topology::Topology;
+use crate::util::fmt_time;
+use crate::util::error::Result;
+use crate::workload::serve::{self, knee_index, ArrivalProcess, ServeSpec, KNEE_FACTOR};
+use crate::workload::engine;
+
+/// Offered-load fractions of saturation swept by the default study.
+pub const DEFAULT_RHOS: [f64; 6] = [0.2, 0.4, 0.6, 0.8, 1.0, 1.2];
+
+/// One offered-load point of a system's capacity curve.
+#[derive(Clone, Debug)]
+pub struct LoadPoint {
+    /// Fraction of the system's saturation rate.
+    pub rho: f64,
+    /// Poisson rate per tenant (jobs/second).
+    pub rate: f64,
+    /// Aggregate offered load (jobs/second across tenants).
+    pub offered: f64,
+    /// Steady-state median response latency (seconds).
+    pub p50: f64,
+    /// Steady-state 95th-percentile response latency.
+    pub p95: f64,
+    /// Steady-state 99.9th-percentile response latency.
+    pub p999: f64,
+    /// Completed jobs per second of makespan.
+    pub throughput: f64,
+    /// Jobs that completed.
+    pub completed: usize,
+    /// Jobs admission rejected.
+    pub rejected: usize,
+    /// Completed jobs dropped as warm-up transient.
+    pub warmup: usize,
+}
+
+/// One system's section of the serving study.
+#[derive(Clone, Debug)]
+pub struct ServeSection {
+    /// System name.
+    pub system: String,
+    /// Ranks each job spans.
+    pub gpus: usize,
+    /// Admission policy label.
+    pub policy: String,
+    /// Tenants sharing the fabric.
+    pub tenants: usize,
+    /// Job horizon per tenant.
+    pub jobs: usize,
+    /// Saturation rate per tenant, 1 / (tenants * isolated service time).
+    pub saturation: f64,
+    /// The sweep, ascending offered load.
+    pub points: Vec<LoadPoint>,
+    /// Index of the knee point in `points`.
+    pub knee: usize,
+}
+
+/// Sweep one serving spec over `rhos` fractions of the system's
+/// saturation rate. The base spec's arrival process is overridden per
+/// point; its policy, tenants, and streams are kept.
+pub fn section(
+    topo: &Topology,
+    base: &ServeSpec,
+    rhos: &[f64],
+    params: Params,
+) -> Result<ServeSection> {
+    base.validate(topo)?;
+    // one planning pass feeds every load point — plans depend only on
+    // counts and libraries, never on the arrival process
+    let plans = engine::plan(topo, &base.workload, params)?;
+    let s0 = serve::base_service_time(topo, params, &plans);
+    let tenants = base.workload.tenants.len();
+    let sat = 1.0 / (tenants as f64 * s0);
+    let gpus = base.workload.tenants.iter().map(|t| t.stream.gpus()).max().unwrap_or(0);
+    let mut points = Vec::with_capacity(rhos.len());
+    for &rho in rhos {
+        let mut spec = base.clone();
+        spec.arrivals = ArrivalProcess::Poisson { rate: rho * sat };
+        let r = serve::run_serve_planned(topo, &spec, params, &plans);
+        points.push(LoadPoint {
+            rho,
+            rate: rho * sat,
+            offered: r.offered_rate,
+            p50: r.p50,
+            p95: r.p95,
+            p999: r.p999,
+            throughput: r.throughput,
+            completed: r.completed,
+            rejected: r.rejected,
+            warmup: r.warmup_jobs,
+        });
+    }
+    let p95s: Vec<f64> = points.iter().map(|p| p.p95).collect();
+    let knee = knee_index(&p95s, KNEE_FACTOR);
+    Ok(ServeSection {
+        system: topo.name.clone(),
+        gpus,
+        policy: base.policy.label(),
+        tenants,
+        jobs: base.workload.tenants.first().map(|t| t.ops).unwrap_or(0),
+        saturation: sat,
+        points,
+        knee,
+    })
+}
+
+/// The default study: the same serving shape on each system (sections
+/// fan out over the bounded worker pool, results in system order).
+/// `mk_spec` receives the system's GPU budget so specs can adapt rank
+/// counts.
+pub fn study(
+    systems: &[SystemSpec],
+    params: Params,
+    rhos: &[f64],
+    mk_spec: impl Fn(usize) -> ServeSpec + Sync,
+) -> Result<Vec<ServeSection>> {
+    let jobs: Vec<_> = systems
+        .iter()
+        .map(|&spec| {
+            let mk = &mk_spec;
+            move || {
+                let topo = spec.build();
+                let sspec = mk(topo.num_gpus());
+                section(&topo, &sspec, rhos, params)
+            }
+        })
+        .collect();
+    crate::util::pool::parallel_map(jobs).into_iter().collect()
+}
+
+/// Render the study as text tables, one section per system.
+pub fn render(sections: &[ServeSection]) -> String {
+    let mut out = String::new();
+    out.push_str("SERVE — open-loop serving capacity: latency vs offered load, p95 knee\n");
+    for s in sections {
+        out.push_str(&format!(
+            "\n== {} @ {} GPUs/job — {} tenants x {} jobs, policy {}, saturation {:.1} jobs/s ==\n",
+            s.system,
+            s.gpus,
+            s.tenants,
+            s.jobs,
+            s.policy,
+            s.saturation * s.tenants as f64,
+        ));
+        out.push_str(&format!(
+            "{:>5} {:>12} {:>12} {:>12} {:>12} {:>12} {:>5} {:>4} {:>5}\n",
+            "rho", "offered/s", "p50", "p95", "p99.9", "thruput/s", "done", "rej", "knee"
+        ));
+        for (i, p) in s.points.iter().enumerate() {
+            out.push_str(&format!(
+                "{:>5.2} {:>12.2} {:>12} {:>12} {:>12} {:>12.2} {:>5} {:>4} {:>5}\n",
+                p.rho,
+                p.offered,
+                fmt_time(p.p50),
+                fmt_time(p.p95),
+                fmt_time(p.p999),
+                p.throughput,
+                p.completed,
+                p.rejected,
+                if i == s.knee { "<==" } else { "" },
+            ));
+        }
+    }
+    if !sections.is_empty() {
+        out.push_str("\ncapacity verdict:\n");
+        for s in sections {
+            let k = &s.points[s.knee];
+            out.push_str(&format!(
+                "  {:<14} knee at rho {:.2} — {:.2} jobs/s offered, p95 {}\n",
+                s.system,
+                k.rho,
+                k.offered,
+                fmt_time(k.p95),
+            ));
+        }
+    }
+    out
+}
+
+/// CSV form of the study (one row per load point).
+pub fn csv(sections: &[ServeSection]) -> String {
+    let mut out = String::from(
+        "system,gpus,policy,tenants,jobs,rho,rate_per_tenant_hz,offered_hz,p50_s,p95_s,\
+         p999_s,throughput_hz,completed,rejected,warmup_jobs,knee\n",
+    );
+    for s in sections {
+        for (i, p) in s.points.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{},{},{},{},{:.2},{:.6},{:.6},{:.9},{:.9},{:.9},{:.6},{},{},{},{}\n",
+                s.system,
+                s.gpus,
+                s.policy,
+                s.tenants,
+                s.jobs,
+                p.rho,
+                p.rate,
+                p.offered,
+                p.p50,
+                p.p95,
+                p.p999,
+                p.throughput,
+                p.completed,
+                p.rejected,
+                p.warmup,
+                (i == s.knee) as u8,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Library;
+    use crate::workload::serve::QueuePolicy;
+    use crate::workload::TenantLib;
+
+    fn small_spec(gpus: usize) -> ServeSpec {
+        ServeSpec::synthetic(
+            2,
+            6,
+            gpus.min(4),
+            TenantLib::Fixed(Library::Nccl),
+            2 << 20,
+            13,
+            ArrivalProcess::Poisson { rate: 1.0 },
+            QueuePolicy::Fifo { depth: 4 },
+        )
+    }
+
+    #[test]
+    fn study_renders_all_systems_with_a_knee() {
+        let rhos = [0.25, 1.0, 1.5];
+        let secs =
+            study(&SystemSpec::paper_all(), Params::default(), &rhos, small_spec).unwrap();
+        assert_eq!(secs.len(), 3);
+        let text = render(&secs);
+        for k in SystemSpec::paper_all() {
+            assert!(text.contains(k.name().as_str()), "{k:?} missing:\n{text}");
+        }
+        assert!(text.contains("SERVE"));
+        assert!(text.contains("knee"));
+        for s in &secs {
+            assert_eq!(s.points.len(), rhos.len());
+            assert!(s.saturation > 0.0);
+            assert!(s.knee < s.points.len());
+            for p in &s.points {
+                assert!(p.p50 > 0.0 && p.p95 >= p.p50 && p.p999 >= p.p95, "{}", s.system);
+                assert!(p.completed > 0);
+            }
+            // offered load ascends with rho
+            for w in s.points.windows(2) {
+                assert!(w[1].offered > w[0].offered);
+            }
+        }
+        let c = csv(&secs);
+        assert_eq!(c.lines().count(), 1 + 3 * rhos.len());
+        assert!(c.starts_with("system,"));
+        assert_eq!(c.matches(",1\n").count(), 3, "exactly one knee row per system");
+    }
+
+    #[test]
+    fn study_runs_on_parametric_fabrics() {
+        let systems = [
+            SystemSpec::MultiPlanePod { nodes: 2, gpus: 4, rails: 2 },
+            SystemSpec::FatTree { k: 4 },
+        ];
+        let secs = study(&systems, Params::default(), &[0.5, 1.0], small_spec).unwrap();
+        assert_eq!(secs.len(), 2);
+        assert_eq!(secs[0].system, "pod-2x4x2");
+        assert_eq!(secs[1].system, "fat-tree-k4");
+        for s in &secs {
+            assert!(!s.system.contains(','), "{}", s.system);
+            assert!(s.points.iter().all(|p| p.completed > 0), "{}: empty curve", s.system);
+        }
+    }
+
+    #[test]
+    fn section_is_deterministic() {
+        let topo = SystemSpec::parse("dgx1").unwrap().build();
+        let spec = small_spec(8);
+        let a = section(&topo, &spec, &DEFAULT_RHOS, Params::default()).unwrap();
+        let b = section(&topo, &spec, &DEFAULT_RHOS, Params::default()).unwrap();
+        assert_eq!(render(&[a.clone()]), render(&[b.clone()]));
+        assert_eq!(csv(&[a]), csv(&[b]));
+    }
+}

@@ -239,7 +239,11 @@ pub enum SimOutcome {
     Stalled {
         /// Virtual time at which progress stopped (finite).
         time: f64,
-        /// Tasks that never completed, in task order.
+        /// Tasks that never completed, **sorted ascending and deduped**
+        /// — consumers binary-search this (`workload::slo` classifies a
+        /// job as completed iff its `done` task is absent). Every
+        /// engine builds the variant through [`SimOutcome::stalled`],
+        /// which enforces the ordering contract.
         stuck_tasks: Vec<TaskId>,
         /// Active flows frozen at rate zero with bytes remaining.
         starved_flows: usize,
@@ -249,6 +253,26 @@ pub enum SimOutcome {
 }
 
 impl SimOutcome {
+    /// Build a stall diagnosis, normalizing the container contracts:
+    /// `stuck_tasks` comes out sorted ascending and deduped (callers
+    /// binary-search it — an unsorted diagnosis would silently
+    /// misclassify stuck ops as completed and inflate goodput), and
+    /// `culprit_links` comes out sorted and deduped. All three engines
+    /// (event-driven, reference, sharded merge) construct `Stalled`
+    /// exclusively through here so the contract cannot drift per
+    /// construction site.
+    pub fn stalled(
+        time: f64,
+        mut stuck_tasks: Vec<TaskId>,
+        starved_flows: usize,
+        mut culprit_links: Vec<LinkId>,
+    ) -> SimOutcome {
+        stuck_tasks.sort_unstable();
+        stuck_tasks.dedup();
+        culprit_links.sort_unstable();
+        culprit_links.dedup();
+        SimOutcome::Stalled { time, stuck_tasks, starved_flows, culprit_links }
+    }
     /// Did every task complete?
     pub fn is_completed(&self) -> bool {
         matches!(self, SimOutcome::Completed { .. })
@@ -950,20 +974,13 @@ impl<'t> Sim<'t> {
                             .extend(f.linkdirs.iter().filter(|&&ld| caps[ld] <= 0.0).map(|&ld| ld / 2));
                     }
                 }
-                culprit_links.sort_unstable();
-                culprit_links.dedup();
                 let stuck_tasks: Vec<TaskId> = tasks
                     .iter()
                     .enumerate()
                     .filter(|(_, t)| t.finish.is_none())
                     .map(|(id, _)| id)
                     .collect();
-                stalled = Some(SimOutcome::Stalled {
-                    time: now,
-                    stuck_tasks,
-                    starved_flows,
-                    culprit_links,
-                });
+                stalled = Some(SimOutcome::stalled(now, stuck_tasks, starved_flows, culprit_links));
                 break;
             }
             assert!(

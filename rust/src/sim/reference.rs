@@ -247,20 +247,13 @@ impl<'t> Sim<'t> {
                             .extend(f.linkdirs.iter().filter(|&&ld| caps[ld] <= 0.0).map(|&ld| ld / 2));
                     }
                 }
-                culprit_links.sort_unstable();
-                culprit_links.dedup();
                 let stuck_tasks: Vec<usize> = tasks
                     .iter()
                     .enumerate()
                     .filter(|(_, t)| t.finish.is_none())
                     .map(|(id, _)| id)
                     .collect();
-                stalled = Some(SimOutcome::Stalled {
-                    time: now,
-                    stuck_tasks,
-                    starved_flows,
-                    culprit_links,
-                });
+                stalled = Some(SimOutcome::stalled(now, stuck_tasks, starved_flows, culprit_links));
                 break;
             }
             assert!(

@@ -275,20 +275,16 @@ pub fn run_sharded(
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
         (SimOutcome::Completed { time: makespan }, makespan)
     } else {
+        // SimOutcome::stalled owns the sort/dedup contract; sort the
+        // local copy too so the finish overwrite below stays in task
+        // order (deterministic float folds).
         stuck_tasks.sort_unstable();
-        culprit_links.sort_unstable();
-        culprit_links.dedup();
         for &gi in &stuck_tasks {
             finish[gi] = terminal; // unsharded semantics: stall instant
         }
         let makespan = finish.iter().cloned().fold(0.0, f64::max);
         (
-            SimOutcome::Stalled {
-                time: terminal,
-                stuck_tasks: stuck_tasks.clone(),
-                starved_flows,
-                culprit_links,
-            },
+            SimOutcome::stalled(terminal, stuck_tasks.clone(), starved_flows, culprit_links),
             makespan,
         )
     };

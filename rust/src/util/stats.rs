@@ -1,5 +1,15 @@
 //! Summary statistics: mean, std, CV (Table I's irregularity measure),
 //! min/max, percentiles.
+//!
+//! Every sorter here uses [`f64::total_cmp`] (never a panicking
+//! `partial_cmp().unwrap()`), and the fallible entry points
+//! ([`Summary::try_of`], [`try_percentile`]) reject empty and
+//! non-finite samples with a clean [`crate::util::error::Error`] — a
+//! NaN latency sample surfaces as a diagnosable error in the SLO
+//! reports instead of a sort panic deep inside the percentile kernel.
+
+use crate::anyhow;
+use crate::util::error::Result;
 
 /// Summary of a sample of non-negative measurements (message sizes, times).
 #[derive(Clone, Debug, PartialEq)]
@@ -23,8 +33,14 @@ pub struct Summary {
 
 impl Summary {
     /// Population statistics (ddof = 0), matching the paper's CV usage.
-    pub fn of(xs: &[f64]) -> Summary {
-        assert!(!xs.is_empty(), "Summary::of on empty sample");
+    /// Rejects empty samples and non-finite observations cleanly.
+    pub fn try_of(xs: &[f64]) -> Result<Summary> {
+        if xs.is_empty() {
+            return Err(anyhow!("Summary::of on empty sample"));
+        }
+        if let Some(bad) = xs.iter().find(|x| !x.is_finite()) {
+            return Err(anyhow!("Summary::of on non-finite sample value {bad}"));
+        }
         let n = xs.len();
         let sum: f64 = xs.iter().sum();
         let mean = sum / n as f64;
@@ -33,7 +49,16 @@ impl Summary {
         let cv = if mean != 0.0 { std / mean } else { 0.0 };
         let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        Summary { n, mean, std, cv, min, max, sum }
+        Ok(Summary { n, mean, std, cv, min, max, sum })
+    }
+
+    /// [`Summary::try_of`] for infallible call sites; panics with the
+    /// same clean message on empty or non-finite samples.
+    pub fn of(xs: &[f64]) -> Summary {
+        match Summary::try_of(xs) {
+            Ok(s) => s,
+            Err(e) => panic!("{e:#}"),
+        }
     }
 
     /// Max/min ratio — the paper's "25,400x difference" style metric.
@@ -46,19 +71,37 @@ impl Summary {
     }
 }
 
-/// q-th percentile (0..=100) by linear interpolation on a sorted copy.
-pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty());
-    assert!((0.0..=100.0).contains(&q));
+/// q-th percentile (0..=100) by linear interpolation on a sorted copy
+/// (total order via [`f64::total_cmp`]). Rejects empty samples,
+/// out-of-range ranks, and non-finite observations cleanly.
+pub fn try_percentile(xs: &[f64], q: f64) -> Result<f64> {
+    if xs.is_empty() {
+        return Err(anyhow!("percentile of empty sample"));
+    }
+    if !(0.0..=100.0).contains(&q) {
+        return Err(anyhow!("percentile rank {q} outside 0..=100"));
+    }
+    if let Some(bad) = xs.iter().find(|x| !x.is_finite()) {
+        return Err(anyhow!("percentile over non-finite sample value {bad}"));
+    }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let pos = q / 100.0 * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
-    if lo == hi {
+    Ok(if lo == hi {
         s[lo]
     } else {
         s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    })
+}
+
+/// [`try_percentile`] for infallible call sites; panics with the same
+/// clean message on invalid input.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    match try_percentile(xs, q) {
+        Ok(v) => v,
+        Err(e) => panic!("{e:#}"),
     }
 }
 
@@ -105,6 +148,30 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_samples_are_clean_errors() {
+        // pre-fix: partial_cmp().unwrap() panicked inside sort on NaN
+        let err = try_percentile(&[1.0, f64::NAN, 3.0], 50.0).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        let err = try_percentile(&[1.0, f64::INFINITY], 50.0).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        let err = Summary::try_of(&[0.0, f64::NEG_INFINITY]).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        let err = try_percentile(&[], 50.0).unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "{err:#}");
+        let err = try_percentile(&[1.0], 101.0).unwrap_err();
+        assert!(format!("{err:#}").contains("outside"), "{err:#}");
+        // finite inputs unaffected by the total_cmp switch
+        assert_eq!(try_percentile(&[3.0, 1.0, 2.0], 100.0).unwrap(), 3.0);
+        assert_eq!(try_percentile(&[-0.0, 0.0], 0.0).unwrap(), -0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn percentile_nan_panics_with_clean_message() {
+        let _ = percentile(&[f64::NAN], 50.0);
     }
 
     #[test]

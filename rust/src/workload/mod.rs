@@ -34,7 +34,15 @@
 //!   vs aborted ops, recovery-latency percentiles (DESIGN.md §14);
 //! - [`bench`]: the deterministic measurement grid behind
 //!   `bench_workload` / `BENCH_workload.json` (simulated metrics only,
-//!   so the artifact is byte-reproducible from its seed).
+//!   so the artifact is byte-reproducible from its seed);
+//! - [`serve`]: the open-loop serving engine (`agv serve`,
+//!   DESIGN.md §17) — jobs arrive via seeded Poisson or trace
+//!   inter-arrival streams, pass an admission policy (FIFO / per-tenant
+//!   fair / reject-on-depth), and execute on the shared fabric;
+//!   steady-state tail latencies (MSER warm-up truncation) and
+//!   knee-point capacity curves come out of `bench_serve` /
+//!   `BENCH_serve.json`. Its zero-arrival-rate limit is bit-exact to
+//!   [`run_workload`] per library × system on both engines.
 //!
 //! The anchor contract, pinned by `tests/workload_differential.rs`: a
 //! 1-tenant, 1-op workload with zero arrival offset builds the *task-
@@ -45,6 +53,7 @@
 
 pub mod bench;
 pub mod engine;
+pub mod serve;
 pub mod slo;
 pub mod spec;
 pub mod trace;
@@ -52,6 +61,9 @@ pub mod trace;
 pub use engine::{
     isolated_times, run_workload, run_workload_with_baseline, OpRecord, TenantResult,
     WorkloadDelta, WorkloadResult,
+};
+pub use serve::{
+    run_serve, ArrivalProcess, JobRecord, QueuePolicy, ServeDelta, ServeResult, ServeSpec,
 };
 pub use slo::{run_workload_recovered, RecoveredWorkload, ReissuedOp, WorkloadSlo};
 pub use spec::{OpStream, TenantLib, TenantSpec, WorkloadSpec};

@@ -1,0 +1,1207 @@
+//! Open-loop serving engine: jobs arrive via seeded Poisson or trace
+//! inter-arrival streams, pass an admission/queueing policy, and
+//! execute as collectives on the shared fabric (DESIGN.md §17).
+//!
+//! The closed-loop workload engine ([`super::engine`]) replays a fixed
+//! tenant list to completion — it can say how long a batch takes, but
+//! not the production question: at what offered load does a fabric's
+//! tail latency knee over? This module reframes the same planned op
+//! streams as a long-running service:
+//!
+//! - **Arrivals** ([`ArrivalProcess`]): per tenant, job k arrives at an
+//!   absolute instant `t_k = t_{k-1} + arrival_delay(k) + open_gap(k)`
+//!   where `open_gap` is an Exp(rate) draw (Poisson) or a cycled trace
+//!   gap. Both draws come from the tenant's **one** arrival RNG stream
+//!   in a fixed per-job order — which is exactly why
+//!   [`super::spec::TenantSpec::arrival_delay`] must consume a draw
+//!   unconditionally (the PR 10 draw-stability fix): a zero-jitter
+//!   tenant would otherwise shift every inter-arrival sample.
+//! - **Admission** ([`QueuePolicy`]): FIFO (global sliding window of
+//!   `depth` jobs in service), per-tenant fair (window per tenant), or
+//!   reject-on-depth (per-tenant serialized service with a bounded
+//!   system: a job arriving while `depth` jobs are already waiting or
+//!   in flight is rejected). Rejection verdicts are decided on a
+//!   pristine pass (congestion-pessimistic single iteration, see
+//!   [`compose_serve`]) so they are deterministic and fault-invariant.
+//! - **Warm-up** ([`warmup_cutoff`]): the MSER truncation rule on the
+//!   completion-ordered latency series drops the transient prefix
+//!   before percentiles are computed.
+//! - **Warm-start** ([`ServeDelta`]): the serving DAG is composed and
+//!   cold-simulated once; fault-timeline ensembles then replay against
+//!   the recorded baseline via [`crate::perturb::DeltaSim`]
+//!   (DESIGN.md §16), so a long horizon amortizes baseline recording
+//!   instead of re-simulating per scenario.
+//!
+//! The anchor contract (ROADMAP item 2, pinned in
+//! `tests/workload_determinism.rs` on both engines): at zero arrival
+//! rate ([`ArrivalProcess::Closed`]) the engine delegates composition
+//! verbatim to [`super::engine`]'s `compose_workload`, building the
+//! task-for-task identical DAG — so the closed-loop limit is bit-exact
+//! to [`super::run_workload`] per library × system.
+
+use crate::anyhow;
+use crate::comm::Params;
+use crate::sim::{Sim, SimResult, TaskId};
+use crate::topology::Topology;
+use crate::util::error::Result;
+use crate::util::stats::percentile;
+
+use super::engine::{self, PlannedOp};
+use super::spec::WorkloadSpec;
+
+/// How jobs arrive at the service.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// The zero-arrival-rate limit: no open-loop gaps at all — job k+1
+    /// gates on job k exactly as the closed-loop workload engine does.
+    /// Composition delegates to `compose_workload` verbatim, so this is
+    /// bit-exact to [`super::run_workload`] (the differential anchor).
+    Closed,
+    /// Seeded Poisson arrivals: each tenant adds an Exp(`rate`) draw to
+    /// every inter-arrival (jobs/second per tenant, finite and > 0).
+    Poisson {
+        /// Mean arrival rate per tenant, jobs per second.
+        rate: f64,
+    },
+    /// Explicit inter-arrival gaps (seconds), cycled when a tenant
+    /// issues more jobs than the trace holds.
+    Trace {
+        /// Inter-arrival gaps, all finite and non-negative.
+        gaps: Vec<f64>,
+    },
+}
+
+impl ArrivalProcess {
+    /// `--rate` semantics: 0 is the closed-loop limit, anything
+    /// positive is Poisson. (The CLI rejects negative/non-finite rates
+    /// before this.)
+    pub fn from_rate(rate: f64) -> ArrivalProcess {
+        if rate == 0.0 {
+            ArrivalProcess::Closed
+        } else {
+            ArrivalProcess::Poisson { rate }
+        }
+    }
+
+    /// Report label ("closed", "poisson(250/s)", "trace(8)").
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Closed => "closed".to_string(),
+            ArrivalProcess::Poisson { rate } => format!("poisson({rate:.1}/s)"),
+            ArrivalProcess::Trace { gaps } => format!("trace({})", gaps.len()),
+        }
+    }
+}
+
+/// Admission-control / queueing policy of the service.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Global FIFO window: at most `depth` jobs (across all tenants,
+    /// in arrival order) in service at once; later jobs queue.
+    Fifo {
+        /// Jobs in service at once.
+        depth: usize,
+    },
+    /// Per-tenant fair window: each tenant independently keeps up to
+    /// `depth` of its own jobs in service — one tenant's burst cannot
+    /// head-of-line-block another's.
+    Fair {
+        /// Jobs in service at once, per tenant.
+        depth: usize,
+    },
+    /// Bounded per-tenant system: service is serialized per tenant and
+    /// a job arriving while `depth` jobs are already in the system
+    /// (waiting + in flight) is rejected outright.
+    RejectOnDepth {
+        /// Maximum jobs in system per tenant.
+        depth: usize,
+    },
+}
+
+impl QueuePolicy {
+    /// Parse a `--policy` value ("fifo", "fair", "reject") with the
+    /// given window depth.
+    pub fn parse(s: &str, depth: usize) -> Option<QueuePolicy> {
+        if s.eq_ignore_ascii_case("fifo") {
+            Some(QueuePolicy::Fifo { depth })
+        } else if s.eq_ignore_ascii_case("fair") {
+            Some(QueuePolicy::Fair { depth })
+        } else if s.eq_ignore_ascii_case("reject") {
+            Some(QueuePolicy::RejectOnDepth { depth })
+        } else {
+            None
+        }
+    }
+
+    /// The policy's window depth.
+    pub fn depth(&self) -> usize {
+        match self {
+            QueuePolicy::Fifo { depth }
+            | QueuePolicy::Fair { depth }
+            | QueuePolicy::RejectOnDepth { depth } => *depth,
+        }
+    }
+
+    /// Report label ("fifo(4)", "fair(4)", "reject(4)").
+    pub fn label(&self) -> String {
+        match self {
+            QueuePolicy::Fifo { depth } => format!("fifo({depth})"),
+            QueuePolicy::Fair { depth } => format!("fair({depth})"),
+            QueuePolicy::RejectOnDepth { depth } => format!("reject({depth})"),
+        }
+    }
+}
+
+/// A complete serving configuration: the tenants and their planned op
+/// streams ([`WorkloadSpec`] — `ops` is the job horizon per tenant),
+/// the arrival process, and the admission policy.
+#[derive(Clone, Debug)]
+pub struct ServeSpec {
+    /// Tenants, op streams, seed, and fault timeline. In open-loop
+    /// modes the spec's `start_offset`/`gap`/`jitter` act as a minimum
+    /// inter-arrival floor underneath the open-loop gaps.
+    pub workload: WorkloadSpec,
+    /// How jobs arrive.
+    pub arrivals: ArrivalProcess,
+    /// Admission policy. Ignored in [`ArrivalProcess::Closed`] mode,
+    /// where each tenant's own op chain is the only gating (the anchor
+    /// contract requires the closed DAG to be exactly the workload
+    /// engine's).
+    pub policy: QueuePolicy,
+}
+
+impl ServeSpec {
+    /// A synthetic open-loop serving spec: the §9 synthetic tenants
+    /// with their closed-loop pacing (start offsets and think-time
+    /// gaps) stripped, so arrivals are governed by the open-loop
+    /// process alone plus the seeded jitter.
+    #[allow(clippy::too_many_arguments)]
+    pub fn synthetic(
+        tenants: usize,
+        jobs: usize,
+        gpus: usize,
+        lib: super::spec::TenantLib,
+        total: u64,
+        seed: u64,
+        arrivals: ArrivalProcess,
+        policy: QueuePolicy,
+    ) -> ServeSpec {
+        let mut workload = WorkloadSpec::synthetic(tenants, jobs, gpus, lib, total, seed);
+        workload.name = format!("serve-{tenants}x{jobs}");
+        for t in &mut workload.tenants {
+            t.start_offset = 0.0;
+            t.gap = 0.0;
+        }
+        ServeSpec { workload, arrivals, policy }
+    }
+
+    /// Check the spec can run on `topo` (clean errors, CLI-surfaced).
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        self.workload.validate(topo)?;
+        if self.policy.depth() == 0 {
+            return Err(anyhow!(
+                "serve policy {}: depth must be >= 1",
+                self.policy.label()
+            ));
+        }
+        match &self.arrivals {
+            ArrivalProcess::Closed => {}
+            ArrivalProcess::Poisson { rate } => {
+                if !rate.is_finite() || *rate <= 0.0 {
+                    return Err(anyhow!(
+                        "poisson arrival rate must be finite and positive, got {rate}"
+                    ));
+                }
+            }
+            ArrivalProcess::Trace { gaps } => {
+                if gaps.is_empty() {
+                    return Err(anyhow!("trace arrivals need at least one inter-arrival gap"));
+                }
+                for (i, g) in gaps.iter().enumerate() {
+                    if !g.is_finite() || *g < 0.0 {
+                        return Err(anyhow!(
+                            "trace gap {i} must be finite and non-negative, got {g}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One job of the service, in (tenant, index) order.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    /// Index of the owning tenant in the spec.
+    pub tenant: usize,
+    /// Job index within the tenant's stream.
+    pub index: usize,
+    /// Library (or "LIB/algo") label that ran the job.
+    pub label: String,
+    /// Sum of the job's per-rank counts.
+    pub bytes: u64,
+    /// Absolute arrival instant (open-loop: the arrival stream; closed:
+    /// the instant the job's gate completed, matching
+    /// [`super::OpRecord::arrival`]).
+    pub arrival: f64,
+    /// Instant the admission gate released the job into service
+    /// (equals `arrival` when it never queued).
+    pub admitted: f64,
+    /// Completion instant; equals `arrival` for rejected jobs.
+    pub finish: f64,
+    /// Whether admission rejected the job ([`QueuePolicy::RejectOnDepth`]).
+    pub rejected: bool,
+    /// Point-to-point flows of the job's subgraph (0 if rejected).
+    pub flows: usize,
+}
+
+impl JobRecord {
+    /// Response time the client observed: queueing wait + service.
+    pub fn latency(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Queueing wait before admission.
+    pub fn wait(&self) -> f64 {
+        self.admitted - self.arrival
+    }
+}
+
+/// Aggregated outcome of one serving run. Percentiles are over the
+/// **steady-state** completion-ordered latency series (warm-up prefix
+/// dropped per [`warmup_cutoff`]).
+#[derive(Clone, Debug)]
+pub struct ServeResult {
+    /// Every job, in (tenant, index) order.
+    pub jobs: Vec<JobRecord>,
+    /// Jobs that completed (admitted and finished).
+    pub completed: usize,
+    /// Jobs admission rejected.
+    pub rejected: usize,
+    /// Completed jobs excluded from the percentiles as warm-up.
+    pub warmup_jobs: usize,
+    /// Aggregate offered load (jobs/second across all tenants; 0.0 in
+    /// closed mode).
+    pub offered_rate: f64,
+    /// Completed jobs per second of makespan.
+    pub throughput: f64,
+    /// Median steady-state response latency (seconds).
+    pub p50: f64,
+    /// 95th-percentile steady-state response latency.
+    pub p95: f64,
+    /// 99.9th-percentile steady-state response latency.
+    pub p999: f64,
+    /// Mean steady-state response latency.
+    pub mean_latency: f64,
+    /// Mean steady-state queueing wait.
+    pub mean_wait: f64,
+    /// Virtual time the last task of the serving DAG finished.
+    pub makespan: f64,
+    /// Total point-to-point flows simulated.
+    pub flows: usize,
+}
+
+/// One composed (or rejected) job awaiting execution: the static
+/// skeleton [`aggregate`] turns into a [`JobRecord`] once times exist.
+#[derive(Clone, Debug)]
+struct JobSkeleton {
+    tenant: usize,
+    index: usize,
+    label: String,
+    bytes: u64,
+    /// Static arrival instant (open-loop). Closed-loop jobs have none
+    /// and read their arrival off the gate task at collect time.
+    arrival: Option<f64>,
+    gate: Option<TaskId>,
+    /// `None` = rejected: the job composed no tasks at all.
+    done: Option<TaskId>,
+    flows: usize,
+}
+
+/// Per-job `(tenant, index, arrival)` in global arrival order (ties
+/// broken by tenant then index — deterministic total order).
+fn arrival_order(spec: &ServeSpec, plans: &[Vec<PlannedOp>]) -> Vec<(usize, usize, f64)> {
+    let mut order = Vec::new();
+    for (t, ten) in spec.workload.tenants.iter().enumerate() {
+        let mut rng = ten.arrival_rng(spec.workload.seed);
+        let mut now = 0.0f64;
+        for k in 0..plans[t].len() {
+            // one arrival_delay draw, then the open-loop gap draw, both
+            // on the tenant's single arrival stream (fixed draw order)
+            let mut d = ten.arrival_delay(k, &mut rng);
+            d += match &spec.arrivals {
+                ArrivalProcess::Closed => 0.0,
+                ArrivalProcess::Poisson { rate } => {
+                    // u in [0,1) => 1-u in (0,1] => a finite Exp(rate) draw
+                    let u = rng.next_f64();
+                    -(1.0 - u).ln() / rate
+                }
+                ArrivalProcess::Trace { gaps } => gaps[k % gaps.len()],
+            };
+            now += d;
+            order.push((t, k, now));
+        }
+    }
+    order.sort_by(|a, b| a.2.total_cmp(&b.2).then(a.0.cmp(&b.0)).then(a.1.cmp(&b.1)));
+    order
+}
+
+/// Compose the admitted jobs of an open-loop run into `sim`, in global
+/// arrival order. Each job gets an absolute arrival marker task and an
+/// admission gate joining the marker with its window predecessor's
+/// completion; the collective composes behind the gate via the planned
+/// op's compose entry point. Returns skeletons aligned to `order`.
+fn compose_open(
+    sim: &mut Sim,
+    params: Params,
+    spec: &ServeSpec,
+    plans: &[Vec<PlannedOp>],
+    order: &[(usize, usize, f64)],
+    admitted: &[bool],
+) -> Vec<JobSkeleton> {
+    let depth = spec.policy.depth();
+    let mut global_dones: Vec<TaskId> = Vec::new();
+    let mut tenant_dones: Vec<Vec<TaskId>> = vec![Vec::new(); plans.len()];
+    let mut out = Vec::with_capacity(order.len());
+    for (i, &(t, k, arrival)) in order.iter().enumerate() {
+        let op = &plans[t][k];
+        let bytes: u64 = op.counts.iter().sum();
+        if !admitted[i] {
+            out.push(JobSkeleton {
+                tenant: t,
+                index: k,
+                label: op.label.clone(),
+                bytes,
+                arrival: Some(arrival),
+                gate: None,
+                done: None,
+                flows: 0,
+            });
+            continue;
+        }
+        let arrive = sim.delay(arrival, &[]);
+        let pred = match spec.policy {
+            QueuePolicy::Fifo { .. } => {
+                global_dones.len().checked_sub(depth).map(|j| global_dones[j])
+            }
+            QueuePolicy::Fair { .. } => {
+                tenant_dones[t].len().checked_sub(depth).map(|j| tenant_dones[t][j])
+            }
+            // service is serialized per tenant; depth bounds the system
+            QueuePolicy::RejectOnDepth { .. } => tenant_dones[t].last().copied(),
+        };
+        let gate = match pred {
+            None => arrive,
+            Some(p) => sim.delay(0.0, &[arrive, p]),
+        };
+        let mark = sim.task_count();
+        let done = engine::compose_planned(sim, params, op, Some(gate));
+        let flows = sim.flow_tasks_since(mark);
+        global_dones.push(done);
+        tenant_dones[t].push(done);
+        out.push(JobSkeleton {
+            tenant: t,
+            index: k,
+            label: op.label.clone(),
+            bytes,
+            arrival: Some(arrival),
+            gate: Some(gate),
+            done: Some(done),
+            flows,
+        });
+    }
+    out
+}
+
+/// Reject-on-depth admission verdicts: iterate jobs in global arrival
+/// order and reject a job when its tenant already has `depth` accepted
+/// jobs in the system (arrived, not yet finished) at its arrival
+/// instant. In-system membership uses the all-admitted pristine pass's
+/// finish times, so verdicts are **congestion-pessimistic** (a job we
+/// reject here may have drained earlier once rejections thin the
+/// queue) and computed in a single iteration — deterministic, and
+/// independent of the fault timeline.
+fn reject_verdicts(
+    order: &[(usize, usize, f64)],
+    finishes: &[f64],
+    tenants: usize,
+    depth: usize,
+) -> Vec<bool> {
+    let mut accepted_fin: Vec<Vec<f64>> = vec![Vec::new(); tenants];
+    let mut admitted = Vec::with_capacity(order.len());
+    for (i, &(t, _, arrival)) in order.iter().enumerate() {
+        let in_system = accepted_fin[t].iter().filter(|&&f| f > arrival).count();
+        if in_system >= depth {
+            admitted.push(false);
+        } else {
+            accepted_fin[t].push(finishes[i]);
+            admitted.push(true);
+        }
+    }
+    admitted
+}
+
+/// Compose the whole service into `sim` and return job skeletons in
+/// (tenant, index) order. Closed mode delegates to the workload
+/// engine's `compose_workload` verbatim (the bit-exactness anchor);
+/// reject-on-depth first runs a pristine all-admitted pass in a
+/// scratch sim to decide verdicts, then composes only admitted jobs.
+fn compose_serve(
+    sim: &mut Sim,
+    spec: &ServeSpec,
+    params: Params,
+    plans: &[Vec<PlannedOp>],
+) -> Vec<JobSkeleton> {
+    let mut skel = match &spec.arrivals {
+        ArrivalProcess::Closed => engine::compose_workload(sim, &spec.workload, params, plans)
+            .into_iter()
+            .map(|p| JobSkeleton {
+                tenant: p.tenant,
+                index: p.index,
+                label: p.label,
+                bytes: p.bytes,
+                arrival: None,
+                gate: p.gate,
+                done: Some(p.done),
+                flows: p.flows,
+            })
+            .collect::<Vec<_>>(),
+        _ => {
+            let order = arrival_order(spec, plans);
+            let admitted = if let QueuePolicy::RejectOnDepth { depth } = spec.policy {
+                let mut scratch = Sim::new(sim.topology());
+                let all = vec![true; order.len()];
+                let skel1 = compose_open(&mut scratch, params, spec, plans, &order, &all);
+                let res1 = scratch.run();
+                let fin: Vec<f64> =
+                    skel1.iter().map(|s| res1.finish(s.done.expect("all admitted"))).collect();
+                reject_verdicts(&order, &fin, plans.len(), depth)
+            } else {
+                vec![true; order.len()]
+            };
+            compose_open(sim, params, spec, plans, &order, &admitted)
+        }
+    };
+    skel.sort_by(|a, b| (a.tenant, a.index).cmp(&(b.tenant, b.index)));
+    skel
+}
+
+/// Aggregate offered load of the spec (jobs/second across tenants).
+fn offered_rate(spec: &ServeSpec, skel: &[JobSkeleton]) -> f64 {
+    match &spec.arrivals {
+        ArrivalProcess::Closed => 0.0,
+        ArrivalProcess::Poisson { rate } => rate * spec.workload.tenants.len() as f64,
+        ArrivalProcess::Trace { .. } => {
+            let span = skel.iter().filter_map(|s| s.arrival).fold(0.0f64, f64::max);
+            if span > 0.0 {
+                skel.len() as f64 / span
+            } else {
+                0.0
+            }
+        }
+    }
+}
+
+/// MSER steady-state truncation: drop the transient prefix `d*` of a
+/// completion-ordered series, where `d*` minimizes
+/// `sum_{i>=d}(x_i - mean_{i>=d})^2 / (n-d)^2` over the first half of
+/// the series. Series shorter than 8 observations are kept whole.
+pub fn warmup_cutoff(xs: &[f64]) -> usize {
+    let n = xs.len();
+    if n < 8 {
+        return 0;
+    }
+    let mut scores = vec![f64::INFINITY; n];
+    let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+    for d in (0..n).rev() {
+        sum += xs[d];
+        sumsq += xs[d] * xs[d];
+        let m = (n - d) as f64;
+        let sse = (sumsq - sum * sum / m).max(0.0);
+        scores[d] = sse / (m * m);
+    }
+    let mut best = 0usize;
+    for (d, &s) in scores.iter().enumerate().take(n / 2 + 1) {
+        if s < scores[best] {
+            best = d;
+        }
+    }
+    best
+}
+
+/// p95 knee threshold: the knee is the last load point whose p95 stays
+/// within this factor of the lowest-load p95.
+pub const KNEE_FACTOR: f64 = 2.0;
+
+/// Index of the knee point on a load sweep's p95 series (ascending
+/// offered load): the last point before the first to exceed
+/// `factor * p95[0]`; the final point when none does.
+pub fn knee_index(p95: &[f64], factor: f64) -> usize {
+    assert!(!p95.is_empty() && factor >= 1.0);
+    let limit = factor * p95[0];
+    for (i, &v) in p95.iter().enumerate() {
+        if v > limit {
+            return i.saturating_sub(1);
+        }
+    }
+    p95.len() - 1
+}
+
+/// Turn a finished run into job records and steady-state aggregates.
+fn aggregate(offered: f64, res: &SimResult, skel: &[JobSkeleton]) -> ServeResult {
+    let jobs: Vec<JobRecord> = skel
+        .iter()
+        .map(|s| match s.done {
+            Some(done) => {
+                let arrival =
+                    s.arrival.unwrap_or_else(|| s.gate.map(|g| res.finish(g)).unwrap_or(0.0));
+                let admitted = s.gate.map(|g| res.finish(g)).unwrap_or(arrival);
+                JobRecord {
+                    tenant: s.tenant,
+                    index: s.index,
+                    label: s.label.clone(),
+                    bytes: s.bytes,
+                    arrival,
+                    admitted,
+                    finish: res.finish(done),
+                    rejected: false,
+                    flows: s.flows,
+                }
+            }
+            None => {
+                let a = s.arrival.unwrap_or(0.0);
+                JobRecord {
+                    tenant: s.tenant,
+                    index: s.index,
+                    label: s.label.clone(),
+                    bytes: s.bytes,
+                    arrival: a,
+                    admitted: a,
+                    finish: a,
+                    rejected: true,
+                    flows: 0,
+                }
+            }
+        })
+        .collect();
+
+    // completion-ordered latency series of completed jobs (stable sort:
+    // ties keep (tenant, index) order)
+    let mut done_jobs: Vec<&JobRecord> = jobs.iter().filter(|j| !j.rejected).collect();
+    done_jobs.sort_by(|a, b| a.finish.total_cmp(&b.finish));
+    let lats: Vec<f64> = done_jobs.iter().map(|j| j.latency()).collect();
+    let warmup = warmup_cutoff(&lats);
+    let steady = &lats[warmup..];
+    let (p50, p95, p999, mean_latency) = if steady.is_empty() {
+        (0.0, 0.0, 0.0, 0.0)
+    } else {
+        (
+            percentile(steady, 50.0),
+            percentile(steady, 95.0),
+            percentile(steady, 99.9),
+            steady.iter().sum::<f64>() / steady.len() as f64,
+        )
+    };
+    let waits: Vec<f64> = done_jobs[warmup..].iter().map(|j| j.wait()).collect();
+    let mean_wait =
+        if waits.is_empty() { 0.0 } else { waits.iter().sum::<f64>() / waits.len() as f64 };
+    let completed = done_jobs.len();
+    let rejected = jobs.len() - completed;
+    let throughput = if res.makespan > 0.0 { completed as f64 / res.makespan } else { 0.0 };
+    ServeResult {
+        jobs,
+        completed,
+        rejected,
+        warmup_jobs: warmup,
+        offered_rate: offered,
+        throughput,
+        p50,
+        p95,
+        p999,
+        mean_latency,
+        mean_wait,
+        makespan: res.makespan,
+        flows: res.flows,
+    }
+}
+
+/// Run a serving spec on a topology: plan, compose the service into
+/// one shared [`Sim`], execute, aggregate steady-state SLOs.
+pub fn run_serve(topo: &Topology, spec: &ServeSpec, params: Params) -> Result<ServeResult> {
+    spec.validate(topo)?;
+    let plans = engine::plan(topo, &spec.workload, params)?;
+    Ok(run_serve_planned(topo, spec, params, &plans))
+}
+
+/// [`run_serve`] from an already-planned op list — plans depend only on
+/// the workload (counts and libraries), never on arrivals, so a load
+/// sweep plans once and recomposes per rate point.
+pub(crate) fn run_serve_planned(
+    topo: &Topology,
+    spec: &ServeSpec,
+    params: Params,
+    plans: &[Vec<PlannedOp>],
+) -> ServeResult {
+    let mut sim = Sim::new(topo);
+    let skel = compose_serve(&mut sim, spec, params, plans);
+    let offered = offered_rate(spec, &skel);
+    crate::perturb::apply(&mut sim, &spec.workload.faults);
+    let res = sim.run();
+    aggregate(offered, &res, &skel)
+}
+
+/// Isolated service time of the first planned job — the scale the load
+/// sweeps derive their saturation rate `1 / (tenants * s0)` from.
+pub(crate) fn base_service_time(
+    topo: &Topology,
+    params: Params,
+    plans: &[Vec<PlannedOp>],
+) -> f64 {
+    let mut sim = Sim::new(topo);
+    let done = engine::compose_planned(&mut sim, params, &plans[0][0], None);
+    sim.run().finish(done)
+}
+
+/// Delta-simulation executor for fault-timeline ensembles over one
+/// serving DAG (DESIGN.md §16, the ROADMAP item-4 follow-up): the
+/// service is composed and cold-simulated exactly once at record time
+/// — including admission verdicts, which are decided on the pristine
+/// fabric and therefore frozen into the baseline — and every fault
+/// timeline then replays warm from the recorded baseline via
+/// [`crate::perturb::DeltaSim`]. An empty timeline is a pure replay,
+/// bit-exact to [`run_serve`] on a fault-free spec; perturbed
+/// timelines agree with a cold run to 1e-9.
+pub struct ServeDelta<'a> {
+    offered: f64,
+    pub(crate) delta: crate::perturb::DeltaSim<'a>,
+    skel: Vec<JobSkeleton>,
+}
+
+impl<'a> ServeDelta<'a> {
+    /// Plan, compose and cold-simulate the unperturbed service once.
+    pub fn record(topo: &'a Topology, spec: &ServeSpec, params: Params) -> Result<ServeDelta<'a>> {
+        spec.validate(topo)?;
+        let plans = engine::plan(topo, &spec.workload, params)?;
+        let mut sim = Sim::new(topo);
+        let skel = compose_serve(&mut sim, spec, params, &plans);
+        let offered = offered_rate(spec, &skel);
+        Ok(ServeDelta { offered, delta: crate::perturb::DeltaSim::record(sim), skel })
+    }
+
+    /// Replay one fault timeline against the recorded baseline. Panics
+    /// on a deadlocked scenario exactly as [`run_serve`]'s `sim.run()`
+    /// does.
+    pub fn run(&self, faults: &[crate::perturb::Perturbation]) -> ServeResult {
+        let (res, out) = self.delta.run(faults);
+        if !out.is_completed() {
+            panic!("simulation deadlock: {}", out.describe());
+        }
+        aggregate(self.offered, &res, &self.skel)
+    }
+
+    /// Cold reference run of the same timeline on the pristine DAG —
+    /// what the bench and differential tests compare [`ServeDelta::run`]
+    /// against.
+    pub fn run_cold(&self, faults: &[crate::perturb::Perturbation]) -> ServeResult {
+        let (res, out) = self.delta.run_cold(faults);
+        if !out.is_completed() {
+            panic!("simulation deadlock: {}", out.describe());
+        }
+        aggregate(self.offered, &res, &self.skel)
+    }
+}
+
+/// The `bench_serve` measurement grid and its deterministic
+/// `BENCH_serve.json` payload: latency-vs-offered-load knee curves per
+/// system, a policy comparison, the zero-rate anchor (asserted
+/// bit-exact in-process), and the `delta_sim` warm-vs-cold work-unit
+/// subtree. Simulated metrics only — byte-reproducible from the seed
+/// (`tests/workload_determinism.rs` pins this).
+pub mod bench {
+    use super::*;
+    use crate::comm::Library;
+    use crate::topology::systems::SystemKind;
+    use crate::util::json::{obj, Json};
+    use crate::workload::engine::run_workload;
+    use crate::workload::spec::TenantLib;
+
+    /// Offered-load fractions of the saturation rate swept per case.
+    pub const RHO_GRID: [f64; 5] = [0.25, 0.5, 0.75, 1.0, 1.25];
+
+    /// The bench grid: per paper system a 2-tenant NCCL serving case
+    /// (FIFO window 4, 10 jobs per tenant). The Poisson rate here is a
+    /// placeholder — the curve sweeps `RHO_GRID` times the saturation
+    /// rate derived from the system's own isolated service time.
+    pub fn bench_cases(seed: u64) -> Vec<(String, Topology, ServeSpec)> {
+        let mut out = Vec::new();
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let gpus = topo.num_gpus().min(8);
+            let spec = ServeSpec::synthetic(
+                2,
+                10,
+                gpus,
+                TenantLib::Fixed(Library::Nccl),
+                4 << 20,
+                seed,
+                ArrivalProcess::Poisson { rate: 1.0 },
+                QueuePolicy::Fifo { depth: 4 },
+            );
+            out.push((format!("{}/2x10/nccl", kind.name()), topo, spec));
+        }
+        out
+    }
+
+    /// One system's latency-vs-offered-load curve with its knee point.
+    fn curve_doc(label: &str, topo: &Topology, base: &ServeSpec) -> Json {
+        let params = Params::default();
+        let plans =
+            engine::plan(topo, &base.workload, params).expect("bench spec must validate");
+        let s0 = base_service_time(topo, params, &plans);
+        let tenants = base.workload.tenants.len() as f64;
+        let sat = 1.0 / (tenants * s0);
+        let mut points = Vec::new();
+        let mut p95s = Vec::new();
+        for &rho in RHO_GRID.iter() {
+            let mut spec = base.clone();
+            spec.arrivals = ArrivalProcess::Poisson { rate: rho * sat };
+            let r = run_serve_planned(topo, &spec, params, &plans);
+            p95s.push(r.p95);
+            points.push(obj(vec![
+                ("rho", Json::Num(rho)),
+                ("rate_per_tenant_hz", Json::Num(rho * sat)),
+                ("offered_hz", Json::Num(r.offered_rate)),
+                ("p50_s", Json::Num(r.p50)),
+                ("p95_s", Json::Num(r.p95)),
+                ("p999_s", Json::Num(r.p999)),
+                ("throughput_hz", Json::Num(r.throughput)),
+                ("completed", Json::Num(r.completed as f64)),
+                ("rejected", Json::Num(r.rejected as f64)),
+                ("warmup_jobs", Json::Num(r.warmup_jobs as f64)),
+            ]));
+        }
+        let knee = knee_index(&p95s, KNEE_FACTOR);
+        obj(vec![
+            ("case", Json::Str(label.to_string())),
+            ("policy", Json::Str(base.policy.label())),
+            ("saturation_hz", Json::Num(sat)),
+            ("knee_rho", Json::Num(RHO_GRID[knee])),
+            ("knee_offered_hz", Json::Num(RHO_GRID[knee] * sat * tenants)),
+            ("points", Json::Arr(points)),
+        ])
+    }
+
+    /// The three policies at saturation on the DGX-1 (window depth 2,
+    /// so reject-on-depth genuinely rejects).
+    fn policy_docs(seed: u64) -> Vec<Json> {
+        let params = Params::default();
+        let topo = SystemKind::Dgx1.build();
+        let base = ServeSpec::synthetic(
+            2,
+            10,
+            8,
+            TenantLib::Fixed(Library::Nccl),
+            4 << 20,
+            seed,
+            ArrivalProcess::Poisson { rate: 1.0 },
+            QueuePolicy::Fifo { depth: 2 },
+        );
+        let plans =
+            engine::plan(&topo, &base.workload, params).expect("bench spec must validate");
+        let s0 = base_service_time(&topo, params, &plans);
+        let sat = 1.0 / (base.workload.tenants.len() as f64 * s0);
+        [
+            QueuePolicy::Fifo { depth: 2 },
+            QueuePolicy::Fair { depth: 2 },
+            QueuePolicy::RejectOnDepth { depth: 2 },
+        ]
+        .into_iter()
+        .map(|policy| {
+            let mut spec = base.clone();
+            spec.policy = policy;
+            spec.arrivals = ArrivalProcess::Poisson { rate: sat };
+            let r = run_serve_planned(&topo, &spec, params, &plans);
+            obj(vec![
+                ("policy", Json::Str(policy.label())),
+                ("completed", Json::Num(r.completed as f64)),
+                ("rejected", Json::Num(r.rejected as f64)),
+                ("p95_s", Json::Num(r.p95)),
+                ("throughput_hz", Json::Num(r.throughput)),
+                ("mean_wait_s", Json::Num(r.mean_wait)),
+            ])
+        })
+        .collect()
+    }
+
+    /// The zero-arrival-rate anchor, per system × library: a closed
+    /// serve run's makespan, asserted bit-exact against
+    /// [`run_workload`] in-process (a tripwire — the artifact never
+    /// silently records a broken anchor).
+    fn zero_rate_docs(seed: u64) -> Vec<Json> {
+        let mut out = Vec::new();
+        for kind in SystemKind::all() {
+            let topo = kind.build();
+            let gpus = topo.num_gpus().min(8);
+            for lib in Library::all() {
+                let wspec =
+                    WorkloadSpec::synthetic(2, 3, gpus, TenantLib::Fixed(lib), 4 << 20, seed);
+                let serve = ServeSpec {
+                    workload: wspec.clone(),
+                    arrivals: ArrivalProcess::Closed,
+                    policy: QueuePolicy::Fifo { depth: 4 },
+                };
+                let sr =
+                    run_serve(&topo, &serve, Params::default()).expect("anchor spec validates");
+                let wr =
+                    run_workload(&topo, &wspec, Params::default()).expect("anchor spec validates");
+                assert_eq!(
+                    sr.makespan.to_bits(),
+                    wr.makespan.to_bits(),
+                    "zero-rate anchor broke on {}/{}",
+                    kind.name(),
+                    lib.name()
+                );
+                out.push(obj(vec![
+                    ("case", Json::Str(format!("{}/{}", kind.name(), lib.name()))),
+                    ("makespan_s", Json::Num(sr.makespan)),
+                    ("jobs", Json::Num(sr.completed as f64)),
+                ]));
+            }
+        }
+        out
+    }
+
+    /// Deterministic delta-simulation metrics of one serving case: the
+    /// open-loop DAG records once ([`ServeDelta::record`]), then every
+    /// scenario of the time-windowed fault ensemble runs both warm and
+    /// cold. Reports the replay-tier mix and the cold/warm work-unit
+    /// ratio; warm-vs-cold makespan agreement to 1e-9 is asserted per
+    /// scenario as a tripwire.
+    fn delta_case_doc(label: &str, topo: &Topology, base: &ServeSpec, seed: u64) -> Json {
+        use crate::sim::replay::work_units;
+        let sd = ServeDelta::record(topo, base, Params::default())
+            .expect("bench spec must validate");
+        let ens =
+            crate::perturb::bench::delta_ensemble(topo, sd.delta.baseline().makespan, seed);
+        let mut warm_units = 0u64;
+        let mut cold_units = 0u64;
+        let (mut n_identical, mut n_cold, mut n_tail, mut n_warm) = (0u64, 0u64, 0u64, 0u64);
+        let mut max_rel = 0.0f64;
+        for perts in &ens {
+            let mode = sd.delta.mode(perts);
+            let (rw, ow) = sd.delta.run(perts);
+            let (rc, oc) = sd.delta.run_cold(perts);
+            assert!(
+                ow.is_completed() && oc.is_completed(),
+                "{label}: transient-fault timeline did not complete"
+            );
+            match mode {
+                "identical" => n_identical += 1,
+                "cold" => n_cold += 1,
+                "tail" => n_tail += 1,
+                _ => n_warm += 1,
+            }
+            // pure replays (identical/tail) execute zero live events;
+            // their returned stats are the baseline's and are not billed
+            if !matches!(mode, "identical" | "tail") {
+                warm_units += work_units(&rw.stats);
+            }
+            cold_units += work_units(&rc.stats);
+            let rel = (rw.makespan - rc.makespan).abs() / rc.makespan.abs().max(1e-300);
+            assert!(rel < 1e-9, "{label}: warm {} vs cold {}", rw.makespan, rc.makespan);
+            max_rel = max_rel.max(rel);
+        }
+        obj(vec![
+            ("case", Json::Str(label.to_string())),
+            ("scenarios", Json::Num(ens.len() as f64)),
+            ("identical", Json::Num(n_identical as f64)),
+            ("cold", Json::Num(n_cold as f64)),
+            ("tail", Json::Num(n_tail as f64)),
+            ("warm", Json::Num(n_warm as f64)),
+            ("warm_work_units", Json::Num(warm_units as f64)),
+            ("cold_work_units", Json::Num(cold_units as f64)),
+            ("work_ratio", Json::Num(cold_units as f64 / warm_units.max(1) as f64)),
+            ("max_rel_err", Json::Num(max_rel)),
+        ])
+    }
+
+    /// The full deterministic `BENCH_serve.json` document. Curve and
+    /// delta cases fan out over the bounded worker pool; results come
+    /// back in case order, so the render is byte-stable.
+    pub fn bench_doc(seed: u64) -> Json {
+        let cases = bench_cases(seed);
+        let jobs: Vec<_> = cases
+            .iter()
+            .map(|(label, topo, spec)| move || curve_doc(label, topo, spec))
+            .collect();
+        let curve_docs = crate::util::pool::parallel_map(jobs);
+        let delta_jobs: Vec<_> = cases
+            .iter()
+            .map(|(label, topo, spec)| move || delta_case_doc(label, topo, spec, seed))
+            .collect();
+        let delta_docs = crate::util::pool::parallel_map(delta_jobs);
+        obj(vec![
+            ("bench", Json::Str("bench_serve".to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("curves", Json::Arr(curve_docs)),
+            ("policies", Json::Arr(policy_docs(seed))),
+            ("zero_rate", Json::Arr(zero_rate_docs(seed))),
+            ("delta_sim", Json::Arr(delta_docs)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Library;
+    use crate::perturb::Perturbation;
+    use crate::topology::systems::SystemKind;
+    use crate::workload::run_workload;
+    use crate::workload::spec::TenantLib;
+
+    fn open_spec(seed: u64, rate: f64, policy: QueuePolicy) -> ServeSpec {
+        ServeSpec::synthetic(
+            2,
+            8,
+            4,
+            TenantLib::Fixed(Library::Nccl),
+            2 << 20,
+            seed,
+            ArrivalProcess::from_rate(rate),
+            policy,
+        )
+    }
+
+    #[test]
+    fn closed_serve_is_bit_exact_to_run_workload() {
+        // the zero-arrival-rate anchor, event engine, every library
+        // (the cross-engine version lives in tests/workload_determinism.rs)
+        let topo = SystemKind::Dgx1.build();
+        for lib in Library::all() {
+            let wspec = WorkloadSpec::synthetic(3, 2, 8, TenantLib::Fixed(lib), 4 << 20, 7);
+            let serve = ServeSpec {
+                workload: wspec.clone(),
+                arrivals: ArrivalProcess::Closed,
+                policy: QueuePolicy::Fifo { depth: 4 },
+            };
+            let sr = run_serve(&topo, &serve, Params::default()).unwrap();
+            let wr = run_workload(&topo, &wspec, Params::default()).unwrap();
+            assert_eq!(sr.makespan.to_bits(), wr.makespan.to_bits(), "{}", lib.name());
+            assert_eq!(sr.flows, wr.flows, "{}", lib.name());
+            assert_eq!(sr.rejected, 0);
+            assert_eq!(sr.offered_rate, 0.0);
+            for (j, o) in sr.jobs.iter().zip(wr.all_ops()) {
+                assert_eq!(j.finish.to_bits(), o.finish.to_bits(), "{}", lib.name());
+                assert_eq!(j.arrival.to_bits(), o.arrival.to_bits(), "{}", lib.name());
+                assert_eq!(j.latency().to_bits(), o.latency().to_bits(), "{}", lib.name());
+                assert_eq!(j.flows, o.flows);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_mode_ignores_the_policy() {
+        let topo = SystemKind::Dgx1.build();
+        let mut a = open_spec(3, 0.0, QueuePolicy::Fifo { depth: 1 });
+        let ra = run_serve(&topo, &a, Params::default()).unwrap();
+        a.policy = QueuePolicy::RejectOnDepth { depth: 1 };
+        let rb = run_serve(&topo, &a, Params::default()).unwrap();
+        assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+        assert_eq!(rb.rejected, 0);
+    }
+
+    #[test]
+    fn open_loop_runs_are_deterministic_and_ordered() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = open_spec(11, 300.0, QueuePolicy::Fifo { depth: 4 });
+        let a = run_serve(&topo, &spec, Params::default()).unwrap();
+        let b = run_serve(&topo, &spec, Params::default()).unwrap();
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.jobs.len(), 16);
+        assert_eq!(a.completed, 16);
+        assert_eq!(a.rejected, 0);
+        assert!(a.offered_rate > 0.0 && a.throughput > 0.0);
+        assert!(a.p999 >= a.p95 && a.p95 >= a.p50 && a.p50 > 0.0);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.finish.to_bits(), y.finish.to_bits());
+        }
+        // per tenant: arrivals strictly ordered, service causal
+        for t in 0..2 {
+            let ten: Vec<_> = a.jobs.iter().filter(|j| j.tenant == t).collect();
+            for w in ten.windows(2) {
+                assert!(w[1].arrival >= w[0].arrival);
+            }
+            for j in ten {
+                assert!(j.admitted >= j.arrival - 1e-12);
+                assert!(j.finish > j.admitted);
+            }
+        }
+    }
+
+    #[test]
+    fn fair_equals_fifo_for_one_tenant_and_differs_under_cross_tenant_load() {
+        let topo = SystemKind::Dgx1.build();
+        // one tenant: the global window IS the tenant window, so the
+        // two policies build the identical DAG — bit-exact results
+        let one = |policy| {
+            let spec = ServeSpec::synthetic(
+                1,
+                8,
+                4,
+                TenantLib::Fixed(Library::Nccl),
+                2 << 20,
+                5,
+                ArrivalProcess::Poisson { rate: 500.0 },
+                policy,
+            );
+            run_serve(&topo, &spec, Params::default()).unwrap()
+        };
+        let rf = one(QueuePolicy::Fifo { depth: 1 });
+        let ra = one(QueuePolicy::Fair { depth: 1 });
+        assert_eq!(rf.makespan.to_bits(), ra.makespan.to_bits());
+        assert_eq!(rf.p95.to_bits(), ra.p95.to_bits());
+        // two tenants at overload (jobs far larger than the arrival
+        // gaps can drain): the global depth-1 window serializes across
+        // tenants, per-tenant windows overlap them — the DAGs genuinely
+        // differ
+        let overload = |policy| {
+            ServeSpec::synthetic(
+                2,
+                8,
+                4,
+                TenantLib::Fixed(Library::Nccl),
+                64 << 20,
+                5,
+                ArrivalProcess::Poisson { rate: 20_000.0 },
+                policy,
+            )
+        };
+        let fifo = overload(QueuePolicy::Fifo { depth: 1 });
+        let fair = overload(QueuePolicy::Fair { depth: 1 });
+        let rf = run_serve(&topo, &fifo, Params::default()).unwrap();
+        let ra = run_serve(&topo, &fair, Params::default()).unwrap();
+        assert_eq!(rf.completed, 16);
+        assert_eq!(ra.completed, 16);
+        assert_ne!(
+            rf.makespan.to_bits(),
+            ra.makespan.to_bits(),
+            "policies built the same DAG under saturating cross-tenant load"
+        );
+    }
+
+    #[test]
+    fn reject_on_depth_rejects_under_overload() {
+        let topo = SystemKind::Dgx1.build();
+        // very high rate + depth 1 + jobs far larger than the arrival
+        // gaps can drain: most jobs find the system full
+        let spec = ServeSpec::synthetic(
+            2,
+            8,
+            4,
+            TenantLib::Fixed(Library::Nccl),
+            64 << 20,
+            9,
+            ArrivalProcess::Poisson { rate: 50_000.0 },
+            QueuePolicy::RejectOnDepth { depth: 1 },
+        );
+        let r = run_serve(&topo, &spec, Params::default()).unwrap();
+        assert_eq!(r.completed + r.rejected, 16);
+        assert!(r.rejected > 0, "overload must reject: {r:?}");
+        assert!(r.completed >= 2, "the first job per tenant is always admitted");
+        for j in r.jobs.iter().filter(|j| j.rejected) {
+            assert_eq!(j.finish.to_bits(), j.arrival.to_bits());
+            assert_eq!(j.flows, 0);
+        }
+        // deterministic verdicts
+        let r2 = run_serve(&topo, &spec, Params::default()).unwrap();
+        let v1: Vec<bool> = r.jobs.iter().map(|j| j.rejected).collect();
+        let v2: Vec<bool> = r2.jobs.iter().map(|j| j.rejected).collect();
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn warmup_cutoff_drops_the_transient_prefix() {
+        assert_eq!(warmup_cutoff(&[1.0; 4]), 0, "short series kept whole");
+        assert_eq!(warmup_cutoff(&[2.0; 16]), 0, "steady series has no cutoff");
+        let mut xs = vec![10.0; 4];
+        xs.extend(vec![1.0; 12]);
+        assert_eq!(warmup_cutoff(&xs), 4, "inflated prefix truncated");
+    }
+
+    #[test]
+    fn knee_index_finds_the_last_point_before_the_blowup() {
+        assert_eq!(knee_index(&[1.0, 1.1, 1.3, 5.0, 9.0], 2.0), 2);
+        assert_eq!(knee_index(&[1.0, 1.1, 1.2], 2.0), 2, "no blowup: last point");
+        assert_eq!(knee_index(&[1.0, 9.0], 2.0), 0);
+    }
+
+    #[test]
+    fn serve_delta_replays_fault_timelines_warm() {
+        let topo = SystemKind::Dgx1.build();
+        let spec = open_spec(13, 400.0, QueuePolicy::Fifo { depth: 4 });
+        let sd = ServeDelta::record(&topo, &spec, Params::default()).unwrap();
+        let plain = run_serve(&topo, &spec, Params::default()).unwrap();
+        // empty timeline: pure replay, bit-exact to the plain run
+        let replay = sd.run(&[]);
+        assert_eq!(replay.makespan.to_bits(), plain.makespan.to_bits());
+        assert_eq!(replay.p95.to_bits(), plain.p95.to_bits());
+        // a mid-run transient degradation: warm vs cold agree to 1e-9
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        let faults = vec![Perturbation::scale(link, 0.4)
+            .during(plain.makespan * 0.3, plain.makespan * 0.7)];
+        let warm = sd.run(&faults);
+        let cold = sd.run_cold(&faults);
+        let rel = (warm.makespan - cold.makespan).abs() / cold.makespan;
+        assert!(rel < 1e-9, "warm {} vs cold {}", warm.makespan, cold.makespan);
+        assert!(warm.completed == plain.completed, "the fault must not lose jobs");
+    }
+
+    #[test]
+    fn invalid_serve_specs_are_clean_errors() {
+        let topo = SystemKind::Dgx1.build();
+        let mut bad = open_spec(1, 100.0, QueuePolicy::Fifo { depth: 0 });
+        let err = run_serve(&topo, &bad, Params::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("depth"), "{err:#}");
+        bad.policy = QueuePolicy::Fifo { depth: 4 };
+        bad.arrivals = ArrivalProcess::Poisson { rate: -2.0 };
+        let err = run_serve(&topo, &bad, Params::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("positive"), "{err:#}");
+        bad.arrivals = ArrivalProcess::Trace { gaps: vec![] };
+        let err = run_serve(&topo, &bad, Params::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("trace"), "{err:#}");
+        bad.arrivals = ArrivalProcess::Trace { gaps: vec![1.0e-3, f64::NAN] };
+        let err = run_serve(&topo, &bad, Params::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("finite"), "{err:#}");
+    }
+
+    #[test]
+    fn trace_arrivals_cycle_and_offered_rate_is_measured() {
+        let topo = SystemKind::Dgx1.build();
+        let mut spec = open_spec(2, 100.0, QueuePolicy::Fifo { depth: 4 });
+        spec.arrivals = ArrivalProcess::Trace { gaps: vec![2.0e-3, 1.0e-3] };
+        let r = run_serve(&topo, &spec, Params::default()).unwrap();
+        assert_eq!(r.completed, 16);
+        assert!(r.offered_rate > 0.0);
+        assert!(r.p50 > 0.0);
+    }
+
+    #[test]
+    fn queue_policy_and_arrival_parsing() {
+        assert_eq!(QueuePolicy::parse("fifo", 4), Some(QueuePolicy::Fifo { depth: 4 }));
+        assert_eq!(QueuePolicy::parse("FAIR", 2), Some(QueuePolicy::Fair { depth: 2 }));
+        assert_eq!(
+            QueuePolicy::parse("reject", 1),
+            Some(QueuePolicy::RejectOnDepth { depth: 1 })
+        );
+        assert_eq!(QueuePolicy::parse("nope", 4), None);
+        assert_eq!(ArrivalProcess::from_rate(0.0), ArrivalProcess::Closed);
+        assert_eq!(
+            ArrivalProcess::from_rate(250.0),
+            ArrivalProcess::Poisson { rate: 250.0 }
+        );
+        assert_eq!(QueuePolicy::Fifo { depth: 4 }.label(), "fifo(4)");
+        assert!(ArrivalProcess::Closed.label().contains("closed"));
+    }
+}

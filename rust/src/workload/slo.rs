@@ -300,6 +300,68 @@ mod tests {
     }
 
     #[test]
+    fn all_aborted_run_reports_the_stall_time_and_zero_goodput() {
+        // the everything-failed edge: every op aborts, so nothing ever
+        // finished — the SLO makespan must fall back to the stall
+        // instant (bit-exactly outcome.time(), never 0.0 or the last
+        // pre-stall partial progress) and goodput must be exactly 0
+        let topo = SystemKind::Dgx1.build();
+        let link = topo.route_gpus(0, 1).unwrap().links[0];
+        let spec =
+            WorkloadSpec::synthetic(2, 1, 8, TenantLib::Fixed(Library::Nccl), 4 << 20, 11)
+                .with_faults(vec![Perturbation::link_down(link)]);
+        let sup =
+            run_workload_recovered(&topo, &spec, Params::default(), &RecoveryPolicy::disabled())
+                .unwrap();
+        assert_eq!(sup.slo.aborted_ops, sup.slo.total_ops, "{:?}", sup.slo);
+        assert_eq!(sup.slo.completed_ops + sup.slo.recovered_ops, 0);
+        assert_eq!(sup.slo.delivered_bytes, 0.0);
+        assert_eq!(sup.slo.goodput, 0.0);
+        // replay the same stalled DAG to pin the fallback instant
+        let plans = engine::plan(&topo, &spec, Params::default()).unwrap();
+        let mut sim = Sim::new(&topo);
+        engine::compose_workload(&mut sim, &spec, Params::default(), &plans);
+        crate::perturb::apply(&mut sim, &spec.faults);
+        let (_, outcome) = sim.run_outcome();
+        assert!(!outcome.is_completed());
+        assert_eq!(sup.slo.makespan.to_bits(), outcome.time().to_bits());
+    }
+
+    #[test]
+    fn shrink_recovery_subtracts_exactly_the_dead_ranks_bytes() {
+        // delivered-bytes accounting under membership shrink: a
+        // permanently dead GPU cannot be retried or rerouted around, so
+        // the op completes shrunk and the SLO must bill the survivors'
+        // counts only — total minus exactly the dead ranks' counts
+        let topo = SystemKind::Dgx1.build();
+        let spec =
+            WorkloadSpec::synthetic(1, 1, 4, TenantLib::Fixed(Library::Nccl), 4 << 20, 23)
+                .with_faults(vec![Perturbation::gpu_down(2)]);
+        let sup = run_workload_recovered(
+            &topo,
+            &spec,
+            Params::default(),
+            &RecoveryPolicy::default_policy(),
+        )
+        .unwrap();
+        assert!(sup.stalled, "a dead participant must stall the op");
+        assert_eq!(sup.slo.recovered_ops, 1, "{:?}", sup.reissued);
+        let plans = engine::plan(&topo, &spec, Params::default()).unwrap();
+        let counts = &plans[0][0].counts;
+        match &sup.reissued[0].strategy {
+            RecoveryStrategy::Shrink { dead_ranks, .. } => {
+                assert!(dead_ranks.contains(&2), "{dead_ranks:?}");
+                let expect = counts.iter().sum::<u64>() as f64
+                    - dead_ranks.iter().map(|&d| counts[d] as f64).sum::<f64>();
+                assert_eq!(sup.slo.delivered_bytes.to_bits(), expect.to_bits());
+                assert!(sup.slo.delivered_bytes > 0.0);
+            }
+            other => panic!("expected a shrink recovery, got {other:?}"),
+        }
+        assert!(sup.slo.goodput > 0.0);
+    }
+
+    #[test]
     fn disabled_policy_aborts_stalled_jobs() {
         let topo = SystemKind::Dgx1.build();
         let link = topo.route_gpus(0, 1).unwrap().links[0];

@@ -171,10 +171,19 @@ impl TenantSpec {
     /// Delay between op `k`'s gate dependencies completing and the op
     /// becoming eligible. Draws from `rng` in op order, so callers
     /// must iterate k = 0, 1, 2, ...
+    ///
+    /// Exactly **one** draw per call, unconditionally: `gen_f64(0.0,
+    /// 0.0)` consumes the draw and contributes exactly `+0.0`, and for
+    /// any positive jitter the value is bit-identical to the old
+    /// conditional draw. Draw-stability matters because the serving
+    /// engine ([`crate::workload::serve`]) multiplexes its open-loop
+    /// inter-arrival draws onto this same tenant stream: with the old
+    /// `if jitter > 0.0` guard, toggling jitter between 0 and >0
+    /// realigned every later draw (the PR 9 `ensemble.rs::severity`
+    /// bug class).
     pub fn arrival_delay(&self, k: usize, rng: &mut Rng) -> f64 {
         let base = if k == 0 { self.start_offset } else { self.gap };
-        let jit = if self.jitter > 0.0 { rng.gen_f64(0.0, self.jitter) } else { 0.0 };
-        base + jit
+        base + rng.gen_f64(0.0, self.jitter)
     }
 }
 
@@ -441,6 +450,38 @@ mod tests {
             0,
         );
         fixed_reduce.validate(&topo).unwrap();
+    }
+
+    #[test]
+    fn arrival_delay_draw_structure_is_jitter_invariant() {
+        // Draw-stability regression (mirrors the PR 9 ensemble.rs fix):
+        // every arrival_delay call must consume exactly one draw whether
+        // jitter is zero or positive, so downstream draws multiplexed on
+        // the same stream (the serve engine's inter-arrival samples) do
+        // not shift when jitter is toggled. Pre-fix, the zero-jitter
+        // tenant skipped its draws and the two streams diverged.
+        let spec = WorkloadSpec::synthetic(2, 4, 2, TenantLib::Auto, 1 << 20, 5);
+        let mut jittered = spec.tenants[0].clone();
+        let mut flat = spec.tenants[0].clone();
+        flat.jitter = 0.0;
+        let mut rng_j = jittered.arrival_rng(spec.seed);
+        let mut rng_f = flat.arrival_rng(spec.seed);
+        for k in 0..4 {
+            let dj = jittered.arrival_delay(k, &mut rng_j);
+            let df = flat.arrival_delay(k, &mut rng_f);
+            let base = if k == 0 { flat.start_offset } else { flat.gap };
+            assert_eq!(df.to_bits(), base.to_bits(), "zero jitter adds exactly +0.0");
+            assert!(dj >= base);
+            // same stream position after k+1 delays: the next raw draw
+            // must be identical on both streams
+            assert_eq!(rng_j.next_u64(), rng_f.next_u64(), "draw structure diverged at k={k}");
+        }
+        // consuming a draw means re-splitting the same rng differs
+        jittered.jitter = 0.0;
+        let mut a = jittered.arrival_rng(spec.seed);
+        let mut b = jittered.arrival_rng(spec.seed);
+        let _ = jittered.arrival_delay(0, &mut a);
+        assert_ne!(a.next_u64(), b.next_u64(), "delay must consume a draw even at jitter=0");
     }
 
     #[test]

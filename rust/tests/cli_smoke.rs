@@ -23,7 +23,7 @@ fn stderr(o: &Output) -> String {
 /// Every subcommand in HELP. Kept in sync by `help_lists_every_subcommand`.
 const COMMANDS: &[&str] = &[
     "topo", "fig2", "table1", "fig3", "findings", "auto", "osu", "refacto",
-    "sweep-gdr", "faults", "workload", "collective", "e2e", "artifacts", "help",
+    "sweep-gdr", "faults", "workload", "serve", "collective", "e2e", "artifacts", "help",
 ];
 
 #[test]
@@ -402,6 +402,75 @@ fn workload_valid_trace_runs() {
     ]);
     assert!(out.status.success(), "{}", stderr(&out));
     assert!(stdout(&out).contains("trace"), "{}", stdout(&out));
+}
+
+#[test]
+fn serve_pinned_rate_runs_every_policy() {
+    for policy in ["fifo", "fair", "reject"] {
+        let out = agv(&[
+            "serve", "--system", "dgx1", "--tenants", "2", "--jobs", "3",
+            "--gpus", "2", "--total", "1MB", "--rate", "200", "--policy", policy,
+            "--depth", "2", "--seed", "1",
+        ]);
+        assert!(out.status.success(), "{policy}: {}", stderr(&out));
+        let text = stdout(&out);
+        assert!(text.contains("SERVE"), "{policy}:\n{text}");
+        assert!(text.contains("latency p50"), "{policy}:\n{text}");
+        assert!(text.contains(&format!("policy {policy}(2)")), "{policy}:\n{text}");
+    }
+}
+
+#[test]
+fn serve_zero_rate_is_the_closed_loop_anchor() {
+    // --rate 0 degenerates to the closed-loop workload engine; the
+    // header says so and the run completes every job
+    let out = agv(&[
+        "serve", "--system", "dgx1", "--tenants", "2", "--jobs", "2",
+        "--gpus", "2", "--total", "1MB", "--rate", "0", "--seed", "1",
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("closed loop (zero arrival rate)"), "{text}");
+    assert!(text.contains("4 completed, 0 rejected"), "{text}");
+}
+
+#[test]
+fn serve_sweep_reports_the_knee() {
+    // no --rate: sweep offered load and mark the p95 knee row
+    let dir = std::env::temp_dir().join("agv_serve_csv_test");
+    let out = agv(&[
+        "serve", "--system", "dgx1", "--tenants", "2", "--jobs", "4",
+        "--gpus", "2", "--total", "1MB", "--seed", "1",
+        "--csv-dir", dir.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("SERVE"), "{text}");
+    assert!(text.contains("<=="), "no knee marker:\n{text}");
+    assert!(text.contains("capacity verdict"), "{text}");
+    let csv = std::fs::read_to_string(dir.join("serve.csv")).expect("serve.csv written");
+    assert!(csv.starts_with("system,"), "{csv}");
+    assert!(csv.lines().count() > 1, "{csv}");
+}
+
+#[test]
+fn serve_rejects_malformed_flags_with_exit_2() {
+    // usage errors exit 2 before any simulation, naming the flag
+    let cases: &[(&[&str], &str)] = &[
+        (&["serve", "--system", "dgx1", "--rate", "junk"], "--rate expects a finite number"),
+        (&["serve", "--system", "dgx1", "--rate", "-1"], "--rate must be finite non-negative"),
+        (&["serve", "--system", "dgx1", "--policy", "nope"], "unknown policy `nope`"),
+        (&["serve", "--system", "dgx1", "--depth", "0"], "--depth must be at least 1"),
+        (&["serve", "--system", "dgx1", "--lib", "cudnn"], "unknown library"),
+        (&["serve", "--system", "dgx1", "--total", "lots"], "bad size"),
+    ];
+    for (args, fragment) in cases {
+        let out = agv(args);
+        assert_eq!(out.status.code(), Some(2), "`agv {}`:\n{}", args.join(" "), stderr(&out));
+        let err = stderr(&out);
+        assert!(err.contains(fragment), "`agv {}` missing '{fragment}':\n{err}", args.join(" "));
+        assert!(!err.contains("panicked"), "`agv {}` panicked:\n{err}", args.join(" "));
+    }
 }
 
 #[test]

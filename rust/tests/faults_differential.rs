@@ -307,6 +307,89 @@ fn stall_diagnosis_agrees_across_engines() {
 }
 
 #[test]
+fn stalled_constructor_normalizes_ordering() {
+    // PR-10 ordering-contract fix: workload::slo classifies a job as
+    // completed iff its done task is ABSENT from stuck_tasks — via
+    // binary_search, which silently returns nonsense on unsorted input.
+    // Every engine now builds the Stalled variant through
+    // SimOutcome::stalled, which owns the sort+dedup; pre-fix this
+    // constructor did not exist and each stall site sorted (or forgot
+    // to sort) by hand.
+    match SimOutcome::stalled(1.0, vec![5, 2, 2, 9], 1, vec![3, 1, 3]) {
+        SimOutcome::Stalled { time, stuck_tasks, starved_flows, culprit_links } => {
+            assert_eq!(stuck_tasks, vec![2, 5, 9], "stuck tasks not sorted+deduped");
+            assert_eq!(culprit_links, vec![1, 3], "culprit links not sorted+deduped");
+            assert_eq!(time, 1.0);
+            assert_eq!(starved_flows, 1);
+        }
+        other => panic!("constructor built {}", other.describe()),
+    }
+}
+
+#[test]
+fn stuck_tasks_are_sorted_for_binary_search_on_both_engines() {
+    // the ordering contract end-to-end: a multi-tenant workload stalled
+    // by a permanent outage reports its stuck tasks strictly ascending
+    // on BOTH engines — exactly what slo.rs's binary_search classifier
+    // requires. A multi-op DAG matters here: several gated chains starve
+    // at once, so an unsorted collection order would actually surface.
+    let topo = SystemKind::Dgx1.build();
+    let cv = vec![2u64 << 20; 8];
+    let link = topo.route_gpus(0, 1).unwrap().links[0];
+    let perts = [Perturbation::link_down(link)];
+    let outcome_of = |reference: bool| {
+        let run = || {
+            let mut sim = Sim::new(&topo);
+            // three gated chains starving concurrently, like a
+            // multi-tenant workload DAG
+            let d1 = agv_bench::comm::compose_allgatherv(
+                &mut sim,
+                Library::Nccl,
+                Params::default(),
+                &cv,
+                None,
+            );
+            agv_bench::comm::compose_allgatherv(
+                &mut sim,
+                Library::MpiCuda,
+                Params::default(),
+                &cv,
+                Some(d1),
+            );
+            agv_bench::comm::compose_allgatherv(
+                &mut sim,
+                Library::Mpi,
+                Params::default(),
+                &cv,
+                None,
+            );
+            agv_bench::perturb::apply(&mut sim, &perts);
+            sim.run_outcome().1
+        };
+        if reference { with_reference_engine(run) } else { run() }
+    };
+    for reference in [false, true] {
+        match outcome_of(reference) {
+            SimOutcome::Stalled { stuck_tasks, culprit_links, .. } => {
+                assert!(
+                    stuck_tasks.len() > 1,
+                    "ref={reference}: need a multi-task stall to exercise ordering"
+                );
+                assert!(
+                    stuck_tasks.windows(2).all(|w| w[0] < w[1]),
+                    "ref={reference}: stuck_tasks not strictly ascending: {stuck_tasks:?}"
+                );
+                assert!(
+                    culprit_links.windows(2).all(|w| w[0] < w[1]),
+                    "ref={reference}: culprit_links not strictly ascending: {culprit_links:?}"
+                );
+            }
+            other => panic!("ref={reference}: expected a stall, got {}", other.describe()),
+        }
+    }
+}
+
+#[test]
 fn midrun_link_outage_completes_on_every_system_and_library() {
     // acceptance: a single mid-run link outage on every system x
     // library completes under the default policy — natively (frozen

@@ -71,6 +71,72 @@ fn workload_bench_doc_carries_the_delta_sim_subtree() {
 }
 
 #[test]
+fn serve_bench_doc_is_byte_identical_across_runs() {
+    // BENCH_serve.json: knee curves, policy comparison, zero-rate
+    // anchor, and the delta-sim subtree are all simulated metrics, so
+    // the same seed must reproduce the artifact byte-for-byte across
+    // the worker-pool fan-out (the arrival PRNG streams included)
+    let a = agv_bench::workload::serve::bench::bench_doc(42).render();
+    let b = agv_bench::workload::serve::bench::bench_doc(42).render();
+    assert_eq!(a, b, "BENCH_serve.json payload is not reproducible");
+    let c = agv_bench::workload::serve::bench::bench_doc(43).render();
+    assert_ne!(a, c, "the arrival seed is not live in the serve artifact");
+    // load-bearing subtrees: the capacity curves with their knee
+    // verdicts, the zero-rate anchor cases (asserted bit-exact against
+    // run_workload in-process while the doc builds), and the PR-9
+    // style delta-simulation grid extended to serving DAGs
+    for key in [
+        "\"curves\"",
+        "\"knee_rho\"",
+        "\"saturation_hz\"",
+        "\"p999_s\"",
+        "\"policies\"",
+        "\"zero_rate\"",
+        "delta_sim",
+        "\"warm_work_units\"",
+        "\"cold_work_units\"",
+        "\"work_ratio\"",
+        "\"max_rel_err\"",
+    ] {
+        assert!(a.contains(key), "{key} missing from BENCH_serve.json");
+    }
+    // the warm-start acceptance: replay tiers must let the warm path
+    // bill fewer work units than cold re-simulation on every case
+    let doc = agv_bench::workload::serve::bench::bench_doc(42);
+    for case in doc.get("delta_sim").and_then(|d| d.as_arr()).expect("delta_sim array") {
+        let ratio = case.get("work_ratio").and_then(|v| v.as_f64()).expect("work_ratio");
+        assert!(ratio >= 1.0, "serving delta-sim did not beat cold: {ratio}");
+    }
+}
+
+#[test]
+fn closed_serve_matches_run_workload_on_both_engines() {
+    // the zero-arrival-rate anchor on the reference engine too: the
+    // serve DAG in closed mode is composed by the workload engine's
+    // own compose_workload, so the bit-exactness must be engine-
+    // independent (the event engine case is pinned in serve.rs's unit
+    // tests and the BENCH_serve zero_rate subtree)
+    use agv_bench::sim::with_reference_engine;
+    use agv_bench::workload::serve::{ArrivalProcess, QueuePolicy};
+    use agv_bench::workload::{run_serve, ServeSpec};
+    let topo = SystemKind::Cluster.build();
+    for lib in Library::all() {
+        let wspec = WorkloadSpec::synthetic(2, 3, 4, TenantLib::Fixed(lib), 4 << 20, 21);
+        let serve = ServeSpec {
+            workload: wspec.clone(),
+            arrivals: ArrivalProcess::Closed,
+            policy: QueuePolicy::Fifo { depth: 4 },
+        };
+        let (sm, wm) = with_reference_engine(|| {
+            let sr = run_serve(&topo, &serve, Params::default()).unwrap();
+            let wr = run_workload(&topo, &wspec, Params::default()).unwrap();
+            (sr.makespan, wr.makespan)
+        });
+        assert_eq!(sm.to_bits(), wm.to_bits(), "reference engine anchor: {}", lib.name());
+    }
+}
+
+#[test]
 fn report_render_is_byte_identical_across_runs() {
     let mk = |gpus: usize| {
         WorkloadSpec::synthetic(3, 3, gpus.min(8), TenantLib::Fixed(Library::Nccl), 8 << 20, 7)
